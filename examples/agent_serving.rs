@@ -1,0 +1,54 @@
+//! Agentic-AI inference serving (paper §5 future work, implemented):
+//! plan KV-cache capacity for a multimodal agent endpoint, then validate
+//! the plan against the multi-turn serving simulator.
+//!
+//! Run: `cargo run --release --example agent_serving`
+
+use anyhow::Result;
+use mmpredict::inference::{predict_inference, simulate_serving, InferenceConfig, ServingWorkload};
+use mmpredict::report::Table;
+use mmpredict::util::units::human_mib;
+
+fn main() -> Result<()> {
+    let cfg = InferenceConfig::llava_7b_agent();
+    let p = predict_inference(&cfg)?;
+
+    println!("== LLaVA-1.5-7B agent endpoint, context {} ==\n", cfg.context_len);
+    println!("weights          {}", human_mib(p.weights_mib));
+    println!("KV per token     {:.0} KiB", p.kv_bytes_per_token / 1024.0);
+    println!(
+        "KV cache         {} ({} seqs x {} ctx)",
+        human_mib(p.kv_cache_mib),
+        cfg.max_seqs,
+        cfg.context_len
+    );
+    println!("decode workspace {}", human_mib(p.workspace_mib));
+    println!("peak             {}\n", human_mib(p.peak_mib));
+
+    println!("== capacity planning across GPUs ==\n");
+    let mut t = Table::new(vec!["GPU", "capacity", "max sessions (analytic)"]);
+    for (name, gib) in [("L4", 24.0), ("A100-40G", 40.0), ("H100-80G", 80.0), ("H200-141G", 141.0)] {
+        t.row(vec![
+            name.to_string(),
+            format!("{gib:.0} GiB"),
+            p.max_seqs_for(gib * 1024.0, cfg.context_len).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== multi-turn serving simulation (H100-80G) ==\n");
+    for rate in [0.4, 0.8, 1.6] {
+        let wl = ServingWorkload { arrival_rate: rate, ..Default::default() };
+        let rep = simulate_serving(&cfg, &wl, 80.0 * 1024.0)?;
+        println!(
+            "arrival {rate:.1}/tick: peak {} ({} sessions), admitted {}, rejected {} ({:.1}%), completed {}",
+            human_mib(rep.peak_mib),
+            rep.peak_sessions,
+            rep.admitted,
+            rep.rejected,
+            rep.rejection_rate() * 100.0,
+            rep.completed,
+        );
+    }
+    Ok(())
+}

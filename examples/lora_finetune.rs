@@ -1,0 +1,66 @@
+//! LoRA fine-tuning memory planning (paper §5 future work, implemented):
+//! sweep adapter ranks and find the largest micro-batch size that fits a
+//! given GPU — the question a practitioner actually asks.
+//!
+//! Run: `cargo run --release --example lora_finetune`
+
+use anyhow::Result;
+use mmpredict::config::{Stage, TrainConfig};
+use mmpredict::model::lora::LoraConfig;
+use mmpredict::report::Table;
+use mmpredict::{predictor, simulator};
+
+const GPU_MIB: f64 = 80.0 * 1024.0;
+
+fn lora_cfg(rank: u64, mbs: u64) -> TrainConfig {
+    TrainConfig {
+        stage: Stage::LoraFinetune,
+        lora: Some(LoraConfig { rank, ..Default::default() }),
+        mbs,
+        ..TrainConfig::fig2b(1) // single GPU: the tightest case
+    }
+}
+
+fn main() -> Result<()> {
+    println!("== LoRA rank sweep (LLaVA-1.5-7B, SeqLen 2048, MBS 8, single GPU) ==\n");
+    let mut t = Table::new(vec![
+        "rank", "trainable (M)", "predicted", "measured", "APE %", "vs full-FT",
+    ]);
+    let full = simulator::simulate(&TrainConfig::fig2b(1))?.peak_mib;
+    for rank in [8, 16, 64, 128, 256] {
+        let cfg = lora_cfg(rank, 8);
+        let pm = mmpredict::parser::parse(&cfg)?;
+        let p = predictor::predict(&cfg)?.peak_mib as f64;
+        let m = simulator::simulate(&cfg)?.peak_mib;
+        t.row(vec![
+            rank.to_string(),
+            format!("{:.1}", pm.trainable_param_elems as f64 / 1e6),
+            format!("{:.2} GiB", p / 1024.0),
+            format!("{:.2} GiB", m / 1024.0),
+            format!("{:.1}", mmpredict::report::ape(p, m) * 100.0),
+            format!("{:.2}x", m / full),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(full fine-tuning on one GPU measures {:.2} GiB)\n", full / 1024.0);
+
+    println!("== largest MBS that fits 80 GiB at rank 64 ==\n");
+    let mut best = None;
+    for mbs in [1u64, 2, 4, 8, 16, 32, 64] {
+        let p = predictor::predict(&lora_cfg(64, mbs))?;
+        let fits = (p.peak_mib as f64) <= GPU_MIB;
+        println!(
+            "mbs {mbs:>3}: predicted {:>9.2} GiB  {}",
+            p.peak_mib as f64 / 1024.0,
+            if fits { "fits" } else { "OoM" }
+        );
+        if fits {
+            best = Some(mbs);
+        }
+    }
+    match best {
+        Some(mbs) => println!("\n-> plan: micro-batch size {mbs}"),
+        None => println!("\n-> does not fit at any micro-batch size"),
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! OoM guard: the deployment scenario the paper motivates — a scheduler
+//! front-end that screens a queue of training-job submissions against
+//! GPU capacity *before* any cluster time is spent.
+//!
+//! Spins up the batched prediction service (PJRT-backed), submits a
+//! mixed queue of job configurations from many client threads, and
+//! prints an admit/reject decision per job plus service metrics
+//! (batching efficiency, latency).
+//!
+//! Run: `cargo run --release --example oom_guard`
+
+use anyhow::Result;
+use mmpredict::config::{Stage, TrainConfig};
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::util::units::human_mib;
+
+const GPU_CAPACITY_MIB: f32 = 80.0 * 1024.0; // H100 80GB
+
+fn job_queue() -> Vec<(String, TrainConfig)> {
+    let mut jobs = Vec::new();
+    for dp in [1, 2, 4, 8] {
+        jobs.push((format!("llava7b-ft-s2048-mbs8-dp{dp}"), TrainConfig::fig2b(dp)));
+    }
+    for dp in [4, 8] {
+        jobs.push((format!("llava7b-ft-s1024-mbs16-dp{dp}"), TrainConfig::fig2a(dp)));
+    }
+    let mut pt = TrainConfig::fig2a(2);
+    pt.stage = Stage::Pretrain;
+    jobs.push(("llava7b-pretrain-dp2".into(), pt));
+    let mut big = TrainConfig::fig2b(2);
+    big.model = "llava-1.5-13b".into();
+    jobs.push(("llava13b-ft-dp2".into(), big));
+    jobs
+}
+
+fn main() -> Result<()> {
+    let service = PredictionService::start("artifacts", ServiceConfig::default())?;
+    println!("prediction service up\n");
+
+    // Concurrent submissions, as a scheduler would issue them.
+    let mut handles = Vec::new();
+    for (name, cfg) in job_queue() {
+        let client = service.client();
+        handles.push(std::thread::spawn(move || {
+            let p = client.predict(cfg)?;
+            Ok::<_, anyhow::Error>((name, p))
+        }));
+    }
+
+    println!(
+        "{:<28} {:>14} {:>14} {:>8}",
+        "job", "predicted", "capacity", "verdict"
+    );
+    let mut admitted = 0;
+    let mut rejected = 0;
+    for h in handles {
+        let (name, p) = h.join().expect("client thread")?;
+        let ok = p.fits(GPU_CAPACITY_MIB);
+        if ok {
+            admitted += 1;
+        } else {
+            rejected += 1;
+        }
+        println!(
+            "{:<28} {:>14} {:>14} {:>8}",
+            name,
+            human_mib(p.peak_mib as f64),
+            human_mib(GPU_CAPACITY_MIB as f64),
+            if ok { "ADMIT" } else { "REJECT" }
+        );
+    }
+
+    println!(
+        "\n{admitted} admitted, {rejected} rejected (would have OoM'd and wasted cluster time)"
+    );
+    println!("service metrics: {}", service.metrics().summary());
+    service.shutdown();
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: predict the peak GPU memory of a LLaVA-1.5-7B fine-tuning
+//! run, compare against the simulated measurement, and check whether it
+//! fits an 80 GiB GPU.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mmpredict::config::TrainConfig;
+use mmpredict::util::units::human_mib;
+use mmpredict::{predictor, simulator};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Fig. 2b setting at DP=4: SeqLen 2048, MBS 8, ZeRO-2.
+    let cfg = TrainConfig::fig2b(4);
+
+    // 1. Parse the model: modules -> fine-grained layers with training
+    //    behaviour (Fig. 1 steps 1-4).
+    let parsed = mmpredict::parser::parse(&cfg)?;
+    println!(
+        "parsed {} into {} layers across {} modules ({:.2}B params, {:.2}B trainable)",
+        parsed.model_name,
+        parsed.num_layers(),
+        parsed.trainable_by_module().len() + 1, // + frozen vision tower
+        parsed.total_param_elems as f64 / 1e9,
+        parsed.trainable_param_elems as f64 / 1e9,
+    );
+
+    // 2. Factor predictor (Fig. 1 steps 5-7): per-layer factorization,
+    //    Eq. 1 aggregation.
+    let p = predictor::predict(&cfg)?;
+    println!("\npredicted peak: {}", human_mib(p.peak_mib as f64));
+    println!("  M_param {:>12}", human_mib(p.param_mib as f64));
+    println!("  M_grad  {:>12}", human_mib(p.grad_mib as f64));
+    println!("  M_opt   {:>12}", human_mib(p.opt_mib as f64));
+    println!("  M_act   {:>12}", human_mib(p.act_mib as f64));
+
+    // 3. Ground truth: the discrete-event training-step simulator.
+    let m = simulator::simulate(&cfg)?;
+    println!("\nsimulated measurement: {}", human_mib(m.peak_mib));
+    println!(
+        "prediction error: {:.1}%",
+        mmpredict::report::ape(p.peak_mib as f64, m.peak_mib) * 100.0
+    );
+
+    // 4. The OoM-prevention decision the paper motivates.
+    let h100 = 80.0 * 1024.0;
+    println!(
+        "\nfits one 80 GiB H100: predicted {} / measured {}",
+        if p.fits(h100 as f32) { "YES" } else { "NO" },
+        if m.peak_mib <= h100 { "YES" } else { "NO" },
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: the paper's *factor predictor* (Fig. 1 step 6).
+
+Maps a `[B, L, F]` layer-feature matrix to `[B, L, 8]` per-layer factor
+MiB — the four paper factors (M_param, M_grad, M_opt, M_act) plus the
+transient columns the liveness scan consumes.
+
+The kernel is purely elementwise over layer rows, tiled `[1, BL, F]` so a
+block is BL*F*4 B of VMEM (8 KiB at BL=128, F=20) — trivially resident.
+On a real TPU this is VPU work (no MXU); we lower with interpret=True for
+CPU-PJRT execution (Mosaic custom-calls cannot run on the CPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import schema as S
+
+DEFAULT_BLOCK_L = 128
+
+
+def _factor_block(f_ref, o_ref):
+    """Per-block factor math. f_ref: [1, BL, F] -> o_ref: [1, BL, 8]."""
+    f = f_ref[0]  # [BL, F]
+    inv_mib = 1.0 / S.MIB
+
+    param_elems = f[:, S.PARAM_ELEMS]
+    valid = f[:, S.VALID]
+    trainable = f[:, S.TRAINABLE]
+
+    # M_param: resident weights (sharded only under ZeRO-3).
+    m_param = param_elems * f[:, S.PARAM_BYTES] * f[:, S.PARAM_SHARD]
+    # M_grad: gradients exist only for trainable layers; ZeRO>=2 shards them.
+    m_grad = param_elems * f[:, S.GRAD_BYTES] * trainable * f[:, S.GRAD_SHARD]
+    # M_opt: optimizer states + fp32 master copy; ZeRO>=1 shards them.
+    m_opt = (
+        param_elems
+        * (f[:, S.OPT_STATE_MULT] * f[:, S.OPT_BYTES] + f[:, S.MASTER_BYTES])
+        * trainable
+        * f[:, S.OPT_SHARD]
+    )
+    # M_act: retained only when backward traverses the layer; checkpointing
+    # keeps a fraction.
+    m_act = (
+        f[:, S.ACT_ELEMS]
+        * f[:, S.ACT_BYTES]
+        * f[:, S.ON_BWD_PATH]
+        * f[:, S.RECOMPUTE_KEEP]
+    )
+    m_eph = f[:, S.EPHEMERAL_ELEMS] * f[:, S.ACT_BYTES]
+    m_bwd = f[:, S.BWD_TRANSIENT_ELEMS] * f[:, S.ACT_BYTES]
+
+    out = jnp.stack(
+        [
+            m_param * inv_mib * valid,
+            m_grad * inv_mib * valid,
+            m_opt * inv_mib * valid,
+            m_act * inv_mib * valid,
+            m_eph * inv_mib * valid,
+            f[:, S.WORKSPACE_MIB] * valid,  # already MiB
+            m_bwd * inv_mib * valid,
+            valid,
+        ],
+        axis=-1,
+    )
+    o_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def factor_predict(features, *, block_l=DEFAULT_BLOCK_L, interpret=True):
+    """Per-layer factorization. features: [B, L, F] f32 -> [B, L, 8] f32."""
+    b, l, f = features.shape
+    assert f == S.NUM_FEATURES, f"feature dim {f} != {S.NUM_FEATURES}"
+    block_l = min(block_l, l)
+    assert l % block_l == 0, f"L={l} not divisible by block_l={block_l}"
+    grid = (b, l // block_l)
+    return pl.pallas_call(
+        _factor_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_l, S.NUM_FEATURES), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_l, S.NUM_FACTOR_COLS), lambda i, j: (i, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, l, S.NUM_FACTOR_COLS), jnp.float32),
+        interpret=interpret,
+    )(features)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: activation-liveness timeline scan.
+
+Given per-layer factor rows in *execution order* (the parser emits layers
+in forward order), computes the transient memory peaks of one training
+step:
+
+  fwd_live(i) = cumsum_{j<=i} act_j          (activations accumulate)
+  fwd_peak    = max_i fwd_live(i) + eph_i + ws_i
+  bwd_peak    = max_i fwd_live(i) + bwd_i + ws_i
+      (backward releases act_i only *after* computing grads that need
+       ws_i + bwd_i on top of everything up to and including layer i)
+
+One grid step per batch row; the whole `[1, L, 8]` factor block lives in
+VMEM (L=4096 rows -> 128 KiB, far under the ~16 MiB VMEM budget — see
+DESIGN.md Hardware-Adaptation). The cumulative scan is the TPU-idiomatic
+replacement for the single-threadblock prefix scan a CUDA port would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import schema as S
+
+# scan output columns ([B, 4])
+SCAN_ACT_TOTAL = 0
+SCAN_FWD_PEAK = 1
+SCAN_BWD_PEAK = 2
+SCAN_TRANSIENT = 3  # max(fwd, bwd)
+NUM_SCAN_COLS = 4
+
+
+def _scan_block(f_ref, o_ref):
+    f = f_ref[0]  # [L, 8]
+    act = f[:, S.F_ACT]
+    eph = f[:, S.F_EPHEMERAL]
+    ws = f[:, S.F_WORKSPACE]
+    bwd = f[:, S.F_BWD_TRANSIENT]
+
+    live = jnp.cumsum(act)
+    fwd_peak = jnp.max(live + eph + ws)
+    bwd_peak = jnp.max(live + bwd + ws)
+    o_ref[0] = jnp.stack(
+        [live[-1], fwd_peak, bwd_peak, jnp.maximum(fwd_peak, bwd_peak)]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def peak_scan(factors, *, interpret=True):
+    """Liveness scan. factors: [B, L, 8] f32 -> [B, 4] f32 (MiB)."""
+    b, l, c = factors.shape
+    assert c == S.NUM_FACTOR_COLS
+    return pl.pallas_call(
+        _scan_block,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, l, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, NUM_SCAN_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, NUM_SCAN_COLS), jnp.float32),
+        interpret=interpret,
+    )(factors)

@@ -1,0 +1,97 @@
+"""Pure-jnp correctness oracles for the L1 kernels and the L2 model.
+
+These are the ground truth the pytest/hypothesis suite checks the Pallas
+kernels against, and the reference the Rust analytical predictor mirrors
+(rust/src/predictor/analytical.rs implements the identical equations in
+f32 so the tensorized and analytical paths agree bit-for-bit-ish).
+"""
+
+import jax.numpy as jnp
+
+from . import schema as S
+
+
+def factor_predict_ref(features):
+    """[B, L, F] -> [B, L, 8] per-layer factor MiB (see factor_kernel)."""
+    f = features
+    inv_mib = 1.0 / S.MIB
+    pe = f[..., S.PARAM_ELEMS]
+    valid = f[..., S.VALID]
+    tr = f[..., S.TRAINABLE]
+
+    m_param = pe * f[..., S.PARAM_BYTES] * f[..., S.PARAM_SHARD]
+    m_grad = pe * f[..., S.GRAD_BYTES] * tr * f[..., S.GRAD_SHARD]
+    m_opt = (
+        pe
+        * (f[..., S.OPT_STATE_MULT] * f[..., S.OPT_BYTES] + f[..., S.MASTER_BYTES])
+        * tr
+        * f[..., S.OPT_SHARD]
+    )
+    m_act = (
+        f[..., S.ACT_ELEMS]
+        * f[..., S.ACT_BYTES]
+        * f[..., S.ON_BWD_PATH]
+        * f[..., S.RECOMPUTE_KEEP]
+    )
+    m_eph = f[..., S.EPHEMERAL_ELEMS] * f[..., S.ACT_BYTES]
+    m_bwd = f[..., S.BWD_TRANSIENT_ELEMS] * f[..., S.ACT_BYTES]
+
+    return jnp.stack(
+        [
+            m_param * inv_mib * valid,
+            m_grad * inv_mib * valid,
+            m_opt * inv_mib * valid,
+            m_act * inv_mib * valid,
+            m_eph * inv_mib * valid,
+            f[..., S.WORKSPACE_MIB] * valid,
+            m_bwd * inv_mib * valid,
+            valid,
+        ],
+        axis=-1,
+    )
+
+
+def peak_scan_ref(factors):
+    """[B, L, 8] -> [B, 4] (act_total, fwd_peak, bwd_peak, transient)."""
+    act = factors[..., S.F_ACT]
+    eph = factors[..., S.F_EPHEMERAL]
+    ws = factors[..., S.F_WORKSPACE]
+    bwd = factors[..., S.F_BWD_TRANSIENT]
+
+    live = jnp.cumsum(act, axis=-1)
+    fwd_peak = jnp.max(live + eph + ws, axis=-1)
+    bwd_peak = jnp.max(live + bwd + ws, axis=-1)
+    return jnp.stack(
+        [live[..., -1], fwd_peak, bwd_peak, jnp.maximum(fwd_peak, bwd_peak)],
+        axis=-1,
+    )
+
+
+def predict_peak_ref(features, overheads):
+    """Full L2 reference: Eq. 1 + liveness + overheads.
+
+    features: [B, L, F], overheads: [B, NUM_OVERHEADS] -> [B, NUM_OUTPUTS].
+    """
+    factors = factor_predict_ref(features)
+    scan = peak_scan_ref(factors)
+
+    param_tot = jnp.sum(factors[..., S.F_PARAM], axis=-1)
+    grad_tot = jnp.sum(factors[..., S.F_GRAD], axis=-1)
+    opt_tot = jnp.sum(factors[..., S.F_OPT], axis=-1)
+    act_tot = scan[..., 0]
+    transient = scan[..., 3]
+    fwd_peak = scan[..., 1]
+
+    persistent = param_tot + grad_tot + opt_tot
+    bucket = overheads[..., S.OH_GRAD_BUCKET_MIB]
+    step_t = overheads[..., S.OH_STEP_TRANSIENT_MIB]
+    dynamic = jnp.maximum(transient, step_t)
+    raw = persistent + bucket + dynamic
+    peak = raw * (1.0 + overheads[..., S.OH_ALLOC_FRAC]) + overheads[
+        ..., S.OH_CUDA_CTX_MIB
+    ]
+
+    return jnp.stack(
+        [peak, param_tot, grad_tot, opt_tot, act_tot, transient, persistent, fwd_peak],
+        axis=-1,
+    )

@@ -1,0 +1,73 @@
+"""Feature schema shared by L1 kernels, L2 model, ref oracle and the Rust
+feature encoder (rust/src/parser/features.rs mirrors these indices).
+
+Each layer of the parsed multimodal model is one row of F f32 features.
+All byte quantities are converted to MiB inside the kernels (values stay
+well under 2^20, so f32 absolute error is < 1 KiB at 80 GiB scale).
+
+Keep in sync with DESIGN.md `Feature schema` and features.rs.
+"""
+
+# ---- feature column indices (input [B, L, F]) ------------------------------
+PARAM_ELEMS = 0  # parameter elements in this layer
+PARAM_BYTES = 1  # bytes per element of resident params (2 = bf16/fp16)
+TRAINABLE = 2  # 1.0 if params receive optimizer updates
+ON_BWD_PATH = 3  # 1.0 if backward traverses the layer (acts retained)
+GRAD_BYTES = 4  # bytes per element of gradients (0 when frozen)
+OPT_STATE_MULT = 5  # optimizer state elems per param elem (Adam = 2)
+OPT_BYTES = 6  # bytes per element of optimizer state (4 = fp32)
+MASTER_BYTES = 7  # bytes per element of fp32 master copy (mixed precision)
+ACT_ELEMS = 8  # retained activation elements (already x MBS, seq)
+ACT_BYTES = 9  # bytes per element of activations
+EPHEMERAL_ELEMS = 10  # transient forward workspace elems (freed within op)
+GRAD_SHARD = 11  # gradient shard factor (1/DP under ZeRO>=2, else 1)
+OPT_SHARD = 12  # optimizer shard factor (1/DP under ZeRO>=1, else 1)
+PARAM_SHARD = 13  # parameter shard factor (1/DP under ZeRO-3, else 1)
+RECOMPUTE_KEEP = 14  # fraction of activations kept under ckpt (1 = all)
+WORKSPACE_MIB = 15  # fixed per-op workspace, already in MiB
+BWD_TRANSIENT_ELEMS = 16  # transient backward buffer elements
+RESERVED_17 = 17
+VALID = 18  # 1.0 = real row, 0.0 = padding
+RESERVED_19 = 19
+
+NUM_FEATURES = 20
+
+# ---- per-layer factor output columns ([B, L, NUM_FACTOR_COLS]) -------------
+F_PARAM = 0  # M_param (MiB)
+F_GRAD = 1  # M_grad (MiB)
+F_OPT = 2  # M_opt (MiB, includes fp32 master copy)
+F_ACT = 3  # M_act retained (MiB)
+F_EPHEMERAL = 4  # transient fwd (MiB)
+F_WORKSPACE = 5  # fixed workspace (MiB)
+F_BWD_TRANSIENT = 6  # transient bwd (MiB)
+F_VALID = 7
+
+NUM_FACTOR_COLS = 8
+
+# ---- overhead vector columns (input [B, NUM_OVERHEADS]) --------------------
+OH_CUDA_CTX_MIB = 0  # CUDA context + cuBLAS/NCCL handles
+OH_ALLOC_FRAC = 1  # caching-allocator rounding/fragmentation fraction
+OH_GRAD_BUCKET_MIB = 2  # ZeRO-2 reduce-bucket flat buffers
+OH_STEP_TRANSIENT_MIB = 3  # optimizer-step temporaries
+OH_RESERVED_4 = 4
+OH_RESERVED_5 = 5
+OH_RESERVED_6 = 6
+OH_RESERVED_7 = 7
+
+NUM_OVERHEADS = 8
+
+# ---- prediction output columns ([B, NUM_OUTPUTS]) --------------------------
+OUT_PEAK = 0  # predicted peak (MiB) -- Eq. 1 + overheads
+OUT_PARAM = 1  # sum M_param
+OUT_GRAD = 2  # sum M_grad
+OUT_OPT = 3  # sum M_opt
+OUT_ACT = 4  # sum retained M_act
+OUT_TRANSIENT = 5  # max(fwd_peak, bwd_peak) liveness transient
+OUT_PERSISTENT = 6  # param+grad+opt persistent base
+OUT_FWD_PEAK = 7  # forward liveness peak
+
+NUM_OUTPUTS = 8
+
+MIB = float(1024 * 1024)
+
+SCHEMA_VERSION = 1

@@ -1,0 +1,58 @@
+"""L2: the full peak-memory prediction graph (Fig. 1 steps 5-7).
+
+Composes the L1 Pallas kernels — per-layer factorization then the
+activation-liveness scan — and aggregates per Eq. 1 plus the overhead
+terms the Rust coordinator supplies per request:
+
+    M_peak = (persistent + bucket + max(transient, step_t)) * (1 + frac)
+             + cuda_ctx
+
+where persistent = sum(M_param) + sum(M_grad) + sum(M_opt) and transient
+is the liveness peak over the forward/backward timeline.
+
+This module is build-time only: `aot.py` lowers `predict_peak` once per
+(B, L) capacity variant to HLO text; the Rust runtime executes it via
+PJRT. It is never imported at request time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import factor_kernel, peak_scan
+from .kernels import schema as S
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def predict_peak(features, overheads, *, interpret=True):
+    """Batched peak-memory prediction.
+
+    features:  [B, L, F] f32 layer-feature rows (execution order, padded
+               with VALID=0 rows up to the capacity L).
+    overheads: [B, NUM_OVERHEADS] f32 per-request overhead terms.
+    returns:   [B, NUM_OUTPUTS] f32 (MiB) — see schema.OUT_*.
+    """
+    factors = factor_kernel.factor_predict(features, interpret=interpret)
+    scan = peak_scan.peak_scan(factors, interpret=interpret)
+
+    param_tot = jnp.sum(factors[..., S.F_PARAM], axis=-1)
+    grad_tot = jnp.sum(factors[..., S.F_GRAD], axis=-1)
+    opt_tot = jnp.sum(factors[..., S.F_OPT], axis=-1)
+    act_tot = scan[..., peak_scan.SCAN_ACT_TOTAL]
+    transient = scan[..., peak_scan.SCAN_TRANSIENT]
+    fwd_peak = scan[..., peak_scan.SCAN_FWD_PEAK]
+
+    persistent = param_tot + grad_tot + opt_tot
+    bucket = overheads[..., S.OH_GRAD_BUCKET_MIB]
+    step_t = overheads[..., S.OH_STEP_TRANSIENT_MIB]
+    dynamic = jnp.maximum(transient, step_t)
+    raw = persistent + bucket + dynamic
+    peak = raw * (1.0 + overheads[..., S.OH_ALLOC_FRAC]) + overheads[
+        ..., S.OH_CUDA_CTX_MIB
+    ]
+
+    return jnp.stack(
+        [peak, param_tot, grad_tot, opt_tot, act_tot, transient, persistent, fwd_peak],
+        axis=-1,
+    )

@@ -1,0 +1,44 @@
+"""Shared generators for the python test-suite: plausible layer-feature
+rows (and hypothesis strategies over them) matching the schema the Rust
+feature encoder emits."""
+
+import numpy as np
+
+from compile.kernels import schema as S
+
+
+def random_features(rng, b, l, valid_frac=0.8):
+    """Random but schema-plausible feature batch [b, l, F] f32."""
+    f = np.zeros((b, l, S.NUM_FEATURES), dtype=np.float32)
+    n_valid = max(1, int(l * valid_frac))
+    f[:, :n_valid, S.VALID] = 1.0
+    f[..., S.PARAM_ELEMS] = rng.uniform(0, 2e8, (b, l))
+    f[..., S.PARAM_BYTES] = rng.choice([2.0, 4.0], (b, l))
+    f[..., S.TRAINABLE] = rng.choice([0.0, 1.0], (b, l))
+    f[..., S.ON_BWD_PATH] = np.maximum(
+        f[..., S.TRAINABLE], rng.choice([0.0, 1.0], (b, l))
+    )
+    f[..., S.GRAD_BYTES] = f[..., S.TRAINABLE] * rng.choice([2.0, 4.0], (b, l))
+    f[..., S.OPT_STATE_MULT] = rng.choice([0.0, 1.0, 2.0], (b, l))
+    f[..., S.OPT_BYTES] = 4.0
+    f[..., S.MASTER_BYTES] = rng.choice([0.0, 4.0], (b, l))
+    f[..., S.ACT_ELEMS] = rng.uniform(0, 5e7, (b, l))
+    f[..., S.ACT_BYTES] = rng.choice([2.0, 4.0], (b, l))
+    f[..., S.EPHEMERAL_ELEMS] = rng.uniform(0, 1e7, (b, l))
+    dp = rng.choice([1.0, 2.0, 4.0, 8.0])
+    f[..., S.GRAD_SHARD] = 1.0 / dp
+    f[..., S.OPT_SHARD] = 1.0 / dp
+    f[..., S.PARAM_SHARD] = 1.0
+    f[..., S.RECOMPUTE_KEEP] = rng.choice([0.1, 0.5, 1.0], (b, l))
+    f[..., S.WORKSPACE_MIB] = rng.uniform(0, 64.0, (b, l))
+    f[..., S.BWD_TRANSIENT_ELEMS] = rng.uniform(0, 1e7, (b, l))
+    return f
+
+
+def random_overheads(rng, b):
+    o = np.zeros((b, S.NUM_OVERHEADS), dtype=np.float32)
+    o[:, S.OH_CUDA_CTX_MIB] = rng.uniform(300, 900, b)
+    o[:, S.OH_ALLOC_FRAC] = rng.uniform(0.0, 0.1, b)
+    o[:, S.OH_GRAD_BUCKET_MIB] = rng.uniform(0, 2000, b)
+    o[:, S.OH_STEP_TRANSIENT_MIB] = rng.uniform(0, 4000, b)
+    return o

@@ -1,0 +1,125 @@
+"""Pallas factor kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Covers: exact agreement with ref on random schema-plausible inputs,
+hypothesis sweeps over shapes/valid fractions/block sizes, padding-row
+semantics, factor masking (frozen layers), ZeRO shard scaling, and
+hand-computed golden values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import factor_kernel, ref
+from compile.kernels import schema as S
+from tests.gen import random_features
+
+RNG = np.random.default_rng(0)
+
+
+def test_matches_ref_basic():
+    f = random_features(RNG, 2, 256)
+    got = np.asarray(factor_kernel.factor_predict(f))
+    want = np.asarray(ref.factor_predict_ref(f))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    l_blocks=st.integers(min_value=1, max_value=8),
+    block_l=st.sampled_from([32, 64, 128]),
+    valid_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_hypothesis(b, l_blocks, block_l, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    l = l_blocks * block_l
+    f = random_features(rng, b, l, valid_frac)
+    got = np.asarray(factor_kernel.factor_predict(f, block_l=block_l))
+    want = np.asarray(ref.factor_predict_ref(f))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_padding_rows_are_zero():
+    f = random_features(RNG, 1, 128, valid_frac=0.5)
+    got = np.asarray(factor_kernel.factor_predict(f))
+    invalid = f[0, :, S.VALID] == 0.0
+    assert np.all(got[0, invalid] == 0.0)
+
+
+def test_frozen_layer_has_no_grad_or_opt():
+    f = random_features(RNG, 1, 128)
+    f[..., S.TRAINABLE] = 0.0
+    got = np.asarray(factor_kernel.factor_predict(f))
+    assert np.all(got[..., S.F_GRAD] == 0.0)
+    assert np.all(got[..., S.F_OPT] == 0.0)
+    # params still resident
+    assert got[..., S.F_PARAM].sum() > 0.0
+
+
+def test_off_backward_path_has_no_activations():
+    f = random_features(RNG, 1, 128)
+    f[..., S.ON_BWD_PATH] = 0.0
+    f[..., S.TRAINABLE] = 0.0
+    got = np.asarray(factor_kernel.factor_predict(f))
+    assert np.all(got[..., S.F_ACT] == 0.0)
+
+
+def test_zero2_shards_grad_and_opt_not_param():
+    f = random_features(RNG, 1, 128)
+    f[..., S.TRAINABLE] = 1.0
+    f[..., S.GRAD_SHARD] = 1.0
+    f[..., S.OPT_SHARD] = 1.0
+    f[..., S.PARAM_SHARD] = 1.0
+    base = np.asarray(factor_kernel.factor_predict(f))
+    f8 = f.copy()
+    f8[..., S.GRAD_SHARD] = 1.0 / 8.0
+    f8[..., S.OPT_SHARD] = 1.0 / 8.0
+    sharded = np.asarray(factor_kernel.factor_predict(f8))
+    np.testing.assert_allclose(
+        sharded[..., S.F_GRAD], base[..., S.F_GRAD] / 8.0, rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        sharded[..., S.F_OPT], base[..., S.F_OPT] / 8.0, rtol=1e-6
+    )
+    np.testing.assert_allclose(sharded[..., S.F_PARAM], base[..., S.F_PARAM])
+
+
+def test_golden_single_layer():
+    """Hand-computed: 1M-param bf16 linear, Adam fp32 + master, 2M acts."""
+    f = np.zeros((1, 32, S.NUM_FEATURES), dtype=np.float32)
+    f[0, 0, S.PARAM_ELEMS] = 1e6
+    f[0, 0, S.PARAM_BYTES] = 2.0
+    f[0, 0, S.TRAINABLE] = 1.0
+    f[0, 0, S.ON_BWD_PATH] = 1.0
+    f[0, 0, S.GRAD_BYTES] = 2.0
+    f[0, 0, S.OPT_STATE_MULT] = 2.0
+    f[0, 0, S.OPT_BYTES] = 4.0
+    f[0, 0, S.MASTER_BYTES] = 4.0
+    f[0, 0, S.ACT_ELEMS] = 2e6
+    f[0, 0, S.ACT_BYTES] = 2.0
+    f[0, 0, S.GRAD_SHARD] = 1.0
+    f[0, 0, S.OPT_SHARD] = 1.0
+    f[0, 0, S.PARAM_SHARD] = 1.0
+    f[0, 0, S.RECOMPUTE_KEEP] = 1.0
+    f[0, 0, S.VALID] = 1.0
+    got = np.asarray(factor_kernel.factor_predict(f))[0, 0]
+    mib = 1024.0 * 1024.0
+    assert got[S.F_PARAM] == pytest.approx(2e6 / mib, rel=1e-6)
+    assert got[S.F_GRAD] == pytest.approx(2e6 / mib, rel=1e-6)
+    assert got[S.F_OPT] == pytest.approx(12e6 / mib, rel=1e-6)  # 2*4 + 4 per elem
+    assert got[S.F_ACT] == pytest.approx(4e6 / mib, rel=1e-6)
+
+
+def test_block_size_invariance():
+    f = random_features(RNG, 2, 256)
+    a = np.asarray(factor_kernel.factor_predict(f, block_l=32))
+    b = np.asarray(factor_kernel.factor_predict(f, block_l=256))
+    np.testing.assert_allclose(a, b, rtol=1e-7)
+
+
+def test_rejects_bad_feature_dim():
+    bad = np.zeros((1, 32, S.NUM_FEATURES + 1), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        factor_kernel.factor_predict(bad)

@@ -1,0 +1,93 @@
+"""L2 end-to-end predict_peak vs oracle + Eq.-1 semantics + monotonicity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import schema as S
+from tests.gen import random_features, random_overheads
+
+RNG = np.random.default_rng(2)
+
+
+def test_matches_ref_basic():
+    f = random_features(RNG, 4, 256)
+    o = random_overheads(RNG, 4)
+    got = np.asarray(model.predict_peak(f, o))
+    want = np.asarray(ref.predict_peak_ref(f, o))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    l=st.sampled_from([128, 512, 1024]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_hypothesis(b, l, seed):
+    rng = np.random.default_rng(seed)
+    f = random_features(rng, b, l)
+    o = random_overheads(rng, b)
+    got = np.asarray(model.predict_peak(f, o))
+    want = np.asarray(ref.predict_peak_ref(f, o))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_eq1_decomposition():
+    """persistent == param + grad + opt; peak >= persistent."""
+    f = random_features(RNG, 2, 256)
+    o = random_overheads(RNG, 2)
+    out = np.asarray(model.predict_peak(f, o))
+    np.testing.assert_allclose(
+        out[:, S.OUT_PERSISTENT],
+        out[:, S.OUT_PARAM] + out[:, S.OUT_GRAD] + out[:, S.OUT_OPT],
+        rtol=1e-5,
+    )
+    assert np.all(out[:, S.OUT_PEAK] >= out[:, S.OUT_PERSISTENT])
+
+
+def test_peak_monotone_in_activations():
+    """Scaling activation elements up never decreases the predicted peak."""
+    f = random_features(RNG, 1, 256)
+    o = random_overheads(RNG, 1)
+    base = np.asarray(model.predict_peak(f, o))[0, S.OUT_PEAK]
+    f2 = f.copy()
+    f2[..., S.ACT_ELEMS] *= 2.0
+    bigger = np.asarray(model.predict_peak(f2, o))[0, S.OUT_PEAK]
+    assert bigger >= base - 1e-3
+
+
+def test_peak_monotone_in_dp_sharding():
+    """More DP sharding (smaller shard factors) never increases the peak."""
+    f = random_features(RNG, 1, 256)
+    f[..., S.GRAD_SHARD] = 1.0
+    f[..., S.OPT_SHARD] = 1.0
+    o = random_overheads(RNG, 1)
+    base = np.asarray(model.predict_peak(f, o))[0, S.OUT_PEAK]
+    f8 = f.copy()
+    f8[..., S.GRAD_SHARD] = 1.0 / 8.0
+    f8[..., S.OPT_SHARD] = 1.0 / 8.0
+    sharded = np.asarray(model.predict_peak(f8, o))[0, S.OUT_PEAK]
+    assert sharded <= base + 1e-3
+
+
+def test_overheads_additive_ctx():
+    f = random_features(RNG, 1, 128)
+    o = random_overheads(RNG, 1)
+    o[:, S.OH_ALLOC_FRAC] = 0.0
+    p0 = np.asarray(model.predict_peak(f, o))[0, S.OUT_PEAK]
+    o2 = o.copy()
+    o2[:, S.OH_CUDA_CTX_MIB] += 100.0
+    p1 = np.asarray(model.predict_peak(f, o2))[0, S.OUT_PEAK]
+    assert abs((p1 - p0) - 100.0) < 1e-2
+
+
+def test_batch_rows_independent():
+    """Row i of a batched call equals a single-row call."""
+    f = random_features(RNG, 4, 256)
+    o = random_overheads(RNG, 4)
+    full = np.asarray(model.predict_peak(f, o))
+    for i in range(4):
+        single = np.asarray(model.predict_peak(f[i : i + 1], o[i : i + 1]))
+        np.testing.assert_allclose(full[i], single[0], rtol=1e-6, atol=1e-4)

@@ -1,0 +1,74 @@
+"""Pallas liveness-scan kernel vs pure-jnp oracle + analytic properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import factor_kernel, peak_scan, ref
+from tests.gen import random_features
+
+RNG = np.random.default_rng(1)
+
+
+def _factors(rng, b, l, valid_frac=0.8):
+    f = random_features(rng, b, l, valid_frac)
+    return np.asarray(ref.factor_predict_ref(f))
+
+
+def test_matches_ref_basic():
+    fac = _factors(RNG, 3, 256)
+    got = np.asarray(peak_scan.peak_scan(fac))
+    want = np.asarray(ref.peak_scan_ref(fac))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    l=st.sampled_from([64, 128, 512, 1024]),
+    valid_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_hypothesis(b, l, valid_frac, seed):
+    fac = _factors(np.random.default_rng(seed), b, l, valid_frac)
+    got = np.asarray(peak_scan.peak_scan(fac))
+    want = np.asarray(ref.peak_scan_ref(fac))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_peaks_bound_act_total():
+    """fwd/bwd peaks are >= the steady retained-activation total when
+    ephemeral/workspace columns are nonnegative."""
+    fac = _factors(RNG, 4, 512)
+    out = np.asarray(peak_scan.peak_scan(fac))
+    assert np.all(out[:, peak_scan.SCAN_FWD_PEAK] >= out[:, peak_scan.SCAN_ACT_TOTAL] - 1e-4)
+    assert np.all(
+        out[:, peak_scan.SCAN_TRANSIENT]
+        >= np.maximum(out[:, peak_scan.SCAN_FWD_PEAK], out[:, peak_scan.SCAN_BWD_PEAK]) - 1e-4
+    )
+
+
+def test_transient_is_max_of_fwd_bwd():
+    fac = _factors(RNG, 2, 256)
+    out = np.asarray(peak_scan.peak_scan(fac))
+    np.testing.assert_allclose(
+        out[:, peak_scan.SCAN_TRANSIENT],
+        np.maximum(out[:, peak_scan.SCAN_FWD_PEAK], out[:, peak_scan.SCAN_BWD_PEAK]),
+        rtol=1e-7,
+    )
+
+
+def test_all_zero_rows():
+    fac = np.zeros((2, 128, 8), dtype=np.float32)
+    out = np.asarray(peak_scan.peak_scan(fac))
+    assert np.all(out == 0.0)
+
+
+def test_single_spike_layer():
+    """One layer with a huge ephemeral buffer dominates the fwd peak."""
+    fac = np.zeros((1, 64, 8), dtype=np.float32)
+    fac[0, :, 3] = 1.0  # 1 MiB retained act per layer (F_ACT col = 3)
+    fac[0, 10, 4] = 500.0  # F_EPHEMERAL
+    out = np.asarray(peak_scan.peak_scan(fac))[0]
+    # live at layer 10 = 11 MiB; + 500 ephemeral
+    assert abs(out[peak_scan.SCAN_FWD_PEAK] - 511.0) < 1e-3
+    assert abs(out[peak_scan.SCAN_ACT_TOTAL] - 64.0) < 1e-3

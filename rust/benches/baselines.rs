@@ -1,0 +1,63 @@
+//! Bench: the baseline-comparison table (DESIGN.md tab-baseline — the
+//! paper's §1 claim that unimodal estimators fail on multimodal models)
+//! plus per-method prediction cost.
+//!
+//! Run: `cargo bench --bench baselines`
+
+use mmpredict::baselines::{fujii, llmem, profiling};
+use mmpredict::config::{Stage, TrainConfig};
+use mmpredict::report::{mape, Table};
+use mmpredict::util::bench::{bench, report};
+use mmpredict::{predictor, simulator};
+
+fn main() {
+    println!("=== baseline accuracy (MAPE over DP 1..8) ===\n");
+    let mut t = Table::new(vec!["setting", "ours %", "fujii %", "llmem %", "profiling %"]);
+    let settings: Vec<(&str, Box<dyn Fn(u64) -> TrainConfig>)> = vec![
+        ("fig2a finetune", Box::new(TrainConfig::fig2a)),
+        ("fig2b finetune", Box::new(TrainConfig::fig2b)),
+        (
+            "pretrain",
+            Box::new(|dp| TrainConfig {
+                stage: Stage::Pretrain,
+                ..TrainConfig::fig2a(dp)
+            }),
+        ),
+    ];
+    for (name, mk) in &settings {
+        let (mut o, mut f, mut l, mut p) = (vec![], vec![], vec![], vec![]);
+        for dp in 1..=8 {
+            let cfg = mk(dp);
+            let m = simulator::simulate(&cfg).unwrap().peak_mib;
+            o.push((predictor::predict(&cfg).unwrap().peak_mib as f64, m));
+            f.push((fujii::predict(&cfg).unwrap().predicted_mib, m));
+            l.push((llmem::predict(&cfg).unwrap().predicted_mib, m));
+            p.push((profiling::predict(&cfg).unwrap().predicted_mib, m));
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", mape(&o) * 100.0),
+            format!("{:.1}", mape(&f) * 100.0),
+            format!("{:.1}", mape(&l) * 100.0),
+            format!("{:.1}", mape(&p) * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/baselines.csv", t.to_csv()).ok();
+
+    println!("=== prediction cost per method (fig2b/dp4) ===\n");
+    let cfg = TrainConfig::fig2b(4);
+    report(&bench("ours (factorization)", 2, 20, || {
+        let _ = predictor::predict(&cfg).unwrap();
+    }));
+    report(&bench("fujii formula", 2, 20, || {
+        let _ = fujii::predict(&cfg).unwrap();
+    }));
+    report(&bench("llmem formula", 2, 20, || {
+        let _ = llmem::predict(&cfg).unwrap();
+    }));
+    report(&bench("profiling (2 points x 3 iters)", 1, 5, || {
+        let _ = profiling::predict(&cfg).unwrap();
+    }));
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerates the paper's Fig. 2a and Fig. 2b (predicted vs
+//! measured per-GPU peak + MAPE across DP 1..8) and times each pipeline
+//! stage on the 7B model.
+//!
+//! Run: `cargo bench --bench fig2`
+
+use mmpredict::config::TrainConfig;
+use mmpredict::eval::fig2;
+use mmpredict::parser::{self, features};
+use mmpredict::util::bench::{bench, report};
+use mmpredict::{predictor, simulator};
+
+fn main() {
+    println!("=== Figure 2 reproduction (headline result) ===\n");
+    let a = fig2::fig2a_analytical().expect("fig2a");
+    println!("{}", a.render());
+    let b = fig2::fig2b_analytical().expect("fig2b");
+    println!("{}", b.render());
+    println!(
+        "paper: fig2a ~13% MAPE, fig2b ~8.7% MAPE | ours: fig2a {:.1}%, fig2b {:.1}%\n",
+        a.mape * 100.0,
+        b.mape * 100.0
+    );
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig2a.csv", a.to_csv()).ok();
+    std::fs::write("results/fig2b.csv", b.to_csv()).ok();
+
+    println!("=== stage timings (LLaVA-1.5-7B, fig2b/dp8) ===\n");
+    let cfg = TrainConfig::fig2b(8);
+    report(&bench("parse (zoo -> layer records)", 3, 30, || {
+        let _ = parser::parse(&cfg).unwrap();
+    }));
+    let pm = parser::parse(&cfg).unwrap();
+    report(&bench("encode (records -> [L,F] features)", 3, 100, || {
+        let _ = features::encode(&pm, &cfg);
+    }));
+    report(&bench("predict (analytical, end-to-end)", 3, 30, || {
+        let _ = predictor::predict(&cfg).unwrap();
+    }));
+    report(&bench("simulate (trace + allocator replay)", 3, 10, || {
+        let _ = simulator::simulate(&cfg).unwrap();
+    }));
+    report(&bench("fig2 sweep point (predict + simulate)", 1, 5, || {
+        let _ = predictor::predict(&cfg).unwrap();
+        let _ = simulator::simulate(&cfg).unwrap();
+    }));
+}

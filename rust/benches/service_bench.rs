@@ -1,0 +1,81 @@
+//! Bench: the prediction-service hot path (DESIGN.md perf row) —
+//! analytical vs tensorized (PJRT) latency, batched amortization, and
+//! end-to-end service round-trips under concurrency.
+//!
+//! Run: `cargo bench --bench service_bench` (needs `make artifacts`)
+
+use std::time::{Duration, Instant};
+
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::batcher::BatchPolicy;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::predictor::tensorized::TensorizedPredictor;
+use mmpredict::util::bench::{bench, report};
+
+fn main() {
+    let cfg = TrainConfig::fig2b(4);
+
+    println!("=== predictor hot path ===\n");
+    report(&bench("analytical predict (parse+encode+factor)", 3, 50, || {
+        let _ = mmpredict::predictor::predict(&cfg).unwrap();
+    }));
+
+    let dir = mmpredict::runtime::default_artifacts_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("no artifacts — skipping PJRT benches (run `make artifacts`)");
+        return;
+    }
+    let tp = TensorizedPredictor::load(&dir).expect("artifacts");
+    report(&bench("tensorized predict (PJRT, batch=1)", 3, 50, || {
+        let _ = tp.predict(&cfg).unwrap();
+    }));
+    let batch: Vec<TrainConfig> = (1..=8).map(TrainConfig::fig2b).collect();
+    let r = bench("tensorized predict (PJRT, batch=8)", 3, 50, || {
+        let _ = tp.predict_many(&batch).unwrap();
+    });
+    report(&r);
+    println!(
+        "  -> per-request amortized: {:?} ({:.0} predictions/s)\n",
+        r.mean / 8,
+        8.0 / r.mean.as_secs_f64()
+    );
+
+    println!("=== service round-trip (concurrent clients) ===\n");
+    let svc = PredictionService::start(
+        &dir,
+        ServiceConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(2),
+            },
+        },
+    )
+    .expect("service");
+    for clients in [1usize, 4, 8, 16] {
+        let t0 = Instant::now();
+        let per_client = 32;
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                let c = svc.client();
+                std::thread::spawn(move || {
+                    for j in 0..per_client {
+                        let dp = ((i + j) % 8 + 1) as u64;
+                        c.predict(TrainConfig::fig2b(dp)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = (clients * per_client) as f64;
+        let dt = t0.elapsed();
+        println!(
+            "{clients:>2} clients x {per_client}: {total:>4.0} reqs in {dt:>10.3?}  ({:>7.0} req/s, mean batch {:.2})",
+            total / dt.as_secs_f64(),
+            svc.metrics().mean_batch_size(),
+        );
+    }
+    println!("\nservice metrics: {}", svc.metrics().summary());
+    svc.shutdown();
+}

@@ -1,0 +1,26 @@
+//! Prior-work baselines the paper positions against (§1):
+//!
+//! * [`fujii`] — formulation-based estimator for *unimodal* 4D-parallel
+//!   LLM training (Fujii et al., arXiv:2411.06465). The paper reports
+//!   that applying it to a multimodal model "does not work at all"; this
+//!   module reproduces that comparison quantitatively.
+//! * [`llmem`] — LLMem-style fine-tuning estimator (Kim et al.,
+//!   arXiv:2404.10933), also unimodal.
+//! * [`profiling`] — profiling-based extrapolation (Gao et al. ESEC/FSE
+//!   '20, Xonar): run a few cheap iterations at small micro-batch sizes
+//!   and extrapolate linearly. Accurate in-distribution but pays
+//!   profiling cost and misses cross-setting changes.
+
+pub mod fujii;
+pub mod llmem;
+pub mod profiling;
+
+/// A baseline prediction with its cost metadata.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub name: &'static str,
+    pub predicted_mib: f64,
+    /// Number of (simulated) training iterations the method had to run
+    /// before producing a prediction (0 for pure formulas).
+    pub profile_iters: u32,
+}

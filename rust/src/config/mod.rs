@@ -1,0 +1,429 @@
+//! Training-configuration system (Fig. 1 step 3: "a configuration file
+//! provides training hyperparameters such as batch size").
+//!
+//! [`TrainConfig`] captures everything that changes the memory footprint:
+//! batch geometry, data parallelism + ZeRO stage, optimizer, precision
+//! policy, the training stage (which drives the freeze plan), activation
+//! checkpointing and LoRA. Configs load from a TOML-subset file
+//! ([`toml_mini`]) or are constructed programmatically.
+
+pub mod toml_mini;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::layer::AttnImpl;
+use crate::model::lora::LoraConfig;
+
+/// LLaVA training stages (paper §2) plus LoRA fine-tuning (§5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Stage 1: only the projector is updated; vision and language
+    /// towers are frozen.
+    Pretrain,
+    /// Stage 2: projector + language model updated; vision frozen.
+    Finetune,
+    /// LoRA fine-tuning: adapters (+ projector) trainable; bases frozen.
+    LoraFinetune,
+    /// Everything trainable (unimodal-style full training).
+    Full,
+}
+
+impl Stage {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pretrain" => Stage::Pretrain,
+            "finetune" => Stage::Finetune,
+            "lora" | "lora-finetune" => Stage::LoraFinetune,
+            "full" => Stage::Full,
+            _ => bail!("unknown stage {s:?} (pretrain|finetune|lora|full)"),
+        })
+    }
+}
+
+/// DeepSpeed ZeRO stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ZeroStage {
+    Zero0,
+    Zero1,
+    Zero2,
+    Zero3,
+}
+
+impl ZeroStage {
+    pub fn parse(n: u64) -> Result<Self> {
+        Ok(match n {
+            0 => ZeroStage::Zero0,
+            1 => ZeroStage::Zero1,
+            2 => ZeroStage::Zero2,
+            3 => ZeroStage::Zero3,
+            _ => bail!("zero stage must be 0..=3, got {n}"),
+        })
+    }
+
+    /// Shard factors `(param, grad, opt)` for a DP degree.
+    pub fn shard_factors(self, dp: u64) -> (f32, f32, f32) {
+        let s = 1.0 / dp as f32;
+        match self {
+            ZeroStage::Zero0 => (1.0, 1.0, 1.0),
+            ZeroStage::Zero1 => (1.0, 1.0, s),
+            ZeroStage::Zero2 => (1.0, s, s),
+            ZeroStage::Zero3 => (s, s, s),
+        }
+    }
+}
+
+/// Optimizer families with their state-memory profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Adam/AdamW: exp_avg + exp_avg_sq (2 fp32 states per param).
+    AdamW,
+    /// SGD with momentum buffer (1 fp32 state).
+    SgdMomentum,
+    /// Plain SGD (no state).
+    Sgd,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "adamw" | "adam" => OptimizerKind::AdamW,
+            "sgd-momentum" | "sgdm" => OptimizerKind::SgdMomentum,
+            "sgd" => OptimizerKind::Sgd,
+            _ => bail!("unknown optimizer {s:?} (adamw|sgdm|sgd)"),
+        })
+    }
+
+    /// Optimizer state elements per trainable parameter element.
+    pub fn state_mult(self) -> f32 {
+        match self {
+            OptimizerKind::AdamW => 2.0,
+            OptimizerKind::SgdMomentum => 1.0,
+            OptimizerKind::Sgd => 0.0,
+        }
+    }
+}
+
+/// Mixed-precision policy (DeepSpeed-style).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// bf16 params/grads/acts, fp32 master + optimizer states.
+    Bf16Mixed,
+    /// fp16 params/grads/acts, fp32 master + optimizer states.
+    Fp16Mixed,
+    /// Everything fp32 (no master copy).
+    Fp32,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bf16" | "bf16-mixed" => Precision::Bf16Mixed,
+            "fp16" | "fp16-mixed" => Precision::Fp16Mixed,
+            "fp32" => Precision::Fp32,
+            _ => bail!("unknown precision {s:?} (bf16|fp16|fp32)"),
+        })
+    }
+
+    /// Bytes per element of (params/acts, grads, master copy).
+    pub fn byte_widths(self) -> (u64, u64, u64) {
+        match self {
+            Precision::Bf16Mixed | Precision::Fp16Mixed => (2, 2, 4),
+            Precision::Fp32 => (4, 4, 0),
+        }
+    }
+}
+
+/// Operational-overhead calibration constants the predictor adds on top
+/// of Eq. 1 (CUDA context, allocator behaviour). Defaults calibrated
+/// against the simulator substrate — see EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug)]
+pub struct OverheadConfig {
+    /// CUDA context + cuBLAS/NCCL handles + framework baseline (MiB).
+    pub cuda_ctx_mib: f32,
+    /// Caching-allocator rounding/fragmentation fraction.
+    pub alloc_frac: f32,
+    /// Fixed cuBLAS/cuDNN workspace pool (MiB).
+    pub workspace_mib: f32,
+}
+
+impl Default for OverheadConfig {
+    fn default() -> Self {
+        Self {
+            cuda_ctx_mib: 830.0,
+            alloc_frac: 0.02,
+            workspace_mib: 96.0,
+        }
+    }
+}
+
+/// Everything that determines one training run's memory footprint.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Zoo model name (e.g. `llava-1.5-7b`).
+    pub model: String,
+    pub stage: Stage,
+    /// Micro-batch size per GPU (paper: MBS).
+    pub mbs: u64,
+    /// LM sequence length (paper: SeqLen).
+    pub seq_len: u64,
+    pub images_per_sample: u64,
+    /// Data-parallel degree (paper: DP, 1..=8).
+    pub dp: u64,
+    pub zero: ZeroStage,
+    pub optimizer: OptimizerKind,
+    pub precision: Precision,
+    pub attn: AttnImpl,
+    /// Full activation checkpointing of transformer blocks.
+    pub grad_checkpoint: bool,
+    /// LoRA adapters (implies `stage = LoraFinetune` behaviour when set
+    /// together with that stage).
+    pub lora: Option<LoraConfig>,
+    /// DeepSpeed reduce-bucket size in elements (default 5e8, as in
+    /// LLaVA's zero2.json).
+    pub bucket_elems: u64,
+    pub overheads: OverheadConfig,
+}
+
+impl TrainConfig {
+    /// The paper's Fig. 2a setting: SeqLen 1024, MBS 16, ZeRO-2.
+    pub fn fig2a(dp: u64) -> Self {
+        Self {
+            seq_len: 1024,
+            mbs: 16,
+            dp,
+            ..Self::llava_finetune_default()
+        }
+    }
+
+    /// The paper's Fig. 2b setting: SeqLen 2048, MBS 8, ZeRO-2.
+    pub fn fig2b(dp: u64) -> Self {
+        Self {
+            seq_len: 2048,
+            mbs: 8,
+            dp,
+            ..Self::llava_finetune_default()
+        }
+    }
+
+    /// LLaVA-1.5-7B fine-tuning defaults (DeepSpeed ZeRO-2, bf16, AdamW,
+    /// flash attention, gradient checkpointing on — the released recipe).
+    pub fn llava_finetune_default() -> Self {
+        Self {
+            model: "llava-1.5-7b".into(),
+            stage: Stage::Finetune,
+            mbs: 16,
+            seq_len: 1024,
+            images_per_sample: 1,
+            dp: 1,
+            zero: ZeroStage::Zero2,
+            optimizer: OptimizerKind::AdamW,
+            precision: Precision::Bf16Mixed,
+            attn: AttnImpl::Flash,
+            grad_checkpoint: true,
+            lora: None,
+            bucket_elems: 500_000_000,
+            overheads: OverheadConfig::default(),
+        }
+    }
+
+    /// Validate invariants that would silently corrupt predictions.
+    pub fn validate(&self) -> Result<()> {
+        if self.mbs == 0 || self.seq_len == 0 || self.dp == 0 {
+            bail!("mbs, seq_len and dp must be positive");
+        }
+        if self.dp > 1024 {
+            bail!("dp {} is unreasonably large", self.dp);
+        }
+        if self.stage == Stage::LoraFinetune && self.lora.is_none() {
+            bail!("stage=lora requires a [lora] section");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see `toml_mini`).
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_mini::parse(text)?;
+        let mut cfg = Self::llava_finetune_default();
+        if let Some(v) = doc.get_str("", "model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("", "stage") {
+            cfg.stage = Stage::parse(v)?;
+        }
+        if let Some(v) = doc.get_int("", "mbs") {
+            cfg.mbs = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "seq_len") {
+            cfg.seq_len = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "images_per_sample") {
+            cfg.images_per_sample = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "dp") {
+            cfg.dp = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "zero") {
+            cfg.zero = ZeroStage::parse(v as u64)?;
+        }
+        if let Some(v) = doc.get_str("", "optimizer") {
+            cfg.optimizer = OptimizerKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("", "precision") {
+            cfg.precision = Precision::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("", "attention") {
+            cfg.attn = match v {
+                "eager" => AttnImpl::Eager,
+                "flash" => AttnImpl::Flash,
+                _ => bail!("unknown attention {v:?} (eager|flash)"),
+            };
+        }
+        if let Some(v) = doc.get_bool("", "grad_checkpoint") {
+            cfg.grad_checkpoint = v;
+        }
+        if let Some(v) = doc.get_int("", "bucket_elems") {
+            cfg.bucket_elems = v as u64;
+        }
+        if let Some(v) = doc.get_float("overheads", "cuda_ctx_mib") {
+            cfg.overheads.cuda_ctx_mib = v as f32;
+        }
+        if let Some(v) = doc.get_float("overheads", "alloc_frac") {
+            cfg.overheads.alloc_frac = v as f32;
+        }
+        if let Some(v) = doc.get_float("overheads", "workspace_mib") {
+            cfg.overheads.workspace_mib = v as f32;
+        }
+        if doc.has_section("lora") {
+            let mut lora = LoraConfig::default();
+            if let Some(r) = doc.get_int("lora", "rank") {
+                lora.rank = r as u64;
+            }
+            if let Some(t) = doc.get_str_list("lora", "target_modules") {
+                lora.target_modules = t;
+            }
+            if let Some(t) = doc.get_str_list("lora", "target_projs") {
+                lora.target_projs = t;
+            }
+            cfg.lora = Some(lora);
+            if cfg.stage == Stage::Finetune {
+                cfg.stage = Stage::LoraFinetune;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Effective global batch size.
+    pub fn global_batch(&self) -> u64 {
+        self.mbs * self.dp
+    }
+
+    /// Stable fingerprint of every field that affects the encoded
+    /// feature matrix — the key for the service's encode cache.
+    pub fn cache_key(&self) -> String {
+        let lora = match &self.lora {
+            Some(l) => format!(
+                "r{}:{}:{}",
+                l.rank,
+                l.target_modules.join("+"),
+                l.target_projs.join("+")
+            ),
+            None => "none".to_string(),
+        };
+        format!(
+            "{}|{:?}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}",
+            self.model,
+            self.stage,
+            self.mbs,
+            self.seq_len,
+            self.images_per_sample,
+            self.dp,
+            self.zero,
+            self.optimizer,
+            self.precision,
+            self.attn,
+            self.grad_checkpoint,
+            lora,
+            self.bucket_elems,
+            self.overheads.cuda_ctx_mib,
+            self.overheads.alloc_frac,
+            self.overheads.workspace_mib,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_settings_match_paper() {
+        let a = TrainConfig::fig2a(4);
+        assert_eq!((a.seq_len, a.mbs, a.dp), (1024, 16, 4));
+        assert_eq!(a.zero, ZeroStage::Zero2);
+        let b = TrainConfig::fig2b(8);
+        assert_eq!((b.seq_len, b.mbs, b.dp), (2048, 8, 8));
+    }
+
+    #[test]
+    fn zero_shard_factors() {
+        assert_eq!(ZeroStage::Zero0.shard_factors(8), (1.0, 1.0, 1.0));
+        assert_eq!(ZeroStage::Zero1.shard_factors(8), (1.0, 1.0, 0.125));
+        assert_eq!(ZeroStage::Zero2.shard_factors(8), (1.0, 0.125, 0.125));
+        assert_eq!(ZeroStage::Zero3.shard_factors(8), (0.125, 0.125, 0.125));
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = TrainConfig::from_toml(
+            r#"
+model = "llava-1.5-7b"
+stage = "finetune"
+mbs = 8
+seq_len = 2048
+dp = 4
+zero = 2
+optimizer = "adamw"
+precision = "bf16"
+attention = "flash"
+grad_checkpoint = true
+
+[overheads]
+cuda_ctx_mib = 800.0
+alloc_frac = 0.03
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mbs, 8);
+        assert_eq!(cfg.dp, 4);
+        assert!(cfg.grad_checkpoint);
+        assert!((cfg.overheads.alloc_frac - 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lora_section_switches_stage() {
+        let cfg = TrainConfig::from_toml("stage = \"finetune\"\n[lora]\nrank = 8\n").unwrap();
+        assert_eq!(cfg.stage, Stage::LoraFinetune);
+        assert_eq!(cfg.lora.as_ref().unwrap().rank, 8);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(TrainConfig::from_toml("mbs = 0\n").is_err());
+        assert!(TrainConfig::from_toml("zero = 5\n").is_err());
+        assert!(TrainConfig::from_toml("optimizer = \"lion\"\n").is_err());
+        assert!(TrainConfig::from_toml("stage = \"lora\"\n").is_err()); // no [lora]
+    }
+
+    #[test]
+    fn precision_byte_widths() {
+        assert_eq!(Precision::Bf16Mixed.byte_widths(), (2, 2, 4));
+        assert_eq!(Precision::Fp32.byte_widths(), (4, 4, 0));
+    }
+}

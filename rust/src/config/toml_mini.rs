@@ -1,0 +1,219 @@
+//! Minimal TOML-subset parser (the environment is offline; `toml` is
+//! unavailable). Supports exactly what the config files need:
+//!
+//! * `[section]` headers (one level)
+//! * `key = "string"`, `key = 123`, `key = 1.5`, `key = true|false`
+//! * `key = ["a", "b"]` (string lists)
+//! * `#` comments and blank lines
+//!
+//! Anything else is a parse error — better loud than wrong.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrList(Vec<String>),
+}
+
+/// Parsed document: `(section, key) -> value`; top-level keys use the
+/// empty section `""`.
+#[derive(Debug, Default)]
+pub struct Doc {
+    values: HashMap<(String, String), Value>,
+    sections: Vec<String>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(Value::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_str_list(&self, section: &str, key: &str) -> Option<Vec<String>> {
+        match self.get(section, key) {
+            Some(Value::StrList(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.iter().any(|s| s == section)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: malformed section header {raw:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            doc.sections.push(section.clone());
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.values
+            .insert((section.clone(), key.to_string()), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated list {s:?}");
+        };
+        let mut out = Vec::new();
+        for item in inner.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match parse_value(item)? {
+                Value::Str(v) => out.push(v),
+                other => bail!("only string lists are supported, got {other:?}"),
+            }
+        }
+        return Ok(Value::StrList(out));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let d = parse(
+            "a = 1\nb = \"x\"\nc = 2.5\nd = true\n[s]\ne = 3\n# comment\nf = false\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_int("", "a"), Some(1));
+        assert_eq!(d.get_str("", "b"), Some("x"));
+        assert_eq!(d.get_float("", "c"), Some(2.5));
+        assert_eq!(d.get_bool("", "d"), Some(true));
+        assert_eq!(d.get_int("s", "e"), Some(3));
+        assert_eq!(d.get_bool("s", "f"), Some(false));
+        assert!(d.has_section("s"));
+        assert!(!d.has_section("t"));
+    }
+
+    #[test]
+    fn string_lists() {
+        let d = parse("xs = [\"a\", \"b\"]\nys = []\n").unwrap();
+        assert_eq!(d.get_str_list("", "xs").unwrap(), vec!["a", "b"]);
+        assert_eq!(d.get_str_list("", "ys").unwrap(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn int_with_underscores_and_float_promotion() {
+        let d = parse("n = 500_000_000\nf = 2\n").unwrap();
+        assert_eq!(d.get_int("", "n"), Some(500_000_000));
+        assert_eq!(d.get_float("", "f"), Some(2.0)); // int promotes
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let d = parse("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(d.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = @wat\n").is_err());
+        assert!(parse("k = \"unterminated\n").is_err());
+        assert!(parse("k = [1, 2]\n").is_err()); // non-string list
+    }
+}

@@ -1,0 +1,96 @@
+//! Dynamic batching policy: drain the request queue up to the artifact's
+//! batch capacity, waiting at most `batch_timeout` after the first
+//! request arrives (latency bound), then close the batch (throughput).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per PJRT execution (should match the largest
+    /// artifact batch capacity).
+    pub max_batch: usize,
+    /// How long to hold an open batch waiting for more requests.
+    pub batch_timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Blocking-drain one batch from `rx` under `policy`.
+///
+/// Blocks until at least one job arrives (or the channel closes —
+/// returns `None`), then keeps draining until the batch is full or the
+/// timeout since the first job expires.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.batch_timeout;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(job) => batch.push(job),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn drains_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, batch_timeout: Duration::from_millis(5) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn single_request_released_after_timeout() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_millis(1) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![42]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn closed_channel_yields_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn closed_mid_drain_returns_partial() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(1) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+}

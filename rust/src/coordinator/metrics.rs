@@ -1,0 +1,130 @@
+//! Service metrics: request/batch counters, batch-size histogram and
+//! latency accounting, all lock-free (atomics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket count: batch sizes 1..=MAX_TRACKED (last bucket is
+/// "MAX_TRACKED or more").
+pub const MAX_TRACKED: usize = 16;
+
+/// Lock-free service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    responses: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batch_hist: [AtomicU64; MAX_TRACKED],
+    latency_us_total: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize, latency: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let idx = size.clamp(1, MAX_TRACKED) - 1;
+        self.batch_hist[idx].fetch_add(1, Ordering::Relaxed);
+        self.responses.fetch_add(size as u64, Ordering::Relaxed);
+        self.latency_us_total
+            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_error(&self, n: usize) {
+        self.errors.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn responses(&self) -> u64 {
+        self.responses.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            0.0
+        } else {
+            self.responses() as f64 / b as f64
+        }
+    }
+
+    /// Mean per-batch latency.
+    pub fn mean_batch_latency(&self) -> Duration {
+        let b = self.batches();
+        if b == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.latency_us_total.load(Ordering::Relaxed) / b)
+        }
+    }
+
+    /// Batch-size histogram snapshot (index i = size i+1).
+    pub fn batch_histogram(&self) -> [u64; MAX_TRACKED] {
+        std::array::from_fn(|i| self.batch_hist[i].load(Ordering::Relaxed))
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_batch_latency={:?}",
+            self.requests(),
+            self.responses(),
+            self.errors(),
+            self.batches(),
+            self.mean_batch_size(),
+            self.mean_batch_latency()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_batch(2, Duration::from_micros(100));
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.responses(), 2);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert_eq!(m.mean_batch_latency(), Duration::from_micros(100));
+        assert_eq!(m.batch_histogram()[1], 1);
+    }
+
+    #[test]
+    fn oversized_batches_clamp_into_last_bucket() {
+        let m = Metrics::new();
+        m.on_batch(100, Duration::ZERO);
+        assert_eq!(m.batch_histogram()[MAX_TRACKED - 1], 1);
+    }
+
+    #[test]
+    fn empty_metrics_do_not_divide_by_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.mean_batch_latency(), Duration::ZERO);
+    }
+}

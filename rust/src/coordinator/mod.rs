@@ -1,0 +1,18 @@
+//! The prediction service — the L3 coordination layer.
+//!
+//! A deployment of this framework sits in front of a training scheduler:
+//! job submissions ask "will this configuration fit on this GPU?" before
+//! any cluster time is spent (the paper's OoM-prevention use case).
+//! The service accepts concurrent prediction requests, batches them into
+//! the AOT artifact's `[B, L, F]` capacity, executes one PJRT call per
+//! batch, and answers with [`crate::predictor::Prediction`]s.
+//!
+//! Threads + channels (the environment has no tokio); the hot path is
+//! encode → pad → one `execute` per batch — Python is never involved.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use server::{PredictionService, ServiceConfig};

@@ -1,0 +1,193 @@
+//! The prediction server: a worker thread owning the tensorized
+//! predictor, fed by an MPSC queue, batching requests per
+//! [`super::batcher::BatchPolicy`] and answering through per-request
+//! reply channels.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TrainConfig;
+use crate::parser::features;
+use crate::predictor::{tensorized::TensorizedPredictor, Prediction};
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceConfig {
+    pub policy: BatchPolicy,
+}
+
+struct Job {
+    cfg: TrainConfig,
+    reply: SyncSender<Result<Prediction>>,
+}
+
+/// Handle to a running prediction service. Cloneable clients submit
+/// blocking predictions; dropping the last handle shuts the worker down.
+pub struct PredictionService {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Start the worker thread; the PJRT client and compiled artifacts
+    /// are not `Send`, so the tensorized predictor is constructed *on*
+    /// the worker thread (load errors surface here via a handshake).
+    pub fn start(artifacts_dir: &str, cfg: ServiceConfig) -> Result<Self> {
+        let (tx, rx) = sync_channel::<Job>(1024);
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let dir = artifacts_dir.to_string();
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let worker = std::thread::Builder::new()
+            .name("mmpredict-batcher".into())
+            .spawn(move || {
+                let predictor = match TensorizedPredictor::load(&dir) {
+                    Ok(p) => {
+                        let _ = ready_tx.send(Ok(()));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(predictor, rx, cfg.policy, m)
+            })
+            .expect("spawning service worker");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Self {
+                tx,
+                metrics,
+                worker: Some(worker),
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => Err(anyhow!("service worker died during startup")),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Blocking prediction of one configuration.
+    pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
+        self.metrics.on_request();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job { cfg, reply: reply_tx })
+            .map_err(|_| anyhow!("prediction service is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+    }
+
+    /// A cheap cloneable submitter usable from many threads.
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Graceful shutdown (also triggered by drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Closing the queue ends the worker loop.
+        let (dead_tx, _) = sync_channel(1);
+        self.tx = dead_tx;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Cloneable request submitter.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
+        self.metrics.on_request();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job { cfg, reply: reply_tx })
+            .map_err(|_| anyhow!("prediction service is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+    }
+}
+
+fn worker_loop(
+    predictor: TensorizedPredictor,
+    rx: Receiver<Job>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    // Parse+encode is ~45% of a request's CPU cost (see EXPERIMENTS.md
+    // §Perf); schedulers re-submit near-identical configs, so memoize.
+    let mut cache = features::EncodeCache::new(256);
+    while let Some(batch) = next_batch(&rx, &policy) {
+        let t0 = Instant::now();
+        let n = batch.len();
+
+        // Parse + encode each request; requests that fail to parse get
+        // their error immediately and drop out of the batch.
+        let mut encoded = Vec::with_capacity(n);
+        let mut replies = Vec::with_capacity(n);
+        for job in batch {
+            match cache.get_or_encode(&job.cfg) {
+                Ok(enc) => {
+                    encoded.push(enc);
+                    replies.push(job.reply);
+                }
+                Err(e) => {
+                    metrics.on_error(1);
+                    let _ = job.reply.send(Err(e));
+                }
+            }
+        }
+        if encoded.is_empty() {
+            continue;
+        }
+        let refs: Vec<&features::EncodedRequest> = encoded.iter().map(|e| e.as_ref()).collect();
+        match predictor.predict_encoded(&refs) {
+            Ok(preds) => {
+                metrics.on_batch(replies.len(), t0.elapsed());
+                for (reply, p) in replies.into_iter().zip(preds) {
+                    let _ = reply.send(Ok(p));
+                }
+            }
+            Err(e) => {
+                metrics.on_error(replies.len());
+                let msg = format!("batch execution failed: {e:#}");
+                for reply in replies {
+                    let _ = reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}

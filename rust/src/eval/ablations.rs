@@ -1,0 +1,158 @@
+//! Ablations beyond Fig. 2 (DESIGN.md experiment index: abl-stage,
+//! abl-factor, abl-zero, abl-lora): the design-choice studies the
+//! framework enables.
+
+use anyhow::Result;
+
+use crate::config::{Stage, TrainConfig, ZeroStage};
+use crate::model::lora::LoraConfig;
+use crate::predictor;
+use crate::report::Table;
+use crate::simulator;
+
+/// abl-factor: per-factor breakdown (param/grad/opt/act) across DP — the
+/// paper's factorization made visible.
+pub fn factor_breakdown(model: &str, dps: &[u64]) -> Result<Table> {
+    let mut t = Table::new(vec![
+        "dp", "param GiB", "grad GiB", "opt GiB", "act GiB", "transient GiB", "peak GiB",
+    ]);
+    for &dp in dps {
+        let cfg = TrainConfig { model: model.into(), ..TrainConfig::fig2b(dp) };
+        let p = predictor::predict(&cfg)?;
+        t.row(vec![
+            dp.to_string(),
+            format!("{:.2}", p.param_mib / 1024.0),
+            format!("{:.2}", p.grad_mib / 1024.0),
+            format!("{:.2}", p.opt_mib / 1024.0),
+            format!("{:.2}", p.act_mib / 1024.0),
+            format!("{:.2}", p.transient_mib / 1024.0),
+            format!("{:.2}", p.peak_mib / 1024.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// abl-stage: pre-training vs fine-tuning behaviour (the paper's §2
+/// motivation: training behaviour changes the factor set per layer).
+pub fn stage_comparison(model: &str, dps: &[u64]) -> Result<Table> {
+    let mut t = Table::new(vec!["dp", "pretrain peak GiB", "finetune peak GiB", "ratio"]);
+    for &dp in dps {
+        let mk = |stage: Stage| TrainConfig {
+            model: model.into(),
+            stage,
+            ..TrainConfig::fig2a(dp)
+        };
+        let pt = simulator::simulate(&mk(Stage::Pretrain))?.peak_mib / 1024.0;
+        let ft = simulator::simulate(&mk(Stage::Finetune))?.peak_mib / 1024.0;
+        t.row(vec![
+            dp.to_string(),
+            format!("{pt:.2}"),
+            format!("{ft:.2}"),
+            format!("{:.2}", ft / pt),
+        ]);
+    }
+    Ok(t)
+}
+
+/// abl-zero: predicted vs measured across ZeRO stages at fixed DP.
+pub fn zero_sweep(model: &str, dp: u64) -> Result<Table> {
+    let mut t = Table::new(vec!["zero", "predicted GiB", "measured GiB", "APE %"]);
+    for (name, z) in [
+        ("0", ZeroStage::Zero0),
+        ("1", ZeroStage::Zero1),
+        ("2", ZeroStage::Zero2),
+        ("3", ZeroStage::Zero3),
+    ] {
+        let cfg = TrainConfig { model: model.into(), zero: z, ..TrainConfig::fig2b(dp) };
+        let p = predictor::predict(&cfg)?.peak_mib as f64;
+        let m = simulator::simulate(&cfg)?.peak_mib;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", p / 1024.0),
+            format!("{:.2}", m / 1024.0),
+            format!("{:.1}", crate::report::ape(p, m) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// abl-lora (paper §5 future work): LoRA fine-tuning across ranks.
+pub fn lora_sweep(model: &str, dp: u64, ranks: &[u64]) -> Result<Table> {
+    let mut t = Table::new(vec![
+        "rank", "trainable M", "predicted GiB", "measured GiB", "APE %",
+    ]);
+    for &rank in ranks {
+        let cfg = TrainConfig {
+            model: model.into(),
+            stage: Stage::LoraFinetune,
+            lora: Some(LoraConfig { rank, ..Default::default() }),
+            ..TrainConfig::fig2b(dp)
+        };
+        let pm = crate::parser::parse(&cfg)?;
+        let p = predictor::predict(&cfg)?.peak_mib as f64;
+        let m = simulator::simulate(&cfg)?.peak_mib;
+        t.row(vec![
+            rank.to_string(),
+            format!("{:.4}", pm.trainable_param_elems as f64 / 1e6),
+            format!("{:.2}", p / 1024.0),
+            format!("{:.2}", m / 1024.0),
+            format!("{:.1}", crate::report::ape(p, m) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Attention-implementation ablation: eager vs flash under both
+/// checkpointing settings.
+pub fn attention_ablation(model: &str) -> Result<Table> {
+    use crate::model::layer::AttnImpl;
+    let mut t = Table::new(vec!["attention", "ckpt", "measured GiB"]);
+    for (name, attn) in [("eager", AttnImpl::Eager), ("flash", AttnImpl::Flash)] {
+        for ckpt in [false, true] {
+            let cfg = TrainConfig {
+                model: model.into(),
+                attn,
+                grad_checkpoint: ckpt,
+                ..TrainConfig::fig2b(8)
+            };
+            let m = simulator::simulate(&cfg)?.peak_mib;
+            t.row(vec![name.to_string(), ckpt.to_string(), format!("{:.2}", m / 1024.0)]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_breakdown_rows() {
+        let t = factor_breakdown("llava-tiny", &[1, 4, 8]).unwrap();
+        assert_eq!(t.render().lines().count(), 5);
+    }
+
+    #[test]
+    fn stage_comparison_shows_finetune_bigger() {
+        let t = stage_comparison("llava-1.5-7b", &[1]).unwrap();
+        let row = t.render().lines().last().unwrap().to_string();
+        let ratio: f64 = row.split_whitespace().last().unwrap().parse().unwrap();
+        assert!(ratio > 1.0, "finetune should exceed pretrain: {row}");
+    }
+
+    #[test]
+    fn zero_sweep_renders() {
+        let t = zero_sweep("llava-tiny", 8).unwrap();
+        assert_eq!(t.render().lines().count(), 6);
+    }
+
+    #[test]
+    fn lora_sweep_trainable_grows_with_rank() {
+        let t = lora_sweep("llava-tiny", 2, &[4, 16]).unwrap();
+        let csv = t.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        let m4: f64 = rows[0].split(',').nth(1).unwrap().parse().unwrap();
+        let m16: f64 = rows[1].split(',').nth(1).unwrap().parse().unwrap();
+        assert!(m16 > m4);
+    }
+}

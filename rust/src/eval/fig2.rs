@@ -1,0 +1,134 @@
+//! Fig. 2 reproduction: predicted vs measured per-GPU peak for
+//! LLaVA-1.5-7B under the paper's two hyperparameter settings, DP 1..8.
+//!
+//! * Fig. 2a — SeqLen 1024, MBS 16 (paper: ~13% average MAPE)
+//! * Fig. 2b — SeqLen 2048, MBS 8 (paper: ~8.7% average MAPE)
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::report::{ascii_bars, mape, Table};
+use crate::simulator;
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub dp: u64,
+    pub predicted_mib: f64,
+    pub measured_mib: f64,
+}
+
+impl Point {
+    pub fn ape(&self) -> f64 {
+        crate::report::ape(self.predicted_mib, self.measured_mib)
+    }
+}
+
+/// A full setting sweep with its MAPE.
+#[derive(Clone, Debug)]
+pub struct SettingResult {
+    pub name: String,
+    pub points: Vec<Point>,
+    pub mape: f64,
+}
+
+impl SettingResult {
+    /// Render as an aligned table (the paper's bar-pair panel as text).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["DP", "predicted (GiB)", "measured (GiB)", "APE %"]);
+        for p in &self.points {
+            t.row(vec![
+                p.dp.to_string(),
+                format!("{:.2}", p.predicted_mib / 1024.0),
+                format!("{:.2}", p.measured_mib / 1024.0),
+                format!("{:.1}", p.ape() * 100.0),
+            ]);
+        }
+        let mut bars = Vec::new();
+        for p in &self.points {
+            bars.push((format!("dp{} pred", p.dp), p.predicted_mib / 1024.0));
+            bars.push((format!("dp{} meas", p.dp), p.measured_mib / 1024.0));
+        }
+        format!(
+            "== {} ==\n{}\naverage MAPE: {:.1}%\n\n{}",
+            self.name,
+            t.render(),
+            self.mape * 100.0,
+            ascii_bars(&bars, 48)
+        )
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec!["dp", "predicted_mib", "measured_mib", "ape"]);
+        for p in &self.points {
+            t.row(vec![
+                p.dp.to_string(),
+                format!("{:.3}", p.predicted_mib),
+                format!("{:.3}", p.measured_mib),
+                format!("{:.5}", p.ape()),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+/// Sweep DP 1..=8 of a setting, comparing `predict` against the
+/// simulator ground truth.
+pub fn run_setting<F>(name: &str, make_cfg: impl Fn(u64) -> TrainConfig, predict: F) -> Result<SettingResult>
+where
+    F: Fn(&TrainConfig) -> Result<f64>,
+{
+    let mut points = Vec::new();
+    for dp in 1..=8 {
+        let cfg = make_cfg(dp);
+        let predicted_mib = predict(&cfg)?;
+        let measured_mib = simulator::simulate(&cfg)?.peak_mib;
+        points.push(Point { dp, predicted_mib, measured_mib });
+    }
+    let pairs: Vec<(f64, f64)> = points.iter().map(|p| (p.predicted_mib, p.measured_mib)).collect();
+    Ok(SettingResult {
+        name: name.to_string(),
+        mape: mape(&pairs),
+        points,
+    })
+}
+
+/// Fig. 2a with the analytical predictor.
+pub fn fig2a_analytical() -> Result<SettingResult> {
+    run_setting("fig2a: LLaVA-1.5-7B, SeqLen 1024, MBS 16, ZeRO-2", TrainConfig::fig2a, |c| {
+        Ok(crate::predictor::predict(c)?.peak_mib as f64)
+    })
+}
+
+/// Fig. 2b with the analytical predictor.
+pub fn fig2b_analytical() -> Result<SettingResult> {
+    run_setting("fig2b: LLaVA-1.5-7B, SeqLen 2048, MBS 8, ZeRO-2", TrainConfig::fig2b, |c| {
+        Ok(crate::predictor::predict(c)?.peak_mib as f64)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_on_tiny_model_has_bounded_mape() {
+        let r = run_setting(
+            "tiny",
+            |dp| TrainConfig {
+                model: "llava-tiny".into(),
+                mbs: 4,
+                seq_len: 128,
+                dp,
+                ..TrainConfig::llava_finetune_default()
+            },
+            |c| Ok(crate::predictor::predict(c)?.peak_mib as f64),
+        )
+        .unwrap();
+        assert_eq!(r.points.len(), 8);
+        assert!(r.mape < 0.5, "MAPE {:.3}", r.mape);
+        let rendered = r.render();
+        assert!(rendered.contains("average MAPE"));
+        assert!(r.to_csv().lines().count() == 9);
+    }
+}

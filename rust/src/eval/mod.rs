@@ -1,0 +1,7 @@
+//! Evaluation harness: regenerates every figure/table of the paper plus
+//! the ablations DESIGN.md commits to (experiment index: DESIGN.md).
+
+pub mod ablations;
+pub mod fig2;
+
+pub use fig2::{run_setting, Point, SettingResult};

@@ -1,0 +1,177 @@
+//! KV-cache memory model for decoder inference.
+//!
+//! Reuses the training-side architecture description: the per-block KV
+//! width is read off the parsed `k_proj`/`v_proj` shapes, so grouped-
+//! query models and the multimodal image-token prefix are priced
+//! exactly like the training predictor prices activations.
+
+use anyhow::Result;
+
+use crate::config::Precision;
+use crate::model::layer::{AttnImpl, LayerKind};
+use crate::model::zoo;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+/// Inference-serving configuration.
+#[derive(Clone, Debug)]
+pub struct InferenceConfig {
+    /// Zoo model name.
+    pub model: String,
+    /// Maximum tokens per sequence (prompt + generation), image tokens
+    /// included.
+    pub context_len: u64,
+    /// Concurrent sequences resident in the KV cache.
+    pub max_seqs: u64,
+    /// Cache / weight dtype.
+    pub precision: Precision,
+    /// Images per request (0 = text-only traffic).
+    pub images_per_request: u64,
+}
+
+impl InferenceConfig {
+    pub fn llava_7b_agent() -> Self {
+        Self {
+            model: "llava-1.5-7b".into(),
+            context_len: 4096,
+            max_seqs: 16,
+            precision: Precision::Bf16Mixed,
+            images_per_request: 1,
+        }
+    }
+}
+
+/// Per-component inference memory (MiB).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferencePrediction {
+    /// Resident weights (all modules — the vision tower runs per
+    /// request, the decoder every step).
+    pub weights_mib: f64,
+    /// KV cache at full occupancy (`max_seqs * context_len` tokens).
+    pub kv_cache_mib: f64,
+    /// Per-token KV bytes across all decoder blocks (the planning
+    /// number: bytes/token of context).
+    pub kv_bytes_per_token: f64,
+    /// Decode-step activation workspace (hidden chain for one step of
+    /// `max_seqs` sequences) + one vision-tower forward.
+    pub workspace_mib: f64,
+    pub peak_mib: f64,
+}
+
+impl InferencePrediction {
+    pub fn peak_gib(&self) -> f64 {
+        self.peak_mib / 1024.0
+    }
+
+    /// Max concurrent sequences fitting in `capacity_mib`.
+    pub fn max_seqs_for(&self, capacity_mib: f64, context_len: u64) -> u64 {
+        let fixed = self.weights_mib + self.workspace_mib;
+        let per_seq = self.kv_bytes_per_token * context_len as f64 / MIB;
+        if capacity_mib <= fixed || per_seq <= 0.0 {
+            return 0;
+        }
+        ((capacity_mib - fixed) / per_seq) as u64
+    }
+}
+
+/// Predict inference memory for a configuration.
+pub fn predict_inference(cfg: &InferenceConfig) -> Result<InferencePrediction> {
+    let entry = zoo::build(&cfg.model, cfg.context_len, AttnImpl::Flash)?;
+    let (wb, _, _) = cfg.precision.byte_widths();
+
+    // Weights: every parameter resident once (no grads/opt at inference).
+    let weights_mib = entry.spec.param_elems() as f64 * wb as f64 / MIB;
+
+    // KV bytes/token: sum over decoder blocks of 2 (K and V) * kv_width.
+    let lm = entry
+        .spec
+        .module("language_model")
+        .unwrap_or(&entry.spec.modules[entry.spec.modules.len() - 1]);
+    let mut kv_width: u64 = 0;
+    let mut hidden: u64 = 1;
+    for l in &lm.layers {
+        if l.name.contains("k_proj") {
+            if let LayerKind::Linear { d_out, d_in, .. } = l.kind {
+                kv_width += 2 * d_out; // K and V have the same width
+                hidden = hidden.max(d_in);
+            }
+        }
+    }
+    let kv_bytes_per_token = (kv_width * wb) as f64;
+    let kv_cache_mib =
+        kv_bytes_per_token * (cfg.max_seqs * cfg.context_len) as f64 / MIB;
+
+    // Decode workspace: one token per live sequence through the hidden
+    // chain (h + inter upper bound ~ 6h), plus logits, plus one vision
+    // forward per in-flight request with images.
+    let vocab_logits = 32_000u64; // decoder vocab (LLaMA family)
+    let decode = cfg.max_seqs * (6 * hidden + vocab_logits) * wb as u64;
+    let vision = if cfg.images_per_request > 0 && entry.vision_tokens > 0 {
+        // one image through the tower: tokens * hidden * ~20 tensors
+        entry.vision_tokens * 1024 * 20 * wb as u64
+    } else {
+        0
+    };
+    let workspace_mib = (decode + vision) as f64 / MIB;
+
+    Ok(InferencePrediction {
+        weights_mib,
+        kv_cache_mib,
+        kv_bytes_per_token,
+        workspace_mib,
+        peak_mib: weights_mib + kv_cache_mib + workspace_mib,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llava_7b_kv_per_token() {
+        // 32 blocks * 2 * 4096 * 2 bytes = 512 KiB/token.
+        let p = predict_inference(&InferenceConfig::llava_7b_agent()).unwrap();
+        assert_eq!(p.kv_bytes_per_token as u64, 32 * 2 * 4096 * 2);
+        // 16 seqs * 4096 ctx * 512KiB = 32 GiB of KV
+        assert!((p.kv_cache_mib / 1024.0 - 32.0).abs() < 0.5, "{}", p.kv_cache_mib);
+        assert!(p.weights_mib > 13_000.0 && p.weights_mib < 14_000.0);
+    }
+
+    #[test]
+    fn capacity_planning_inverse() {
+        let p = predict_inference(&InferenceConfig::llava_7b_agent()).unwrap();
+        let cap = 80.0 * 1024.0;
+        let n = p.max_seqs_for(cap, 4096);
+        assert!(n > 16 && n < 64, "got {n}");
+        // feasibility: n seqs must actually fit, n+4 must not
+        let fits = |seqs: u64| {
+            let cfg = InferenceConfig { max_seqs: seqs, ..InferenceConfig::llava_7b_agent() };
+            predict_inference(&cfg).unwrap().peak_mib <= cap
+        };
+        assert!(fits(n));
+        assert!(!fits(n + 4));
+    }
+
+    #[test]
+    fn text_only_traffic_skips_vision_workspace() {
+        let with = predict_inference(&InferenceConfig::llava_7b_agent()).unwrap();
+        let without = predict_inference(&InferenceConfig {
+            images_per_request: 0,
+            ..InferenceConfig::llava_7b_agent()
+        })
+        .unwrap();
+        assert!(without.workspace_mib < with.workspace_mib);
+        assert_eq!(without.kv_cache_mib, with.kv_cache_mib);
+    }
+
+    #[test]
+    fn unimodal_model_supported() {
+        let p = predict_inference(&InferenceConfig {
+            model: "vicuna-7b".into(),
+            images_per_request: 0,
+            ..InferenceConfig::llava_7b_agent()
+        })
+        .unwrap();
+        assert!(p.kv_bytes_per_token > 0.0);
+    }
+}

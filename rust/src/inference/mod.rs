@@ -1,0 +1,21 @@
+//! Inference-workload memory prediction — the paper's §5 future work
+//! ("extend ... to inference workloads of agentic AI systems that manage
+//! memory with key-value caching and multi-turn orchestration"),
+//! implemented as a first-class extension.
+//!
+//! Two parts:
+//!
+//! * [`kv`] — the KV-cache memory model: per-token cache bytes derived
+//!   from the *same* parsed architecture the training predictor uses
+//!   (k/v projection shapes per decoder block), plus weight residency
+//!   and decode-step workspace.
+//! * [`serving`] — a discrete-time multi-turn serving simulator:
+//!   sessions arrive, hold their KV across turns, and an admission
+//!   policy bounds concurrency; the analytic capacity formula is
+//!   validated against the simulated peak.
+
+pub mod kv;
+pub mod serving;
+
+pub use kv::{predict_inference, InferenceConfig, InferencePrediction};
+pub use serving::{simulate_serving, ServingReport, ServingWorkload};

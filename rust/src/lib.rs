@@ -1,0 +1,52 @@
+//! # mmpredict — GPU Memory Prediction for Multimodal Model Training
+//!
+//! A reproduction of *"GPU Memory Prediction for Multimodal Model
+//! Training"* (Jeong, Kang et al., 2025) as a three-layer rust + JAX +
+//! Pallas system:
+//!
+//! * **L3 (this crate)** — the framework: a typed multimodal model zoo
+//!   ([`model`]), a training-configuration system ([`config`]), the
+//!   *model parser* that decomposes modules into fine-grained layers and
+//!   derives their training behaviour ([`parser`]), the *factor
+//!   predictor* ([`predictor`]), a discrete-event GPU-memory training
+//!   simulator that serves as measured ground truth ([`simulator`]),
+//!   prior-work baselines ([`baselines`]), a batched prediction service
+//!   ([`coordinator`]), and the evaluation harness regenerating every
+//!   figure of the paper ([`eval`], [`report`]).
+//! * **L2/L1 (python/, build-time only)** — the batched factorization +
+//!   liveness-scan compute graph, with the per-layer factor math and the
+//!   timeline scan written as Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from rust via PJRT ([`runtime`]).
+//!
+//! The paper's Eq. 1 is the contract:
+//!
+//! ```text
+//! M_peak = Σ_module Σ_layer (M_param + M_opt + M_grad + M_act)
+//! ```
+//!
+//! refined with an activation-liveness timeline (forward/backward
+//! transient peaks) and operational overheads (allocator behaviour,
+//! ZeRO-2 gradient buckets, CUDA context) — see `DESIGN.md`.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod inference;
+pub mod model;
+pub mod parser;
+pub mod predictor;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use model::zoo;
+pub use parser::ParsedModel;
+pub use predictor::Prediction;
+
+/// MiB as f64 bytes.
+pub const MIB: f64 = 1024.0 * 1024.0;
+/// GiB as f64 bytes.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;

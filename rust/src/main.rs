@@ -1,0 +1,310 @@
+//! `repro` — the mmpredict command line.
+//!
+//! Subcommands:
+//!
+//! * `predict`   — predict peak GPU memory for a training configuration
+//!   (analytical by default; `--tensorized` routes through the AOT
+//!   artifact via PJRT).
+//! * `simulate`  — run the ground-truth simulator and print the
+//!   measurement with its factor attribution.
+//! * `eval`      — regenerate the paper's Fig. 2a/2b sweeps (+ CSV).
+//! * `ablations` — the DESIGN.md ablation tables.
+//! * `baselines` — compare against Fujii/LLMem/profiling baselines.
+//! * `zoo`       — list available model presets.
+
+use anyhow::{bail, Context, Result};
+
+use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
+use mmpredict::model::layer::AttnImpl;
+use mmpredict::util::cli::Args;
+use mmpredict::util::units::human_mib;
+use mmpredict::{baselines, eval, parser, predictor, report, simulator, zoo};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("predict") => cmd_predict(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("eval") => cmd_eval(args),
+        Some("ablations") => cmd_ablations(args),
+        Some("baselines") => cmd_baselines(args),
+        Some("infer") => cmd_infer(args),
+        Some("zoo") => cmd_zoo(),
+        Some(other) => bail!("unknown subcommand {other:?}; see --help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — GPU memory prediction for multimodal model training\n\n\
+         usage: repro <predict|simulate|eval|ablations|baselines|infer|zoo> [options]\n\n\
+         common options:\n\
+         \x20 --config <file.toml>      load a training config file\n\
+         \x20 --model <name>            zoo model (default llava-1.5-7b)\n\
+         \x20 --stage <pretrain|finetune|lora|full>\n\
+         \x20 --mbs N --seq-len N --dp N --zero 0..3\n\
+         \x20 --optimizer <adamw|sgdm|sgd> --precision <bf16|fp16|fp32>\n\
+         \x20 --attention <flash|eager> --no-ckpt\n\
+         predict options:\n\
+         \x20 --tensorized              execute the AOT artifact via PJRT\n\
+         \x20 --artifacts <dir>         artifact directory (default artifacts/)\n\
+         \x20 --capacity-gib <G>        also report whether the run fits\n\
+         eval options:\n\
+         \x20 --figure <2a|2b|all>      which sweep (default all)\n\
+         \x20 --out <dir>               write CSVs (default results/)"
+    );
+}
+
+/// Build a TrainConfig from `--config` and/or flag overrides.
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => TrainConfig::llava_finetune_default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.get("stage") {
+        cfg.stage = Stage::parse(s)?;
+        if cfg.stage == Stage::LoraFinetune && cfg.lora.is_none() {
+            cfg.lora = Some(Default::default());
+        }
+    }
+    if let Some(v) = args.get_parse::<u64>("mbs")? {
+        cfg.mbs = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seq-len")? {
+        cfg.seq_len = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("dp")? {
+        cfg.dp = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("zero")? {
+        cfg.zero = ZeroStage::parse(v)?;
+    }
+    if let Some(v) = args.get("optimizer") {
+        cfg.optimizer = OptimizerKind::parse(v)?;
+    }
+    if let Some(v) = args.get("precision") {
+        cfg.precision = Precision::parse(v)?;
+    }
+    if let Some(v) = args.get("attention") {
+        cfg.attn = match v {
+            "flash" => AttnImpl::Flash,
+            "eager" => AttnImpl::Eager,
+            _ => bail!("unknown attention {v:?}"),
+        };
+    }
+    if args.flag("no-ckpt") {
+        cfg.grad_checkpoint = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let pm = parser::parse(&cfg)?;
+    let p = if args.flag("tensorized") {
+        let dir = args.get_or("artifacts", "artifacts");
+        let tp = predictor::tensorized::TensorizedPredictor::load(dir)
+            .context("loading AOT artifacts (run `make artifacts`)")?;
+        tp.predict(&cfg)?
+    } else {
+        predictor::predict(&cfg)?
+    };
+    println!(
+        "model: {} ({} layers, {:.2}B params, {:.2}B trainable)",
+        pm.model_name,
+        pm.num_layers(),
+        pm.total_param_elems as f64 / 1e9,
+        pm.trainable_param_elems as f64 / 1e9,
+    );
+    println!("predicted peak: {}", human_mib(p.peak_mib as f64));
+    println!("  M_param     {}", human_mib(p.param_mib as f64));
+    println!("  M_grad      {}", human_mib(p.grad_mib as f64));
+    println!("  M_opt       {}", human_mib(p.opt_mib as f64));
+    println!("  M_act       {}", human_mib(p.act_mib as f64));
+    println!("  transient   {}", human_mib(p.transient_mib as f64));
+    if let Some(cap) = args.get_parse::<f64>("capacity-gib")? {
+        let fits = p.fits((cap * 1024.0) as f32);
+        println!(
+            "fits {cap:.0} GiB GPU: {}",
+            if fits { "YES" } else { "NO — would OoM" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    if let Some(path) = args.get("timeline") {
+        let pm = parser::parse(&cfg)?;
+        let events = simulator::trace::generate(&pm, &cfg);
+        let (_, tl) = simulator::engine::replay_with_timeline(&events)?;
+        let mut csv = String::from("event,phase,allocated_mib,reserved_mib\n");
+        for (i, phase, a, r) in tl {
+            csv.push_str(&format!(
+                "{i},{phase},{:.2},{:.2}\n",
+                a as f64 / (1024.0 * 1024.0),
+                r as f64 / (1024.0 * 1024.0)
+            ));
+        }
+        std::fs::write(path, csv).with_context(|| format!("writing {path}"))?;
+        println!("wrote memory timeline to {path}");
+    }
+    let m = simulator::simulate(&cfg)?;
+    println!("measured peak:   {}", human_mib(m.peak_mib));
+    println!("  allocated pk   {}", human_mib(m.peak_allocated_mib));
+    println!("  reserved pk    {}", human_mib(m.peak_reserved_mib));
+    println!("  cuda context   {}", human_mib(m.cuda_ctx_mib));
+    println!("  fragmentation  {:.2}%", m.frag_frac * 100.0);
+    println!("  peak phase     {}", m.peak_phase);
+    println!("  allocations    {}", m.alloc_count);
+    println!("attribution at peak:");
+    for (tag, bytes) in m.at_peak.entries() {
+        if *bytes > 0 {
+            println!(
+                "  {:<14} {}",
+                tag.as_str(),
+                human_mib(*bytes as f64 / (1024.0 * 1024.0))
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args.get_or("figure", "all");
+    let out_dir = args.get_or("out", "results");
+    std::fs::create_dir_all(out_dir).ok();
+    let mut results = Vec::new();
+    if which == "2a" || which == "all" {
+        results.push(("fig2a", eval::fig2::fig2a_analytical()?));
+    }
+    if which == "2b" || which == "all" {
+        results.push(("fig2b", eval::fig2::fig2b_analytical()?));
+    }
+    if results.is_empty() {
+        bail!("unknown --figure {which:?} (2a|2b|all)");
+    }
+    for (name, r) in &results {
+        println!("{}", r.render());
+        let path = format!("{out_dir}/{name}.csv");
+        std::fs::write(&path, r.to_csv()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}\n");
+    }
+    Ok(())
+}
+
+fn cmd_ablations(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "llava-1.5-7b");
+    println!("== factor breakdown (fig2b geometry) ==");
+    println!("{}", eval::ablations::factor_breakdown(model, &[1, 2, 4, 8])?.render());
+    println!("== stage comparison (pretrain vs finetune, fig2a geometry) ==");
+    println!("{}", eval::ablations::stage_comparison(model, &[1, 4, 8])?.render());
+    println!("== ZeRO stage sweep (dp=8) ==");
+    println!("{}", eval::ablations::zero_sweep(model, 8)?.render());
+    println!("== LoRA rank sweep (dp=4) ==");
+    println!("{}", eval::ablations::lora_sweep(model, 4, &[8, 64, 256])?.render());
+    println!("== attention implementation ==");
+    println!("{}", eval::ablations::attention_ablation(model)?.render());
+    Ok(())
+}
+
+fn cmd_baselines(args: &Args) -> Result<()> {
+    let mut t = report::Table::new(vec![
+        "setting", "dp", "method", "predicted GiB", "measured GiB", "APE %", "profile iters",
+    ]);
+    for (setting, mk) in [
+        ("fig2a", TrainConfig::fig2a as fn(u64) -> TrainConfig),
+        ("fig2b", TrainConfig::fig2b as fn(u64) -> TrainConfig),
+    ] {
+        for dp in [1u64, 4, 8] {
+            let mut cfg = mk(dp);
+            if let Some(m) = args.get("model") {
+                cfg.model = m.to_string();
+            }
+            let measured = simulator::simulate(&cfg)?.peak_mib;
+            let ours = predictor::predict(&cfg)?.peak_mib as f64;
+            let rows = [
+                ("ours (factorization)", ours, 0u32),
+                {
+                    let b = baselines::fujii::predict(&cfg)?;
+                    (b.name, b.predicted_mib, b.profile_iters)
+                },
+                {
+                    let b = baselines::llmem::predict(&cfg)?;
+                    (b.name, b.predicted_mib, b.profile_iters)
+                },
+                {
+                    let b = baselines::profiling::predict(&cfg)?;
+                    (b.name, b.predicted_mib, b.profile_iters)
+                },
+            ];
+            for (name, pred, iters) in rows {
+                t.row(vec![
+                    setting.to_string(),
+                    dp.to_string(),
+                    name.to_string(),
+                    format!("{:.2}", pred / 1024.0),
+                    format!("{:.2}", measured / 1024.0),
+                    format!("{:.1}", report::ape(pred, measured) * 100.0),
+                    iters.to_string(),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    use mmpredict::inference::{predict_inference, InferenceConfig};
+    let cfg = InferenceConfig {
+        model: args.get_or("model", "llava-1.5-7b").to_string(),
+        context_len: args.get_parse::<u64>("context")?.unwrap_or(4096),
+        max_seqs: args.get_parse::<u64>("max-seqs")?.unwrap_or(16),
+        precision: mmpredict::config::Precision::parse(args.get_or("precision", "bf16"))?,
+        images_per_request: args.get_parse::<u64>("images")?.unwrap_or(1),
+    };
+    let p = predict_inference(&cfg)?;
+    println!("weights        {}", human_mib(p.weights_mib));
+    println!("kv per token   {:.0} KiB", p.kv_bytes_per_token / 1024.0);
+    println!("kv cache       {}", human_mib(p.kv_cache_mib));
+    println!("workspace      {}", human_mib(p.workspace_mib));
+    println!("peak           {}", human_mib(p.peak_mib));
+    if let Some(cap) = args.get_parse::<f64>("capacity-gib")? {
+        println!(
+            "max sessions at {cap:.0} GiB: {}",
+            p.max_seqs_for(cap * 1024.0, cfg.context_len)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<()> {
+    println!("available models:");
+    for name in zoo::names() {
+        let e = zoo::build(name, 2048, AttnImpl::Flash)?;
+        println!(
+            "  {:<14} {:>7.2}B params  {:>4} layers  {} modules",
+            name,
+            e.spec.param_elems() as f64 / 1e9,
+            e.spec.num_layers(),
+            e.spec.modules.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Element types, modalities and the token context that sizes
+//! activations.
+
+/// Tensor element types relevant to training-memory accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I64,
+    I32,
+    U8,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// Which modality a module belongs to. Drives the paper's module
+/// extraction (Fig. 1 step 2) and the training-behaviour analysis
+/// (frozen vision tower vs trainable language decoder).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Modality {
+    Vision,
+    Projector,
+    Language,
+}
+
+impl Modality {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Modality::Vision => "vision",
+            Modality::Projector => "projector",
+            Modality::Language => "language",
+        }
+    }
+}
+
+/// Per-step token context: how many tokens flow through each modality.
+///
+/// For LLaVA-style models the language sequence already *includes* the
+/// projected image tokens (`SeqLen` in the paper's settings is the LM
+/// context length), the vision tower runs over `patch + CLS` tokens per
+/// image, and the projector over `patch` tokens per image.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenCtx {
+    /// Micro-batch size (paper: MBS).
+    pub mbs: u64,
+    /// Language-model sequence length (paper: SeqLen), image tokens
+    /// included.
+    pub seq_len: u64,
+    /// Vision-tower tokens per image (ViT-L/14-336: 24*24 + 1 = 577).
+    pub vision_tokens: u64,
+    /// Projected image tokens per image entering the LM (576).
+    pub image_tokens: u64,
+    /// Images per sample (LLaVA: 1).
+    pub images_per_sample: u64,
+}
+
+impl TokenCtx {
+    /// Tokens flowing through a module of the given modality, per step.
+    pub fn tokens(&self, modality: Modality) -> u64 {
+        match modality {
+            Modality::Vision => self.mbs * self.images_per_sample * self.vision_tokens,
+            Modality::Projector => self.mbs * self.images_per_sample * self.image_tokens,
+            Modality::Language => self.mbs * self.seq_len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::I64.bytes(), 8);
+        assert_eq!(DType::U8.bytes(), 1);
+    }
+
+    #[test]
+    fn token_counts_per_modality() {
+        let ctx = TokenCtx {
+            mbs: 8,
+            seq_len: 2048,
+            vision_tokens: 577,
+            image_tokens: 576,
+            images_per_sample: 1,
+        };
+        assert_eq!(ctx.tokens(Modality::Language), 8 * 2048);
+        assert_eq!(ctx.tokens(Modality::Vision), 8 * 577);
+        assert_eq!(ctx.tokens(Modality::Projector), 8 * 576);
+    }
+}

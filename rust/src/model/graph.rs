@@ -1,0 +1,121 @@
+//! Reusable block builders shared by the concrete architectures:
+//! pre-LN ViT encoder blocks and LLaMA-style decoder blocks, decomposed
+//! to the same granularity the paper's PyTorch-API parser would see.
+
+use super::layer::{ActFn, AttnImpl, LayerKind};
+use super::module::ModuleSpec;
+
+/// Append one pre-LN ViT encoder block (CLIP style: eager attention,
+/// LayerNorm, QuickGELU MLP, biases everywhere).
+#[allow(clippy::too_many_arguments)]
+pub fn push_vit_block(
+    m: &mut ModuleSpec,
+    idx: usize,
+    hidden: u64,
+    heads: u64,
+    mlp: u64,
+    kv_len: u64,
+    act: ActFn,
+    attn: AttnImpl,
+) {
+    let p = format!("encoder.layers.{idx}");
+    let head_dim = hidden / heads;
+    m.push(format!("{p}.layer_norm1"), LayerKind::LayerNorm { dim: hidden });
+    m.push(format!("{p}.self_attn.q_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    m.push(format!("{p}.self_attn.k_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    m.push(format!("{p}.self_attn.v_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    push_attention_core(m, &p, heads, head_dim, kv_len, attn);
+    m.push(format!("{p}.self_attn.out_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    m.push(format!("{p}.residual_attn"), LayerKind::Add { dim: hidden });
+    m.push(format!("{p}.layer_norm2"), LayerKind::LayerNorm { dim: hidden });
+    m.push(format!("{p}.mlp.fc1"), LayerKind::Linear { d_in: hidden, d_out: mlp, bias: true });
+    m.push(format!("{p}.mlp.act"), LayerKind::Activation { f: act, dim: mlp });
+    m.push(format!("{p}.mlp.fc2"), LayerKind::Linear { d_in: mlp, d_out: hidden, bias: true });
+    m.push(format!("{p}.residual_mlp"), LayerKind::Add { dim: hidden });
+}
+
+/// Append one LLaMA-style decoder block (RMSNorm, rotary, SwiGLU MLP,
+/// no biases).
+#[allow(clippy::too_many_arguments)]
+pub fn push_llama_block(
+    m: &mut ModuleSpec,
+    idx: usize,
+    hidden: u64,
+    heads: u64,
+    kv_heads: u64,
+    inter: u64,
+    kv_len: u64,
+    attn: AttnImpl,
+) {
+    let p = format!("layers.{idx}");
+    let head_dim = hidden / heads;
+    m.push(format!("{p}.input_layernorm"), LayerKind::RmsNorm { dim: hidden });
+    m.push(format!("{p}.self_attn.q_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false });
+    m.push(format!("{p}.self_attn.k_proj"), LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false });
+    m.push(format!("{p}.self_attn.v_proj"), LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false });
+    m.push(format!("{p}.self_attn.rotary"), LayerKind::Rotary { dim: hidden });
+    push_attention_core(m, &p, heads, head_dim, kv_len, attn);
+    m.push(format!("{p}.self_attn.o_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false });
+    m.push(format!("{p}.residual_attn"), LayerKind::Add { dim: hidden });
+    m.push(format!("{p}.post_attention_layernorm"), LayerKind::RmsNorm { dim: hidden });
+    m.push(format!("{p}.mlp.gate_proj"), LayerKind::Linear { d_in: hidden, d_out: inter, bias: false });
+    m.push(format!("{p}.mlp.up_proj"), LayerKind::Linear { d_in: hidden, d_out: inter, bias: false });
+    m.push(format!("{p}.mlp.act"), LayerKind::Activation { f: ActFn::Silu, dim: inter });
+    m.push(format!("{p}.mlp.gate_mul"), LayerKind::Mul { dim: inter });
+    m.push(format!("{p}.mlp.down_proj"), LayerKind::Linear { d_in: inter, d_out: hidden, bias: false });
+    m.push(format!("{p}.residual_mlp"), LayerKind::Add { dim: hidden });
+}
+
+/// The attention core ops between the QKV projections and the output
+/// projection: eager materializes scores + softmax + context; flash is a
+/// single fused layer.
+fn push_attention_core(
+    m: &mut ModuleSpec,
+    prefix: &str,
+    heads: u64,
+    head_dim: u64,
+    kv_len: u64,
+    attn: AttnImpl,
+) {
+    match attn {
+        AttnImpl::Eager => {
+            m.push(format!("{prefix}.self_attn.scores"), LayerKind::AttnScores { heads, head_dim, kv_len });
+            m.push(format!("{prefix}.self_attn.softmax"), LayerKind::AttnSoftmax { heads, kv_len });
+            m.push(format!("{prefix}.self_attn.context"), LayerKind::AttnContext { heads, head_dim });
+        }
+        AttnImpl::Flash => {
+            m.push(format!("{prefix}.self_attn.flash"), LayerKind::FlashAttn { heads, head_dim });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::Modality;
+
+    #[test]
+    fn vit_block_layer_count() {
+        let mut m = ModuleSpec::new("v", Modality::Vision);
+        push_vit_block(&mut m, 0, 64, 4, 256, 17, ActFn::QuickGelu, AttnImpl::Eager);
+        // ln1, q, k, v, scores, softmax, context, out, add, ln2, fc1, act, fc2, add
+        assert_eq!(m.layers.len(), 14);
+    }
+
+    #[test]
+    fn llama_block_layer_count_flash_vs_eager() {
+        let mut a = ModuleSpec::new("l", Modality::Language);
+        push_llama_block(&mut a, 0, 64, 4, 4, 128, 512, AttnImpl::Flash);
+        let mut b = ModuleSpec::new("l", Modality::Language);
+        push_llama_block(&mut b, 0, 64, 4, 4, 128, 512, AttnImpl::Eager);
+        assert_eq!(b.layers.len(), a.layers.len() + 2); // flash fuses 3 ops into 1
+    }
+
+    #[test]
+    fn llama_block_param_count() {
+        // h=64 heads=4 inter=128: qkvo = 4*64*64; mlp = 3*64*128; norms = 2*64
+        let mut m = ModuleSpec::new("l", Modality::Language);
+        push_llama_block(&mut m, 0, 64, 4, 4, 128, 512, AttnImpl::Flash);
+        assert_eq!(m.param_elems(), 4 * 64 * 64 + 3 * 64 * 128 + 2 * 64);
+    }
+}

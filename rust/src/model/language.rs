@@ -1,0 +1,124 @@
+//! Language decoder architectures. LLaVA-1.5 uses Vicuna (a LLaMA
+//! fine-tune), reconstructed at leaf-module granularity including the
+//! LM head and the cross-entropy loss region (whose fp32 log-probs are
+//! the dominant transient for 32k-vocab models).
+
+use super::dims::Modality;
+use super::graph::push_llama_block;
+use super::layer::{AttnImpl, LayerKind};
+use super::module::ModuleSpec;
+
+/// Hyperparameters of a LLaMA-family decoder.
+#[derive(Clone, Copy, Debug)]
+pub struct LlamaConfig {
+    pub hidden: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    pub inter: u64,
+    pub blocks: usize,
+    pub vocab: u64,
+    pub attn: AttnImpl,
+    /// Whether to append the LM head + cross-entropy loss region (true
+    /// for the full training graph).
+    pub with_loss: bool,
+}
+
+/// Vicuna-7B / LLaMA-7B: 32 blocks, hidden 4096, 32 heads, inter 11008.
+pub fn vicuna_7b(attn: AttnImpl) -> LlamaConfig {
+    LlamaConfig {
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 32,
+        inter: 11008,
+        blocks: 32,
+        vocab: 32000,
+        attn,
+        with_loss: true,
+    }
+}
+
+/// Vicuna-13B / LLaMA-13B: 40 blocks, hidden 5120, 40 heads, inter 13824.
+pub fn vicuna_13b(attn: AttnImpl) -> LlamaConfig {
+    LlamaConfig {
+        hidden: 5120,
+        heads: 40,
+        kv_heads: 40,
+        inter: 13824,
+        blocks: 40,
+        vocab: 32000,
+        attn,
+        with_loss: true,
+    }
+}
+
+/// A tiny decoder for unit tests and quick examples.
+pub fn llama_tiny() -> LlamaConfig {
+    LlamaConfig {
+        hidden: 64,
+        heads: 4,
+        kv_heads: 4,
+        inter: 128,
+        blocks: 2,
+        vocab: 256,
+        attn: AttnImpl::Flash,
+        with_loss: true,
+    }
+}
+
+/// Materialize the decoder as a module named `language_model`, given the
+/// KV length the attention ops see (= LM sequence length in training).
+pub fn build(cfg: &LlamaConfig, kv_len: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new("language_model", Modality::Language);
+    m.push("embed_tokens", LayerKind::Embedding { vocab: cfg.vocab, dim: cfg.hidden });
+    for i in 0..cfg.blocks {
+        push_llama_block(
+            &mut m,
+            i,
+            cfg.hidden,
+            cfg.heads,
+            cfg.kv_heads,
+            cfg.inter,
+            kv_len,
+            cfg.attn,
+        );
+    }
+    m.push("norm", LayerKind::RmsNorm { dim: cfg.hidden });
+    if cfg.with_loss {
+        m.push("lm_head", LayerKind::Linear { d_in: cfg.hidden, d_out: cfg.vocab, bias: false });
+        m.push("loss", LayerKind::CrossEntropy { vocab: cfg.vocab });
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vicuna_7b_param_count() {
+        // LLaMA-7B is 6.74B params; embed + head add 2*32000*4096.
+        let m = build(&vicuna_7b(AttnImpl::Flash), 2048);
+        let p = m.param_elems() as f64;
+        assert!(p > 6.6e9 && p < 6.9e9, "got {p}");
+    }
+
+    #[test]
+    fn vicuna_13b_param_count() {
+        let m = build(&vicuna_13b(AttnImpl::Flash), 2048);
+        let p = m.param_elems() as f64;
+        assert!(p > 12.8e9 && p < 13.3e9, "got {p}");
+    }
+
+    #[test]
+    fn loss_region_present() {
+        let m = build(&vicuna_7b(AttnImpl::Flash), 1024);
+        assert!(m.layers.iter().any(|l| matches!(l.kind, LayerKind::CrossEntropy { .. })));
+    }
+
+    #[test]
+    fn hundreds_of_layers() {
+        // The paper: "several hundred layers across multiple modules".
+        let m = build(&vicuna_7b(AttnImpl::Flash), 1024);
+        assert!(m.layers.len() > 400, "got {}", m.layers.len());
+    }
+}

@@ -1,0 +1,299 @@
+//! Fine-grained layers — the paper's decomposition unit (Fig. 1 step 4).
+//!
+//! Each variant models one PyTorch leaf op with its training-memory
+//! behaviour. Activation accounting uses a *producer-side* convention:
+//! every tensor saved for backward is attributed to the layer that
+//! produced it (e.g. a `Linear`'s backward needs its **input**, which is
+//! the *previous* layer's output — counted there). This counts each saved
+//! tensor exactly once and is the convention shared by the feature
+//! encoder (predictor path) and the execution-trace generator
+//! (simulator path).
+
+use super::dims::{DType, Modality};
+
+/// Attention implementation: eager materializes the `[heads, q, kv]`
+/// score/probability tensors (PyTorch pre-SDPA default; CLIP vision
+/// tower), flash stores only output + logsumexp (LLaVA language tower
+/// with flash-attn 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnImpl {
+    Eager,
+    Flash,
+}
+
+/// Elementwise activation functions (memory-identical; kept distinct for
+/// faithful architecture dumps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActFn {
+    Gelu,
+    QuickGelu,
+    Silu,
+    Relu,
+}
+
+/// One fine-grained layer kind with its shape parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// `nn.Linear(d_in, d_out, bias)`.
+    Linear { d_in: u64, d_out: u64, bias: bool },
+    /// Token embedding lookup.
+    Embedding { vocab: u64, dim: u64 },
+    /// ViT patchification conv (`Conv2d(ch, dim, k=patch, s=patch)`).
+    PatchEmbed { channels: u64, dim: u64, patch: u64 },
+    /// Learned position embedding added to the patch sequence.
+    PosEmbed { tokens: u64, dim: u64 },
+    /// `nn.LayerNorm(dim)` (weight + bias, saves mean/rstd stats).
+    LayerNorm { dim: u64 },
+    /// RMSNorm (weight only, saves rstd).
+    RmsNorm { dim: u64 },
+    /// Elementwise activation function.
+    Activation { f: ActFn, dim: u64 },
+    /// Rotary position embedding applied to Q and K.
+    Rotary { dim: u64 },
+    /// Eager attention scores `QK^T / sqrt(d)` — `[*, heads, q, kv]`,
+    /// ephemeral (consumed by softmax which allocates fresh output).
+    AttnScores { heads: u64, head_dim: u64, kv_len: u64 },
+    /// Eager attention softmax — probabilities are *saved* for backward.
+    AttnSoftmax { heads: u64, kv_len: u64 },
+    /// Eager attention context `probs @ V`.
+    AttnContext { heads: u64, head_dim: u64 },
+    /// Fused flash attention: output + per-row logsumexp only.
+    FlashAttn { heads: u64, head_dim: u64 },
+    /// Residual addition (produces a new tensor consumed downstream).
+    Add { dim: u64 },
+    /// Elementwise product (SwiGLU gating).
+    Mul { dim: u64 },
+    /// Language-model head + softmax cross-entropy: saves fp32
+    /// log-probabilities `[tokens, vocab]` — the dominant transient for
+    /// 32k-vocab models.
+    CrossEntropy { vocab: u64 },
+    /// LoRA adapter A (down-projection `d_in -> r`), trainable.
+    LoraA { d_in: u64, rank: u64 },
+    /// LoRA adapter B (up-projection `r -> d_out`), trainable.
+    LoraB { rank: u64, d_out: u64 },
+}
+
+impl LayerKind {
+    /// Parameter elements resident in GPU memory.
+    pub fn param_elems(&self) -> u64 {
+        match *self {
+            LayerKind::Linear { d_in, d_out, bias } => d_in * d_out + if bias { d_out } else { 0 },
+            LayerKind::Embedding { vocab, dim } => vocab * dim,
+            LayerKind::PatchEmbed { channels, dim, patch } => channels * dim * patch * patch,
+            LayerKind::PosEmbed { tokens, dim } => tokens * dim,
+            LayerKind::LayerNorm { dim } => 2 * dim,
+            LayerKind::RmsNorm { dim } => dim,
+            LayerKind::LoraA { d_in, rank } => d_in * rank,
+            LayerKind::LoraB { rank, d_out } => rank * d_out,
+            _ => 0,
+        }
+    }
+
+    /// Activation elements *saved for backward*, attributed to the
+    /// producer (see module docs), for `t` tokens flowing through.
+    pub fn saved_act_elems(&self, t: u64) -> u64 {
+        match *self {
+            LayerKind::Linear { d_out, .. } => t * d_out,
+            LayerKind::Embedding { dim, .. } => t * dim,
+            LayerKind::PatchEmbed { dim, .. } => t * dim,
+            LayerKind::PosEmbed { dim, .. } => t * dim,
+            // output + mean/rstd stats
+            LayerKind::LayerNorm { dim } => t * dim + 2 * t,
+            LayerKind::RmsNorm { dim } => t * dim + t,
+            LayerKind::Activation { dim, .. } => t * dim,
+            LayerKind::Rotary { dim } => 2 * t * dim, // rotated Q and K
+            LayerKind::AttnScores { .. } => 0,        // ephemeral, see below
+            LayerKind::AttnSoftmax { heads, kv_len } => t * heads * kv_len,
+            LayerKind::AttnContext { heads, head_dim } => t * heads * head_dim,
+            // flash: output + logsumexp row stats
+            LayerKind::FlashAttn { heads, head_dim } => t * heads * head_dim + t * heads,
+            LayerKind::Add { dim } => t * dim,
+            LayerKind::Mul { dim } => t * dim,
+            // fp32 log-probs saved by nll_loss backward (dtype override)
+            LayerKind::CrossEntropy { vocab } => t * vocab,
+            LayerKind::LoraA { rank, .. } => t * rank,
+            LayerKind::LoraB { d_out, .. } => t * d_out,
+        }
+    }
+
+    /// Transient forward-pass elements freed before the next layer runs
+    /// (raw attention scores, loss softmax temporaries, im2col buffers).
+    pub fn ephemeral_elems(&self, t: u64) -> u64 {
+        match *self {
+            LayerKind::AttnScores { heads, kv_len, .. } => t * heads * kv_len,
+            // fp32 upcast of logits + softmax temp
+            LayerKind::CrossEntropy { vocab } => t * vocab,
+            LayerKind::PatchEmbed { channels, patch, .. } => t * channels * patch * patch,
+            _ => 0,
+        }
+    }
+
+    /// Transient backward-pass elements (gradient w.r.t. this layer's
+    /// input co-resident with the saved activations at its backward
+    /// step; eager attention additionally materializes grad-of-probs and
+    /// grad-of-scores).
+    pub fn bwd_transient_elems(&self, t: u64) -> u64 {
+        match *self {
+            LayerKind::Linear { d_in, .. } => t * d_in,
+            LayerKind::Embedding { .. } => 0, // sparse grad into weight
+            LayerKind::PatchEmbed { channels, patch, .. } => t * channels * patch * patch,
+            LayerKind::PosEmbed { dim, .. } => t * dim,
+            LayerKind::LayerNorm { dim } => t * dim,
+            LayerKind::RmsNorm { dim } => t * dim,
+            LayerKind::Activation { dim, .. } => t * dim,
+            LayerKind::Rotary { dim } => 2 * t * dim,
+            LayerKind::AttnScores { heads, kv_len, .. } => t * heads * kv_len,
+            LayerKind::AttnSoftmax { heads, kv_len } => 2 * t * heads * kv_len,
+            LayerKind::AttnContext { heads, head_dim } => t * heads * head_dim,
+            LayerKind::FlashAttn { heads, head_dim } => 2 * t * heads * head_dim,
+            LayerKind::Add { dim } => t * dim,
+            LayerKind::Mul { dim } => 2 * t * dim,
+            LayerKind::CrossEntropy { vocab } => t * vocab,
+            LayerKind::LoraA { d_in, .. } => t * d_in,
+            LayerKind::LoraB { rank, .. } => t * rank,
+        }
+    }
+
+    /// Override of the activation dtype (e.g. cross-entropy saves fp32
+    /// log-probs regardless of the autocast policy).
+    pub fn act_dtype_override(&self) -> Option<DType> {
+        match self {
+            LayerKind::CrossEntropy { .. } => Some(DType::F32),
+            _ => None,
+        }
+    }
+
+    /// Forward FLOPs for `t` tokens (used by the profiling baseline and
+    /// the perf model; 2·MACs convention).
+    pub fn flops(&self, t: u64) -> u64 {
+        match *self {
+            LayerKind::Linear { d_in, d_out, .. } => 2 * t * d_in * d_out,
+            LayerKind::PatchEmbed { channels, dim, patch } => 2 * t * channels * patch * patch * dim,
+            LayerKind::AttnScores { heads, head_dim, kv_len } => 2 * t * heads * head_dim * kv_len,
+            LayerKind::AttnContext { heads, head_dim } => 2 * t * heads * head_dim * head_dim,
+            LayerKind::FlashAttn { heads, head_dim } => 4 * t * heads * head_dim * head_dim,
+            LayerKind::CrossEntropy { vocab } => 2 * t * vocab,
+            LayerKind::LoraA { d_in, rank } => 2 * t * d_in * rank,
+            LayerKind::LoraB { rank, d_out } => 2 * t * rank * d_out,
+            LayerKind::Embedding { dim, .. } => t * dim,
+            LayerKind::LayerNorm { dim }
+            | LayerKind::RmsNorm { dim }
+            | LayerKind::Activation { dim, .. }
+            | LayerKind::Add { dim }
+            | LayerKind::Mul { dim }
+            | LayerKind::Rotary { dim } => 5 * t * dim,
+            LayerKind::AttnSoftmax { heads, kv_len } => 5 * t * heads * kv_len,
+            LayerKind::PosEmbed { dim, .. } => t * dim,
+        }
+    }
+
+    /// Whether this layer holds trainable parameters at all (masks the
+    /// freeze plan — parameterless ops can never be "trainable").
+    pub fn has_params(&self) -> bool {
+        self.param_elems() > 0
+    }
+
+    /// Short kind tag for reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LayerKind::Linear { .. } => "linear",
+            LayerKind::Embedding { .. } => "embedding",
+            LayerKind::PatchEmbed { .. } => "patch_embed",
+            LayerKind::PosEmbed { .. } => "pos_embed",
+            LayerKind::LayerNorm { .. } => "layer_norm",
+            LayerKind::RmsNorm { .. } => "rms_norm",
+            LayerKind::Activation { .. } => "activation",
+            LayerKind::Rotary { .. } => "rotary",
+            LayerKind::AttnScores { .. } => "attn_scores",
+            LayerKind::AttnSoftmax { .. } => "attn_softmax",
+            LayerKind::AttnContext { .. } => "attn_context",
+            LayerKind::FlashAttn { .. } => "flash_attn",
+            LayerKind::Add { .. } => "add",
+            LayerKind::Mul { .. } => "mul",
+            LayerKind::CrossEntropy { .. } => "cross_entropy",
+            LayerKind::LoraA { .. } => "lora_a",
+            LayerKind::LoraB { .. } => "lora_b",
+        }
+    }
+}
+
+/// A named layer instance inside a module.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Dotted path, e.g. `language.layers.12.mlp.gate_proj`.
+    pub name: String,
+    pub kind: LayerKind,
+    pub modality: Modality,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, kind: LayerKind, modality: Modality) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+            modality,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_params_and_acts() {
+        let k = LayerKind::Linear { d_in: 4096, d_out: 11008, bias: false };
+        assert_eq!(k.param_elems(), 4096 * 11008);
+        assert_eq!(k.saved_act_elems(100), 100 * 11008);
+        assert_eq!(k.bwd_transient_elems(100), 100 * 4096);
+        assert!(k.has_params());
+    }
+
+    #[test]
+    fn bias_counted() {
+        let k = LayerKind::Linear { d_in: 10, d_out: 7, bias: true };
+        assert_eq!(k.param_elems(), 77);
+    }
+
+    #[test]
+    fn eager_attention_scores_are_ephemeral() {
+        let s = LayerKind::AttnScores { heads: 32, head_dim: 128, kv_len: 2048 };
+        assert_eq!(s.saved_act_elems(64), 0);
+        assert_eq!(s.ephemeral_elems(64), 64 * 32 * 2048);
+        let p = LayerKind::AttnSoftmax { heads: 32, kv_len: 2048 };
+        assert_eq!(p.saved_act_elems(64), 64 * 32 * 2048);
+    }
+
+    #[test]
+    fn flash_attention_saves_no_quadratic_tensor() {
+        let f = LayerKind::FlashAttn { heads: 32, head_dim: 128 };
+        // linear in t, independent of kv_len
+        assert_eq!(f.saved_act_elems(10), 10 * 32 * 128 + 10 * 32);
+    }
+
+    #[test]
+    fn cross_entropy_is_fp32() {
+        let ce = LayerKind::CrossEntropy { vocab: 32000 };
+        assert_eq!(ce.act_dtype_override(), Some(DType::F32));
+        assert_eq!(ce.saved_act_elems(3), 3 * 32000);
+    }
+
+    #[test]
+    fn norms_save_stats() {
+        assert_eq!(LayerKind::LayerNorm { dim: 8 }.saved_act_elems(2), 16 + 4);
+        assert_eq!(LayerKind::RmsNorm { dim: 8 }.saved_act_elems(2), 16 + 2);
+    }
+
+    #[test]
+    fn parameterless_ops() {
+        for k in [
+            LayerKind::Add { dim: 8 },
+            LayerKind::Mul { dim: 8 },
+            LayerKind::Activation { f: ActFn::Silu, dim: 8 },
+            LayerKind::AttnSoftmax { heads: 2, kv_len: 4 },
+        ] {
+            assert_eq!(k.param_elems(), 0);
+            assert!(!k.has_params());
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! LoRA adapter injection (paper §5 lists PEFT as future work; we
+//! implement it as a first-class extension).
+//!
+//! `apply` rewrites a model in place: every `Linear` in the targeted
+//! modules whose name matches one of the target projections gains a
+//! trainable `LoraA`/`LoraB` adapter pair immediately after it (the
+//! adapter output is added into the frozen base output). The freeze plan
+//! then marks base weights frozen and adapters trainable.
+
+use super::layer::{Layer, LayerKind};
+use super::module::ModelSpec;
+
+/// LoRA hyperparameters.
+#[derive(Clone, Debug)]
+pub struct LoraConfig {
+    pub rank: u64,
+    /// Module names to adapt (e.g. `["language_model"]`).
+    pub target_modules: Vec<String>,
+    /// Projection-name substrings to adapt (LLaVA-LoRA default: all
+    /// linear projections of the decoder).
+    pub target_projs: Vec<String>,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        Self {
+            rank: 64,
+            target_modules: vec!["language_model".into()],
+            target_projs: vec![
+                "q_proj".into(),
+                "k_proj".into(),
+                "v_proj".into(),
+                "o_proj".into(),
+                "gate_proj".into(),
+                "up_proj".into(),
+                "down_proj".into(),
+            ],
+        }
+    }
+}
+
+/// Marker suffixes used to recognize adapter layers downstream.
+pub const LORA_A_SUFFIX: &str = ".lora_A";
+pub const LORA_B_SUFFIX: &str = ".lora_B";
+
+/// Inject adapters; returns the number of adapted linears.
+pub fn apply(model: &mut ModelSpec, cfg: &LoraConfig) -> usize {
+    let mut adapted = 0;
+    for module in &mut model.modules {
+        if !cfg.target_modules.iter().any(|t| t == &module.name) {
+            continue;
+        }
+        let mut out: Vec<Layer> = Vec::with_capacity(module.layers.len());
+        for layer in module.layers.drain(..) {
+            let matches = cfg.target_projs.iter().any(|p| layer.name.contains(p.as_str()));
+            if let (true, LayerKind::Linear { d_in, d_out, .. }) = (matches, &layer.kind) {
+                let (d_in, d_out) = (*d_in, *d_out);
+                let base = layer.name.clone();
+                let modality = layer.modality;
+                out.push(layer);
+                out.push(Layer::new(
+                    format!("{base}{LORA_A_SUFFIX}"),
+                    LayerKind::LoraA { d_in, rank: cfg.rank },
+                    modality,
+                ));
+                out.push(Layer::new(
+                    format!("{base}{LORA_B_SUFFIX}"),
+                    LayerKind::LoraB { rank: cfg.rank, d_out },
+                    modality,
+                ));
+                adapted += 1;
+            } else {
+                out.push(layer);
+            }
+        }
+        module.layers = out;
+    }
+    adapted
+}
+
+/// Is this layer a LoRA adapter?
+pub fn is_adapter(layer: &Layer) -> bool {
+    matches!(layer.kind, LayerKind::LoraA { .. } | LayerKind::LoraB { .. })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::Modality;
+    use crate::model::module::ModuleSpec;
+
+    fn toy_model() -> ModelSpec {
+        let mut spec = ModelSpec::new("toy");
+        let mut lm = ModuleSpec::new("language_model", Modality::Language);
+        lm.push("layers.0.self_attn.q_proj", LayerKind::Linear { d_in: 8, d_out: 8, bias: false });
+        lm.push("layers.0.input_layernorm", LayerKind::RmsNorm { dim: 8 });
+        spec.modules.push(lm);
+        spec
+    }
+
+    #[test]
+    fn injects_adapter_pair() {
+        let mut m = toy_model();
+        let n = apply(&mut m, &LoraConfig { rank: 4, ..Default::default() });
+        assert_eq!(n, 1);
+        let names: Vec<_> = m.layers().map(|l| l.name.clone()).collect();
+        assert!(names.iter().any(|n| n.ends_with(LORA_A_SUFFIX)));
+        assert!(names.iter().any(|n| n.ends_with(LORA_B_SUFFIX)));
+        // A: 8*4, B: 4*8
+        let extra: u64 = m.layers().filter(|l| is_adapter(l)).map(|l| l.kind.param_elems()).sum();
+        assert_eq!(extra, 64);
+    }
+
+    #[test]
+    fn untargeted_modules_untouched() {
+        let mut m = toy_model();
+        let cfg = LoraConfig { target_modules: vec!["vision_tower".into()], ..Default::default() };
+        assert_eq!(apply(&mut m, &cfg), 0);
+        assert_eq!(m.num_layers(), 2);
+    }
+
+    #[test]
+    fn norms_not_adapted() {
+        let mut m = toy_model();
+        apply(&mut m, &LoraConfig::default());
+        assert_eq!(m.layers().filter(|l| is_adapter(l)).count(), 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Typed description of multimodal model architectures.
+//!
+//! The paper's *model parser* (Fig. 1 steps 1–4) operates on exactly this
+//! representation: a model is a sequence of **modules** (vision encoder,
+//! projector, language decoder — distinguished by [`Modality`]), each of
+//! which decomposes into fine-grained **layers** ([`layer::Layer`], the
+//! analogue of PyTorch leaf modules such as `nn.Linear`) in forward
+//! execution order.
+//!
+//! Every layer knows its parameter count and its activation/workspace
+//! footprint as a function of the token context ([`dims::TokenCtx`]);
+//! both the analytical predictor and the ground-truth simulator consume
+//! these same per-layer quantities, so any modelling disagreement between
+//! them is confined to *operational* effects (allocator behaviour, buffer
+//! interleaving) — which is what the paper's MAPE measures.
+
+pub mod dims;
+pub mod graph;
+pub mod language;
+pub mod layer;
+pub mod lora;
+pub mod module;
+pub mod projector;
+pub mod vision;
+pub mod zoo;
+
+pub use dims::{DType, Modality, TokenCtx};
+pub use layer::{AttnImpl, Layer, LayerKind};
+pub use module::{ModelSpec, ModuleSpec};

@@ -1,0 +1,102 @@
+//! Modules and model specifications — the paper's decomposition level
+//! between "model" and "layer" (Fig. 1 steps 2 and 4).
+
+use super::dims::Modality;
+use super::layer::Layer;
+
+/// A module: a named, modality-tagged group of layers in forward
+/// execution order (e.g. the vision encoder, the projector, the language
+/// decoder).
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub modality: Modality,
+    pub layers: Vec<Layer>,
+}
+
+impl ModuleSpec {
+    pub fn new(name: impl Into<String>, modality: Modality) -> Self {
+        Self {
+            name: name.into(),
+            modality,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Append a layer; its name is prefixed with the module name.
+    pub fn push(&mut self, name: impl AsRef<str>, kind: super::layer::LayerKind) {
+        let full = format!("{}.{}", self.name, name.as_ref());
+        self.layers.push(Layer::new(full, kind, self.modality));
+    }
+
+    /// Total parameter elements of the module.
+    pub fn param_elems(&self) -> u64 {
+        self.layers.iter().map(|l| l.kind.param_elems()).sum()
+    }
+}
+
+/// A full multimodal model: modules in forward execution order.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub modules: Vec<ModuleSpec>,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            modules: Vec::new(),
+        }
+    }
+
+    /// Total parameter elements.
+    pub fn param_elems(&self) -> u64 {
+        self.modules.iter().map(|m| m.param_elems()).sum()
+    }
+
+    /// Total number of fine-grained layers (the paper's "several hundred
+    /// layers" for LLaVA-1.5).
+    pub fn num_layers(&self) -> usize {
+        self.modules.iter().map(|m| m.layers.len()).sum()
+    }
+
+    /// Iterate all layers in forward execution order.
+    pub fn layers(&self) -> impl Iterator<Item = &Layer> {
+        self.modules.iter().flat_map(|m| m.layers.iter())
+    }
+
+    /// Find a module by name.
+    pub fn module(&self, name: &str) -> Option<&ModuleSpec> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn push_prefixes_names() {
+        let mut m = ModuleSpec::new("vision", Modality::Vision);
+        m.push("embeddings.patch", LayerKind::PatchEmbed { channels: 3, dim: 16, patch: 2 });
+        assert_eq!(m.layers[0].name, "vision.embeddings.patch");
+        assert_eq!(m.param_elems(), 3 * 16 * 4);
+    }
+
+    #[test]
+    fn model_aggregates() {
+        let mut spec = ModelSpec::new("toy");
+        let mut a = ModuleSpec::new("a", Modality::Vision);
+        a.push("l1", LayerKind::Linear { d_in: 2, d_out: 3, bias: false });
+        let mut b = ModuleSpec::new("b", Modality::Language);
+        b.push("l2", LayerKind::Linear { d_in: 3, d_out: 4, bias: true });
+        spec.modules.push(a);
+        spec.modules.push(b);
+        assert_eq!(spec.param_elems(), 6 + 16);
+        assert_eq!(spec.num_layers(), 2);
+        assert!(spec.module("a").is_some());
+        assert!(spec.module("c").is_none());
+    }
+}

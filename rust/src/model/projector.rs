@@ -1,0 +1,42 @@
+//! The LLaVA multimodal projector: aligns vision-tower patch features
+//! with the language embedding space. LLaVA-1.5 uses a 2-layer MLP with
+//! GELU (`mlp2x_gelu`); LLaVA-1.0 used a single linear layer.
+
+use super::dims::Modality;
+use super::layer::{ActFn, LayerKind};
+use super::module::ModuleSpec;
+
+/// LLaVA-1.5 `mlp2x_gelu` projector: Linear(v, h) -> GELU -> Linear(h, h).
+pub fn mlp2x_gelu(vision_hidden: u64, lm_hidden: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new("mm_projector", Modality::Projector);
+    m.push("0", LayerKind::Linear { d_in: vision_hidden, d_out: lm_hidden, bias: true });
+    m.push("1", LayerKind::Activation { f: ActFn::Gelu, dim: lm_hidden });
+    m.push("2", LayerKind::Linear { d_in: lm_hidden, d_out: lm_hidden, bias: true });
+    m
+}
+
+/// LLaVA-1.0 single-linear projector (kept for architecture ablations).
+pub fn linear(vision_hidden: u64, lm_hidden: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new("mm_projector", Modality::Projector);
+    m.push("0", LayerKind::Linear { d_in: vision_hidden, d_out: lm_hidden, bias: true });
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp2x_param_count() {
+        let m = mlp2x_gelu(1024, 4096);
+        // (1024*4096 + 4096) + (4096*4096 + 4096) ≈ 21M
+        assert_eq!(m.param_elems(), 1024 * 4096 + 4096 + 4096 * 4096 + 4096);
+        assert_eq!(m.layers.len(), 3);
+    }
+
+    #[test]
+    fn linear_param_count() {
+        let m = linear(1024, 4096);
+        assert_eq!(m.param_elems(), 1024 * 4096 + 4096);
+    }
+}

@@ -1,0 +1,117 @@
+//! Vision encoder architectures. LLaVA-1.5 uses the CLIP ViT-L/14-336px
+//! tower (penultimate-layer features), reconstructed here at PyTorch
+//! leaf-module granularity.
+
+use super::dims::Modality;
+use super::graph::push_vit_block;
+use super::layer::{ActFn, AttnImpl, LayerKind};
+use super::module::ModuleSpec;
+
+/// Hyperparameters of a ViT encoder tower.
+#[derive(Clone, Copy, Debug)]
+pub struct VitConfig {
+    pub hidden: u64,
+    pub heads: u64,
+    pub mlp: u64,
+    pub blocks: usize,
+    pub patch: u64,
+    pub image_size: u64,
+    pub attn: AttnImpl,
+}
+
+impl VitConfig {
+    /// Patch tokens per image (excluding CLS).
+    pub fn patch_tokens(&self) -> u64 {
+        let side = self.image_size / self.patch;
+        side * side
+    }
+
+    /// Sequence length inside the tower (patches + CLS).
+    pub fn seq_tokens(&self) -> u64 {
+        self.patch_tokens() + 1
+    }
+}
+
+/// CLIP ViT-L/14 at 336px — the LLaVA-1.5 vision tower.
+/// 24 blocks, hidden 1024, 16 heads, MLP 4096, 576 patches (+CLS).
+pub fn clip_vit_l14_336() -> VitConfig {
+    VitConfig {
+        hidden: 1024,
+        heads: 16,
+        mlp: 4096,
+        blocks: 24,
+        patch: 14,
+        image_size: 336,
+        attn: AttnImpl::Eager, // HF CLIP vision tower uses eager attention
+    }
+}
+
+/// A tiny ViT for unit tests and quick examples.
+pub fn vit_tiny() -> VitConfig {
+    VitConfig {
+        hidden: 64,
+        heads: 4,
+        mlp: 128,
+        blocks: 2,
+        patch: 16,
+        image_size: 64,
+        attn: AttnImpl::Eager,
+    }
+}
+
+/// Materialize the tower as a module named `vision_tower`.
+pub fn build(cfg: &VitConfig) -> ModuleSpec {
+    let mut m = ModuleSpec::new("vision_tower", Modality::Vision);
+    m.push(
+        "embeddings.patch_embedding",
+        LayerKind::PatchEmbed { channels: 3, dim: cfg.hidden, patch: cfg.patch },
+    );
+    m.push(
+        "embeddings.position_embedding",
+        LayerKind::PosEmbed { tokens: cfg.seq_tokens(), dim: cfg.hidden },
+    );
+    m.push("pre_layrnorm", LayerKind::LayerNorm { dim: cfg.hidden });
+    for i in 0..cfg.blocks {
+        push_vit_block(
+            &mut m,
+            i,
+            cfg.hidden,
+            cfg.heads,
+            cfg.mlp,
+            cfg.seq_tokens(),
+            ActFn::QuickGelu,
+            cfg.attn,
+        );
+    }
+    // LLaVA uses the penultimate layer's patch features; the final
+    // post-LN still exists in the checkpoint and stays resident.
+    m.push("post_layernorm", LayerKind::LayerNorm { dim: cfg.hidden });
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_l14_dimensions() {
+        let cfg = clip_vit_l14_336();
+        assert_eq!(cfg.patch_tokens(), 576);
+        assert_eq!(cfg.seq_tokens(), 577);
+    }
+
+    #[test]
+    fn clip_l14_param_count_close_to_304m() {
+        // CLIP ViT-L/14 vision tower is ~304M params.
+        let m = build(&clip_vit_l14_336());
+        let p = m.param_elems() as f64;
+        assert!(p > 2.9e8 && p < 3.2e8, "got {p}");
+    }
+
+    #[test]
+    fn layer_count_is_fine_grained() {
+        let m = build(&clip_vit_l14_336());
+        // 24 blocks * 14 layers + 4 stem/tail layers
+        assert_eq!(m.layers.len(), 24 * 14 + 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! Named model presets — the architectures the evaluation uses, plus
+//! tiny variants for tests and quick-start examples.
+
+use anyhow::{bail, Result};
+
+use super::dims::TokenCtx;
+use super::language::{self, LlamaConfig};
+use super::layer::AttnImpl;
+use super::module::ModelSpec;
+use super::projector;
+use super::vision::{self, VitConfig};
+
+/// A zoo entry: the materialized spec plus the token geometry the
+/// architecture implies (needed to build a [`TokenCtx`]).
+#[derive(Clone, Debug)]
+pub struct ZooEntry {
+    pub spec: ModelSpec,
+    /// Vision-tower tokens per image (patches + CLS); 0 for unimodal.
+    pub vision_tokens: u64,
+    /// Projected image tokens per image entering the LM; 0 for unimodal.
+    pub image_tokens: u64,
+}
+
+impl ZooEntry {
+    /// Token context for a given micro-batch/sequence setting.
+    pub fn token_ctx(&self, mbs: u64, seq_len: u64, images_per_sample: u64) -> TokenCtx {
+        TokenCtx {
+            mbs,
+            seq_len,
+            vision_tokens: self.vision_tokens,
+            image_tokens: self.image_tokens,
+            images_per_sample: if self.vision_tokens == 0 { 0 } else { images_per_sample },
+        }
+    }
+}
+
+/// All model names `build` accepts.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "llava-1.5-7b",
+        "llava-1.5-13b",
+        "llava-tiny",
+        "vicuna-7b",
+        "vicuna-13b",
+        "llama-tiny",
+    ]
+}
+
+/// Build a preset. `seq_len` sizes the decoder's attention ops (training
+/// context length); `attn` selects the language-tower attention
+/// implementation (the CLIP vision tower is always eager, as in HF).
+pub fn build(name: &str, seq_len: u64, attn: AttnImpl) -> Result<ZooEntry> {
+    match name {
+        "llava-1.5-7b" => Ok(llava(
+            "llava-1.5-7b",
+            vision::clip_vit_l14_336(),
+            language::vicuna_7b(attn),
+            seq_len,
+        )),
+        "llava-1.5-13b" => Ok(llava(
+            "llava-1.5-13b",
+            vision::clip_vit_l14_336(),
+            language::vicuna_13b(attn),
+            seq_len,
+        )),
+        "llava-tiny" => Ok(llava(
+            "llava-tiny",
+            vision::vit_tiny(),
+            language::llama_tiny(),
+            seq_len,
+        )),
+        "vicuna-7b" => Ok(unimodal("vicuna-7b", language::vicuna_7b(attn), seq_len)),
+        "vicuna-13b" => Ok(unimodal("vicuna-13b", language::vicuna_13b(attn), seq_len)),
+        "llama-tiny" => Ok(unimodal("llama-tiny", language::llama_tiny(), seq_len)),
+        other => bail!(
+            "unknown model {other:?}; available: {}",
+            names().join(", ")
+        ),
+    }
+}
+
+/// Compose a LLaVA-style model: vision tower -> projector -> decoder.
+fn llava(name: &str, vit: VitConfig, lm: LlamaConfig, seq_len: u64) -> ZooEntry {
+    let mut spec = ModelSpec::new(name);
+    spec.modules.push(vision::build(&vit));
+    spec.modules.push(projector::mlp2x_gelu(vit.hidden, lm.hidden));
+    spec.modules.push(language::build(&lm, seq_len));
+    ZooEntry {
+        spec,
+        vision_tokens: vit.seq_tokens(),
+        image_tokens: vit.patch_tokens(),
+    }
+}
+
+fn unimodal(name: &str, lm: LlamaConfig, seq_len: u64) -> ZooEntry {
+    let mut spec = ModelSpec::new(name);
+    spec.modules.push(language::build(&lm, seq_len));
+    ZooEntry {
+        spec,
+        vision_tokens: 0,
+        image_tokens: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llava_7b_total_params() {
+        // ~0.30B vision + ~0.02B projector + ~6.74B LM ≈ 7.06B
+        let e = build("llava-1.5-7b", 2048, AttnImpl::Flash).unwrap();
+        let p = e.spec.param_elems() as f64;
+        assert!(p > 6.9e9 && p < 7.3e9, "got {p}");
+        assert_eq!(e.spec.modules.len(), 3);
+        assert_eq!(e.image_tokens, 576);
+    }
+
+    #[test]
+    fn llava_7b_has_several_hundred_layers() {
+        let e = build("llava-1.5-7b", 1024, AttnImpl::Flash).unwrap();
+        let n = e.spec.num_layers();
+        assert!(n > 600 && n < 1024, "got {n}"); // fits the L=1024 artifact
+    }
+
+    #[test]
+    fn llava_13b_fits_l1024() {
+        let e = build("llava-1.5-13b", 2048, AttnImpl::Flash).unwrap();
+        assert!(e.spec.num_layers() < 1024, "got {}", e.spec.num_layers());
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("gpt-5", 128, AttnImpl::Flash).is_err());
+    }
+
+    #[test]
+    fn unimodal_has_no_vision_tokens() {
+        let e = build("vicuna-7b", 1024, AttnImpl::Flash).unwrap();
+        assert_eq!(e.vision_tokens, 0);
+        assert_eq!(e.token_ctx(4, 1024, 1).images_per_sample, 0);
+    }
+}

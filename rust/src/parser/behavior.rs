@@ -1,0 +1,200 @@
+//! Training-behaviour analysis — the part that makes multimodal models
+//! hard (paper §2): which layers are trainable under the stage's freeze
+//! plan, which layers backward actually traverses, and how activation
+//! checkpointing reshapes the retained set.
+
+use crate::config::Stage;
+use crate::model::dims::Modality;
+use crate::model::layer::{Layer, LayerKind};
+
+use super::LayerRecord;
+
+/// Freeze plan: is this layer's parameter set updated under `stage`?
+///
+/// * `Pretrain` — projector only (LLaVA stage 1).
+/// * `Finetune` — projector + language model (LLaVA stage 2).
+/// * `LoraFinetune` — LoRA adapters + projector; all bases frozen.
+/// * `Full` — everything.
+pub fn is_trainable(layer: &Layer, stage: Stage) -> bool {
+    match stage {
+        Stage::Pretrain => layer.modality == Modality::Projector,
+        Stage::Finetune => {
+            layer.modality == Modality::Projector || layer.modality == Modality::Language
+        }
+        Stage::LoraFinetune => {
+            layer.modality == Modality::Projector
+                || matches!(layer.kind, LayerKind::LoraA { .. } | LayerKind::LoraB { .. })
+        }
+        Stage::Full => true,
+    }
+}
+
+/// Extract the transformer block index from a layer name
+/// (`...layers.<n>...` → `Some(n)`).
+pub fn block_index(name: &str) -> Option<u32> {
+    let pos = name.find("layers.")?;
+    let rest = &name[pos + "layers.".len()..];
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Mark which layers backward traverses.
+///
+/// With a sequential multimodal pipeline, layer `k`'s saved output is
+/// needed iff the backward pass reaches layer `k+1` — i.e. iff some
+/// trainable parameter lives at index `<= k+1`. Consequently a frozen
+/// module *upstream* of every trainable parameter (the vision tower in
+/// both LLaVA stages) retains nothing, while a frozen module
+/// *downstream* of one (the language tower during pre-training) retains
+/// everything — exactly the paper's `M_act` rule: "activations for
+/// modalities whose parameters are being updated" plus everything
+/// between them and the loss.
+///
+/// Off-path layers also get their backward transients zeroed (backward
+/// never executes there).
+pub fn mark_backward_path(records: &mut [LayerRecord]) {
+    let first_trainable = records.iter().position(|r| r.trainable);
+    let Some(ft) = first_trainable else {
+        for r in records.iter_mut() {
+            r.on_bwd_path = false;
+            r.bwd_transient_elems = 0;
+        }
+        return;
+    };
+    let retain_from = ft.saturating_sub(1);
+    for (k, r) in records.iter_mut().enumerate() {
+        r.on_bwd_path = k >= retain_from;
+        if !r.on_bwd_path {
+            r.bwd_transient_elems = 0;
+        }
+    }
+}
+
+/// Full activation checkpointing of transformer blocks (the LLaVA
+/// recipe's `--gradient_checkpointing True`): only each block's boundary
+/// output stays resident through the forward pass; intra-block
+/// activations are recomputed during that block's backward, so they
+/// reappear one block at a time — modeled as a backward-transient
+/// window attached to the block's last layer.
+pub fn apply_checkpointing(records: &mut [LayerRecord]) {
+    let n = records.len();
+    let mut i = 0;
+    while i < n {
+        let Some(block) = records[i].block else {
+            i += 1;
+            continue;
+        };
+        let module = records[i].module.clone();
+        // Find the extent of this block.
+        let mut j = i;
+        while j < n && records[j].block == Some(block) && records[j].module == module {
+            j += 1;
+        }
+        let last = j - 1;
+        // Sum the activations that will be recomputed, drop their
+        // steady-state retention (except the boundary layer).
+        let mut recomputed_elems: u64 = 0;
+        for r in records[i..last].iter_mut() {
+            if r.on_bwd_path {
+                recomputed_elems += r.act_elems;
+            }
+            r.recompute_keep = 0.0;
+        }
+        if records[last].on_bwd_path {
+            records[last].recompute_window_elems = recomputed_elems;
+        }
+        i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_index_extraction() {
+        assert_eq!(block_index("language_model.layers.12.mlp.gate_proj"), Some(12));
+        assert_eq!(block_index("vision_tower.encoder.layers.3.layer_norm1"), Some(3));
+        assert_eq!(block_index("mm_projector.0"), None);
+        assert_eq!(block_index("language_model.embed_tokens"), None);
+    }
+
+    fn rec(name: &str, trainable: bool, block: Option<u32>) -> LayerRecord {
+        LayerRecord {
+            name: name.into(),
+            module: "m".into(),
+            modality: Modality::Language,
+            kind_tag: "linear",
+            block,
+            trainable,
+            on_bwd_path: false,
+            param_elems: 10,
+            param_bytes: 2,
+            grad_bytes: 2,
+            opt_state_mult: 2.0,
+            opt_bytes: 4,
+            master_bytes: 4,
+            act_elems: 100,
+            act_bytes: 2,
+            ephemeral_elems: 5,
+            bwd_transient_elems: 7,
+            recompute_window_elems: 0,
+            recompute_keep: 1.0,
+            workspace_mib: 0.0,
+            param_shard: 1.0,
+            grad_shard: 1.0,
+            opt_shard: 1.0,
+            flops: 0,
+        }
+    }
+
+    #[test]
+    fn backward_path_starts_one_before_first_trainable() {
+        let mut rs = vec![
+            rec("a", false, None),
+            rec("b", false, None),
+            rec("c", true, None),
+            rec("d", false, None),
+        ];
+        mark_backward_path(&mut rs);
+        assert_eq!(
+            rs.iter().map(|r| r.on_bwd_path).collect::<Vec<_>>(),
+            vec![false, true, true, true]
+        );
+        assert_eq!(rs[0].bwd_transient_elems, 0);
+        assert_eq!(rs[3].bwd_transient_elems, 7);
+    }
+
+    #[test]
+    fn no_trainable_no_backward() {
+        let mut rs = vec![rec("a", false, None), rec("b", false, None)];
+        mark_backward_path(&mut rs);
+        assert!(rs.iter().all(|r| !r.on_bwd_path));
+    }
+
+    #[test]
+    fn checkpointing_keeps_boundary_only() {
+        let mut rs = vec![
+            rec("embed", true, None),
+            rec("l0.a", true, Some(0)),
+            rec("l0.b", true, Some(0)),
+            rec("l0.out", true, Some(0)),
+            rec("l1.a", true, Some(1)),
+            rec("l1.out", true, Some(1)),
+            rec("head", true, None),
+        ];
+        mark_backward_path(&mut rs);
+        apply_checkpointing(&mut rs);
+        // Non-block layers untouched.
+        assert_eq!(rs[0].recompute_keep, 1.0);
+        assert_eq!(rs[6].recompute_keep, 1.0);
+        // Intra-block dropped, boundary kept.
+        assert_eq!(rs[1].recompute_keep, 0.0);
+        assert_eq!(rs[2].recompute_keep, 0.0);
+        assert_eq!(rs[3].recompute_keep, 1.0);
+        // Recompute window: block 0 has two interior layers of 100 elems.
+        assert_eq!(rs[3].recompute_window_elems, 200);
+        assert_eq!(rs[5].recompute_window_elems, 100);
+        assert_eq!(rs[3].bwd_transient_elems, 7);
+    }
+}

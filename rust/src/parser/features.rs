@@ -1,0 +1,284 @@
+//! Feature encoding: [`LayerRecord`]s → the `[L, F]` f32 matrix + the
+//! per-request overhead vector consumed by the AOT factor-predictor
+//! artifact (and by the pure-Rust analytical mirror).
+//!
+//! Column indices MUST stay in sync with
+//! `python/compile/kernels/schema.py` (schema version
+//! [`SCHEMA_VERSION`]).
+
+use crate::config::{TrainConfig, ZeroStage};
+
+use super::ParsedModel;
+
+pub const SCHEMA_VERSION: u64 = 1;
+
+// Feature columns — mirror schema.py.
+pub const PARAM_ELEMS: usize = 0;
+pub const PARAM_BYTES: usize = 1;
+pub const TRAINABLE: usize = 2;
+pub const ON_BWD_PATH: usize = 3;
+pub const GRAD_BYTES: usize = 4;
+pub const OPT_STATE_MULT: usize = 5;
+pub const OPT_BYTES: usize = 6;
+pub const MASTER_BYTES: usize = 7;
+pub const ACT_ELEMS: usize = 8;
+pub const ACT_BYTES: usize = 9;
+pub const EPHEMERAL_ELEMS: usize = 10;
+pub const GRAD_SHARD: usize = 11;
+pub const OPT_SHARD: usize = 12;
+pub const PARAM_SHARD: usize = 13;
+pub const RECOMPUTE_KEEP: usize = 14;
+pub const WORKSPACE_MIB: usize = 15;
+pub const BWD_TRANSIENT_ELEMS: usize = 16;
+pub const VALID: usize = 18;
+pub const NUM_FEATURES: usize = 20;
+
+// Overhead columns — mirror schema.py.
+pub const OH_CUDA_CTX_MIB: usize = 0;
+pub const OH_ALLOC_FRAC: usize = 1;
+pub const OH_GRAD_BUCKET_MIB: usize = 2;
+pub const OH_STEP_TRANSIENT_MIB: usize = 3;
+pub const NUM_OVERHEADS: usize = 8;
+
+// Output columns — mirror schema.py.
+pub const OUT_PEAK: usize = 0;
+pub const OUT_PARAM: usize = 1;
+pub const OUT_GRAD: usize = 2;
+pub const OUT_OPT: usize = 3;
+pub const OUT_ACT: usize = 4;
+pub const OUT_TRANSIENT: usize = 5;
+pub const OUT_PERSISTENT: usize = 6;
+pub const OUT_FWD_PEAK: usize = 7;
+pub const NUM_OUTPUTS: usize = 8;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+/// Encoded request: one row per layer (execution order), plus the
+/// overhead terms.
+#[derive(Clone, Debug)]
+pub struct EncodedRequest {
+    /// `layers * NUM_FEATURES`, row-major.
+    pub features: Vec<f32>,
+    pub num_layers: usize,
+    pub overheads: [f32; NUM_OVERHEADS],
+}
+
+impl EncodedRequest {
+    /// Feature row accessor (testing convenience).
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]
+    }
+
+    /// Pad to `capacity` layer rows (VALID=0 rows are inert in the
+    /// kernel); errors if the model has more layers than the artifact
+    /// capacity.
+    pub fn padded(&self, capacity: usize) -> anyhow::Result<Vec<f32>> {
+        if self.num_layers > capacity {
+            anyhow::bail!(
+                "model has {} layers but artifact capacity is {capacity}",
+                self.num_layers
+            );
+        }
+        let mut out = vec![0.0f32; capacity * NUM_FEATURES];
+        out[..self.features.len()].copy_from_slice(&self.features);
+        Ok(out)
+    }
+}
+
+/// Encode a parsed model under its training configuration.
+pub fn encode(pm: &ParsedModel, cfg: &TrainConfig) -> EncodedRequest {
+    let mut features = vec![0.0f32; pm.layers.len() * NUM_FEATURES];
+    for (i, l) in pm.layers.iter().enumerate() {
+        let row = &mut features[i * NUM_FEATURES..(i + 1) * NUM_FEATURES];
+        row[PARAM_ELEMS] = l.param_elems as f32;
+        row[PARAM_BYTES] = l.param_bytes as f32;
+        row[TRAINABLE] = l.trainable as u8 as f32;
+        row[ON_BWD_PATH] = l.on_bwd_path as u8 as f32;
+        row[GRAD_BYTES] = l.grad_bytes as f32;
+        row[OPT_STATE_MULT] = l.opt_state_mult;
+        row[OPT_BYTES] = l.opt_bytes as f32;
+        row[MASTER_BYTES] = l.master_bytes as f32;
+        row[ACT_ELEMS] = l.act_elems as f32;
+        row[ACT_BYTES] = l.act_bytes as f32;
+        row[EPHEMERAL_ELEMS] = l.ephemeral_elems as f32;
+        row[GRAD_SHARD] = l.grad_shard;
+        row[OPT_SHARD] = l.opt_shard;
+        row[PARAM_SHARD] = l.param_shard;
+        row[RECOMPUTE_KEEP] = l.recompute_keep;
+        row[WORKSPACE_MIB] = l.workspace_mib;
+        row[BWD_TRANSIENT_ELEMS] = (l.bwd_transient_elems + l.recompute_window_elems) as f32;
+        row[VALID] = 1.0;
+    }
+    EncodedRequest {
+        features,
+        num_layers: pm.layers.len(),
+        overheads: overheads(pm, cfg),
+    }
+}
+
+/// The per-request overhead vector (operational terms the per-layer
+/// factorization cannot see).
+pub fn overheads(pm: &ParsedModel, cfg: &TrainConfig) -> [f32; NUM_OVERHEADS] {
+    let mut o = [0.0f32; NUM_OVERHEADS];
+    let (_, grad_w, _) = cfg.precision.byte_widths();
+    let trainable = pm.trainable_param_elems;
+
+    // CUDA context + framework baseline + fixed cuBLAS workspace pool.
+    o[OH_CUDA_CTX_MIB] = cfg.overheads.cuda_ctx_mib + cfg.overheads.workspace_mib;
+    o[OH_ALLOC_FRAC] = cfg.overheads.alloc_frac;
+
+    // ZeRO-2 keeps two flat reduce buckets (double buffering: one being
+    // reduced, one being filled); plain DP keeps one flat allreduce
+    // buffer. Bucket size is capped by the trainable footprint.
+    let bucket = cfg.bucket_elems.min(trainable);
+    o[OH_GRAD_BUCKET_MIB] = match (cfg.zero >= ZeroStage::Zero2, cfg.dp > 1) {
+        (true, _) => (2 * bucket * grad_w) as f64 as f32 / MIB as f32,
+        (false, true) => (bucket * grad_w) as f32 / MIB as f32,
+        (false, false) => 0.0,
+    };
+
+    // Optimizer step: DeepSpeed materializes an fp32 scratch of the
+    // local shard while applying updates.
+    let (_, _, opt_shard) = cfg.zero.shard_factors(cfg.dp);
+    o[OH_STEP_TRANSIENT_MIB] = (trainable as f64 * 4.0 * opt_shard as f64 / MIB) as f32;
+    o
+}
+
+/// Memoized parse + encode, keyed by [`TrainConfig::cache_key`]. Owned
+/// by the service worker thread (no locking on the hot path); bounded
+/// FIFO eviction keeps repeated-config workloads O(1) after warmup.
+pub struct EncodeCache {
+    map: std::collections::HashMap<String, std::sync::Arc<EncodedRequest>>,
+    order: std::collections::VecDeque<String>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl EncodeCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: std::collections::HashMap::new(),
+            order: std::collections::VecDeque::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Cached parse+encode of a configuration.
+    pub fn get_or_encode(
+        &mut self,
+        cfg: &TrainConfig,
+    ) -> anyhow::Result<std::sync::Arc<EncodedRequest>> {
+        let key = cfg.cache_key();
+        if let Some(hit) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(hit.clone());
+        }
+        self.misses += 1;
+        let pm = crate::parser::parse(cfg)?;
+        let enc = std::sync::Arc::new(encode(&pm, cfg));
+        if self.map.len() >= self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.map.insert(key.clone(), enc.clone());
+        self.order.push_back(key);
+        Ok(enc)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::parser::parse;
+
+    fn encoded() -> (ParsedModel, TrainConfig, EncodedRequest) {
+        let cfg = TrainConfig {
+            model: "llava-tiny".into(),
+            ..TrainConfig::llava_finetune_default()
+        };
+        let pm = parse(&cfg).unwrap();
+        let enc = encode(&pm, &cfg);
+        (pm, cfg, enc)
+    }
+
+    #[test]
+    fn row_count_and_valid_flags() {
+        let (pm, _, enc) = encoded();
+        assert_eq!(enc.features.len(), pm.num_layers() * NUM_FEATURES);
+        for i in 0..pm.num_layers() {
+            assert_eq!(enc.row(i)[VALID], 1.0);
+        }
+    }
+
+    #[test]
+    fn padding_is_inert_rows() {
+        let (pm, _, enc) = encoded();
+        let padded = enc.padded(1024).unwrap();
+        assert_eq!(padded.len(), 1024 * NUM_FEATURES);
+        let first_pad = &padded[pm.num_layers() * NUM_FEATURES..(pm.num_layers() + 1) * NUM_FEATURES];
+        assert!(first_pad.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn padding_overflow_errors() {
+        let (pm, _, enc) = encoded();
+        assert!(enc.padded(pm.num_layers() - 1).is_err());
+    }
+
+    #[test]
+    fn zero2_bucket_is_double_buffered() {
+        let (pm, cfg, enc) = encoded();
+        let bucket = cfg.bucket_elems.min(pm.trainable_param_elems);
+        let want = (2 * bucket * 2) as f32 / (1024.0 * 1024.0);
+        assert!((enc.overheads[OH_GRAD_BUCKET_MIB] - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn encode_cache_hits_and_evicts() {
+        let (_, cfg, _) = encoded();
+        let mut cache = EncodeCache::new(2);
+        let a = cache.get_or_encode(&cfg).unwrap();
+        let b = cache.get_or_encode(&cfg).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "second lookup must hit");
+        assert!(cache.hit_rate() > 0.49);
+        // two more distinct keys evict the first (capacity 2, FIFO)
+        let mut c2 = cfg.clone();
+        c2.dp = 2;
+        let mut c3 = cfg.clone();
+        c3.dp = 3;
+        cache.get_or_encode(&c2).unwrap();
+        cache.get_or_encode(&c3).unwrap();
+        assert_eq!(cache.len(), 2);
+        let a2 = cache.get_or_encode(&cfg).unwrap();
+        assert!(!std::sync::Arc::ptr_eq(&a, &a2), "evicted entry re-encodes");
+    }
+
+    #[test]
+    fn features_are_finite_and_nonnegative() {
+        let (_, _, enc) = encoded();
+        assert!(enc.features.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(enc.overheads.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+}

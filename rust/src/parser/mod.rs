@@ -1,0 +1,324 @@
+//! The paper's *model parser* (Fig. 1 steps 1–4): walks the module tree,
+//! decomposes it into fine-grained layers, derives each layer's
+//! *training behaviour* (trainable? on the backward path?) from the
+//! stage's freeze plan, and produces per-layer [`LayerRecord`]s carrying
+//! every quantity the factor predictor and the simulator need.
+
+pub mod behavior;
+pub mod features;
+
+use anyhow::Result;
+
+use crate::config::{Stage, TrainConfig};
+use crate::model::dims::{Modality, TokenCtx};
+use crate::model::lora::{self};
+use crate::model::zoo;
+
+/// One fine-grained layer with its resolved training behaviour and
+/// memory quantities (elements + byte widths; bytes = elems * width).
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub name: String,
+    pub module: String,
+    pub modality: Modality,
+    pub kind_tag: &'static str,
+    /// Transformer block index within its module, if any.
+    pub block: Option<u32>,
+
+    // -- training behaviour (the paper's key analysis) --
+    pub trainable: bool,
+    pub on_bwd_path: bool,
+
+    // -- parameters / gradients / optimizer states --
+    pub param_elems: u64,
+    pub param_bytes: u64,
+    pub grad_bytes: u64,
+    pub opt_state_mult: f32,
+    pub opt_bytes: u64,
+    pub master_bytes: u64,
+
+    // -- activations --
+    pub act_elems: u64,
+    pub act_bytes: u64,
+    pub ephemeral_elems: u64,
+    pub bwd_transient_elems: u64,
+    /// Activation-checkpoint recompute window attributed to this layer
+    /// (block boundary): intra-block activations that rematerialize
+    /// during the block's backward. The feature encoder folds this into
+    /// the backward-transient column; the simulator replays the
+    /// recomputation explicitly.
+    pub recompute_window_elems: u64,
+    /// Fraction of saved activations actually kept (activation
+    /// checkpointing keeps only block boundaries).
+    pub recompute_keep: f32,
+    pub workspace_mib: f32,
+
+    // -- sharding --
+    pub param_shard: f32,
+    pub grad_shard: f32,
+    pub opt_shard: f32,
+
+    pub flops: u64,
+}
+
+impl LayerRecord {
+    /// Resident parameter bytes on one GPU.
+    pub fn param_bytes_total(&self) -> f64 {
+        self.param_elems as f64 * self.param_bytes as f64 * self.param_shard as f64
+    }
+
+    /// Retained activation bytes (post-checkpointing) on one GPU.
+    pub fn act_bytes_total(&self) -> f64 {
+        if self.on_bwd_path {
+            self.act_elems as f64 * self.act_bytes as f64 * self.recompute_keep as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A parsed model: layer records in forward execution order plus
+/// aggregates.
+#[derive(Clone, Debug)]
+pub struct ParsedModel {
+    pub model_name: String,
+    pub layers: Vec<LayerRecord>,
+    pub total_param_elems: u64,
+    pub trainable_param_elems: u64,
+    pub token_ctx: TokenCtx,
+}
+
+impl ParsedModel {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Trainable elements per module (for reports).
+    pub fn trainable_by_module(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        for l in &self.layers {
+            if !l.trainable {
+                continue;
+            }
+            match out.iter_mut().find(|(m, _)| *m == l.module) {
+                Some((_, e)) => *e += l.param_elems,
+                None => out.push((l.module.clone(), l.param_elems)),
+            }
+        }
+        out
+    }
+}
+
+/// Parse a training configuration into layer records.
+///
+/// This is the end-to-end step 1→4 of Fig. 1: build the architecture
+/// from the zoo, inject LoRA if configured, resolve the freeze plan and
+/// backward-path, and size every layer for the batch geometry.
+pub fn parse(cfg: &TrainConfig) -> Result<ParsedModel> {
+    cfg.validate()?;
+    let mut entry = zoo::build(&cfg.model, cfg.seq_len, cfg.attn)?;
+    if let Some(lora_cfg) = &cfg.lora {
+        lora::apply(&mut entry.spec, lora_cfg);
+    }
+    let ctx = entry.token_ctx(cfg.mbs, cfg.seq_len, cfg.images_per_sample);
+    Ok(parse_spec(&entry.spec, ctx, cfg))
+}
+
+/// Parse an already-materialized spec (used by tests with custom
+/// architectures).
+pub fn parse_spec(
+    spec: &crate::model::module::ModelSpec,
+    ctx: TokenCtx,
+    cfg: &TrainConfig,
+) -> ParsedModel {
+    let (act_w, grad_w, master_w) = cfg.precision.byte_widths();
+    let (param_shard, grad_shard, opt_shard) = cfg.zero.shard_factors(cfg.dp);
+    let opt_mult = cfg.optimizer.state_mult();
+
+    // Pass 1: flat layer list + trainability.
+    let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.num_layers());
+    for module in &spec.modules {
+        for layer in &module.layers {
+            let t = ctx.tokens(layer.modality);
+            let trainable = behavior::is_trainable(layer, cfg.stage) && layer.kind.has_params();
+            let act_bytes = layer
+                .kind
+                .act_dtype_override()
+                .map(|d| d.bytes())
+                .unwrap_or(act_w);
+            records.push(LayerRecord {
+                name: layer.name.clone(),
+                module: module.name.clone(),
+                modality: layer.modality,
+                kind_tag: layer.kind.tag(),
+                block: behavior::block_index(&layer.name),
+                trainable,
+                on_bwd_path: false, // pass 2
+                param_elems: layer.kind.param_elems(),
+                param_bytes: act_w,
+                grad_bytes: if trainable { grad_w } else { 0 },
+                opt_state_mult: if trainable { opt_mult } else { 0.0 },
+                opt_bytes: 4,
+                master_bytes: if trainable { master_w } else { 0 },
+                act_elems: layer.kind.saved_act_elems(t),
+                act_bytes,
+                ephemeral_elems: layer.kind.ephemeral_elems(t),
+                bwd_transient_elems: layer.kind.bwd_transient_elems(t),
+                recompute_window_elems: 0,
+                recompute_keep: 1.0,
+                workspace_mib: 0.0,
+                param_shard,
+                grad_shard,
+                opt_shard,
+                flops: layer.kind.flops(t),
+            });
+        }
+    }
+
+    // Pass 2: backward-path propagation (the multimodal-specific part:
+    // a frozen module upstream of every trainable parameter — the vision
+    // tower in both LLaVA stages — retains no activations; a frozen
+    // module *downstream* of one — the language tower in pre-training —
+    // does).
+    behavior::mark_backward_path(&mut records);
+
+    // Pass 3: activation checkpointing (keep block boundaries, move
+    // intra-block activations into the per-block recompute window).
+    if cfg.grad_checkpoint {
+        behavior::apply_checkpointing(&mut records);
+    }
+
+    let total_param_elems = records.iter().map(|r| r.param_elems).sum();
+    let trainable_param_elems = records
+        .iter()
+        .filter(|r| r.trainable)
+        .map(|r| r.param_elems)
+        .sum();
+    ParsedModel {
+        model_name: spec.name.clone(),
+        layers: records,
+        total_param_elems,
+        trainable_param_elems,
+        token_ctx: ctx,
+    }
+}
+
+/// Convenience: do stage names imply LoRA injection? (Used by the CLI.)
+pub fn stage_requires_lora(stage: Stage) -> bool {
+    stage == Stage::LoraFinetune
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn finetune_freezes_vision_only() {
+        let pm = parse(&cfg()).unwrap();
+        assert!(pm.layers.iter().filter(|l| l.module == "vision_tower").all(|l| !l.trainable));
+        assert!(pm
+            .layers
+            .iter()
+            .any(|l| l.module == "language_model" && l.trainable));
+        assert!(pm.layers.iter().any(|l| l.module == "mm_projector" && l.trainable));
+    }
+
+    #[test]
+    fn pretrain_trains_projector_only() {
+        let mut c = cfg();
+        c.stage = Stage::Pretrain;
+        let pm = parse(&c).unwrap();
+        let trainable_modules: Vec<_> = pm
+            .trainable_by_module()
+            .into_iter()
+            .map(|(m, _)| m)
+            .collect();
+        assert_eq!(trainable_modules, vec!["mm_projector".to_string()]);
+        // Frozen language tower is still on the backward path
+        // (gradients flow through it back to the projector)...
+        assert!(pm
+            .layers
+            .iter()
+            .filter(|l| l.module == "language_model")
+            .all(|l| l.on_bwd_path));
+        // ...but the frozen vision tower, upstream of the projector, is
+        // not — except its final layer, whose output is the projector's
+        // saved input.
+        let vision: Vec<_> = pm
+            .layers
+            .iter()
+            .filter(|l| l.module == "vision_tower")
+            .collect();
+        let (boundary, interior) = vision.split_last().unwrap();
+        assert!(interior.iter().all(|l| !l.on_bwd_path));
+        assert!(boundary.on_bwd_path);
+    }
+
+    #[test]
+    fn full_stage_trains_everything_with_params() {
+        let mut c = cfg();
+        c.stage = Stage::Full;
+        let pm = parse(&c).unwrap();
+        assert_eq!(
+            pm.trainable_param_elems, pm.total_param_elems,
+            "all params trainable under Full"
+        );
+        // and then even the vision tower retains activations
+        assert!(pm
+            .layers
+            .iter()
+            .filter(|l| l.module == "vision_tower")
+            .all(|l| l.on_bwd_path));
+    }
+
+    #[test]
+    fn frozen_layers_have_no_grad_factors() {
+        let pm = parse(&cfg()).unwrap();
+        for l in pm.layers.iter().filter(|l| !l.trainable) {
+            assert_eq!(l.grad_bytes, 0, "{}", l.name);
+            assert_eq!(l.opt_state_mult, 0.0, "{}", l.name);
+            assert_eq!(l.master_bytes, 0, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn checkpointing_reduces_retained_acts() {
+        let mut b = cfg();
+        b.grad_checkpoint = false;
+        let base = parse(&b).unwrap();
+        let mut c = cfg();
+        c.grad_checkpoint = true;
+        let ck = parse(&c).unwrap();
+        let act = |pm: &ParsedModel| -> f64 { pm.layers.iter().map(|l| l.act_bytes_total()).sum() };
+        assert!(act(&ck) < act(&base) * 0.5, "ckpt {} vs base {}", act(&ck), act(&base));
+    }
+
+    #[test]
+    fn lora_stage_marks_adapters_trainable() {
+        let mut c = cfg();
+        c.stage = Stage::LoraFinetune;
+        c.lora = Some(crate::model::lora::LoraConfig { rank: 4, ..Default::default() });
+        let pm = parse(&c).unwrap();
+        let adapters: Vec<_> = pm
+            .layers
+            .iter()
+            .filter(|l| l.kind_tag.starts_with("lora"))
+            .collect();
+        assert!(!adapters.is_empty());
+        assert!(adapters.iter().all(|l| l.trainable));
+        // base linears frozen
+        assert!(pm
+            .layers
+            .iter()
+            .filter(|l| l.module == "language_model" && l.kind_tag == "linear" && !l.name.contains("lora"))
+            .all(|l| !l.trainable));
+    }
+}

@@ -1,0 +1,192 @@
+//! Pure-Rust mirror of the AOT compute graph (L1 factor kernel + L1
+//! liveness scan + L2 aggregation), arithmetic in f32 in the same order
+//! so the two paths agree to float tolerance. Keep in lockstep with
+//! `python/compile/kernels/{factor_kernel,peak_scan}.py` and `model.py`.
+
+use crate::parser::features::*;
+
+use super::Prediction;
+
+const MIB: f32 = 1024.0 * 1024.0;
+
+/// Per-layer factor row (mirrors the kernel's 8 output columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FactorRow {
+    pub param: f32,
+    pub grad: f32,
+    pub opt: f32,
+    pub act: f32,
+    pub ephemeral: f32,
+    pub workspace: f32,
+    pub bwd_transient: f32,
+    pub valid: f32,
+}
+
+/// The factor kernel: one feature row → one factor row (MiB).
+pub fn factor_row(f: &[f32]) -> FactorRow {
+    debug_assert!(f.len() >= NUM_FEATURES);
+    let inv_mib = 1.0 / MIB;
+    let pe = f[PARAM_ELEMS];
+    let valid = f[VALID];
+    let tr = f[TRAINABLE];
+    FactorRow {
+        param: pe * f[PARAM_BYTES] * f[PARAM_SHARD] * inv_mib * valid,
+        grad: pe * f[GRAD_BYTES] * tr * f[GRAD_SHARD] * inv_mib * valid,
+        opt: pe * (f[OPT_STATE_MULT] * f[OPT_BYTES] + f[MASTER_BYTES]) * tr * f[OPT_SHARD]
+            * inv_mib
+            * valid,
+        act: f[ACT_ELEMS] * f[ACT_BYTES] * f[ON_BWD_PATH] * f[RECOMPUTE_KEEP] * inv_mib * valid,
+        ephemeral: f[EPHEMERAL_ELEMS] * f[ACT_BYTES] * inv_mib * valid,
+        workspace: f[WORKSPACE_MIB] * valid,
+        bwd_transient: f[BWD_TRANSIENT_ELEMS] * f[ACT_BYTES] * inv_mib * valid,
+        valid,
+    }
+}
+
+/// The liveness scan: `(act_total, fwd_peak, bwd_peak)` over execution
+/// order (mirrors `peak_scan.py`).
+pub fn liveness_scan(rows: &[FactorRow]) -> (f32, f32, f32) {
+    let mut live = 0.0f32;
+    let mut fwd_peak = 0.0f32;
+    let mut bwd_peak = 0.0f32;
+    for r in rows {
+        live += r.act;
+        fwd_peak = fwd_peak.max(live + r.ephemeral + r.workspace);
+        bwd_peak = bwd_peak.max(live + r.bwd_transient + r.workspace);
+    }
+    (live, fwd_peak, bwd_peak)
+}
+
+/// Full prediction from an encoded request (mirrors `model.predict_peak`).
+pub fn predict_encoded(enc: &EncodedRequest) -> Prediction {
+    let rows: Vec<FactorRow> = (0..enc.num_layers).map(|i| factor_row(enc.row(i))).collect();
+    predict_rows(&rows, &enc.overheads)
+}
+
+/// Aggregation step shared by [`predict_encoded`] and tests.
+pub fn predict_rows(rows: &[FactorRow], overheads: &[f32; NUM_OVERHEADS]) -> Prediction {
+    let mut param = 0.0f32;
+    let mut grad = 0.0f32;
+    let mut opt = 0.0f32;
+    for r in rows {
+        param += r.param;
+        grad += r.grad;
+        opt += r.opt;
+    }
+    let (act_total, fwd_peak, bwd_peak) = liveness_scan(rows);
+    let transient = fwd_peak.max(bwd_peak);
+
+    let persistent = param + grad + opt;
+    let bucket = overheads[OH_GRAD_BUCKET_MIB];
+    let step_t = overheads[OH_STEP_TRANSIENT_MIB];
+    let dynamic = transient.max(step_t);
+    let raw = persistent + bucket + dynamic;
+    let peak = raw * (1.0 + overheads[OH_ALLOC_FRAC]) + overheads[OH_CUDA_CTX_MIB];
+
+    Prediction {
+        peak_mib: peak,
+        param_mib: param,
+        grad_mib: grad,
+        opt_mib: opt,
+        act_mib: act_total,
+        transient_mib: transient,
+        persistent_mib: persistent,
+        fwd_peak_mib: fwd_peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::parser::{features, parse};
+
+    #[test]
+    fn golden_single_layer() {
+        // Mirrors python/tests/test_kernel.py::test_golden_single_layer.
+        let mut f = vec![0.0f32; NUM_FEATURES];
+        f[PARAM_ELEMS] = 1e6;
+        f[PARAM_BYTES] = 2.0;
+        f[TRAINABLE] = 1.0;
+        f[ON_BWD_PATH] = 1.0;
+        f[GRAD_BYTES] = 2.0;
+        f[OPT_STATE_MULT] = 2.0;
+        f[OPT_BYTES] = 4.0;
+        f[MASTER_BYTES] = 4.0;
+        f[ACT_ELEMS] = 2e6;
+        f[ACT_BYTES] = 2.0;
+        f[GRAD_SHARD] = 1.0;
+        f[OPT_SHARD] = 1.0;
+        f[PARAM_SHARD] = 1.0;
+        f[RECOMPUTE_KEEP] = 1.0;
+        f[VALID] = 1.0;
+        let r = factor_row(&f);
+        let mib = 1024.0 * 1024.0;
+        assert!((r.param - 2e6 / mib).abs() < 1e-5);
+        assert!((r.grad - 2e6 / mib).abs() < 1e-5);
+        assert!((r.opt - 12e6 / mib).abs() < 1e-4);
+        assert!((r.act - 4e6 / mib).abs() < 1e-5);
+    }
+
+    #[test]
+    fn invalid_row_contributes_nothing() {
+        let mut f = vec![1e9f32; NUM_FEATURES];
+        f[VALID] = 0.0;
+        let r = factor_row(&f);
+        assert_eq!(r.param, 0.0);
+        assert_eq!(r.act, 0.0);
+    }
+
+    #[test]
+    fn scan_single_spike() {
+        // Mirrors python test: 64 layers of 1 MiB act, one 500 MiB spike.
+        let mut rows = vec![
+            FactorRow { act: 1.0, valid: 1.0, ..Default::default() };
+            64
+        ];
+        rows[10].ephemeral = 500.0;
+        let (total, fwd, _) = liveness_scan(&rows);
+        assert!((total - 64.0).abs() < 1e-3);
+        assert!((fwd - 511.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn full_model_prediction_is_sane() {
+        let cfg = TrainConfig::fig2b(4);
+        let pm = parse(&cfg).unwrap();
+        let enc = features::encode(&pm, &cfg);
+        let p = predict_encoded(&enc);
+        // LLaVA-1.5-7B fine-tune on DP=4 should land in tens of GiB.
+        assert!(p.peak_gib() > 10.0 && p.peak_gib() < 200.0, "peak {}", p.peak_gib());
+        assert!(p.persistent_mib > 0.0);
+        assert!(
+            (p.persistent_mib - (p.param_mib + p.grad_mib + p.opt_mib)).abs()
+                < p.persistent_mib * 1e-5
+        );
+        assert!(p.peak_mib >= p.persistent_mib);
+    }
+
+    #[test]
+    fn dp_monotonicity_under_zero2() {
+        let peaks: Vec<f32> = (1..=8)
+            .map(|dp| super::super::predict(&TrainConfig::fig2b(dp)).unwrap().peak_mib)
+            .collect();
+        for w in peaks.windows(2) {
+            assert!(w[1] <= w[0] + 1.0, "peak increased with DP: {peaks:?}");
+        }
+    }
+
+    #[test]
+    fn pretrain_much_smaller_than_finetune() {
+        let ft = super::super::predict(&TrainConfig::fig2a(1)).unwrap();
+        let mut cfg = TrainConfig::fig2a(1);
+        cfg.stage = crate::config::Stage::Pretrain;
+        let pt = super::super::predict(&cfg).unwrap();
+        assert!(
+            pt.peak_mib < ft.peak_mib * 0.6,
+            "pretrain {} vs finetune {}",
+            pt.peak_mib,
+            ft.peak_mib
+        );
+    }
+}

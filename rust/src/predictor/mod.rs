@@ -1,0 +1,95 @@
+//! The paper's *factor predictor* (Fig. 1 steps 5–6): per-layer
+//! factorization into `M_param`, `M_grad`, `M_opt`, `M_act`, aggregated
+//! per Eq. 1 with an activation-liveness timeline refinement.
+//!
+//! Two interchangeable implementations:
+//!
+//! * [`analytical`] — pure Rust, exact mirror of the AOT compute graph
+//!   (f32 arithmetic in the same order). Always available.
+//! * [`tensorized`] — executes the AOT-compiled HLO artifact via PJRT
+//!   (the L1 Pallas factor kernel + liveness scan). Used by the batched
+//!   prediction service; property-tested to agree with `analytical`.
+
+pub mod analytical;
+pub mod tensorized;
+
+use crate::parser::features::{
+    self, NUM_OUTPUTS, OUT_ACT, OUT_FWD_PEAK, OUT_GRAD, OUT_OPT, OUT_PARAM, OUT_PEAK,
+    OUT_PERSISTENT, OUT_TRANSIENT,
+};
+
+/// One prediction (all quantities in MiB, per GPU).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Prediction {
+    /// Predicted peak GPU memory (the paper's output, step 7).
+    pub peak_mib: f32,
+    /// Σ M_param.
+    pub param_mib: f32,
+    /// Σ M_grad.
+    pub grad_mib: f32,
+    /// Σ M_opt (optimizer states + fp32 master).
+    pub opt_mib: f32,
+    /// Σ retained M_act.
+    pub act_mib: f32,
+    /// Liveness transient peak max(fwd, bwd).
+    pub transient_mib: f32,
+    /// Persistent base (param + grad + opt).
+    pub persistent_mib: f32,
+    /// Forward liveness peak.
+    pub fwd_peak_mib: f32,
+}
+
+impl Prediction {
+    /// Build from an output row of the AOT artifact / analytical mirror.
+    pub fn from_output_row(row: &[f32]) -> Self {
+        assert!(row.len() >= NUM_OUTPUTS);
+        Prediction {
+            peak_mib: row[OUT_PEAK],
+            param_mib: row[OUT_PARAM],
+            grad_mib: row[OUT_GRAD],
+            opt_mib: row[OUT_OPT],
+            act_mib: row[OUT_ACT],
+            transient_mib: row[OUT_TRANSIENT],
+            persistent_mib: row[OUT_PERSISTENT],
+            fwd_peak_mib: row[OUT_FWD_PEAK],
+        }
+    }
+
+    pub fn peak_gib(&self) -> f32 {
+        self.peak_mib / 1024.0
+    }
+
+    /// Does the run fit a GPU with `capacity_mib` usable memory?
+    pub fn fits(&self, capacity_mib: f32) -> bool {
+        self.peak_mib <= capacity_mib
+    }
+}
+
+/// Predict from a training config via the analytical path (parse →
+/// encode → factorize). The one-call public API.
+pub fn predict(cfg: &crate::config::TrainConfig) -> anyhow::Result<Prediction> {
+    let pm = crate::parser::parse(cfg)?;
+    let enc = features::encode(&pm, cfg);
+    Ok(analytical::predict_encoded(&enc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_output_row_maps_columns() {
+        let row: Vec<f32> = (0..NUM_OUTPUTS as i32).map(|i| i as f32).collect();
+        let p = Prediction::from_output_row(&row);
+        assert_eq!(p.peak_mib, 0.0);
+        assert_eq!(p.param_mib, 1.0);
+        assert_eq!(p.fwd_peak_mib, 7.0);
+    }
+
+    #[test]
+    fn fits_threshold() {
+        let p = Prediction { peak_mib: 70_000.0, ..Default::default() };
+        assert!(p.fits(81_920.0)); // 80 GiB
+        assert!(!p.fits(40_960.0)); // 40 GiB
+    }
+}

@@ -1,0 +1,57 @@
+//! Tensorized predictor: routes encoded requests through the
+//! AOT-compiled HLO artifact (L1 Pallas kernels + L2 aggregation) via
+//! the PJRT runtime. Semantically identical to [`super::analytical`];
+//! the integration suite cross-validates the two paths.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::parser::{self, features};
+use crate::runtime::Runtime;
+
+use super::Prediction;
+
+/// Predictor backed by the AOT artifact.
+pub struct TensorizedPredictor {
+    runtime: Runtime,
+}
+
+impl TensorizedPredictor {
+    /// Load artifacts from the given directory (see `make artifacts`).
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        Ok(Self {
+            runtime: Runtime::load(artifacts_dir)?,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Predict one configuration.
+    pub fn predict(&self, cfg: &TrainConfig) -> Result<Prediction> {
+        Ok(self.predict_many(std::slice::from_ref(cfg))?.remove(0))
+    }
+
+    /// Predict a batch of configurations in one PJRT execution (padded
+    /// to the artifact's `[B, L, F]` capacity).
+    pub fn predict_many(&self, cfgs: &[TrainConfig]) -> Result<Vec<Prediction>> {
+        let encoded: Vec<features::EncodedRequest> = cfgs
+            .iter()
+            .map(|cfg| {
+                let pm = parser::parse(cfg)?;
+                Ok(features::encode(&pm, cfg))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&features::EncodedRequest> = encoded.iter().collect();
+        self.runtime.predict_batch(&refs)
+    }
+
+    /// Predict pre-encoded requests (used by the batching coordinator).
+    pub fn predict_encoded(
+        &self,
+        requests: &[&features::EncodedRequest],
+    ) -> Result<Vec<Prediction>> {
+        self.runtime.predict_batch(requests)
+    }
+}

@@ -1,0 +1,39 @@
+//! Error metrics: absolute percentage error and MAPE — the paper's
+//! accuracy measure (Fig. 2: "average MAPE of 13% / 8.7%").
+
+/// Absolute percentage error of one (predicted, measured) pair.
+pub fn ape(predicted: f64, measured: f64) -> f64 {
+    assert!(measured > 0.0, "measured must be positive");
+    (predicted - measured).abs() / measured
+}
+
+/// Mean absolute percentage error over pairs, as a fraction (0.087 =
+/// 8.7%).
+pub fn mape(pairs: &[(f64, f64)]) -> f64 {
+    assert!(!pairs.is_empty());
+    pairs.iter().map(|&(p, m)| ape(p, m)).sum::<f64>() / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ape_symmetric_magnitude() {
+        assert!((ape(110.0, 100.0) - 0.10).abs() < 1e-12);
+        assert!((ape(90.0, 100.0) - 0.10).abs() < 1e-12);
+        assert_eq!(ape(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn mape_averages() {
+        let pairs = [(110.0, 100.0), (100.0, 100.0)];
+        assert!((mape(&pairs) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mape_rejects_empty() {
+        mape(&[]);
+    }
+}

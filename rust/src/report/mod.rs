@@ -1,0 +1,8 @@
+//! Reporting: MAPE computation, ASCII tables/figures, and CSV emission —
+//! everything the evaluation harness prints or writes to `results/`.
+
+pub mod mape;
+pub mod table;
+
+pub use mape::{ape, mape};
+pub use table::{ascii_bars, Table};

@@ -1,0 +1,97 @@
+//! Artifact manifest: which `(batch, layers)` predictor variants exist
+//! in `artifacts/` and the schema they were lowered against.
+
+use anyhow::{Context, Result};
+
+use crate::util::json_mini::{self, Json};
+
+/// One AOT-compiled variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub file: String,
+    pub batch: usize,
+    pub layers: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schema_version: u64,
+    pub num_features: usize,
+    pub num_overheads: usize,
+    pub num_outputs: usize,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json_mini::parse(text)?;
+        let u = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest missing numeric {key:?}"))
+        };
+        let mut variants = Vec::new();
+        for item in v
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing variants[]")?
+        {
+            variants.push(Variant {
+                file: item
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("variant missing file")?
+                    .to_string(),
+                batch: item.get("batch").and_then(Json::as_u64).context("variant batch")? as usize,
+                layers: item.get("layers").and_then(Json::as_u64).context("variant layers")?
+                    as usize,
+            });
+        }
+        Ok(Manifest {
+            schema_version: u("schema_version")?,
+            num_features: u("num_features")? as usize,
+            num_overheads: u("num_overheads")? as usize,
+            num_outputs: u("num_outputs")? as usize,
+            variants,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "schema_version": 1,
+  "num_features": 20,
+  "num_overheads": 8,
+  "num_outputs": 8,
+  "variants": [
+    {"file": "predictor_b1_l1024.hlo.txt", "batch": 1, "layers": 1024, "bytes": 100},
+    {"file": "predictor_b8_l1024.hlo.txt", "batch": 8, "layers": 1024, "bytes": 100}
+  ]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.schema_version, 1);
+        assert_eq!(m.num_features, 20);
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variants[1].batch, 8);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"schema_version": 1}"#).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs here — this is the request path. The interchange
+//! gotchas (HLO *text*, `return_tuple=True` → `to_tuple1`) follow
+//! /opt/xla-example/README.md.
+
+pub mod artifact;
+
+use anyhow::{bail, Context, Result};
+
+use crate::parser::features::{EncodedRequest, NUM_FEATURES, NUM_OUTPUTS, NUM_OVERHEADS};
+use crate::predictor::Prediction;
+
+pub use artifact::{Manifest, Variant};
+
+/// A compiled predictor variant (fixed `[B, L, F]` capacity).
+struct CompiledVariant {
+    batch: usize,
+    layers: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifact variants.
+pub struct Runtime {
+    variants: Vec<CompiledVariant>,
+    platform: String,
+}
+
+impl Runtime {
+    /// Load every variant listed in `artifacts/manifest.json` and
+    /// compile it on a fresh CPU PJRT client.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        if manifest.num_features != NUM_FEATURES
+            || manifest.num_overheads != NUM_OVERHEADS
+            || manifest.num_outputs != NUM_OUTPUTS
+        {
+            bail!(
+                "artifact schema mismatch: manifest ({}, {}, {}) vs crate ({NUM_FEATURES}, {NUM_OVERHEADS}, {NUM_OUTPUTS}) — re-run `make artifacts`",
+                manifest.num_features,
+                manifest.num_overheads,
+                manifest.num_outputs
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let mut variants = Vec::new();
+        for v in &manifest.variants {
+            let path = format!("{artifacts_dir}/{}", v.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path}"))?;
+            variants.push(CompiledVariant {
+                batch: v.batch,
+                layers: v.layers,
+                exe,
+            });
+        }
+        if variants.is_empty() {
+            bail!("no artifact variants found in {artifacts_dir}");
+        }
+        // Prefer tighter capacities first when routing.
+        variants.sort_by_key(|v| (v.layers, v.batch));
+        Ok(Self { variants, platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Capacities available, `(batch, layers)` pairs.
+    pub fn capacities(&self) -> Vec<(usize, usize)> {
+        self.variants.iter().map(|v| (v.batch, v.layers)).collect()
+    }
+
+    /// Smallest variant that fits `n` requests of `max_layers` each.
+    fn route(&self, n: usize, max_layers: usize) -> Result<&CompiledVariant> {
+        self.variants
+            .iter()
+            .find(|v| v.batch >= n && v.layers >= max_layers)
+            .or_else(|| {
+                // fall back: any variant with enough layer capacity
+                // (caller will chunk the batch).
+                self.variants.iter().find(|v| v.layers >= max_layers)
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact variant fits {max_layers} layers (capacities: {:?})",
+                    self.capacities()
+                )
+            })
+    }
+
+    /// Execute one batch of encoded requests through the AOT predictor.
+    ///
+    /// Routes to the smallest fitting variant, padding the batch and the
+    /// layer rows; chunks the batch if it exceeds every variant's batch
+    /// capacity. Returns one [`Prediction`] per request, in order.
+    pub fn predict_batch(&self, requests: &[&EncodedRequest]) -> Result<Vec<Prediction>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let max_layers = requests.iter().map(|r| r.num_layers).max().unwrap();
+        let variant = self.route(requests.len(), max_layers)?;
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(variant.batch) {
+            out.extend(self.execute_chunk(variant, chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn execute_chunk(
+        &self,
+        v: &CompiledVariant,
+        chunk: &[&EncodedRequest],
+    ) -> Result<Vec<Prediction>> {
+        let (b, l) = (v.batch, v.layers);
+        let mut features = vec![0.0f32; b * l * NUM_FEATURES];
+        let mut overheads = vec![0.0f32; b * NUM_OVERHEADS];
+        for (i, req) in chunk.iter().enumerate() {
+            let padded = req.padded(l)?;
+            features[i * l * NUM_FEATURES..(i + 1) * l * NUM_FEATURES].copy_from_slice(&padded);
+            overheads[i * NUM_OVERHEADS..(i + 1) * NUM_OVERHEADS].copy_from_slice(&req.overheads);
+        }
+        let f_lit = xla::Literal::vec1(&features)
+            .reshape(&[b as i64, l as i64, NUM_FEATURES as i64])
+            .context("reshaping features literal")?;
+        let o_lit = xla::Literal::vec1(&overheads)
+            .reshape(&[b as i64, NUM_OVERHEADS as i64])
+            .context("reshaping overheads literal")?;
+        let result = v
+            .exe
+            .execute::<xla::Literal>(&[f_lit, o_lit])
+            .context("executing predictor artifact")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let row_major = result.to_tuple1()?.to_vec::<f32>()?;
+        if row_major.len() != b * NUM_OUTPUTS {
+            bail!(
+                "artifact returned {} f32s, expected {}",
+                row_major.len(),
+                b * NUM_OUTPUTS
+            );
+        }
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                Prediction::from_output_row(&row_major[i * NUM_OUTPUTS..(i + 1) * NUM_OUTPUTS])
+            })
+            .collect())
+    }
+}
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("MMPREDICT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

@@ -1,0 +1,207 @@
+//! Trace replay: runs an event trace through the caching allocator and
+//! records the peak with a per-factor attribution snapshot.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::allocator::{CachingAllocator, Handle, Stats};
+use super::trace::{Event, Tag, ALL_TAGS};
+
+/// Per-factor live bytes at the peak.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    entries: Vec<(Tag, u64)>,
+}
+
+impl Breakdown {
+    pub fn get(&self, tag: Tag) -> u64 {
+        self.entries
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, b)| *b)
+            .unwrap_or(0)
+    }
+
+    pub fn entries(&self) -> &[(Tag, u64)] {
+        &self.entries
+    }
+
+    fn snapshot(live: &HashMap<Tag, u64>) -> Self {
+        Breakdown {
+            entries: ALL_TAGS
+                .iter()
+                .map(|&t| (t, live.get(&t).copied().unwrap_or(0)))
+                .collect(),
+        }
+    }
+}
+
+/// Replay result.
+#[derive(Clone, Debug)]
+pub struct Replay {
+    pub stats: Stats,
+    /// Attribution of live bytes at the moment of peak allocation.
+    pub at_peak: Breakdown,
+    /// Phase during which the allocated-bytes peak occurred.
+    pub peak_phase: &'static str,
+    /// Live bytes by tag at the end of the iteration (persistent state).
+    pub persistent: Breakdown,
+}
+
+/// Replay a trace through a fresh allocator.
+pub fn replay(events: &[Event]) -> Result<Replay> {
+    let mut alloc = CachingAllocator::new();
+    let mut handles: HashMap<u64, (Handle, u64, Tag)> = HashMap::new();
+    let mut live: HashMap<Tag, u64> = HashMap::new();
+    let mut at_peak = Breakdown::default();
+    let mut peak_phase = "startup";
+    let mut phase = "startup";
+    let mut peak = 0u64;
+
+    for ev in events {
+        match *ev {
+            Event::Phase { name } => phase = name,
+            Event::Alloc { id, bytes, tag } => {
+                let h = alloc.alloc(bytes);
+                if handles.insert(id, (h, bytes, tag)).is_some() {
+                    bail!("trace reused id {id}");
+                }
+                *live.entry(tag).or_insert(0) += bytes;
+                let s = alloc.stats();
+                if s.allocated > peak {
+                    peak = s.allocated;
+                    at_peak = Breakdown::snapshot(&live);
+                    peak_phase = phase;
+                }
+            }
+            Event::Free { id } => {
+                let Some((h, bytes, tag)) = handles.remove(&id) else {
+                    bail!("trace freed unknown id {id}");
+                };
+                alloc.free(h);
+                *live.get_mut(&tag).unwrap() -= bytes;
+            }
+        }
+    }
+    Ok(Replay {
+        stats: alloc.stats(),
+        at_peak,
+        peak_phase,
+        persistent: Breakdown::snapshot(&live),
+    })
+}
+
+/// One timeline sample: (event index, phase, allocated, reserved bytes).
+pub type TimelinePoint = (usize, &'static str, u64, u64);
+
+/// Replay a trace recording the allocated/reserved curve after every
+/// event — the simulator's analogue of a memory-profiler timeline.
+/// Returns `(replay, samples)`.
+pub fn replay_with_timeline(events: &[Event]) -> Result<(Replay, Vec<TimelinePoint>)> {
+    let mut alloc = CachingAllocator::new();
+    let mut handles: HashMap<u64, (Handle, u64, Tag)> = HashMap::new();
+    let mut live: HashMap<Tag, u64> = HashMap::new();
+    let mut at_peak = Breakdown::default();
+    let mut peak_phase = "startup";
+    let mut phase = "startup";
+    let mut peak = 0u64;
+    let mut timeline = Vec::with_capacity(events.len());
+
+    for (i, ev) in events.iter().enumerate() {
+        match *ev {
+            Event::Phase { name } => phase = name,
+            Event::Alloc { id, bytes, tag } => {
+                let h = alloc.alloc(bytes);
+                if handles.insert(id, (h, bytes, tag)).is_some() {
+                    bail!("trace reused id {id}");
+                }
+                *live.entry(tag).or_insert(0) += bytes;
+                let s = alloc.stats();
+                if s.allocated > peak {
+                    peak = s.allocated;
+                    at_peak = Breakdown::snapshot(&live);
+                    peak_phase = phase;
+                }
+            }
+            Event::Free { id } => {
+                let Some((h, bytes, tag)) = handles.remove(&id) else {
+                    bail!("trace freed unknown id {id}");
+                };
+                alloc.free(h);
+                *live.get_mut(&tag).unwrap() -= bytes;
+            }
+        }
+        let s = alloc.stats();
+        timeline.push((i, phase, s.allocated, s.reserved));
+    }
+    let replay = Replay {
+        stats: alloc.stats(),
+        at_peak,
+        peak_phase,
+        persistent: Breakdown::snapshot(&live),
+    };
+    Ok((replay, timeline))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_alloc(id: u64, bytes: u64, tag: Tag) -> Event {
+        Event::Alloc { id, bytes, tag }
+    }
+
+    #[test]
+    fn peak_and_attribution() {
+        let evs = vec![
+            Event::Phase { name: "startup" },
+            ev_alloc(0, 10 << 20, Tag::Param),
+            Event::Phase { name: "forward" },
+            ev_alloc(1, 30 << 20, Tag::Act),
+            Event::Free { id: 1 },
+            ev_alloc(2, 5 << 20, Tag::Act),
+            Event::Free { id: 2 },
+        ];
+        let r = replay(&evs).unwrap();
+        assert_eq!(r.stats.peak_allocated, 40 << 20);
+        assert_eq!(r.at_peak.get(Tag::Param), 10 << 20);
+        assert_eq!(r.at_peak.get(Tag::Act), 30 << 20);
+        assert_eq!(r.peak_phase, "forward");
+        assert_eq!(r.persistent.get(Tag::Param), 10 << 20);
+        assert_eq!(r.persistent.get(Tag::Act), 0);
+    }
+
+    #[test]
+    fn timeline_tracks_curve_and_agrees_with_replay() {
+        let evs = vec![
+            Event::Phase { name: "startup" },
+            ev_alloc(0, 4 << 20, Tag::Param),
+            Event::Phase { name: "forward" },
+            ev_alloc(1, 8 << 20, Tag::Act),
+            Event::Free { id: 1 },
+        ];
+        let (r, tl) = replay_with_timeline(&evs).unwrap();
+        let plain = replay(&evs).unwrap();
+        assert_eq!(r.stats, plain.stats);
+        assert_eq!(tl.len(), evs.len());
+        // curve: rises to the peak then falls after the free
+        let max_alloc = tl.iter().map(|&(_, _, a, _)| a).max().unwrap();
+        assert_eq!(max_alloc, r.stats.peak_allocated);
+        assert!(tl.last().unwrap().2 < max_alloc);
+        // reserved never shrinks (segments are cached)
+        for w in tl.windows(2) {
+            assert!(w[1].3 >= w[0].3);
+        }
+    }
+
+    #[test]
+    fn bad_traces_error() {
+        assert!(replay(&[Event::Free { id: 9 }]).is_err());
+        assert!(replay(&[
+            ev_alloc(0, 512, Tag::Act),
+            ev_alloc(0, 512, Tag::Act)
+        ])
+        .is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! DeepSpeed ZeRO buffer emulation: the flat buffers stages 0–3 keep on
+//! each rank (fp32 master partitions, optimizer-state partitions,
+//! gradient partitions, reduce/allreduce buckets, step temporaries).
+
+use crate::config::{TrainConfig, ZeroStage};
+use crate::parser::ParsedModel;
+
+/// Persistent + transient flat buffers for one rank.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ZeroBuffers {
+    /// fp32 master-weight flat partition (mixed precision only).
+    pub master_bytes: u64,
+    /// One entry per optimizer state tensor (Adam: exp_avg, exp_avg_sq).
+    pub opt_state_bytes: Vec<u64>,
+    /// Sharded gradient partition (ZeRO >= 2) — persistent.
+    pub grad_partition_bytes: Option<u64>,
+    /// Reduce/allreduce flat buckets (ZeRO-2: two, double-buffered;
+    /// plain DP: one).
+    pub bucket_bytes: Vec<u64>,
+    /// Bucket capacity in bytes (gradient accumulation threshold).
+    pub bucket_capacity: u64,
+    /// fp32 step scratch (gradient upcast for the local shard).
+    pub step_temp_bytes: u64,
+}
+
+/// Compute the rank-local buffer sizes.
+pub fn buffers(pm: &ParsedModel, cfg: &TrainConfig) -> ZeroBuffers {
+    let (_, grad_w, master_w) = cfg.precision.byte_widths();
+    let (_, grad_shard, opt_shard) = cfg.zero.shard_factors(cfg.dp);
+    let trainable = pm.trainable_param_elems;
+    if trainable == 0 {
+        return ZeroBuffers::default();
+    }
+
+    let shard_elems = |shard: f32| -> u64 { (trainable as f64 * shard as f64).ceil() as u64 };
+
+    let master_bytes = shard_elems(opt_shard) * master_w;
+    let n_states = cfg.optimizer.state_mult() as usize;
+    let opt_state_bytes = vec![shard_elems(opt_shard) * 4; n_states];
+
+    let bucket_elems = cfg.bucket_elems.min(trainable);
+    let bucket_capacity = bucket_elems * grad_w;
+    let (grad_partition_bytes, bucket_bytes) = match (cfg.zero >= ZeroStage::Zero2, cfg.dp > 1) {
+        (true, _) => (
+            Some(shard_elems(grad_shard) * grad_w),
+            vec![bucket_capacity; 2], // ipg double buffering
+        ),
+        (false, true) => (None, vec![bucket_capacity]),
+        (false, false) => (None, vec![]),
+    };
+
+    ZeroBuffers {
+        master_bytes,
+        opt_state_bytes,
+        grad_partition_bytes,
+        bucket_bytes,
+        bucket_capacity,
+        step_temp_bytes: shard_elems(opt_shard) * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptimizerKind, Precision, TrainConfig, ZeroStage};
+    use crate::parser::parse;
+
+    fn cfg(dp: u64, zero: ZeroStage) -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            dp,
+            zero,
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn zero2_shards_grad_and_opt() {
+        let c = cfg(4, ZeroStage::Zero2);
+        let pm = parse(&c).unwrap();
+        let b = buffers(&pm, &c);
+        let t = pm.trainable_param_elems;
+        assert_eq!(b.master_bytes, t.div_ceil(4) * 4);
+        assert_eq!(b.opt_state_bytes, vec![t.div_ceil(4) * 4; 2]);
+        assert_eq!(b.grad_partition_bytes, Some(t.div_ceil(4) * 2));
+        assert_eq!(b.bucket_bytes.len(), 2);
+    }
+
+    #[test]
+    fn zero0_dp1_has_no_buckets() {
+        let c = cfg(1, ZeroStage::Zero0);
+        let pm = parse(&c).unwrap();
+        let b = buffers(&pm, &c);
+        assert!(b.bucket_bytes.is_empty());
+        assert_eq!(b.grad_partition_bytes, None);
+        // master copy is full-size without sharding
+        assert_eq!(b.master_bytes, pm.trainable_param_elems * 4);
+    }
+
+    #[test]
+    fn zero1_shards_opt_only() {
+        let c = cfg(8, ZeroStage::Zero1);
+        let pm = parse(&c).unwrap();
+        let b = buffers(&pm, &c);
+        let t = pm.trainable_param_elems;
+        assert_eq!(b.master_bytes, ((t as f64 / 8.0).ceil() as u64) * 4);
+        assert_eq!(b.grad_partition_bytes, None);
+        assert_eq!(b.bucket_bytes.len(), 1); // plain-DP allreduce bucket
+    }
+
+    #[test]
+    fn sgd_has_no_state_buffers() {
+        let mut c = cfg(2, ZeroStage::Zero2);
+        c.optimizer = OptimizerKind::Sgd;
+        let pm = parse(&c).unwrap();
+        assert!(buffers(&pm, &c).opt_state_bytes.is_empty());
+    }
+
+    #[test]
+    fn fp32_training_has_no_master() {
+        let mut c = cfg(2, ZeroStage::Zero2);
+        c.precision = Precision::Fp32;
+        let pm = parse(&c).unwrap();
+        assert_eq!(buffers(&pm, &c).master_bytes, 0);
+    }
+
+    #[test]
+    fn frozen_everything_means_no_buffers() {
+        let mut c = cfg(2, ZeroStage::Zero2);
+        c.stage = crate::config::Stage::Pretrain;
+        c.model = "vicuna-7b".into(); // unimodal: no projector => nothing trainable
+        let pm = parse(&c).unwrap();
+        assert_eq!(buffers(&pm, &c), ZeroBuffers::default());
+    }
+}

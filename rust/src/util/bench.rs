@@ -1,0 +1,73 @@
+//! Minimal criterion-style benchmark harness (the environment is offline,
+//! so criterion itself is unavailable). Reports mean/p50/p95 wall time per
+//! iteration after a warmup phase; used by every `rust/benches/*.rs`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then `iters` timed.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters.max(1);
+    let p50 = samples[samples.len() / 2];
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let p95 = samples[p95_idx];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50,
+        p95,
+    }
+}
+
+/// Pretty-print a bench result row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+        r.name, r.mean, r.p50, r.p95, r.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u32;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12); // warmup + timed
+        assert_eq!(r.iters, 10);
+        assert!(r.p50 <= r.p95);
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny argument parser (clap is unavailable offline). Supports
+//! `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals in order plus `--key`/`--flag` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup; returns Err with a readable message on parse
+    /// failure so the CLI can surface it.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["predict", "--model", "llava-1.5-7b", "--dp=4", "--verbose"]);
+        assert_eq!(a.positional, vec!["predict"]);
+        assert_eq!(a.get("model"), Some("llava-1.5-7b"));
+        assert_eq!(a.get("dp"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_lookup() {
+        let a = parse(&["--dp", "8"]);
+        assert_eq!(a.get_parse::<usize>("dp").unwrap(), Some(8));
+        assert!(parse(&["--dp", "x"]).get_parse::<usize>("dp").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--json"]);
+        assert!(a.flag("json"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained substrates the crate would normally pull from
+//! external crates; the build environment is fully offline, so they are
+//! implemented here (and tested like everything else).
+
+pub mod bench;
+pub mod cli;
+pub mod json_mini;
+pub mod prng;
+pub mod units;
+
+pub use prng::Prng;

@@ -1,0 +1,49 @@
+//! Byte-quantity helpers and human-readable formatting.
+
+/// MiB as f64 bytes.
+pub const MIB: f64 = 1024.0 * 1024.0;
+/// GiB as f64 bytes.
+pub const GIB: f64 = MIB * 1024.0;
+
+/// Format a byte count as a human-readable string (`"12.34 GiB"`).
+pub fn human_bytes(bytes: f64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes / GIB)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", bytes / MIB)
+    } else if bytes >= 1024.0 {
+        format!("{:.1} KiB", bytes / 1024.0)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+/// Format a MiB quantity (`"70.12 GiB"` style).
+pub fn human_mib(mib: f64) -> String {
+    human_bytes(mib * MIB)
+}
+
+/// Round `bytes` up to a multiple of `granularity`.
+pub fn round_up(bytes: u64, granularity: u64) -> u64 {
+    debug_assert!(granularity > 0);
+    bytes.div_ceil(granularity) * granularity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_exact_and_partial() {
+        assert_eq!(round_up(512, 512), 512);
+        assert_eq!(round_up(513, 512), 1024);
+        assert_eq!(round_up(1, 512), 512);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_bytes(3.5 * GIB), "3.50 GiB");
+        assert_eq!(human_bytes(2.0 * MIB), "2.0 MiB");
+        assert_eq!(human_bytes(100.0), "100 B");
+    }
+}

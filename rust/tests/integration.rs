@@ -1,0 +1,163 @@
+//! Cross-module integration: config file -> parser -> predictor vs
+//! simulator, across models, stages and parallelism settings.
+
+use mmpredict::config::{Stage, TrainConfig, ZeroStage};
+use mmpredict::{parser, predictor, report, simulator};
+
+#[test]
+fn config_file_to_prediction() {
+    let path = std::env::temp_dir().join(format!("mmpredict_it_{}.toml", std::process::id()));
+    std::fs::write(
+        &path,
+        r#"
+model = "llava-tiny"
+stage = "finetune"
+mbs = 4
+seq_len = 128
+dp = 2
+zero = 2
+precision = "bf16"
+grad_checkpoint = true
+"#,
+    )
+    .unwrap();
+    let cfg = TrainConfig::from_file(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let p = predictor::predict(&cfg).unwrap();
+    let m = simulator::simulate(&cfg).unwrap();
+    assert!(p.peak_mib > 0.0);
+    assert!(report::ape(p.peak_mib as f64, m.peak_mib) < 0.5);
+}
+
+#[test]
+fn headline_fig2_band() {
+    // The end-to-end reproduction claim: both settings' MAPE lands in a
+    // band around the paper's 8.7%-13%.
+    for (mk, name) in [
+        (TrainConfig::fig2a as fn(u64) -> TrainConfig, "fig2a"),
+        (TrainConfig::fig2b as fn(u64) -> TrainConfig, "fig2b"),
+    ] {
+        let pairs: Vec<(f64, f64)> = (1..=8)
+            .map(|dp| {
+                let cfg = mk(dp);
+                let p = predictor::predict(&cfg).unwrap().peak_mib as f64;
+                let m = simulator::simulate(&cfg).unwrap().peak_mib;
+                (p, m)
+            })
+            .collect();
+        let mape = report::mape(&pairs);
+        assert!(
+            mape > 0.01 && mape < 0.20,
+            "{name} MAPE {:.1}% outside the plausible band",
+            mape * 100.0
+        );
+    }
+}
+
+#[test]
+fn per_gpu_peak_decreases_with_dp_under_zero2() {
+    let peaks: Vec<f64> = (1..=8)
+        .map(|dp| simulator::simulate(&TrainConfig::fig2b(dp)).unwrap().peak_mib)
+        .collect();
+    for w in peaks.windows(2) {
+        assert!(w[1] < w[0], "per-GPU peak must fall as DP grows: {peaks:?}");
+    }
+    // And by a large factor overall (grad+opt dominate a 7B model).
+    assert!(peaks[0] / peaks[7] > 2.0);
+}
+
+#[test]
+fn prediction_tracks_all_models_in_zoo() {
+    for model in mmpredict::zoo::names() {
+        let cfg = TrainConfig {
+            model: model.to_string(),
+            mbs: 2,
+            seq_len: 128,
+            dp: 2,
+            ..TrainConfig::llava_finetune_default()
+        };
+        let p = predictor::predict(&cfg).unwrap();
+        let m = simulator::simulate(&cfg).unwrap();
+        let ape = report::ape(p.peak_mib as f64, m.peak_mib);
+        assert!(ape < 0.35, "{model}: APE {:.2}", ape);
+    }
+}
+
+#[test]
+fn pretrain_vs_finetune_factor_structure() {
+    // Pre-training: projector-only training means grads/opt are tiny but
+    // activations through the (frozen) LM still accumulate.
+    let mut cfg = TrainConfig::fig2a(1);
+    cfg.stage = Stage::Pretrain;
+    let pt = predictor::predict(&cfg).unwrap();
+    let ft = predictor::predict(&TrainConfig::fig2a(1)).unwrap();
+    assert!(pt.opt_mib < ft.opt_mib * 0.01);
+    assert!(pt.grad_mib < ft.grad_mib * 0.01);
+    assert!(pt.act_mib > ft.act_mib * 0.5, "LM acts persist in pretrain");
+    assert_eq!(pt.param_mib, ft.param_mib);
+}
+
+#[test]
+fn unimodal_models_have_no_image_tokens() {
+    let cfg = TrainConfig {
+        model: "vicuna-7b".into(),
+        stage: Stage::Full,
+        mbs: 2,
+        seq_len: 256,
+        ..TrainConfig::llava_finetune_default()
+    };
+    let pm = parser::parse(&cfg).unwrap();
+    assert!(pm.layers.iter().all(|l| l.modality == mmpredict::model::Modality::Language));
+    let p = predictor::predict(&cfg).unwrap();
+    assert!(p.peak_mib > 0.0);
+}
+
+#[test]
+fn zero3_trades_params_for_gather_overheads() {
+    let mut z2 = TrainConfig::fig2b(8);
+    z2.zero = ZeroStage::Zero2;
+    let mut z3 = TrainConfig::fig2b(8);
+    z3.zero = ZeroStage::Zero3;
+    let p2 = predictor::predict(&z2).unwrap();
+    let p3 = predictor::predict(&z3).unwrap();
+    assert!(p3.param_mib < p2.param_mib * 0.2, "ZeRO-3 shards params");
+    assert!(p3.peak_mib < p2.peak_mib);
+}
+
+#[test]
+fn simulator_attribution_matches_predictor_factor_scale() {
+    // The simulator's at-peak attribution should be the same order as
+    // the predictor's factor totals (same underlying quantities).
+    let cfg = TrainConfig::fig2b(4);
+    let p = predictor::predict(&cfg).unwrap();
+    let m = simulator::simulate(&cfg).unwrap();
+    let mib = 1024.0 * 1024.0;
+    let sim_param = m.at_peak.get(simulator::Tag::Param) as f64 / mib;
+    assert!((sim_param - p.param_mib as f64).abs() / sim_param < 0.05);
+    let sim_opt = (m.at_peak.get(simulator::Tag::OptState) + m.at_peak.get(simulator::Tag::Master))
+        as f64
+        / mib;
+    assert!((sim_opt - p.opt_mib as f64).abs() / sim_opt < 0.05);
+}
+
+#[test]
+fn eager_attention_explodes_without_flash() {
+    use mmpredict::model::layer::AttnImpl;
+    let mut flash = TrainConfig::fig2b(8);
+    flash.grad_checkpoint = false;
+    let mut eager = flash.clone();
+    eager.attn = AttnImpl::Eager;
+    let pf = simulator::simulate(&flash).unwrap().peak_mib;
+    let pe = simulator::simulate(&eager).unwrap().peak_mib;
+    assert!(pe > pf * 1.5, "eager {pe} vs flash {pf}");
+}
+
+#[test]
+fn grad_checkpointing_large_act_reduction_on_7b() {
+    let ck = TrainConfig::fig2a(8);
+    let mut no = TrainConfig::fig2a(8);
+    no.grad_checkpoint = false;
+    let p_ck = predictor::predict(&ck).unwrap();
+    let p_no = predictor::predict(&no).unwrap();
+    assert!(p_ck.act_mib < p_no.act_mib * 0.35);
+}

@@ -1,0 +1,185 @@
+//! Property-based tests over randomized configurations, traces and
+//! allocator workloads (deterministic xoshiro PRNG — proptest is not
+//! available offline; shrinking is traded for seeds printed on failure).
+
+use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
+use mmpredict::model::layer::AttnImpl;
+use mmpredict::model::lora::LoraConfig;
+use mmpredict::simulator::allocator::CachingAllocator;
+use mmpredict::util::Prng;
+use mmpredict::{parser, predictor, simulator};
+
+/// Draw a random *valid* training configuration.
+fn arb_config(r: &mut Prng) -> TrainConfig {
+    let stage = *r.pick(&[Stage::Pretrain, Stage::Finetune, Stage::LoraFinetune, Stage::Full]);
+    TrainConfig {
+        model: r.pick(&["llava-tiny", "llama-tiny"]).to_string(),
+        stage,
+        mbs: r.range(1, 16) as u64,
+        seq_len: *r.pick(&[32u64, 64, 128, 256, 512]),
+        images_per_sample: 1,
+        dp: *r.pick(&[1u64, 2, 3, 4, 8]),
+        zero: *r.pick(&[ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3]),
+        optimizer: *r.pick(&[OptimizerKind::AdamW, OptimizerKind::SgdMomentum, OptimizerKind::Sgd]),
+        precision: *r.pick(&[Precision::Bf16Mixed, Precision::Fp16Mixed, Precision::Fp32]),
+        attn: *r.pick(&[AttnImpl::Flash, AttnImpl::Eager]),
+        grad_checkpoint: r.chance(0.5),
+        lora: (stage == Stage::LoraFinetune)
+            .then(|| LoraConfig { rank: *r.pick(&[2u64, 8, 32]), ..Default::default() }),
+        bucket_elems: *r.pick(&[1_000_000u64, 50_000_000, 500_000_000]),
+        overheads: Default::default(),
+    }
+}
+
+#[test]
+fn prediction_invariants_hold_for_random_configs() {
+    let mut r = Prng::new(0xC0FFEE);
+    for case in 0..150 {
+        let cfg = arb_config(&mut r);
+        let p = predictor::predict(&cfg).unwrap_or_else(|e| panic!("case {case}: {e:#} {cfg:?}"));
+        let check = |v: f32, name: &str| {
+            assert!(v.is_finite() && v >= 0.0, "case {case}: {name}={v} {cfg:?}");
+        };
+        check(p.peak_mib, "peak");
+        check(p.param_mib, "param");
+        check(p.grad_mib, "grad");
+        check(p.opt_mib, "opt");
+        check(p.act_mib, "act");
+        // Eq. 1 structure
+        let sum = p.param_mib + p.grad_mib + p.opt_mib;
+        assert!(
+            (p.persistent_mib - sum).abs() <= sum.max(1.0) * 1e-4,
+            "case {case}: persistent decomposition"
+        );
+        assert!(p.peak_mib >= p.persistent_mib, "case {case}");
+        assert!(p.transient_mib >= p.fwd_peak_mib - 0.01, "case {case}");
+    }
+}
+
+#[test]
+fn predictor_vs_simulator_bounded_everywhere() {
+    let mut r = Prng::new(42);
+    for case in 0..60 {
+        let cfg = arb_config(&mut r);
+        let p = predictor::predict(&cfg).unwrap().peak_mib as f64;
+        let m = simulator::simulate(&cfg).unwrap().peak_mib;
+        let ape = (p - m).abs() / m;
+        assert!(
+            ape < 0.5,
+            "case {case}: APE {ape:.3} (pred {p:.0} vs meas {m:.0}) for {cfg:?}"
+        );
+    }
+}
+
+#[test]
+fn peak_monotone_in_mbs() {
+    let mut r = Prng::new(7);
+    for case in 0..40 {
+        let mut cfg = arb_config(&mut r);
+        cfg.mbs = r.range(1, 8) as u64;
+        let p1 = predictor::predict(&cfg).unwrap().peak_mib;
+        let mut cfg2 = cfg.clone();
+        cfg2.mbs = cfg.mbs * 2;
+        let p2 = predictor::predict(&cfg2).unwrap().peak_mib;
+        assert!(p2 >= p1 - 0.5, "case {case}: mbs x2 shrank peak: {p1} -> {p2} {cfg:?}");
+    }
+}
+
+#[test]
+fn sharded_factors_never_grow_with_dp() {
+    let mut r = Prng::new(99);
+    for case in 0..40 {
+        let mut cfg = arb_config(&mut r);
+        cfg.dp = 2;
+        let lo = predictor::predict(&cfg).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.dp = 8;
+        let hi = predictor::predict(&cfg2).unwrap();
+        assert!(hi.grad_mib <= lo.grad_mib + 0.01, "case {case}");
+        assert!(hi.opt_mib <= lo.opt_mib + 0.01, "case {case}");
+        assert!(hi.param_mib <= lo.param_mib + 0.01, "case {case}");
+    }
+}
+
+#[test]
+fn trace_is_balanced_for_random_configs() {
+    let mut r = Prng::new(1234);
+    for case in 0..60 {
+        let cfg = arb_config(&mut r);
+        let pm = parser::parse(&cfg).unwrap();
+        let events = simulator::trace::generate(&pm, &cfg);
+        let mut live = std::collections::HashSet::new();
+        for e in &events {
+            match e {
+                simulator::Event::Alloc { id, .. } => assert!(live.insert(*id), "case {case}: id reuse"),
+                simulator::Event::Free { id } => assert!(live.remove(id), "case {case}: bad free"),
+                simulator::Event::Phase { .. } => {}
+            }
+        }
+        // replay must succeed and end with allocated == persistent only
+        let replay = simulator::engine::replay(&events).unwrap();
+        assert!(replay.stats.peak_allocated >= replay.stats.allocated);
+    }
+}
+
+#[test]
+fn allocator_fuzz_invariants() {
+    let mut r = Prng::new(0xA110C);
+    for _case in 0..30 {
+        let mut a = CachingAllocator::new();
+        let mut live = Vec::new();
+        for _ in 0..400 {
+            if live.is_empty() || r.chance(0.6) {
+                let size = match r.range(0, 2) {
+                    0 => r.range(1, 4096) as u64,               // small
+                    1 => r.range(4096, 1 << 20) as u64,         // medium
+                    _ => r.range(1 << 20, 64 << 20) as u64,     // large
+                };
+                live.push(a.alloc(size));
+            } else {
+                let idx = r.range(0, live.len() - 1);
+                let h = live.swap_remove(idx);
+                a.free(h);
+            }
+        }
+        a.check_invariants();
+        for h in live {
+            a.free(h);
+        }
+        a.check_invariants();
+        assert_eq!(a.stats().allocated, 0);
+        assert!(a.stats().peak_reserved >= a.stats().peak_allocated);
+    }
+}
+
+#[test]
+fn feature_rows_finite_for_random_configs() {
+    let mut r = Prng::new(31337);
+    for _ in 0..60 {
+        let cfg = arb_config(&mut r);
+        let pm = parser::parse(&cfg).unwrap();
+        let enc = parser::features::encode(&pm, &cfg);
+        assert!(enc.features.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // padded request stays finite and inert
+        let padded = enc.padded(1024).unwrap();
+        assert_eq!(padded.len(), 1024 * parser::features::NUM_FEATURES);
+    }
+}
+
+#[test]
+fn toml_roundtrip_fuzz() {
+    let mut r = Prng::new(555);
+    for _ in 0..60 {
+        let mbs = r.range(1, 64);
+        let seq = r.range(16, 4096);
+        let dp = r.range(1, 16);
+        let text = format!(
+            "model = \"llava-tiny\"\nmbs = {mbs}\nseq_len = {seq}\ndp = {dp}\nzero = {}\n",
+            r.range(0, 3)
+        );
+        let cfg = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg.mbs, mbs as u64);
+        assert_eq!(cfg.seq_len, seq as u64);
+        assert_eq!(cfg.dp, dp as u64);
+    }
+}

@@ -1,0 +1,151 @@
+//! AOT round-trip: the HLO-text artifacts produced by `make artifacts`
+//! load, compile and execute via PJRT, and agree with the pure-Rust
+//! analytical mirror to float tolerance. Skips (with a loud message) if
+//! artifacts have not been built.
+
+use mmpredict::config::{Stage, TrainConfig};
+use mmpredict::parser::{self, features};
+use mmpredict::predictor::{analytical, tensorized::TensorizedPredictor};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = mmpredict::runtime::default_artifacts_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}/ — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn tensorized_matches_analytical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tp = TensorizedPredictor::load(&dir).unwrap();
+    let cfgs = [
+        TrainConfig::fig2a(1),
+        TrainConfig::fig2a(8),
+        TrainConfig::fig2b(4),
+        TrainConfig {
+            stage: Stage::Pretrain,
+            ..TrainConfig::fig2a(2)
+        },
+        TrainConfig {
+            model: "llava-1.5-13b".into(),
+            ..TrainConfig::fig2b(8)
+        },
+        TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 2,
+            seq_len: 64,
+            ..TrainConfig::llava_finetune_default()
+        },
+    ];
+    for cfg in &cfgs {
+        let t = tp.predict(cfg).unwrap();
+        let pm = parser::parse(cfg).unwrap();
+        let a = analytical::predict_encoded(&features::encode(&pm, cfg));
+        let rel = |x: f32, y: f32| (x - y).abs() / y.abs().max(1.0);
+        assert!(rel(t.peak_mib, a.peak_mib) < 1e-4, "peak {} vs {}", t.peak_mib, a.peak_mib);
+        assert!(rel(t.param_mib, a.param_mib) < 1e-4);
+        assert!(rel(t.grad_mib, a.grad_mib) < 1e-4);
+        assert!(rel(t.opt_mib, a.opt_mib) < 1e-4);
+        assert!(rel(t.act_mib, a.act_mib) < 1e-4);
+        assert!(rel(t.transient_mib, a.transient_mib) < 1e-4);
+    }
+}
+
+#[test]
+fn batched_execution_matches_single() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tp = TensorizedPredictor::load(&dir).unwrap();
+    let cfgs: Vec<TrainConfig> = (1..=8).map(TrainConfig::fig2b).collect();
+    let batched = tp.predict_many(&cfgs).unwrap();
+    assert_eq!(batched.len(), 8);
+    for (cfg, b) in cfgs.iter().zip(&batched) {
+        let single = tp.predict(cfg).unwrap();
+        assert!((single.peak_mib - b.peak_mib).abs() < 0.5);
+    }
+    // peaks strictly decreasing across DP under ZeRO-2
+    for w in batched.windows(2) {
+        assert!(w[1].peak_mib < w[0].peak_mib);
+    }
+}
+
+#[test]
+fn oversized_batches_are_chunked() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tp = TensorizedPredictor::load(&dir).unwrap();
+    // 13 requests > largest batch capacity (8): must chunk transparently.
+    let cfgs: Vec<TrainConfig> = (0..13)
+        .map(|i| TrainConfig::fig2a((i % 8) + 1))
+        .collect();
+    let out = tp.predict_many(&cfgs).unwrap();
+    assert_eq!(out.len(), 13);
+    // order preserved: same dp -> same prediction
+    assert!((out[0].peak_mib - out[8].peak_mib).abs() < 0.5);
+}
+
+#[test]
+fn manifest_schema_guard() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = mmpredict::runtime::Manifest::load(&dir).unwrap();
+    assert_eq!(manifest.num_features, features::NUM_FEATURES);
+    assert_eq!(manifest.num_overheads, features::NUM_OVERHEADS);
+    assert_eq!(manifest.num_outputs, features::NUM_OUTPUTS);
+    assert!(!manifest.variants.is_empty());
+    // every declared artifact file exists
+    for v in &manifest.variants {
+        assert!(
+            std::path::Path::new(&format!("{dir}/{}", v.file)).exists(),
+            "missing {}",
+            v.file
+        );
+    }
+}
+
+#[test]
+fn schema_mismatch_is_rejected_loudly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Doctor a manifest claiming a different feature schema; Runtime must
+    // refuse to load rather than silently mis-marshal.
+    let tmp = std::env::temp_dir().join(format!("mmpredict_schema_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let manifest = std::fs::read_to_string(format!("{dir}/manifest.json")).unwrap();
+    let doctored = manifest.replace("\"num_features\": 20", "\"num_features\": 19");
+    std::fs::write(tmp.join("manifest.json"), doctored).unwrap();
+    let err = mmpredict::runtime::Runtime::load(tmp.to_str().unwrap())
+        .err()
+        .expect("doctored schema must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("schema mismatch"), "got: {msg}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn missing_artifacts_error_mentions_make() {
+    let err = mmpredict::runtime::Runtime::load("/nonexistent/dir")
+        .err()
+        .expect("missing artifacts must be an error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "got: {msg}");
+}
+
+#[test]
+fn corrupt_hlo_file_fails_at_load_not_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join(format!("mmpredict_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(
+        format!("{dir}/manifest.json"),
+        tmp.join("manifest.json"),
+    )
+    .unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "txt").unwrap_or(false) {
+            std::fs::write(tmp.join(p.file_name().unwrap()), "NOT VALID HLO").unwrap();
+        }
+    }
+    assert!(mmpredict::runtime::Runtime::load(tmp.to_str().unwrap()).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}

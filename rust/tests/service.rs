@@ -1,0 +1,101 @@
+//! Prediction-service integration: concurrent clients, batching
+//! behaviour, metrics and error paths. Skips without artifacts.
+
+use std::time::Duration;
+
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::batcher::BatchPolicy;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+
+fn service() -> Option<PredictionService> {
+    let dir = mmpredict::runtime::default_artifacts_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("SKIP: no artifacts at {dir}/ — run `make artifacts`");
+        return None;
+    }
+    Some(
+        PredictionService::start(
+            &dir,
+            ServiceConfig {
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    batch_timeout: Duration::from_millis(3),
+                },
+            },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn concurrent_clients_get_correct_answers() {
+    let Some(svc) = service() else { return };
+    let expected: Vec<f32> = (1..=8)
+        .map(|dp| {
+            mmpredict::predictor::predict(&TrainConfig::fig2b(dp)).unwrap().peak_mib
+        })
+        .collect();
+
+    let mut handles = Vec::new();
+    for round in 0..4 {
+        for dp in 1..=8u64 {
+            let client = svc.client();
+            handles.push(std::thread::spawn(move || {
+                let p = client.predict(TrainConfig::fig2b(dp)).unwrap();
+                (round, dp, p.peak_mib)
+            }));
+        }
+    }
+    for h in handles {
+        let (_, dp, peak) = h.join().unwrap();
+        let want = expected[(dp - 1) as usize];
+        assert!(
+            (peak - want).abs() / want < 1e-4,
+            "dp{dp}: {peak} vs {want}"
+        );
+    }
+    assert_eq!(svc.metrics().responses(), 32);
+    assert_eq!(svc.metrics().errors(), 0);
+    // batching must have happened (fewer batches than requests)
+    assert!(svc.metrics().batches() < 32, "{}", svc.metrics().summary());
+    svc.shutdown();
+}
+
+#[test]
+fn invalid_configs_get_errors_not_hangs() {
+    let Some(svc) = service() else { return };
+    let mut bad = TrainConfig::fig2b(1);
+    bad.model = "not-a-model".into();
+    let err = svc.predict(bad);
+    assert!(err.is_err());
+    assert_eq!(svc.metrics().errors(), 1);
+    // the service still works afterwards
+    let ok = svc.predict(TrainConfig::fig2b(2)).unwrap();
+    assert!(ok.peak_mib > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_model_batches() {
+    let Some(svc) = service() else { return };
+    let mut handles = Vec::new();
+    for model in ["llava-1.5-7b", "llava-1.5-13b", "llava-tiny"] {
+        for dp in [1u64, 8] {
+            let client = svc.client();
+            let cfg = TrainConfig {
+                model: model.to_string(),
+                ..TrainConfig::fig2b(dp)
+            };
+            handles.push(std::thread::spawn(move || (model, dp, client.predict(cfg).unwrap())));
+        }
+    }
+    let mut peaks = std::collections::HashMap::new();
+    for h in handles {
+        let (model, dp, p) = h.join().unwrap();
+        peaks.insert((model, dp), p.peak_mib);
+    }
+    // 13B > 7B > tiny at the same dp
+    assert!(peaks[&("llava-1.5-13b", 1)] > peaks[&("llava-1.5-7b", 1)]);
+    assert!(peaks[&("llava-1.5-7b", 1)] > peaks[&("llava-tiny", 1)]);
+    svc.shutdown();
+}
