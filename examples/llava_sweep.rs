@@ -42,8 +42,13 @@ fn main() -> Result<()> {
         }
     };
 
+    // run_setting parses the 7B model once per setting and fans the
+    // eight simulator points across cores (sweep engine); only the
+    // predictor runs on this thread.
     std::fs::create_dir_all("results").ok();
     let mut mapes = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut points = 0usize;
     if which == "2a" || which == "all" {
         let r = run_setting(
             "fig2a: LLaVA-1.5-7B, SeqLen 1024, MBS 16, ZeRO-2 (paper: ~13% MAPE)",
@@ -52,6 +57,7 @@ fn main() -> Result<()> {
         )?;
         println!("{}", r.render());
         std::fs::write("results/fig2a.csv", r.to_csv())?;
+        points += r.points.len();
         mapes.push(("fig2a", r.mape));
     }
     if which == "2b" || which == "all" {
@@ -62,12 +68,20 @@ fn main() -> Result<()> {
         )?;
         println!("{}", r.render());
         std::fs::write("results/fig2b.csv", r.to_csv())?;
+        points += r.points.len();
         mapes.push(("fig2b", r.mape));
     }
+    let dt = t0.elapsed();
 
     println!("== headline ==");
     for (name, mape) in &mapes {
         println!("{name}: average MAPE {:.1}% (paper band: 8.7%-13%)", mape * 100.0);
     }
+    // each 8-point setting runs on min(cores, 8) workers
+    println!(
+        "{points} sweep points in {dt:.3?} ({:.1} points/s, {} worker threads per setting)",
+        points as f64 / dt.as_secs_f64(),
+        mmpredict::sweep::default_threads().min(8)
+    );
     Ok(())
 }

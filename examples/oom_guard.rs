@@ -2,19 +2,24 @@
 //! front-end that screens a queue of training-job submissions against
 //! GPU capacity *before* any cluster time is spent.
 //!
-//! Spins up the batched prediction service (PJRT-backed), submits a
-//! mixed queue of job configurations from many client threads, and
-//! prints an admit/reject decision per job plus service metrics
-//! (batching efficiency, latency).
+//! With AOT artifacts present (`make artifacts`), spins up the batched
+//! PJRT prediction service and submits the queue from many client
+//! threads. Without them, it screens the same queue through the
+//! parallel sweep engine: the analytical predictor decides admit/reject
+//! and the simulator cross-checks every verdict, fanned across cores
+//! with one reusable `SimContext` per worker.
 //!
 //! Run: `cargo run --release --example oom_guard`
+
+use std::time::Instant;
 
 use anyhow::Result;
 use mmpredict::config::{Stage, TrainConfig};
 use mmpredict::coordinator::{PredictionService, ServiceConfig};
 use mmpredict::util::units::human_mib;
+use mmpredict::{predictor, sweep};
 
-const GPU_CAPACITY_MIB: f32 = 80.0 * 1024.0; // H100 80GB
+const GPU_CAPACITY_MIB: f64 = 80.0 * 1024.0; // H100 80GB
 
 fn job_queue() -> Vec<(String, TrainConfig)> {
     let mut jobs = Vec::new();
@@ -33,13 +38,27 @@ fn job_queue() -> Vec<(String, TrainConfig)> {
     jobs
 }
 
-fn main() -> Result<()> {
-    let service = PredictionService::start("artifacts", ServiceConfig::default())?;
-    println!("prediction service up\n");
+fn print_verdict(name: &str, predicted_mib: f64, admitted: &mut u32, rejected: &mut u32) {
+    let ok = predicted_mib <= GPU_CAPACITY_MIB;
+    if ok {
+        *admitted += 1;
+    } else {
+        *rejected += 1;
+    }
+    println!(
+        "{:<28} {:>14} {:>14} {:>8}",
+        name,
+        human_mib(predicted_mib),
+        human_mib(GPU_CAPACITY_MIB),
+        if ok { "ADMIT" } else { "REJECT" }
+    );
+}
 
-    // Concurrent submissions, as a scheduler would issue them.
+/// Screen through the batched PJRT service (needs artifacts).
+fn run_service(jobs: Vec<(String, TrainConfig)>, service: PredictionService) -> Result<()> {
+    println!("prediction service up\n");
     let mut handles = Vec::new();
-    for (name, cfg) in job_queue() {
+    for (name, cfg) in jobs {
         let client = service.client();
         handles.push(std::thread::spawn(move || {
             let p = client.predict(cfg)?;
@@ -51,29 +70,78 @@ fn main() -> Result<()> {
         "{:<28} {:>14} {:>14} {:>8}",
         "job", "predicted", "capacity", "verdict"
     );
-    let mut admitted = 0;
-    let mut rejected = 0;
+    let (mut admitted, mut rejected) = (0, 0);
     for h in handles {
         let (name, p) = h.join().expect("client thread")?;
-        let ok = p.fits(GPU_CAPACITY_MIB);
-        if ok {
-            admitted += 1;
-        } else {
-            rejected += 1;
-        }
-        println!(
-            "{:<28} {:>14} {:>14} {:>8}",
-            name,
-            human_mib(p.peak_mib as f64),
-            human_mib(GPU_CAPACITY_MIB as f64),
-            if ok { "ADMIT" } else { "REJECT" }
-        );
+        print_verdict(&name, p.peak_mib as f64, &mut admitted, &mut rejected);
     }
-
     println!(
         "\n{admitted} admitted, {rejected} rejected (would have OoM'd and wasted cluster time)"
     );
     println!("service metrics: {}", service.metrics().summary());
     service.shutdown();
     Ok(())
+}
+
+/// Screen through the parallel sweep engine (no artifacts required).
+fn run_sweep(jobs: Vec<(String, TrainConfig)>) -> Result<()> {
+    let cfgs: Vec<TrainConfig> = jobs.iter().map(|(_, c)| c.clone()).collect();
+    let engine = sweep::Sweep::default();
+    let t0 = Instant::now();
+    let rows = engine.run(&cfgs, |ctx, pm, cfg| {
+        let predicted = predictor::predict(cfg)?.peak_mib as f64;
+        let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
+        Ok((predicted, measured))
+    })?;
+    let dt = t0.elapsed();
+
+    println!(
+        "{:<28} {:>14} {:>14} {:>14} {:>8}",
+        "job", "predicted", "simulated", "capacity", "verdict"
+    );
+    let (mut admitted, mut rejected) = (0, 0);
+    let mut disagreements = 0;
+    for ((name, _), (predicted, measured)) in jobs.iter().zip(&rows) {
+        let ok = *predicted <= GPU_CAPACITY_MIB;
+        if ok {
+            admitted += 1;
+        } else {
+            rejected += 1;
+        }
+        // cross-check the verdict against the simulator ground truth
+        if ok != (*measured <= GPU_CAPACITY_MIB) {
+            disagreements += 1;
+        }
+        println!(
+            "{:<28} {:>14} {:>14} {:>14} {:>8}",
+            name,
+            human_mib(*predicted),
+            human_mib(*measured),
+            human_mib(GPU_CAPACITY_MIB),
+            if ok { "ADMIT" } else { "REJECT" }
+        );
+    }
+    println!(
+        "\n{admitted} admitted, {rejected} rejected (would have OoM'd and wasted cluster time)"
+    );
+    println!(
+        "{} jobs screened in {:.3?} on {} worker threads ({:.0} jobs/s), {} predictor/simulator verdict disagreements",
+        jobs.len(),
+        dt,
+        engine.threads().min(jobs.len()),
+        jobs.len() as f64 / dt.as_secs_f64(),
+        disagreements
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let jobs = job_queue();
+    match PredictionService::start("artifacts", ServiceConfig::default()) {
+        Ok(service) => run_service(jobs, service),
+        Err(e) => {
+            eprintln!("PJRT service unavailable ({e:#}); screening via the parallel sweep engine\n");
+            run_sweep(jobs)
+        }
+    }
 }

@@ -1,0 +1,128 @@
+//! Smoke bench for the simulator hot path: the retained naive reference
+//! (parse + trace + HashMap replay per point — the seed's `simulate`)
+//! against the zero-allocation dense replay core behind `SimContext`,
+//! plus single- vs multi-thread scaling of the parallel sweep engine.
+//!
+//! Emits machine-readable `BENCH_replay.json` (points/sec and speedups)
+//! so CI can track the perf trajectory (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench replay`
+
+use std::collections::BTreeMap;
+
+use mmpredict::config::TrainConfig;
+use mmpredict::simulator::{engine, trace, SimContext};
+use mmpredict::sweep::Sweep;
+use mmpredict::util::bench::{bench, report, BenchResult};
+use mmpredict::util::json_mini::Json;
+use mmpredict::{parser, sweep};
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+fn main() {
+    let cfg = TrainConfig::fig2b(8);
+    let pm = parser::parse(&cfg).expect("parse fig2b");
+    let events = trace::generate(&pm, &cfg);
+    println!(
+        "workload: fig2b dp8 (LLaVA-1.5-7B), {} trace events\n",
+        events.len()
+    );
+
+    // -- single sweep point, end to end ---------------------------------
+    // naive = what the seed did for every point: re-parse, regenerate
+    // the trace, replay through HashMap bookkeeping
+    let naive_point = bench("naive point (parse + trace + hashmap replay)", 2, 12, || {
+        let pm = parser::parse(&cfg).unwrap();
+        let ev = trace::generate(&pm, &cfg);
+        let _ = engine::reference::replay(&ev).unwrap();
+    });
+    report(&naive_point);
+
+    // optimized = the sweep hot path: parse once, reuse one SimContext
+    let mut ctx = SimContext::new();
+    let fast_point = bench("optimized point (SimContext, parse-once)", 2, 40, || {
+        let _ = ctx.simulate_parsed(&pm, &cfg).unwrap();
+    });
+    report(&fast_point);
+    let point_speedup = speedup(&naive_point, &fast_point);
+    println!("  -> point speedup: {point_speedup:.2}x\n");
+
+    // -- replay core only ------------------------------------------------
+    let naive_replay = bench("replay only: hashmap reference", 2, 20, || {
+        let _ = engine::reference::replay(&events).unwrap();
+    });
+    report(&naive_replay);
+    let mut scratch = engine::ReplayScratch::new();
+    let dense_replay = bench("replay only: dense core (reused scratch)", 2, 60, || {
+        let _ = engine::replay_in(&events, &mut scratch).unwrap();
+    });
+    report(&dense_replay);
+    let replay_speedup = speedup(&naive_replay, &dense_replay);
+    println!("  -> replay-core speedup: {replay_speedup:.2}x\n");
+
+    // -- sweep scaling ----------------------------------------------------
+    let grid: Vec<TrainConfig> = (1..=8)
+        .map(TrainConfig::fig2a)
+        .chain((1..=8).map(TrainConfig::fig2b))
+        .collect();
+    let threads = sweep::default_threads();
+    let sweep_1t = bench("sweep 16 points, 1 thread", 1, 3, || {
+        let _ = Sweep::new(1).simulate_grid(&grid).unwrap();
+    });
+    report(&sweep_1t);
+    let sweep_nt = bench("sweep 16 points, all cores", 1, 3, || {
+        let _ = Sweep::new(threads).simulate_grid(&grid).unwrap();
+    });
+    report(&sweep_nt);
+    let scaling = speedup(&sweep_1t, &sweep_nt);
+    println!("  -> sweep scaling on {threads} threads: {scaling:.2}x\n");
+
+    let grid_points = grid.len() as f64;
+    let json = obj(vec![
+        ("workload", Json::Str("fig2b dp8 (LLaVA-1.5-7B)".to_string())),
+        ("trace_events", Json::Num(events.len() as f64)),
+        (
+            "single_thread",
+            obj(vec![
+                ("naive_point_per_sec", Json::Num(naive_point.throughput_per_sec())),
+                ("optimized_point_per_sec", Json::Num(fast_point.throughput_per_sec())),
+                ("point_speedup", Json::Num(point_speedup)),
+                ("naive_replay_per_sec", Json::Num(naive_replay.throughput_per_sec())),
+                ("dense_replay_per_sec", Json::Num(dense_replay.throughput_per_sec())),
+                ("replay_speedup", Json::Num(replay_speedup)),
+            ]),
+        ),
+        (
+            "sweep",
+            obj(vec![
+                ("points", Json::Num(grid_points)),
+                ("threads", Json::Num(threads as f64)),
+                (
+                    "one_thread_points_per_sec",
+                    Json::Num(grid_points * sweep_1t.throughput_per_sec()),
+                ),
+                (
+                    "multi_thread_points_per_sec",
+                    Json::Num(grid_points * sweep_nt.throughput_per_sec()),
+                ),
+                ("scaling", Json::Num(scaling)),
+            ]),
+        ),
+    ]);
+    // cargo bench runs with cwd = package root (rust/); anchor the
+    // output to the workspace root regardless of invocation cwd
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_replay.json");
+    println!("wrote {out}");
+}
+
+fn speedup(before: &BenchResult, after: &BenchResult) -> f64 {
+    before.mean.as_secs_f64() / after.mean.as_secs_f64().max(1e-12)
+}

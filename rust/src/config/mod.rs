@@ -324,9 +324,12 @@ impl TrainConfig {
         self.mbs * self.dp
     }
 
-    /// Stable fingerprint of every field that affects the encoded
-    /// feature matrix — the key for the service's encode cache.
-    pub fn cache_key(&self) -> String {
+    /// Stable fingerprint of every field that changes the *parsed*
+    /// model's geometry. `dp`, `zero`, `bucket_elems` and overheads are
+    /// deliberately excluded: they only rescale shards/buffers, which
+    /// the simulator recomputes per config — so the sweep engine shares
+    /// one parse per distinct geometry key.
+    pub fn geometry_key(&self) -> String {
         let lora = match &self.lora {
             Some(l) => format!(
                 "r{}:{}:{}",
@@ -337,19 +340,28 @@ impl TrainConfig {
             None => "none".to_string(),
         };
         format!(
-            "{}|{:?}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}",
+            "{}|{:?}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}",
             self.model,
             self.stage,
             self.mbs,
             self.seq_len,
             self.images_per_sample,
-            self.dp,
-            self.zero,
             self.optimizer,
             self.precision,
             self.attn,
             self.grad_checkpoint,
             lora,
+        )
+    }
+
+    /// Stable fingerprint of every field that affects the encoded
+    /// feature matrix — the key for the service's encode cache.
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}|{}|{:?}|{}|{}|{}|{}",
+            self.geometry_key(),
+            self.dp,
+            self.zero,
             self.bucket_elems,
             self.overheads.cuda_ctx_mib,
             self.overheads.alloc_frac,

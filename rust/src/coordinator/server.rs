@@ -31,7 +31,10 @@ struct Job {
 /// Handle to a running prediction service. Cloneable clients submit
 /// blocking predictions; dropping the last handle shuts the worker down.
 pub struct PredictionService {
-    tx: SyncSender<Job>,
+    /// `None` once shutdown has begun — the sender must actually be
+    /// dropped to close the queue (not swapped for a dummy channel,
+    /// which would strand any job a racing client had already queued).
+    tx: Option<SyncSender<Job>>,
     metrics: Arc<Metrics>,
     worker: Option<JoinHandle<()>>,
 }
@@ -64,7 +67,7 @@ impl PredictionService {
             .expect("spawning service worker");
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Self {
-                tx,
+                tx: Some(tx),
                 metrics,
                 worker: Some(worker),
             }),
@@ -82,10 +85,12 @@ impl PredictionService {
 
     /// Blocking prediction of one configuration.
     pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(anyhow!("prediction service is shut down"));
+        };
         self.metrics.on_request();
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .send(Job { cfg, reply: reply_tx })
+        tx.send(Job { cfg, reply: reply_tx })
             .map_err(|_| anyhow!("prediction service is shut down"))?;
         reply_rx
             .recv()
@@ -95,20 +100,29 @@ impl PredictionService {
     /// A cheap cloneable submitter usable from many threads.
     pub fn client(&self) -> Client {
         Client {
-            tx: self.tx.clone(),
+            tx: self
+                .tx
+                .clone()
+                .expect("client() called on a shut-down service"),
             metrics: self.metrics.clone(),
         }
     }
 
-    /// Graceful shutdown (also triggered by drop).
+    /// Graceful shutdown (also triggered by drop). Drains: every job
+    /// already queued — by this handle or by outstanding clients —
+    /// still receives its reply before the worker exits.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        // Closing the queue ends the worker loop.
-        let (dead_tx, _) = sync_channel(1);
-        self.tx = dead_tx;
+        // Drop the *real* sender. The worker's queue disconnects only
+        // once every Client clone is gone too, and `recv` keeps
+        // returning buffered jobs after disconnect, so nothing queued is
+        // lost. (The previous implementation swapped in a fresh dummy
+        // channel; any job a racing client had just queued on it could
+        // then be dropped without a reply.)
+        drop(self.tx.take());
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }

@@ -1,6 +1,8 @@
 //! Ablations beyond Fig. 2 (DESIGN.md experiment index: abl-stage,
 //! abl-factor, abl-zero, abl-lora): the design-choice studies the
-//! framework enables.
+//! framework enables. Every simulator-side grid goes through the
+//! parallel sweep engine ([`crate::sweep`]); predictor calls stay on
+//! the caller's thread.
 
 use anyhow::Result;
 
@@ -8,7 +10,7 @@ use crate::config::{Stage, TrainConfig, ZeroStage};
 use crate::model::lora::LoraConfig;
 use crate::predictor;
 use crate::report::Table;
-use crate::simulator;
+use crate::sweep;
 
 /// abl-factor: per-factor breakdown (param/grad/opt/act) across DP — the
 /// paper's factorization made visible.
@@ -36,14 +38,20 @@ pub fn factor_breakdown(model: &str, dps: &[u64]) -> Result<Table> {
 /// motivation: training behaviour changes the factor set per layer).
 pub fn stage_comparison(model: &str, dps: &[u64]) -> Result<Table> {
     let mut t = Table::new(vec!["dp", "pretrain peak GiB", "finetune peak GiB", "ratio"]);
-    for &dp in dps {
-        let mk = |stage: Stage| TrainConfig {
-            model: model.into(),
-            stage,
-            ..TrainConfig::fig2a(dp)
-        };
-        let pt = simulator::simulate(&mk(Stage::Pretrain))?.peak_mib / 1024.0;
-        let ft = simulator::simulate(&mk(Stage::Finetune))?.peak_mib / 1024.0;
+    let mk = |stage: Stage, dp: u64| TrainConfig {
+        model: model.into(),
+        stage,
+        ..TrainConfig::fig2a(dp)
+    };
+    // one grid: [pt(dp0), ft(dp0), pt(dp1), ...] — two parses total
+    let cfgs: Vec<TrainConfig> = dps
+        .iter()
+        .flat_map(|&dp| [mk(Stage::Pretrain, dp), mk(Stage::Finetune, dp)])
+        .collect();
+    let measured = sweep::simulate_grid(&cfgs)?;
+    for (i, &dp) in dps.iter().enumerate() {
+        let pt = measured[2 * i].peak_mib / 1024.0;
+        let ft = measured[2 * i + 1].peak_mib / 1024.0;
         t.row(vec![
             dp.to_string(),
             format!("{pt:.2}"),
@@ -55,17 +63,23 @@ pub fn stage_comparison(model: &str, dps: &[u64]) -> Result<Table> {
 }
 
 /// abl-zero: predicted vs measured across ZeRO stages at fixed DP.
+/// The four stages share one parsed model inside the sweep engine.
 pub fn zero_sweep(model: &str, dp: u64) -> Result<Table> {
     let mut t = Table::new(vec!["zero", "predicted GiB", "measured GiB", "APE %"]);
-    for (name, z) in [
+    let stages = [
         ("0", ZeroStage::Zero0),
         ("1", ZeroStage::Zero1),
         ("2", ZeroStage::Zero2),
         ("3", ZeroStage::Zero3),
-    ] {
-        let cfg = TrainConfig { model: model.into(), zero: z, ..TrainConfig::fig2b(dp) };
-        let p = predictor::predict(&cfg)?.peak_mib as f64;
-        let m = simulator::simulate(&cfg)?.peak_mib;
+    ];
+    let cfgs: Vec<TrainConfig> = stages
+        .iter()
+        .map(|&(_, z)| TrainConfig { model: model.into(), zero: z, ..TrainConfig::fig2b(dp) })
+        .collect();
+    let measured = sweep::simulate_grid(&cfgs)?;
+    for ((name, _), (cfg, meas)) in stages.iter().zip(cfgs.iter().zip(&measured)) {
+        let p = predictor::predict(cfg)?.peak_mib as f64;
+        let m = meas.peak_mib;
         t.row(vec![
             name.to_string(),
             format!("{:.2}", p / 1024.0),
@@ -81,22 +95,29 @@ pub fn lora_sweep(model: &str, dp: u64, ranks: &[u64]) -> Result<Table> {
     let mut t = Table::new(vec![
         "rank", "trainable M", "predicted GiB", "measured GiB", "APE %",
     ]);
-    for &rank in ranks {
-        let cfg = TrainConfig {
+    let cfgs: Vec<TrainConfig> = ranks
+        .iter()
+        .map(|&rank| TrainConfig {
             model: model.into(),
             stage: Stage::LoraFinetune,
             lora: Some(LoraConfig { rank, ..Default::default() }),
             ..TrainConfig::fig2b(dp)
-        };
-        let pm = crate::parser::parse(&cfg)?;
-        let p = predictor::predict(&cfg)?.peak_mib as f64;
-        let m = simulator::simulate(&cfg)?.peak_mib;
+        })
+        .collect();
+    // each rank is its own geometry; the sweep parses each once and the
+    // closure reads the trainable count off the shared parse
+    let rows = sweep::Sweep::default().run(&cfgs, |ctx, pm, cfg| {
+        let m = ctx.simulate_parsed(pm, cfg)?;
+        Ok((pm.trainable_param_elems, m.peak_mib))
+    })?;
+    for ((&rank, cfg), (trainable, m)) in ranks.iter().zip(&cfgs).zip(&rows) {
+        let p = predictor::predict(cfg)?.peak_mib as f64;
         t.row(vec![
             rank.to_string(),
-            format!("{:.4}", pm.trainable_param_elems as f64 / 1e6),
+            format!("{:.4}", *trainable as f64 / 1e6),
             format!("{:.2}", p / 1024.0),
             format!("{:.2}", m / 1024.0),
-            format!("{:.1}", crate::report::ape(p, m) * 100.0),
+            format!("{:.1}", crate::report::ape(p, *m) * 100.0),
         ]);
     }
     Ok(t)
@@ -107,17 +128,28 @@ pub fn lora_sweep(model: &str, dp: u64, ranks: &[u64]) -> Result<Table> {
 pub fn attention_ablation(model: &str) -> Result<Table> {
     use crate::model::layer::AttnImpl;
     let mut t = Table::new(vec!["attention", "ckpt", "measured GiB"]);
-    for (name, attn) in [("eager", AttnImpl::Eager), ("flash", AttnImpl::Flash)] {
-        for ckpt in [false, true] {
-            let cfg = TrainConfig {
-                model: model.into(),
-                attn,
-                grad_checkpoint: ckpt,
-                ..TrainConfig::fig2b(8)
-            };
-            let m = simulator::simulate(&cfg)?.peak_mib;
-            t.row(vec![name.to_string(), ckpt.to_string(), format!("{:.2}", m / 1024.0)]);
-        }
+    let variants = [
+        ("eager", AttnImpl::Eager, false),
+        ("eager", AttnImpl::Eager, true),
+        ("flash", AttnImpl::Flash, false),
+        ("flash", AttnImpl::Flash, true),
+    ];
+    let cfgs: Vec<TrainConfig> = variants
+        .iter()
+        .map(|&(_, attn, ckpt)| TrainConfig {
+            model: model.into(),
+            attn,
+            grad_checkpoint: ckpt,
+            ..TrainConfig::fig2b(8)
+        })
+        .collect();
+    let measured = sweep::simulate_grid(&cfgs)?;
+    for ((name, _, ckpt), meas) in variants.iter().zip(&measured) {
+        t.row(vec![
+            name.to_string(),
+            ckpt.to_string(),
+            format!("{:.2}", meas.peak_mib / 1024.0),
+        ]);
     }
     Ok(t)
 }

@@ -8,7 +8,6 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::report::{ascii_bars, mape, Table};
-use crate::simulator;
 
 /// One sweep point.
 #[derive(Clone, Copy, Debug)]
@@ -74,16 +73,24 @@ impl SettingResult {
 
 /// Sweep DP 1..=8 of a setting, comparing `predict` against the
 /// simulator ground truth.
+///
+/// The model geometry is identical across DP, so the sweep engine
+/// parses it once and fans the eight simulations across cores; only the
+/// `predict` closure runs on the caller's thread (the PJRT-backed
+/// predictor is not `Sync`).
 pub fn run_setting<F>(name: &str, make_cfg: impl Fn(u64) -> TrainConfig, predict: F) -> Result<SettingResult>
 where
     F: Fn(&TrainConfig) -> Result<f64>,
 {
-    let mut points = Vec::new();
-    for dp in 1..=8 {
-        let cfg = make_cfg(dp);
-        let predicted_mib = predict(&cfg)?;
-        let measured_mib = simulator::simulate(&cfg)?.peak_mib;
-        points.push(Point { dp, predicted_mib, measured_mib });
+    let cfgs: Vec<TrainConfig> = (1..=8).map(make_cfg).collect();
+    let measured = crate::sweep::simulate_grid(&cfgs)?;
+    let mut points = Vec::with_capacity(cfgs.len());
+    for (cfg, m) in cfgs.iter().zip(&measured) {
+        points.push(Point {
+            dp: cfg.dp,
+            predicted_mib: predict(cfg)?,
+            measured_mib: m.peak_mib,
+        });
     }
     let pairs: Vec<(f64, f64)> = points.iter().map(|p| (p.predicted_mib, p.measured_mib)).collect();
     Ok(SettingResult {

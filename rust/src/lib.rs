@@ -11,8 +11,9 @@
 //!   predictor* ([`predictor`]), a discrete-event GPU-memory training
 //!   simulator that serves as measured ground truth ([`simulator`]),
 //!   prior-work baselines ([`baselines`]), a batched prediction service
-//!   ([`coordinator`]), and the evaluation harness regenerating every
-//!   figure of the paper ([`eval`], [`report`]).
+//!   ([`coordinator`]), a parallel config-grid sweep engine ([`sweep`]),
+//!   and the evaluation harness regenerating every figure of the paper
+//!   ([`eval`], [`report`]).
 //! * **L2/L1 (python/, build-time only)** — the batched factorization +
 //!   liveness-scan compute graph, with the per-layer factor math and the
 //!   timeline scan written as Pallas kernels, AOT-lowered to HLO text in
@@ -39,6 +40,7 @@ pub mod predictor;
 pub mod report;
 pub mod runtime;
 pub mod simulator;
+pub mod sweep;
 pub mod util;
 
 pub use config::TrainConfig;

@@ -8,6 +8,9 @@
 //! * `simulate`  — run the ground-truth simulator and print the
 //!   measurement with its factor attribution.
 //! * `eval`      — regenerate the paper's Fig. 2a/2b sweeps (+ CSV).
+//! * `sweep`     — fan a config grid (DP × MBS × SeqLen × ZeRO) across
+//!   cores through the parallel sweep engine; predicted vs measured per
+//!   point plus capacity verdicts.
 //! * `ablations` — the DESIGN.md ablation tables.
 //! * `baselines` — compare against Fujii/LLMem/profiling baselines.
 //! * `zoo`       — list available model presets.
@@ -18,7 +21,7 @@ use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage}
 use mmpredict::model::layer::AttnImpl;
 use mmpredict::util::cli::Args;
 use mmpredict::util::units::human_mib;
-use mmpredict::{baselines, eval, parser, predictor, report, simulator, zoo};
+use mmpredict::{baselines, eval, parser, predictor, report, simulator, sweep, zoo};
 
 fn main() {
     let args = Args::from_env();
@@ -33,6 +36,7 @@ fn run(args: &Args) -> Result<()> {
         Some("predict") => cmd_predict(args),
         Some("simulate") => cmd_simulate(args),
         Some("eval") => cmd_eval(args),
+        Some("sweep") => cmd_sweep(args),
         Some("ablations") => cmd_ablations(args),
         Some("baselines") => cmd_baselines(args),
         Some("infer") => cmd_infer(args),
@@ -48,7 +52,7 @@ fn run(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "repro — GPU memory prediction for multimodal model training\n\n\
-         usage: repro <predict|simulate|eval|ablations|baselines|infer|zoo> [options]\n\n\
+         usage: repro <predict|simulate|eval|sweep|ablations|baselines|infer|zoo> [options]\n\n\
          common options:\n\
          \x20 --config <file.toml>      load a training config file\n\
          \x20 --model <name>            zoo model (default llava-1.5-7b)\n\
@@ -62,8 +66,109 @@ fn print_help() {
          \x20 --capacity-gib <G>        also report whether the run fits\n\
          eval options:\n\
          \x20 --figure <2a|2b|all>      which sweep (default all)\n\
-         \x20 --out <dir>               write CSVs (default results/)"
+         \x20 --out <dir>               write CSVs (default results/)\n\
+         sweep options:\n\
+         \x20 --dp-list 1,2,4,8         DP grid axis (default 1..8)\n\
+         \x20 --mbs-list 8,16           MBS grid axis (default: --mbs)\n\
+         \x20 --seq-list 1024,2048      SeqLen grid axis (default: --seq-len)\n\
+         \x20 --zero-list 0,2,3         ZeRO grid axis (default: --zero)\n\
+         \x20 --threads N               worker threads (default: cores)\n\
+         \x20 --capacity-gib <G>        add a fits/OoM verdict per point\n\
+         \x20 --csv <file>              write the grid as CSV"
     );
+}
+
+/// Parse a comma-separated `--<name>-list`, falling back to `default`.
+fn u64_list(args: &Args, name: &str, default: Vec<u64>) -> Result<Vec<u64>> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(s) => {
+            let vals: Vec<u64> = s
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("invalid value {t:?} in --{name}"))
+                })
+                .collect::<Result<_>>()?;
+            if vals.is_empty() {
+                bail!("--{name} must list at least one value");
+            }
+            Ok(vals)
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = config_from_args(args)?;
+    let dps = u64_list(args, "dp-list", (1..=8).collect())?;
+    let mbss = u64_list(args, "mbs-list", vec![base.mbs])?;
+    let seqs = u64_list(args, "seq-list", vec![base.seq_len])?;
+    let zeros: Vec<ZeroStage> = u64_list(args, "zero-list", vec![])?
+        .into_iter()
+        .map(ZeroStage::parse)
+        .collect::<Result<Vec<_>>>()
+        .map(|v| if v.is_empty() { vec![base.zero] } else { v })?;
+    let capacity_mib = args.get_parse::<f64>("capacity-gib")?.map(|g| g * 1024.0);
+
+    let mut cfgs = Vec::new();
+    for &seq_len in &seqs {
+        for &mbs in &mbss {
+            for &zero in &zeros {
+                for &dp in &dps {
+                    cfgs.push(TrainConfig { seq_len, mbs, zero, dp, ..base.clone() });
+                }
+            }
+        }
+    }
+
+    let threads = args
+        .get_parse::<usize>("threads")?
+        .unwrap_or_else(sweep::default_threads);
+    let engine = sweep::Sweep::new(threads);
+    let t0 = std::time::Instant::now();
+    let rows = engine.run(&cfgs, |ctx, pm, cfg| {
+        let predicted = predictor::predict(cfg)?.peak_mib as f64;
+        let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
+        Ok((predicted, measured))
+    })?;
+    let dt = t0.elapsed();
+
+    let mut headers = vec!["seq", "mbs", "zero", "dp", "predicted GiB", "measured GiB", "APE %"];
+    if capacity_mib.is_some() {
+        headers.push("verdict");
+    }
+    let mut t = report::Table::new(headers);
+    for (cfg, (p, m)) in cfgs.iter().zip(&rows) {
+        let mut row = vec![
+            cfg.seq_len.to_string(),
+            cfg.mbs.to_string(),
+            format!("{:?}", cfg.zero).trim_start_matches("Zero").to_string(),
+            cfg.dp.to_string(),
+            format!("{:.2}", p / 1024.0),
+            format!("{:.2}", m / 1024.0),
+            format!("{:.1}", report::ape(*p, *m) * 100.0),
+        ];
+        if let Some(cap) = capacity_mib {
+            row.push(if *p <= cap { "ADMIT" } else { "REJECT" }.to_string());
+        }
+        t.row(row);
+    }
+    println!("== sweep: {} ({} points) ==", base.model, cfgs.len());
+    println!("{}", t.render());
+    println!(
+        "{} points in {:.3?} on {} worker threads ({:.0} points/s)",
+        cfgs.len(),
+        dt,
+        engine.threads().min(cfgs.len()),
+        cfgs.len() as f64 / dt.as_secs_f64()
+    );
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, t.to_csv()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 /// Build a TrainConfig from `--config` and/or flag overrides.

@@ -46,7 +46,7 @@ struct Segment {
 }
 
 /// Allocator statistics snapshot.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     pub allocated: u64,
     pub reserved: u64,
@@ -80,6 +80,10 @@ pub struct CachingAllocator {
     /// (size, segment, offset) of free blocks, large pool.
     free_large: std::collections::BTreeSet<(u64, u32, u64)>,
     stats: Stats,
+    /// Emptied per-segment block vectors kept for reuse across `reset`
+    /// cycles, so steady-state replays stop allocating (EXPERIMENTS.md
+    /// §Perf, replay core).
+    recycled_blocks: Vec<Vec<Block>>,
 }
 
 impl CachingAllocator {
@@ -89,6 +93,25 @@ impl CachingAllocator {
 
     pub fn stats(&self) -> Stats {
         self.stats
+    }
+
+    /// Return to the pristine state while keeping every buffer this
+    /// allocator ever grew: the segment vector's capacity and each
+    /// segment's block vector (stashed in `recycled_blocks` and handed
+    /// back out as new segments are reserved). A reset allocator is
+    /// observationally identical to a fresh one.
+    pub fn reset(&mut self) {
+        let mut segments = std::mem::take(&mut self.segments);
+        for seg in &mut segments {
+            let mut blocks = std::mem::take(&mut seg.blocks);
+            blocks.clear();
+            self.recycled_blocks.push(blocks);
+        }
+        segments.clear();
+        self.segments = segments;
+        self.free_small.clear();
+        self.free_large.clear();
+        self.stats = Stats::default();
     }
 
     fn free_index(&mut self, small: bool) -> &mut std::collections::BTreeSet<(u64, u32, u64)> {
@@ -122,17 +145,16 @@ impl CachingAllocator {
                 (si, bi)
             }
             None => {
-                // Reserve a new segment.
+                // Reserve a new segment (reusing a recycled block vector
+                // when one is available).
                 let seg_size = if small {
                     SMALL_SEGMENT
                 } else {
                     size.div_ceil(LARGE_GRAN) * LARGE_GRAN
                 };
-                self.segments.push(Segment {
-                    size: seg_size,
-                    small,
-                    blocks: vec![Block { offset: 0, size: seg_size, free: true }],
-                });
+                let mut blocks = self.recycled_blocks.pop().unwrap_or_default();
+                blocks.push(Block { offset: 0, size: seg_size, free: true });
+                self.segments.push(Segment { size: seg_size, small, blocks });
                 self.stats.reserved += seg_size;
                 self.stats.segment_count += 1;
                 self.stats.peak_reserved = self.stats.peak_reserved.max(self.stats.reserved);
@@ -321,6 +343,26 @@ mod tests {
         let h = a.alloc(1024);
         a.free(h);
         a.free(h);
+    }
+
+    #[test]
+    fn reset_is_observationally_fresh() {
+        let mut a = CachingAllocator::new();
+        let h = a.alloc(3 << 20);
+        a.alloc(1000);
+        a.free(h);
+        a.reset();
+        assert_eq!(a.stats(), Stats::default());
+        a.check_invariants();
+        // a second life reproduces a fresh allocator's behaviour exactly
+        let mut fresh = CachingAllocator::new();
+        for bytes in [1000u64, 3 << 20, 512, 10 << 20] {
+            let ha = a.alloc(bytes);
+            let hf = fresh.alloc(bytes);
+            assert_eq!(ha, hf, "divergence after reset at {bytes}");
+        }
+        assert_eq!(a.stats(), fresh.stats());
+        a.check_invariants();
     }
 
     #[test]

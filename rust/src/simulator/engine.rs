@@ -1,44 +1,57 @@
 //! Trace replay: runs an event trace through the caching allocator and
 //! records the peak with a per-factor attribution snapshot.
-
-use std::collections::HashMap;
+//!
+//! The hot path ([`replay_with`]) reuses its bookkeeping storage across
+//! replays: handles live in a dense table indexed by the sequential
+//! trace id (traces issue ids 0..n, see [`super::trace`]), per-tag live
+//! bytes in a fixed `[u64; TAG_COUNT]`, and the allocator's segment and
+//! block vectors are recycled via [`ReplayScratch`] (the BTreeSet free
+//! index still allocates nodes per replay — the remaining steady-state
+//! allocation). A generic
+//! [`ReplaySink`] lets the same core serve plain replay (no sampling
+//! cost), full timelines, and strided sampling without duplicating the
+//! bookkeeping logic. The original HashMap implementation is retained in
+//! [`reference`] as the equivalence oracle for tests and benches.
 
 use anyhow::{bail, Result};
 
 use super::allocator::{CachingAllocator, Handle, Stats};
-use super::trace::{Event, Tag, ALL_TAGS};
+use super::trace::{Event, Tag, ALL_TAGS, TAG_COUNT};
 
 /// Per-factor live bytes at the peak.
-#[derive(Clone, Debug, Default, PartialEq)]
+///
+/// Invariant: `entries` is either empty (pre-peak default) or holds one
+/// entry per tag in `ALL_TAGS` order, so [`Breakdown::get`] indexes by
+/// tag discriminant instead of scanning.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Breakdown {
     entries: Vec<(Tag, u64)>,
 }
 
 impl Breakdown {
     pub fn get(&self, tag: Tag) -> u64 {
-        self.entries
-            .iter()
-            .find(|(t, _)| *t == tag)
-            .map(|(_, b)| *b)
-            .unwrap_or(0)
+        match self.entries.get(tag.index()) {
+            Some(&(t, bytes)) => {
+                debug_assert_eq!(t, tag, "Breakdown entries out of ALL_TAGS order");
+                bytes
+            }
+            None => 0,
+        }
     }
 
     pub fn entries(&self) -> &[(Tag, u64)] {
         &self.entries
     }
 
-    fn snapshot(live: &HashMap<Tag, u64>) -> Self {
+    fn from_live(live: &[u64; TAG_COUNT]) -> Self {
         Breakdown {
-            entries: ALL_TAGS
-                .iter()
-                .map(|&t| (t, live.get(&t).copied().unwrap_or(0)))
-                .collect(),
+            entries: ALL_TAGS.iter().map(|&t| (t, live[t.index()])).collect(),
         }
     }
 }
 
 /// Replay result.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Replay {
     pub stats: Stats,
     /// Attribution of live bytes at the moment of peak allocation.
@@ -49,99 +62,230 @@ pub struct Replay {
     pub persistent: Breakdown,
 }
 
-/// Replay a trace through a fresh allocator.
-pub fn replay(events: &[Event]) -> Result<Replay> {
-    let mut alloc = CachingAllocator::new();
-    let mut handles: HashMap<u64, (Handle, u64, Tag)> = HashMap::new();
-    let mut live: HashMap<Tag, u64> = HashMap::new();
-    let mut at_peak = Breakdown::default();
-    let mut peak_phase = "startup";
-    let mut phase = "startup";
-    let mut peak = 0u64;
-
-    for ev in events {
-        match *ev {
-            Event::Phase { name } => phase = name,
-            Event::Alloc { id, bytes, tag } => {
-                let h = alloc.alloc(bytes);
-                if handles.insert(id, (h, bytes, tag)).is_some() {
-                    bail!("trace reused id {id}");
-                }
-                *live.entry(tag).or_insert(0) += bytes;
-                let s = alloc.stats();
-                if s.allocated > peak {
-                    peak = s.allocated;
-                    at_peak = Breakdown::snapshot(&live);
-                    peak_phase = phase;
-                }
-            }
-            Event::Free { id } => {
-                let Some((h, bytes, tag)) = handles.remove(&id) else {
-                    bail!("trace freed unknown id {id}");
-                };
-                alloc.free(h);
-                *live.get_mut(&tag).unwrap() -= bytes;
-            }
-        }
-    }
-    Ok(Replay {
-        stats: alloc.stats(),
-        at_peak,
-        peak_phase,
-        persistent: Breakdown::snapshot(&live),
-    })
-}
-
 /// One timeline sample: (event index, phase, allocated, reserved bytes).
 pub type TimelinePoint = (usize, &'static str, u64, u64);
 
-/// Replay a trace recording the allocated/reserved curve after every
-/// event — the simulator's analogue of a memory-profiler timeline.
-/// Returns `(replay, samples)`.
-pub fn replay_with_timeline(events: &[Event]) -> Result<(Replay, Vec<TimelinePoint>)> {
-    let mut alloc = CachingAllocator::new();
-    let mut handles: HashMap<u64, (Handle, u64, Tag)> = HashMap::new();
-    let mut live: HashMap<Tag, u64> = HashMap::new();
-    let mut at_peak = Breakdown::default();
-    let mut peak_phase = "startup";
-    let mut phase = "startup";
+/// Receives the allocator state after every event. Implementations
+/// decide what (if anything) to record; [`NoSink`] compiles to nothing.
+pub trait ReplaySink {
+    fn on_event(&mut self, idx: usize, phase: &'static str, stats: &Stats);
+}
+
+/// Discards every sample — plain replay.
+pub struct NoSink;
+
+impl ReplaySink for NoSink {
+    #[inline]
+    fn on_event(&mut self, _idx: usize, _phase: &'static str, _stats: &Stats) {}
+}
+
+/// Records the allocated/reserved curve, keeping every `stride`-th event
+/// (stride 1 = full timeline, the memory-profiler analogue).
+pub struct TimelineSink {
+    stride: usize,
+    pub samples: Vec<TimelinePoint>,
+}
+
+impl TimelineSink {
+    pub fn every(stride: usize) -> Self {
+        TimelineSink { stride: stride.max(1), samples: Vec::new() }
+    }
+}
+
+impl ReplaySink for TimelineSink {
+    #[inline]
+    fn on_event(&mut self, idx: usize, phase: &'static str, stats: &Stats) {
+        if idx % self.stride == 0 {
+            self.samples.push((idx, phase, stats.allocated, stats.reserved));
+        }
+    }
+}
+
+/// Reusable replay state: the allocator (with its recycled segment
+/// storage) and the dense handle table. One `ReplayScratch` per worker
+/// keeps steady-state replay nearly allocation-free (only the
+/// allocator's free-index BTreeSet nodes remain).
+#[derive(Default)]
+pub struct ReplayScratch {
+    alloc: CachingAllocator,
+    /// Indexed by trace id; `None` = id never allocated or already freed.
+    slots: Vec<Option<(Handle, u64, Tag)>>,
+}
+
+impl ReplayScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Replay a trace through `scratch`, feeding every post-event allocator
+/// state to `sink`. This is the single replay core; [`replay`],
+/// [`replay_in`] and [`replay_with_timeline`] are thin wrappers.
+///
+/// Trace ids must be dense (`id < events.len()`), which every generated
+/// trace satisfies by construction; violations are reported as trace
+/// errors exactly like unknown frees.
+pub fn replay_with<S: ReplaySink>(
+    events: &[Event],
+    scratch: &mut ReplayScratch,
+    sink: &mut S,
+) -> Result<Replay> {
+    scratch.alloc.reset();
+    scratch.slots.clear();
+    scratch.slots.resize(events.len(), None);
+
+    let mut live = [0u64; TAG_COUNT];
+    let mut at_peak_live = [0u64; TAG_COUNT];
     let mut peak = 0u64;
-    let mut timeline = Vec::with_capacity(events.len());
+    let mut phase = "startup";
+    let mut peak_phase = "startup";
 
     for (i, ev) in events.iter().enumerate() {
         match *ev {
             Event::Phase { name } => phase = name,
             Event::Alloc { id, bytes, tag } => {
-                let h = alloc.alloc(bytes);
-                if handles.insert(id, (h, bytes, tag)).is_some() {
+                let Some(slot) = usize::try_from(id).ok().filter(|&s| s < events.len()) else {
+                    bail!("trace id {id} outside dense range 0..{}", events.len());
+                };
+                if scratch.slots[slot].is_some() {
                     bail!("trace reused id {id}");
                 }
-                *live.entry(tag).or_insert(0) += bytes;
-                let s = alloc.stats();
+                let h = scratch.alloc.alloc(bytes);
+                scratch.slots[slot] = Some((h, bytes, tag));
+                live[tag.index()] += bytes;
+                let s = scratch.alloc.stats();
                 if s.allocated > peak {
                     peak = s.allocated;
-                    at_peak = Breakdown::snapshot(&live);
+                    at_peak_live = live;
                     peak_phase = phase;
                 }
             }
             Event::Free { id } => {
-                let Some((h, bytes, tag)) = handles.remove(&id) else {
+                let freed = usize::try_from(id)
+                    .ok()
+                    .and_then(|s| scratch.slots.get_mut(s))
+                    .and_then(Option::take);
+                let Some((h, bytes, tag)) = freed else {
                     bail!("trace freed unknown id {id}");
                 };
-                alloc.free(h);
-                *live.get_mut(&tag).unwrap() -= bytes;
+                scratch.alloc.free(h);
+                live[tag.index()] -= bytes;
             }
         }
-        let s = alloc.stats();
-        timeline.push((i, phase, s.allocated, s.reserved));
+        sink.on_event(i, phase, &scratch.alloc.stats());
     }
-    let replay = Replay {
-        stats: alloc.stats(),
-        at_peak,
+
+    Ok(Replay {
+        stats: scratch.alloc.stats(),
+        at_peak: Breakdown::from_live(&at_peak_live),
         peak_phase,
-        persistent: Breakdown::snapshot(&live),
-    };
-    Ok((replay, timeline))
+        persistent: Breakdown::from_live(&live),
+    })
+}
+
+/// Replay a trace through a fresh allocator.
+pub fn replay(events: &[Event]) -> Result<Replay> {
+    replay_in(events, &mut ReplayScratch::new())
+}
+
+/// Replay reusing caller-owned scratch — the sweep hot path.
+pub fn replay_in(events: &[Event], scratch: &mut ReplayScratch) -> Result<Replay> {
+    replay_with(events, scratch, &mut NoSink)
+}
+
+/// Replay a trace recording the allocated/reserved curve after every
+/// event — the simulator's analogue of a memory-profiler timeline.
+/// Returns `(replay, samples)`.
+pub fn replay_with_timeline(events: &[Event]) -> Result<(Replay, Vec<TimelinePoint>)> {
+    let mut sink = TimelineSink::every(1);
+    let replay = replay_with(events, &mut ReplayScratch::new(), &mut sink)?;
+    Ok((replay, sink.samples))
+}
+
+/// The original HashMap-based replay, retained verbatim as the
+/// equivalence oracle: property tests assert the dense core produces
+/// identical [`Replay`]s and timelines, and `benches/replay.rs` uses it
+/// as the before-side of the speedup measurement.
+pub mod reference {
+    use std::collections::HashMap;
+
+    use anyhow::{bail, Result};
+
+    use super::super::allocator::{CachingAllocator, Handle};
+    use super::super::trace::{Event, Tag, ALL_TAGS};
+    use super::{Breakdown, Replay, TimelinePoint};
+
+    fn snapshot(live: &HashMap<Tag, u64>) -> Breakdown {
+        Breakdown {
+            entries: ALL_TAGS
+                .iter()
+                .map(|&t| (t, live.get(&t).copied().unwrap_or(0)))
+                .collect(),
+        }
+    }
+
+    /// Naive replay: fresh allocator, HashMap bookkeeping.
+    pub fn replay(events: &[Event]) -> Result<Replay> {
+        Ok(replay_impl(events, None)?.0)
+    }
+
+    /// Naive replay with a full timeline.
+    pub fn replay_with_timeline(events: &[Event]) -> Result<(Replay, Vec<TimelinePoint>)> {
+        let (r, tl) = replay_impl(events, Some(Vec::new()))?;
+        Ok((r, tl.unwrap_or_default()))
+    }
+
+    fn replay_impl(
+        events: &[Event],
+        mut timeline: Option<Vec<TimelinePoint>>,
+    ) -> Result<(Replay, Option<Vec<TimelinePoint>>)> {
+        let mut alloc = CachingAllocator::new();
+        let mut handles: HashMap<u64, (Handle, u64, Tag)> = HashMap::new();
+        let mut live: HashMap<Tag, u64> = HashMap::new();
+        let mut at_peak = snapshot(&live);
+        let mut peak_phase = "startup";
+        let mut phase = "startup";
+        let mut peak = 0u64;
+
+        for (i, ev) in events.iter().enumerate() {
+            match *ev {
+                Event::Phase { name } => phase = name,
+                Event::Alloc { id, bytes, tag } => {
+                    let h = alloc.alloc(bytes);
+                    if handles.insert(id, (h, bytes, tag)).is_some() {
+                        bail!("trace reused id {id}");
+                    }
+                    *live.entry(tag).or_insert(0) += bytes;
+                    let s = alloc.stats();
+                    if s.allocated > peak {
+                        peak = s.allocated;
+                        at_peak = snapshot(&live);
+                        peak_phase = phase;
+                    }
+                }
+                Event::Free { id } => {
+                    let Some((h, bytes, tag)) = handles.remove(&id) else {
+                        bail!("trace freed unknown id {id}");
+                    };
+                    alloc.free(h);
+                    *live.get_mut(&tag).unwrap() -= bytes;
+                }
+            }
+            if let Some(tl) = timeline.as_mut() {
+                let s = alloc.stats();
+                tl.push((i, phase, s.allocated, s.reserved));
+            }
+        }
+        Ok((
+            Replay {
+                stats: alloc.stats(),
+                at_peak,
+                peak_phase,
+                persistent: snapshot(&live),
+            },
+            timeline,
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +347,61 @@ mod tests {
             ev_alloc(0, 512, Tag::Act)
         ])
         .is_err());
+        // ids outside the dense range are trace bugs, not silent growth
+        assert!(replay(&[ev_alloc(7, 512, Tag::Act)]).is_err());
+    }
+
+    #[test]
+    fn dense_matches_reference_on_small_trace() {
+        let evs = vec![
+            ev_alloc(0, 10 << 20, Tag::Param),
+            Event::Phase { name: "forward" },
+            ev_alloc(1, 700, Tag::Ephemeral),
+            ev_alloc(2, 30 << 20, Tag::Act),
+            Event::Free { id: 1 },
+            Event::Free { id: 2 },
+            ev_alloc(3, 5 << 20, Tag::Act),
+            Event::Free { id: 3 },
+        ];
+        let (fast, fast_tl) = replay_with_timeline(&evs).unwrap();
+        let (naive, naive_tl) = reference::replay_with_timeline(&evs).unwrap();
+        assert_eq!(fast, naive);
+        assert_eq!(fast_tl, naive_tl);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let evs = vec![
+            ev_alloc(0, 6 << 20, Tag::Param),
+            ev_alloc(1, 12 << 20, Tag::Act),
+            Event::Free { id: 1 },
+            ev_alloc(2, 900, Tag::StepTemp),
+            Event::Free { id: 2 },
+        ];
+        let mut scratch = ReplayScratch::new();
+        let first = replay_in(&evs, &mut scratch).unwrap();
+        for _ in 0..3 {
+            assert_eq!(replay_in(&evs, &mut scratch).unwrap(), first);
+        }
+    }
+
+    #[test]
+    fn sampled_sink_keeps_strided_points() {
+        let evs: Vec<Event> = (0..10).map(|i| ev_alloc(i, 1 << 20, Tag::Act)).collect();
+        let mut sink = TimelineSink::every(3);
+        let _ = replay_with(&evs, &mut ReplayScratch::new(), &mut sink).unwrap();
+        let idxs: Vec<usize> = sink.samples.iter().map(|&(i, _, _, _)| i).collect();
+        assert_eq!(idxs, vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn breakdown_get_indexes_by_discriminant() {
+        let b = Breakdown {
+            entries: ALL_TAGS.iter().map(|&t| (t, t.index() as u64 * 100)).collect(),
+        };
+        for &t in &ALL_TAGS {
+            assert_eq!(b.get(t), t.index() as u64 * 100);
+        }
+        assert_eq!(Breakdown::default().get(Tag::Workspace), 0);
     }
 }

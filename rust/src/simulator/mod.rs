@@ -25,6 +25,41 @@ use crate::parser::{self, ParsedModel};
 pub use engine::{Breakdown, Replay};
 pub use trace::{Event, Tag};
 
+/// Reusable simulation context: keeps the event buffer, the dense
+/// replay handle table and the allocator's segment storage alive across
+/// replays, cutting a steady-state sweep point's heap traffic to the
+/// trace-generation scratch and the allocator's free-index nodes. One
+/// per worker thread.
+#[derive(Default)]
+pub struct SimContext {
+    events: Vec<Event>,
+    scratch: engine::ReplayScratch,
+}
+
+impl SimContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse and simulate one configuration (convenience; sweeps should
+    /// parse once and call [`SimContext::simulate_parsed`]).
+    pub fn simulate(&mut self, cfg: &TrainConfig) -> Result<Measurement> {
+        let pm = parser::parse(cfg)?;
+        self.simulate_parsed(&pm, cfg)
+    }
+
+    /// Simulate with an already-parsed model, reusing this context's
+    /// buffers. The simulator only reads shard-independent fields of
+    /// `pm` (sharding is recomputed from `cfg` during trace generation),
+    /// so one parse covers every `dp`/`zero`/`bucket_elems`/overhead
+    /// variation of a configuration — the basis of parse-once sweeps.
+    pub fn simulate_parsed(&mut self, pm: &ParsedModel, cfg: &TrainConfig) -> Result<Measurement> {
+        trace::generate_into(pm, cfg, &mut self.events);
+        let replay = engine::replay_in(&self.events, &mut self.scratch)?;
+        Ok(Measurement::from_replay(replay, cfg))
+    }
+}
+
 const MIB: f64 = 1024.0 * 1024.0;
 
 /// Simulated measurement of one training iteration on one GPU.
@@ -54,31 +89,37 @@ impl Measurement {
     pub fn peak_gib(&self) -> f64 {
         self.peak_mib / 1024.0
     }
+
+    fn from_replay(replay: Replay, cfg: &TrainConfig) -> Measurement {
+        let s = replay.stats;
+        let ctx = cfg.overheads.cuda_ctx_mib as f64;
+        Measurement {
+            peak_mib: ctx + s.peak_reserved as f64 / MIB,
+            peak_allocated_mib: s.peak_allocated as f64 / MIB,
+            peak_reserved_mib: s.peak_reserved as f64 / MIB,
+            cuda_ctx_mib: ctx,
+            frag_frac: s.frag_frac(),
+            peak_phase: replay.peak_phase,
+            at_peak: replay.at_peak,
+            persistent: replay.persistent,
+            alloc_count: s.alloc_count,
+        }
+    }
 }
 
 /// Simulate one training iteration for a configuration.
 pub fn simulate(cfg: &TrainConfig) -> Result<Measurement> {
-    let pm = parser::parse(cfg)?;
-    simulate_parsed(&pm, cfg)
+    SimContext::new().simulate(cfg)
 }
 
-/// Simulate with an already-parsed model (avoids re-parsing in sweeps).
-pub fn simulate_parsed(pm: &ParsedModel, cfg: &TrainConfig) -> Result<Measurement> {
-    let events = trace::generate(pm, cfg);
-    let replay = engine::replay(&events)?;
-    let s = replay.stats;
-    let ctx = cfg.overheads.cuda_ctx_mib as f64;
-    Ok(Measurement {
-        peak_mib: ctx + s.peak_reserved as f64 / MIB,
-        peak_allocated_mib: s.peak_allocated as f64 / MIB,
-        peak_reserved_mib: s.peak_reserved as f64 / MIB,
-        cuda_ctx_mib: ctx,
-        frag_frac: s.frag_frac(),
-        peak_phase: replay.peak_phase,
-        at_peak: replay.at_peak,
-        persistent: replay.persistent,
-        alloc_count: s.alloc_count,
-    })
+/// Simulate with an already-parsed model through a reusable context
+/// (avoids re-parsing and re-allocating in sweeps).
+pub fn simulate_parsed(
+    pm: &ParsedModel,
+    cfg: &TrainConfig,
+    ctx: &mut SimContext,
+) -> Result<Measurement> {
+    ctx.simulate_parsed(pm, cfg)
 }
 
 #[cfg(test)]
@@ -160,6 +201,43 @@ mod tests {
             .collect();
         for w in peaks.windows(2) {
             assert!(w[0] <= w[1] + 8.0, "zero ordering violated: {peaks:?}");
+        }
+    }
+
+    #[test]
+    fn sim_context_reuse_matches_fresh_simulation() {
+        let mut ctx = SimContext::new();
+        // interleave different geometries through one context; results
+        // must match fresh simulations exactly
+        let cfgs = [tiny(1), tiny(4), tiny(2)];
+        for _round in 0..2 {
+            for cfg in &cfgs {
+                let reused = ctx.simulate(cfg).unwrap();
+                let fresh = simulate(cfg).unwrap();
+                assert_eq!(reused.peak_mib, fresh.peak_mib);
+                assert_eq!(reused.at_peak, fresh.at_peak);
+                assert_eq!(reused.alloc_count, fresh.alloc_count);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_once_covers_dp_and_zero_variants() {
+        // simulate_parsed only reads shard-independent fields of the
+        // parsed model, so a pm parsed at dp=1 must reproduce every
+        // dp/zero variant exactly.
+        let base = tiny(1);
+        let pm = crate::parser::parse(&base).unwrap();
+        let mut ctx = SimContext::new();
+        for dp in [1u64, 2, 8] {
+            for z in [ZeroStage::Zero0, ZeroStage::Zero2, ZeroStage::Zero3] {
+                let mut cfg = tiny(dp);
+                cfg.zero = z;
+                let shared = simulate_parsed(&pm, &cfg, &mut ctx).unwrap();
+                let fresh = simulate(&cfg).unwrap();
+                assert_eq!(shared.peak_mib, fresh.peak_mib, "dp={dp} zero={z:?}");
+                assert_eq!(shared.at_peak, fresh.at_peak, "dp={dp} zero={z:?}");
+            }
         }
     }
 

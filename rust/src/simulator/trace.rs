@@ -28,7 +28,12 @@ pub enum Tag {
     Workspace,
 }
 
-pub const ALL_TAGS: [Tag; 10] = [
+/// Number of distinct tags; sizes the dense per-tag tables in the
+/// replay engine.
+pub const TAG_COUNT: usize = 10;
+
+/// Every tag, in declaration order — `ALL_TAGS[t.index()] == t`.
+pub const ALL_TAGS: [Tag; TAG_COUNT] = [
     Tag::Param,
     Tag::Master,
     Tag::OptState,
@@ -42,6 +47,12 @@ pub const ALL_TAGS: [Tag; 10] = [
 ];
 
 impl Tag {
+    /// Dense discriminant index in `[0, TAG_COUNT)`.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             Tag::Param => "param",
@@ -58,20 +69,22 @@ impl Tag {
     }
 }
 
-/// One trace event.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// One trace event. Alloc ids are issued sequentially from 0, so every
+/// id is strictly smaller than the number of events — the invariant the
+/// replay engine's dense handle table relies on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
     Alloc { id: u64, bytes: u64, tag: Tag },
     Free { id: u64 },
     Phase { name: &'static str },
 }
 
-struct Tracer {
-    events: Vec<Event>,
+struct Tracer<'a> {
+    events: &'a mut Vec<Event>,
     next_id: u64,
 }
 
-impl Tracer {
+impl Tracer<'_> {
     fn alloc(&mut self, bytes: u64, tag: Tag) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
@@ -94,7 +107,18 @@ fn act_bytes(l: &LayerRecord) -> u64 {
 
 /// Generate the trace for one training iteration.
 pub fn generate(pm: &ParsedModel, cfg: &TrainConfig) -> Vec<Event> {
-    let mut t = Tracer { events: Vec::with_capacity(pm.layers.len() * 6), next_id: 0 };
+    let mut events = Vec::with_capacity(pm.layers.len() * 6);
+    generate_into(pm, cfg, &mut events);
+    events
+}
+
+/// Generate the trace into a caller-owned buffer, clearing it first.
+/// Sweeps reuse one buffer across points so steady-state generation
+/// allocates nothing (see [`super::SimContext`]).
+pub fn generate_into(pm: &ParsedModel, cfg: &TrainConfig, events: &mut Vec<Event>) {
+    events.clear();
+    events.reserve(pm.layers.len() * 6);
+    let mut t = Tracer { events, next_id: 0 };
     let (_, grad_w, _) = cfg.precision.byte_widths();
     let (param_shard, _, _) = cfg.zero.shard_factors(cfg.dp);
     let bufs = zero::buffers(pm, cfg);
@@ -232,7 +256,6 @@ pub fn generate(pm: &ParsedModel, cfg: &TrainConfig) -> Vec<Event> {
     }
 
     t.phase("end");
-    t.events
 }
 
 /// Ranges (start, end_inclusive) of checkpointed blocks.

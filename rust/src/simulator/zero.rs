@@ -6,7 +6,7 @@ use crate::config::{TrainConfig, ZeroStage};
 use crate::parser::ParsedModel;
 
 /// Persistent + transient flat buffers for one rank.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ZeroBuffers {
     /// fp32 master-weight flat partition (mixed precision only).
     pub master_bytes: u64,

@@ -1,0 +1,218 @@
+//! Parallel config-grid sweep engine.
+//!
+//! The paper's evaluation is hundreds of near-identical points (DP 1..8
+//! × hyperparameter settings, ablation grids, OoM-guard queues) pushed
+//! through the simulator. This module fans a grid across a std-thread
+//! worker pool: each worker owns one [`SimContext`] (so steady-state
+//! points allocate nothing), every distinct model geometry is parsed
+//! exactly once up front, and results come back in input order
+//! regardless of which worker computed them.
+//!
+//! ```no_run
+//! use mmpredict::config::TrainConfig;
+//! let cfgs: Vec<TrainConfig> = (1..=8).map(TrainConfig::fig2b).collect();
+//! let measured = mmpredict::sweep::simulate_grid(&cfgs).unwrap();
+//! assert_eq!(measured.len(), 8);
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::parser::{self, ParsedModel};
+use crate::simulator::{Measurement, SimContext};
+
+/// Worker count used by [`Sweep::default`]: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A worker pool configured with a thread count.
+pub struct Sweep {
+    threads: usize,
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Self::new(default_threads())
+    }
+}
+
+impl Sweep {
+    pub fn new(threads: usize) -> Self {
+        Sweep { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over every point of the grid. `f` receives the worker's
+    /// reusable [`SimContext`], the (shared, parsed-once) model for the
+    /// point's geometry, and the point's config. Results are returned in
+    /// input order; the lowest-index error wins if any point fails.
+    pub fn run<R, F>(&self, cfgs: &[TrainConfig], f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(&mut SimContext, &ParsedModel, &TrainConfig) -> Result<R> + Sync,
+    {
+        if cfgs.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // Parse each distinct geometry once, sequentially (parses are
+        // few, points are many). Every config is validated individually:
+        // parse() only validates the first config of a key, and a bad
+        // dp/zero variant must fail exactly like the sequential path.
+        let mut key_of: Vec<usize> = Vec::with_capacity(cfgs.len());
+        let mut keys: Vec<String> = Vec::new();
+        let mut parsed: Vec<ParsedModel> = Vec::new();
+        for cfg in cfgs {
+            cfg.validate()?;
+            let k = cfg.geometry_key();
+            let idx = match keys.iter().position(|s| *s == k) {
+                Some(i) => i,
+                None => {
+                    keys.push(k);
+                    parsed.push(parser::parse(cfg)?);
+                    parsed.len() - 1
+                }
+            };
+            key_of.push(idx);
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<R>>>> =
+            cfgs.iter().map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(cfgs.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut ctx = SimContext::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cfgs.len() {
+                            break;
+                        }
+                        let r = f(&mut ctx, &parsed[key_of[i]], &cfgs[i]);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                });
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("worker pool visited every grid point")
+            })
+            .collect()
+    }
+
+    /// Simulate every config of the grid (the "measured" side of the
+    /// paper's sweeps) in parallel.
+    pub fn simulate_grid(&self, cfgs: &[TrainConfig]) -> Result<Vec<Measurement>> {
+        self.run(cfgs, |ctx, pm, cfg| ctx.simulate_parsed(pm, cfg))
+    }
+}
+
+/// Simulate a grid with one worker per core.
+pub fn simulate_grid(cfgs: &[TrainConfig]) -> Result<Vec<Measurement>> {
+    Sweep::default().simulate_grid(cfgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ZeroStage;
+    use crate::simulator;
+
+    fn grid() -> Vec<TrainConfig> {
+        let mut out = Vec::new();
+        for dp in [1u64, 2, 4, 8] {
+            for zero in [ZeroStage::Zero0, ZeroStage::Zero2] {
+                let mut cfg = TrainConfig {
+                    model: "llava-tiny".into(),
+                    mbs: 2,
+                    seq_len: 64,
+                    dp,
+                    ..TrainConfig::llava_finetune_default()
+                };
+                cfg.zero = zero;
+                out.push(cfg);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parallel_matches_sequential_in_order() {
+        let cfgs = grid();
+        let seq: Vec<f64> = cfgs
+            .iter()
+            .map(|c| simulator::simulate(c).unwrap().peak_mib)
+            .collect();
+        for threads in [1usize, 4] {
+            let par = Sweep::new(threads).simulate_grid(&cfgs).unwrap();
+            assert_eq!(par.len(), cfgs.len());
+            for (i, (m, want)) in par.iter().zip(&seq).enumerate() {
+                assert_eq!(m.peak_mib, *want, "point {i} diverged at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_shares_one_parse_across_dp_and_zero() {
+        // all 8 points share one geometry -> one parse key
+        let cfgs = grid();
+        let keys: std::collections::HashSet<String> =
+            cfgs.iter().map(TrainConfig::geometry_key).collect();
+        assert_eq!(keys.len(), 1);
+        // while a different mbs is a new geometry
+        let mut other = cfgs[0].clone();
+        other.mbs = 4;
+        assert_ne!(other.geometry_key(), cfgs[0].geometry_key());
+    }
+
+    #[test]
+    fn invalid_variant_fails_like_sequential_even_when_key_is_shared() {
+        // dp=0 shares its geometry key with the valid points; the sweep
+        // must still reject it (validate runs per config, not per key)
+        let mut cfgs = grid();
+        cfgs[3].dp = 0;
+        assert!(simulate_grid(&cfgs).is_err());
+        assert!(simulator::simulate(&cfgs[3]).is_err());
+    }
+
+    #[test]
+    fn custom_closure_sees_shared_parse_and_cfg() {
+        let cfgs = grid();
+        let rows = Sweep::new(2)
+            .run(&cfgs, |ctx, pm, cfg| {
+                let m = ctx.simulate_parsed(pm, cfg)?;
+                Ok((cfg.dp, pm.num_layers(), m.peak_mib))
+            })
+            .unwrap();
+        assert_eq!(rows.len(), cfgs.len());
+        for (row, cfg) in rows.iter().zip(&cfgs) {
+            assert_eq!(row.0, cfg.dp, "result order must follow input order");
+            assert!(row.1 > 0 && row.2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        assert!(simulate_grid(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_config_surfaces_lowest_index_error() {
+        let mut cfgs = grid();
+        cfgs[0].model = "not-a-model".into();
+        assert!(simulate_grid(&cfgs).is_err());
+    }
+}

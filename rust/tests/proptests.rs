@@ -122,6 +122,95 @@ fn trace_is_balanced_for_random_configs() {
     }
 }
 
+/// Draw a random trace with the dense-id invariant real traces have
+/// (ids issued sequentially, so every id < number of events).
+fn arb_trace(r: &mut Prng) -> Vec<simulator::Event> {
+    use mmpredict::simulator::trace::ALL_TAGS;
+    const PHASES: [&str; 4] = ["startup", "forward", "backward", "step"];
+    let n_ops = r.range(50, 600);
+    let mut events = Vec::new();
+    let mut live: Vec<u64> = Vec::new();
+    let mut next_id = 0u64;
+    for _ in 0..n_ops {
+        let roll = r.f64();
+        if roll < 0.08 {
+            events.push(simulator::Event::Phase { name: *r.pick(&PHASES) });
+        } else if roll < 0.60 || live.is_empty() {
+            let bytes = match r.range(0, 2) {
+                0 => r.range(0, 4096) as u64, // includes 0-byte allocs
+                1 => r.range(4096, 1 << 20) as u64,
+                _ => r.range(1 << 20, 48 << 20) as u64,
+            };
+            let tag = *r.pick(&ALL_TAGS);
+            events.push(simulator::Event::Alloc { id: next_id, bytes, tag });
+            live.push(next_id);
+            next_id += 1;
+        } else {
+            let idx = r.range(0, live.len() - 1);
+            events.push(simulator::Event::Free { id: live.swap_remove(idx) });
+        }
+    }
+    // free a random subset of the leftovers so persistent state varies
+    while !live.is_empty() && r.chance(0.7) {
+        let idx = r.range(0, live.len() - 1);
+        events.push(simulator::Event::Free { id: live.swap_remove(idx) });
+    }
+    events
+}
+
+#[test]
+fn dense_replay_matches_naive_reference() {
+    use mmpredict::simulator::engine::{self, ReplayScratch, TimelineSink};
+    use mmpredict::simulator::trace::ALL_TAGS;
+
+    let mut r = Prng::new(0xD15EA5E);
+    // one scratch reused across every case: proves reuse never leaks
+    // state between replays
+    let mut scratch = ReplayScratch::new();
+
+    // randomized synthetic traces
+    for case in 0..30 {
+        let events = arb_trace(&mut r);
+        let (naive, naive_tl) = engine::reference::replay_with_timeline(&events).unwrap();
+        let mut sink = TimelineSink::every(1);
+        let fast = engine::replay_with(&events, &mut scratch, &mut sink).unwrap();
+        assert_eq!(fast, naive, "case {case}: Replay diverged");
+        assert_eq!(sink.samples, naive_tl, "case {case}: timeline diverged");
+        for &t in &ALL_TAGS {
+            assert_eq!(fast.at_peak.get(t), naive.at_peak.get(t), "case {case} {t:?}");
+            assert_eq!(fast.persistent.get(t), naive.persistent.get(t), "case {case} {t:?}");
+        }
+    }
+
+    // real traces generated from random configurations
+    for case in 0..25 {
+        let cfg = arb_config(&mut r);
+        let pm = parser::parse(&cfg).unwrap();
+        let events = simulator::trace::generate(&pm, &cfg);
+        let (naive, naive_tl) = engine::reference::replay_with_timeline(&events).unwrap();
+        let mut sink = TimelineSink::every(1);
+        let fast = engine::replay_with(&events, &mut scratch, &mut sink).unwrap();
+        assert_eq!(fast, naive, "config case {case}: Replay diverged for {cfg:?}");
+        assert_eq!(sink.samples, naive_tl, "config case {case}: timeline diverged");
+    }
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_for_random_grids() {
+    let mut r = Prng::new(0x5EED);
+    for _case in 0..4 {
+        let cfgs: Vec<TrainConfig> = (0..6).map(|_| arb_config(&mut r)).collect();
+        let seq: Vec<f64> = cfgs
+            .iter()
+            .map(|c| simulator::simulate(c).unwrap().peak_mib)
+            .collect();
+        let par = mmpredict::sweep::Sweep::new(4).simulate_grid(&cfgs).unwrap();
+        for (i, (m, want)) in par.iter().zip(&seq).enumerate() {
+            assert_eq!(m.peak_mib, *want, "grid point {i}");
+        }
+    }
+}
+
 #[test]
 fn allocator_fuzz_invariants() {
     let mut r = Prng::new(0xA110C);

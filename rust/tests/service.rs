@@ -62,6 +62,28 @@ fn concurrent_clients_get_correct_answers() {
 }
 
 #[test]
+fn shutdown_drains_inflight_jobs() {
+    let Some(svc) = service() else { return };
+    // Clients queue jobs, then the service shuts down while they are in
+    // flight. Every submitted job must still receive a real answer —
+    // the worker drains the queue before exiting rather than dropping
+    // buffered jobs on the floor.
+    let handles: Vec<_> = (0..8u64)
+        .map(|i| {
+            let client = svc.client();
+            std::thread::spawn(move || client.predict(TrainConfig::fig2b(i % 8 + 1)))
+        })
+        .collect();
+    // shutdown joins the worker; the worker keeps serving until the last
+    // client sender is gone, so this cannot complete with jobs stranded
+    svc.shutdown();
+    for h in handles {
+        let p = h.join().unwrap().expect("job dropped during shutdown");
+        assert!(p.peak_mib > 0.0);
+    }
+}
+
+#[test]
 fn invalid_configs_get_errors_not_hangs() {
     let Some(svc) = service() else { return };
     let mut bad = TrainConfig::fig2b(1);
