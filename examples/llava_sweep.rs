@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md "End-to-end validation"): regenerate the
+//! End-to-end driver (ARCHITECTURE.md "Experiment index"): regenerate the
 //! paper's full evaluation — Fig. 2a and Fig. 2b sweeps of LLaVA-1.5-7B
 //! across DP 1..8 — through the REAL stack: model zoo -> parser ->
 //! feature encoding -> **AOT artifact executed via PJRT** (the L1 Pallas

@@ -1,23 +1,25 @@
 //! OoM guard: the deployment scenario the paper motivates — a scheduler
 //! front-end that screens a queue of training-job submissions against
-//! GPU capacity *before* any cluster time is spent.
+//! GPU capacity *before* any cluster time is spent, and answers the
+//! follow-up question every rejected user asks: "so what WOULD fit?"
 //!
-//! With AOT artifacts present (`make artifacts`), spins up the batched
-//! PJRT prediction service and submits the queue from many client
-//! threads. Without them, it screens the same queue through the
-//! parallel sweep engine: the analytical predictor decides admit/reject
-//! and the simulator cross-checks every verdict, fanned across cores
-//! with one reusable `SimContext` per worker.
+//! The guard runs through the batched prediction service: screening
+//! goes through concurrent `predict` clients (tensorized backend when
+//! AOT artifacts exist, analytical otherwise — same semantics), every
+//! verdict is cross-checked against the ground-truth simulator via the
+//! parallel sweep engine, and remediation + capacity publishing go
+//! through the service's `Plan` request, which runs the capacity
+//! planner (`mmpredict::planner`): a simulator-validated bisection of
+//! the OOM frontier instead of hand-rolled sweep loops.
 //!
 //! Run: `cargo run --release --example oom_guard`
-
-use std::time::Instant;
 
 use anyhow::Result;
 use mmpredict::config::{Stage, TrainConfig};
 use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::planner::{Axes, PlanRequest};
 use mmpredict::util::units::human_mib;
-use mmpredict::{predictor, sweep};
+use mmpredict::{report, sweep};
 
 const GPU_CAPACITY_MIB: f64 = 80.0 * 1024.0; // H100 80GB
 
@@ -38,110 +40,118 @@ fn job_queue() -> Vec<(String, TrainConfig)> {
     jobs
 }
 
-fn print_verdict(name: &str, predicted_mib: f64, admitted: &mut u32, rejected: &mut u32) {
-    let ok = predicted_mib <= GPU_CAPACITY_MIB;
-    if ok {
-        *admitted += 1;
-    } else {
-        *rejected += 1;
-    }
-    println!(
-        "{:<28} {:>14} {:>14} {:>8}",
-        name,
-        human_mib(predicted_mib),
-        human_mib(GPU_CAPACITY_MIB),
-        if ok { "ADMIT" } else { "REJECT" }
-    );
-}
+fn main() -> Result<()> {
+    let service = match PredictionService::start("artifacts", ServiceConfig::default()) {
+        Ok(s) => {
+            println!("prediction service up (tensorized AOT backend)\n");
+            s
+        }
+        Err(e) => {
+            eprintln!("PJRT artifacts unavailable ({e:#}); using the analytical backend\n");
+            PredictionService::start_analytical(ServiceConfig::default())
+        }
+    };
 
-/// Screen through the batched PJRT service (needs artifacts).
-fn run_service(jobs: Vec<(String, TrainConfig)>, service: PredictionService) -> Result<()> {
-    println!("prediction service up\n");
+    // -- 1. screen the submission queue (concurrent clients, batched) ----
+    let jobs = job_queue();
     let mut handles = Vec::new();
-    for (name, cfg) in jobs {
+    for (name, cfg) in &jobs {
         let client = service.client();
+        let (name, cfg) = (name.clone(), cfg.clone());
         handles.push(std::thread::spawn(move || {
-            let p = client.predict(cfg)?;
-            Ok::<_, anyhow::Error>((name, p))
+            let p = client.predict(cfg.clone())?;
+            Ok::<_, anyhow::Error>((name, cfg, p))
         }));
     }
 
-    println!(
-        "{:<28} {:>14} {:>14} {:>8}",
-        "job", "predicted", "capacity", "verdict"
-    );
-    let (mut admitted, mut rejected) = (0, 0);
-    for h in handles {
-        let (name, p) = h.join().expect("client thread")?;
-        print_verdict(&name, p.peak_mib as f64, &mut admitted, &mut rejected);
-    }
-    println!(
-        "\n{admitted} admitted, {rejected} rejected (would have OoM'd and wasted cluster time)"
-    );
-    println!("service metrics: {}", service.metrics().summary());
-    service.shutdown();
-    Ok(())
-}
+    let screened: Vec<(String, TrainConfig, f64)> = handles
+        .into_iter()
+        .map(|h| {
+            let (name, cfg, p) = h.join().expect("client thread")?;
+            Ok::<_, anyhow::Error>((name, cfg, p.peak_mib as f64))
+        })
+        .collect::<Result<_>>()?;
 
-/// Screen through the parallel sweep engine (no artifacts required).
-fn run_sweep(jobs: Vec<(String, TrainConfig)>) -> Result<()> {
-    let cfgs: Vec<TrainConfig> = jobs.iter().map(|(_, c)| c.clone()).collect();
-    let engine = sweep::Sweep::default();
-    let t0 = Instant::now();
-    let rows = engine.run(&cfgs, |ctx, pm, cfg| {
-        let predicted = predictor::predict(cfg)?.peak_mib as f64;
-        let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
-        Ok((predicted, measured))
-    })?;
-    let dt = t0.elapsed();
+    // Cross-check every verdict against the ground-truth simulator (the
+    // guard's safety net: a predictor under-estimate here is exactly the
+    // OOM the guard exists to prevent).
+    let cfgs: Vec<TrainConfig> = screened.iter().map(|(_, c, _)| c.clone()).collect();
+    let measured = sweep::simulate_grid(&cfgs)?;
 
     println!(
         "{:<28} {:>14} {:>14} {:>14} {:>8}",
         "job", "predicted", "simulated", "capacity", "verdict"
     );
-    let (mut admitted, mut rejected) = (0, 0);
-    let mut disagreements = 0;
-    for ((name, _), (predicted, measured)) in jobs.iter().zip(&rows) {
-        let ok = *predicted <= GPU_CAPACITY_MIB;
-        if ok {
-            admitted += 1;
-        } else {
-            rejected += 1;
-        }
-        // cross-check the verdict against the simulator ground truth
-        if ok != (*measured <= GPU_CAPACITY_MIB) {
+    let (mut admitted, mut disagreements, mut rejected_jobs) = (0u32, 0u32, Vec::new());
+    for ((name, cfg, predicted), m) in screened.into_iter().zip(&measured) {
+        let ok = predicted <= GPU_CAPACITY_MIB;
+        if ok != (m.peak_mib <= GPU_CAPACITY_MIB) {
             disagreements += 1;
         }
         println!(
             "{:<28} {:>14} {:>14} {:>14} {:>8}",
             name,
-            human_mib(*predicted),
-            human_mib(*measured),
+            human_mib(predicted),
+            human_mib(m.peak_mib),
             human_mib(GPU_CAPACITY_MIB),
             if ok { "ADMIT" } else { "REJECT" }
         );
-    }
-    println!(
-        "\n{admitted} admitted, {rejected} rejected (would have OoM'd and wasted cluster time)"
-    );
-    println!(
-        "{} jobs screened in {:.3?} on {} worker threads ({:.0} jobs/s), {} predictor/simulator verdict disagreements",
-        jobs.len(),
-        dt,
-        engine.threads().min(jobs.len()),
-        jobs.len() as f64 / dt.as_secs_f64(),
-        disagreements
-    );
-    Ok(())
-}
-
-fn main() -> Result<()> {
-    let jobs = job_queue();
-    match PredictionService::start("artifacts", ServiceConfig::default()) {
-        Ok(service) => run_service(jobs, service),
-        Err(e) => {
-            eprintln!("PJRT service unavailable ({e:#}); screening via the parallel sweep engine\n");
-            run_sweep(jobs)
+        if ok {
+            admitted += 1;
+        } else {
+            rejected_jobs.push((name, cfg));
         }
     }
+    println!(
+        "\n{admitted} admitted, {} rejected (would have OoM'd and wasted cluster time), \
+         {disagreements} predictor/simulator verdict disagreements\n",
+        rejected_jobs.len()
+    );
+
+    // -- 2. remediation: for each reject, ask the planner for the largest
+    //       safe micro-batch at the job's own geometry ------------------
+    for (name, cfg) in &rejected_jobs {
+        let axes = Axes {
+            mbs: vec![1, 2, 4, 8, 16, 32],
+            ..Axes::fixed(cfg)
+        };
+        let plan = service.plan(PlanRequest {
+            base: cfg.clone(),
+            budget_mib: GPU_CAPACITY_MIB,
+            axes,
+        })?;
+        match plan.recommended().next() {
+            Some(best) => println!(
+                "{name}: resubmit with mbs {} -> {} simulated ({} headroom)",
+                best.cfg.mbs,
+                human_mib(best.simulated_mib),
+                human_mib(best.headroom_mib)
+            ),
+            None => println!(
+                "{name}: no micro-batch fits — needs more DP/ZeRO sharding or a smaller model"
+            ),
+        }
+    }
+
+    // -- 3. publish the GPU's capacity frontier: the maximal safe LLaVA
+    //       fine-tune configs, ranked by throughput --------------------
+    let base = TrainConfig::llava_finetune_default();
+    let plan = service.plan(PlanRequest {
+        axes: Axes::standard(&base),
+        base,
+        budget_mib: GPU_CAPACITY_MIB,
+    })?;
+    println!(
+        "\n== capacity frontier: llava-1.5-7b fine-tune under {} ==",
+        human_mib(GPU_CAPACITY_MIB)
+    );
+    println!("{}", report::frontier_table(&plan, 10, false).render());
+    println!(
+        "frontier found with {} simulations instead of the {}-point full grid",
+        plan.stats.sim_points, plan.stats.grid_points
+    );
+
+    println!("\nservice metrics: {}", service.metrics().summary());
+    service.shutdown();
+    Ok(())
 }

@@ -1,0 +1,149 @@
+//! Planner bench: frontier search (predictor-guided simulator
+//! bisection) vs the naive full-grid sweep it replaces, on the paper's
+//! LLaVA-1.5-7B fine-tune under an 80 GiB (H100) budget.
+//!
+//! Emits machine-readable `BENCH_planner.json` (wall times, simulation
+//! counts, speedup) so CI can track the search-cost trajectory
+//! (EXPERIMENTS.md §Planner). Also cross-checks that the bisected
+//! frontier equals the frontier derived from exhaustively simulating
+//! the grid — the two must agree point for point.
+//!
+//! Run: `cargo bench --bench planner`
+
+use mmpredict::config::{TrainConfig, ZeroStage};
+use mmpredict::planner::{self, Axes, PlanRequest};
+use mmpredict::sweep::Sweep;
+use mmpredict::util::bench::{bench, report, BenchResult};
+use mmpredict::util::json_mini::{obj, Json};
+
+fn main() {
+    let base = TrainConfig::llava_finetune_default();
+    let axes = Axes {
+        mbs: vec![1, 2, 4, 8, 16],
+        seq_len: vec![1024, 2048],
+        dp: vec![4, 8],
+        zero: vec![ZeroStage::Zero2, ZeroStage::Zero3],
+        ..Axes::fixed(&base)
+    };
+    let budget_mib = 80.0 * 1024.0;
+    let req = PlanRequest { base: base.clone(), budget_mib, axes: axes.clone() };
+
+    // The naive alternative: simulate every point of the cross product,
+    // then read the frontier off the measured grid.
+    let mut grid: Vec<TrainConfig> = Vec::new();
+    for &zero in &axes.zero {
+        for &dp in &axes.dp {
+            for &seq_len in &axes.seq_len {
+                for &mbs in &axes.mbs {
+                    grid.push(TrainConfig { zero, dp, seq_len, mbs, ..base.clone() });
+                }
+            }
+        }
+    }
+    println!(
+        "workload: llava-1.5-7b fine-tune, {} branches x {} mbs rungs = {} grid points, budget {} MiB\n",
+        grid.len() / axes.mbs.len(),
+        axes.mbs.len(),
+        grid.len(),
+        budget_mib
+    );
+
+    let engine = Sweep::default();
+    let naive = bench("naive full-grid sweep + scan", 1, 3, || {
+        let _ = engine.simulate_grid(&grid).unwrap();
+    });
+    report(&naive);
+    let planned = bench("planner frontier search (bisection)", 1, 3, || {
+        let _ = planner::plan_with(&req, &engine).unwrap();
+    });
+    report(&planned);
+    let wall_speedup = speedup(&naive, &planned);
+    println!("  -> planner wall-time speedup: {wall_speedup:.2}x\n");
+
+    // Cross-check: the bisected frontier must equal the frontier derived
+    // from the exhaustive grid.
+    let plan = planner::plan_with(&req, &engine).unwrap();
+    let measured = engine.simulate_grid(&grid).unwrap();
+    let mut naive_frontier: Vec<&TrainConfig> = Vec::new();
+    for chunk_start in (0..grid.len()).step_by(axes.mbs.len()) {
+        let branch = &grid[chunk_start..chunk_start + axes.mbs.len()];
+        let peaks = &measured[chunk_start..chunk_start + axes.mbs.len()];
+        if let Some(k) = peaks.iter().rposition(|m| m.peak_mib <= budget_mib) {
+            naive_frontier.push(&branch[k]);
+        }
+    }
+    assert_eq!(
+        plan.candidates.len(),
+        naive_frontier.len(),
+        "bisected frontier size diverged from the exhaustive grid's"
+    );
+    for cfg in &naive_frontier {
+        assert!(
+            plan.candidates.iter().any(|c| c.cfg.cache_key() == cfg.cache_key()),
+            "exhaustive frontier config missing from the plan: {}",
+            cfg.cache_key()
+        );
+    }
+    println!(
+        "frontier cross-check OK: {} configs, {} simulations vs {} grid points ({} predictor probes)",
+        plan.candidates.len(),
+        plan.stats.sim_points,
+        plan.stats.grid_points,
+        plan.stats.predictor_probes
+    );
+
+    // Deterministic cost floors (EXPERIMENTS.md §Planner): bisection must
+    // beat the grid, and per branch costs at most the forced guess probe
+    // plus a full bisection of the remaining interval.
+    assert!(
+        plan.stats.sim_points < plan.stats.grid_points,
+        "bisection ({}) did not beat the full grid ({})",
+        plan.stats.sim_points,
+        plan.stats.grid_points
+    );
+    let worst_per_branch = 1 + (axes.mbs.len() as f64).log2().ceil() as usize;
+    assert!(
+        plan.stats.sim_points <= plan.stats.branches * worst_per_branch,
+        "sim_points {} exceeded the worst-case bound {} x {}",
+        plan.stats.sim_points,
+        plan.stats.branches,
+        worst_per_branch
+    );
+
+    let json = obj(vec![
+        (
+            "workload",
+            Json::Str("llava-1.5-7b finetune, 80 GiB budget".to_string()),
+        ),
+        ("grid_points", Json::Num(plan.stats.grid_points as f64)),
+        ("branches", Json::Num(plan.stats.branches as f64)),
+        ("sim_points", Json::Num(plan.stats.sim_points as f64)),
+        (
+            "predictor_probes",
+            Json::Num(plan.stats.predictor_probes as f64),
+        ),
+        ("frontier_size", Json::Num(plan.candidates.len() as f64)),
+        (
+            "naive_grid_sec",
+            Json::Num(naive.mean.as_secs_f64()),
+        ),
+        (
+            "planner_sec",
+            Json::Num(planned.mean.as_secs_f64()),
+        ),
+        ("wall_speedup", Json::Num(wall_speedup)),
+        (
+            "sim_reduction",
+            Json::Num(plan.stats.grid_points as f64 / plan.stats.sim_points.max(1) as f64),
+        ),
+    ]);
+    // cargo bench runs with cwd = package root (rust/); anchor the
+    // output to the workspace root regardless of invocation cwd
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_planner.json");
+    println!("wrote {out}");
+}
+
+fn speedup(before: &BenchResult, after: &BenchResult) -> f64 {
+    before.mean.as_secs_f64() / after.mean.as_secs_f64().max(1e-12)
+}

@@ -8,23 +8,12 @@
 //!
 //! Run: `cargo bench --bench replay`
 
-use std::collections::BTreeMap;
-
 use mmpredict::config::TrainConfig;
 use mmpredict::simulator::{engine, trace, SimContext};
 use mmpredict::sweep::Sweep;
 use mmpredict::util::bench::{bench, report, BenchResult};
-use mmpredict::util::json_mini::Json;
+use mmpredict::util::json_mini::{obj, Json};
 use mmpredict::{parser, sweep};
-
-fn obj(entries: Vec<(&str, Json)>) -> Json {
-    Json::Obj(
-        entries
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect::<BTreeMap<String, Json>>(),
-    )
-}
 
 fn main() {
     let cfg = TrainConfig::fig2b(8);

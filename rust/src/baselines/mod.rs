@@ -10,6 +10,15 @@
 //!   '20, Xonar): run a few cheap iterations at small micro-batch sizes
 //!   and extrapolate linearly. Accurate in-distribution but pays
 //!   profiling cost and misses cross-setting changes.
+//!
+//! Every baseline exposes the same shape — `predict(&TrainConfig) ->
+//! Result<BaselineResult>` — so `repro baselines` and
+//! `benches/baselines.rs` can table them against this crate's
+//! predictor uniformly. [`BaselineResult::profile_iters`] carries the
+//! method's measurement cost (0 for pure formulas), which is the other
+//! axis of the paper's comparison: accuracy *per profiling iteration
+//! spent*. To add a baseline, implement that function in a new
+//! submodule and add a row to `cmd_baselines` in `main.rs`.
 
 pub mod fujii;
 pub mod llmem;

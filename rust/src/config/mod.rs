@@ -38,6 +38,16 @@ impl Stage {
             _ => bail!("unknown stage {s:?} (pretrain|finetune|lora|full)"),
         })
     }
+
+    /// Canonical name, accepted back by [`Stage::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Pretrain => "pretrain",
+            Stage::Finetune => "finetune",
+            Stage::LoraFinetune => "lora",
+            Stage::Full => "full",
+        }
+    }
 }
 
 /// DeepSpeed ZeRO stage.
@@ -58,6 +68,16 @@ impl ZeroStage {
             3 => ZeroStage::Zero3,
             _ => bail!("zero stage must be 0..=3, got {n}"),
         })
+    }
+
+    /// The stage number, accepted back by [`ZeroStage::parse`].
+    pub fn as_int(self) -> u64 {
+        match self {
+            ZeroStage::Zero0 => 0,
+            ZeroStage::Zero1 => 1,
+            ZeroStage::Zero2 => 2,
+            ZeroStage::Zero3 => 3,
+        }
     }
 
     /// Shard factors `(param, grad, opt)` for a DP degree.
@@ -122,6 +142,15 @@ impl Precision {
             "fp32" => Precision::Fp32,
             _ => bail!("unknown precision {s:?} (bf16|fp16|fp32)"),
         })
+    }
+
+    /// Canonical name, accepted back by [`Precision::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Bf16Mixed => "bf16",
+            Precision::Fp16Mixed => "fp16",
+            Precision::Fp32 => "fp32",
+        }
     }
 
     /// Bytes per element of (params/acts, grads, master copy).
@@ -437,5 +466,18 @@ alloc_frac = 0.03
     fn precision_byte_widths() {
         assert_eq!(Precision::Bf16Mixed.byte_widths(), (2, 2, 4));
         assert_eq!(Precision::Fp32.byte_widths(), (4, 4, 0));
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for s in [Stage::Pretrain, Stage::Finetune, Stage::LoraFinetune, Stage::Full] {
+            assert_eq!(Stage::parse(s.name()).unwrap(), s);
+        }
+        for p in [Precision::Bf16Mixed, Precision::Fp16Mixed, Precision::Fp32] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        for z in [ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            assert_eq!(ZeroStage::parse(z.as_int()).unwrap(), z);
+        }
     }
 }

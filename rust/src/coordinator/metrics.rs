@@ -17,6 +17,8 @@ pub struct Metrics {
     batches: AtomicU64,
     batch_hist: [AtomicU64; MAX_TRACKED],
     latency_us_total: AtomicU64,
+    plans: AtomicU64,
+    plan_latency_us_total: AtomicU64,
 }
 
 impl Metrics {
@@ -41,6 +43,15 @@ impl Metrics {
         self.errors.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// One completed capacity-planning request (counts as a response;
+    /// plans are never batched).
+    pub fn on_plan(&self, latency: Duration) {
+        self.plans.fetch_add(1, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.plan_latency_us_total
+            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+    }
+
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -55,6 +66,20 @@ impl Metrics {
 
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn plans(&self) -> u64 {
+        self.plans.load(Ordering::Relaxed)
+    }
+
+    /// Mean wall time per completed plan.
+    pub fn mean_plan_latency(&self) -> Duration {
+        let p = self.plans();
+        if p == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.plan_latency_us_total.load(Ordering::Relaxed) / p)
+        }
     }
 
     /// Mean requests per batch.
@@ -85,13 +110,14 @@ impl Metrics {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_batch_latency={:?}",
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_batch_latency={:?} plans={}",
             self.requests(),
             self.responses(),
             self.errors(),
             self.batches(),
             self.mean_batch_size(),
-            self.mean_batch_latency()
+            self.mean_batch_latency(),
+            self.plans()
         )
     }
 }
@@ -126,5 +152,18 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_size(), 0.0);
         assert_eq!(m.mean_batch_latency(), Duration::ZERO);
+        assert_eq!(m.mean_plan_latency(), Duration::ZERO);
+    }
+
+    #[test]
+    fn plans_count_as_responses() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_plan(Duration::from_micros(500));
+        assert_eq!(m.plans(), 1);
+        assert_eq!(m.responses(), 1);
+        assert_eq!(m.batches(), 0, "plans are not batches");
+        assert_eq!(m.mean_plan_latency(), Duration::from_micros(500));
+        assert!(m.summary().contains("plans=1"));
     }
 }

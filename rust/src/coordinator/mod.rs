@@ -5,7 +5,15 @@
 //! any cluster time is spent (the paper's OoM-prevention use case).
 //! The service accepts concurrent prediction requests, batches them into
 //! the AOT artifact's `[B, L, F]` capacity, executes one PJRT call per
-//! batch, and answers with [`crate::predictor::Prediction`]s.
+//! batch, and answers with [`crate::predictor::Prediction`]s. It also
+//! serves *what-if* capacity-planning requests
+//! ([`PredictionService::plan`]): a [`crate::planner::PlanRequest`]
+//! travels the same queue and comes back as the ranked OOM frontier.
+//!
+//! Two interchangeable backends: the PJRT-executed AOT artifact
+//! ([`PredictionService::start`], needs `make artifacts`) and the
+//! pure-Rust analytical mirror ([`PredictionService::start_analytical`],
+//! always available).
 //!
 //! Threads + channels (the environment has no tokio); the hot path is
 //! encode → pad → one `execute` per batch — Python is never involved.

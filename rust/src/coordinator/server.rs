@@ -1,7 +1,17 @@
-//! The prediction server: a worker thread owning the tensorized
-//! predictor, fed by an MPSC queue, batching requests per
-//! [`super::batcher::BatchPolicy`] and answering through per-request
-//! reply channels.
+//! The prediction server: a worker thread owning the predictor backend,
+//! fed by an MPSC queue, batching prediction requests per
+//! [`super::batcher::BatchPolicy`], serving capacity-planning requests
+//! ([`crate::planner`]) from the same queue, and answering through
+//! per-request reply channels.
+//!
+//! Two backends:
+//!
+//! * **tensorized** ([`PredictionService::start`]) — the AOT-compiled
+//!   HLO artifact executed via PJRT; requires `make artifacts`.
+//! * **analytical** ([`PredictionService::start_analytical`]) — the
+//!   pure-Rust mirror; always available, bit-for-bit the service
+//!   semantics of the tensorized path (the two predictors are
+//!   property-tested to agree).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -12,7 +22,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::parser::features;
-use crate::predictor::{tensorized::TensorizedPredictor, Prediction};
+use crate::planner::{self, Plan, PlanRequest};
+use crate::predictor::{analytical, tensorized::TensorizedPredictor, Prediction};
 
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
@@ -23,9 +34,36 @@ pub struct ServiceConfig {
     pub policy: BatchPolicy,
 }
 
-struct Job {
-    cfg: TrainConfig,
-    reply: SyncSender<Result<Prediction>>,
+/// The predictor the worker thread executes batches on.
+enum Backend {
+    Tensorized(TensorizedPredictor),
+    Analytical,
+}
+
+impl Backend {
+    fn predict_encoded(
+        &self,
+        requests: &[&features::EncodedRequest],
+    ) -> Result<Vec<Prediction>> {
+        match self {
+            Backend::Tensorized(tp) => tp.predict_encoded(requests),
+            Backend::Analytical => Ok(requests
+                .iter()
+                .map(|&r| analytical::predict_encoded(r))
+                .collect()),
+        }
+    }
+}
+
+enum Job {
+    Predict {
+        cfg: TrainConfig,
+        reply: SyncSender<Result<Prediction>>,
+    },
+    Plan {
+        req: PlanRequest,
+        reply: SyncSender<Result<Plan>>,
+    },
 }
 
 /// Handle to a running prediction service. Cloneable clients submit
@@ -40,29 +78,46 @@ pub struct PredictionService {
 }
 
 impl PredictionService {
-    /// Start the worker thread; the PJRT client and compiled artifacts
-    /// are not `Send`, so the tensorized predictor is constructed *on*
-    /// the worker thread (load errors surface here via a handshake).
+    /// Start the worker thread on the tensorized backend; the PJRT
+    /// client and compiled artifacts are not `Send`, so the predictor is
+    /// constructed *on* the worker thread (load errors surface here via
+    /// a handshake).
     pub fn start(artifacts_dir: &str, cfg: ServiceConfig) -> Result<Self> {
+        let dir = artifacts_dir.to_string();
+        Self::start_with(cfg, move || {
+            TensorizedPredictor::load(&dir).map(Backend::Tensorized)
+        })
+    }
+
+    /// Start the worker thread on the analytical backend — no artifacts
+    /// required, so startup cannot fail.
+    pub fn start_analytical(cfg: ServiceConfig) -> Self {
+        Self::start_with(cfg, || Ok(Backend::Analytical))
+            .expect("analytical backend startup is infallible")
+    }
+
+    fn start_with(
+        cfg: ServiceConfig,
+        make_backend: impl FnOnce() -> Result<Backend> + Send + 'static,
+    ) -> Result<Self> {
         let (tx, rx) = sync_channel::<Job>(1024);
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
-        let dir = artifacts_dir.to_string();
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let worker = std::thread::Builder::new()
             .name("mmpredict-batcher".into())
             .spawn(move || {
-                let predictor = match TensorizedPredictor::load(&dir) {
-                    Ok(p) => {
+                let backend = match make_backend() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        p
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                worker_loop(predictor, rx, cfg.policy, m)
+                worker_loop(backend, rx, cfg.policy, m)
             })
             .expect("spawning service worker");
         match ready_rx.recv() {
@@ -90,7 +145,24 @@ impl PredictionService {
         };
         self.metrics.on_request();
         let (reply_tx, reply_rx) = sync_channel(1);
-        tx.send(Job { cfg, reply: reply_tx })
+        tx.send(Job::Predict { cfg, reply: reply_tx })
+            .map_err(|_| anyhow!("prediction service is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+    }
+
+    /// Blocking capacity-planning request: answers "which configurations
+    /// fit this budget?" (the what-if query schedulers ask before
+    /// admitting a job). Runs on the worker thread; the planner fans its
+    /// simulator probes across the sweep engine's own thread pool.
+    pub fn plan(&self, req: PlanRequest) -> Result<Plan> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(anyhow!("prediction service is shut down"));
+        };
+        self.metrics.on_request();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        tx.send(Job::Plan { req, reply: reply_tx })
             .map_err(|_| anyhow!("prediction service is shut down"))?;
         reply_rx
             .recv()
@@ -147,7 +219,18 @@ impl Client {
         self.metrics.on_request();
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
-            .send(Job { cfg, reply: reply_tx })
+            .send(Job::Predict { cfg, reply: reply_tx })
+            .map_err(|_| anyhow!("prediction service is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+    }
+
+    pub fn plan(&self, req: PlanRequest) -> Result<Plan> {
+        self.metrics.on_request();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job::Plan { req, reply: reply_tx })
             .map_err(|_| anyhow!("prediction service is shut down"))?;
         reply_rx
             .recv()
@@ -156,7 +239,7 @@ impl Client {
 }
 
 fn worker_loop(
-    predictor: TensorizedPredictor,
+    backend: Backend,
     rx: Receiver<Job>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
@@ -166,42 +249,57 @@ fn worker_loop(
     let mut cache = features::EncodeCache::new(256);
     while let Some(batch) = next_batch(&rx, &policy) {
         let t0 = Instant::now();
-        let n = batch.len();
 
-        // Parse + encode each request; requests that fail to parse get
-        // their error immediately and drop out of the batch.
-        let mut encoded = Vec::with_capacity(n);
-        let mut replies = Vec::with_capacity(n);
+        // Split the drained batch: predictions execute as one padded
+        // PJRT/analytical call, plans run one at a time afterwards (a
+        // plan is a whole search, not a batchable row).
+        let mut encoded = Vec::new();
+        let mut replies = Vec::new();
+        let mut plans = Vec::new();
         for job in batch {
-            match cache.get_or_encode(&job.cfg) {
-                Ok(enc) => {
-                    encoded.push(enc);
-                    replies.push(job.reply);
+            match job {
+                Job::Predict { cfg, reply } => match cache.get_or_encode(&cfg) {
+                    Ok(enc) => {
+                        encoded.push(enc);
+                        replies.push(reply);
+                    }
+                    Err(e) => {
+                        metrics.on_error(1);
+                        let _ = reply.send(Err(e));
+                    }
+                },
+                Job::Plan { req, reply } => plans.push((req, reply)),
+            }
+        }
+
+        if !encoded.is_empty() {
+            let refs: Vec<&features::EncodedRequest> =
+                encoded.iter().map(|e| e.as_ref()).collect();
+            match backend.predict_encoded(&refs) {
+                Ok(preds) => {
+                    metrics.on_batch(replies.len(), t0.elapsed());
+                    for (reply, p) in replies.into_iter().zip(preds) {
+                        let _ = reply.send(Ok(p));
+                    }
                 }
                 Err(e) => {
-                    metrics.on_error(1);
-                    let _ = job.reply.send(Err(e));
+                    metrics.on_error(replies.len());
+                    let msg = format!("batch execution failed: {e:#}");
+                    for reply in replies {
+                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                    }
                 }
             }
         }
-        if encoded.is_empty() {
-            continue;
-        }
-        let refs: Vec<&features::EncodedRequest> = encoded.iter().map(|e| e.as_ref()).collect();
-        match predictor.predict_encoded(&refs) {
-            Ok(preds) => {
-                metrics.on_batch(replies.len(), t0.elapsed());
-                for (reply, p) in replies.into_iter().zip(preds) {
-                    let _ = reply.send(Ok(p));
-                }
+
+        for (req, reply) in plans {
+            let t_plan = Instant::now();
+            let r = planner::plan(&req);
+            match &r {
+                Ok(_) => metrics.on_plan(t_plan.elapsed()),
+                Err(_) => metrics.on_error(1),
             }
-            Err(e) => {
-                metrics.on_error(replies.len());
-                let msg = format!("batch execution failed: {e:#}");
-                for reply in replies {
-                    let _ = reply.send(Err(anyhow!(msg.clone())));
-                }
-            }
+            let _ = reply.send(r);
         }
     }
 }

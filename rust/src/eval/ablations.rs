@@ -1,6 +1,6 @@
-//! Ablations beyond Fig. 2 (DESIGN.md experiment index: abl-stage,
-//! abl-factor, abl-zero, abl-lora): the design-choice studies the
-//! framework enables. Every simulator-side grid goes through the
+//! Ablations beyond Fig. 2 (ARCHITECTURE.md experiment index:
+//! abl-stage, abl-factor, abl-zero, abl-lora): the design-choice
+//! studies the framework enables. Every simulator-side grid goes through the
 //! parallel sweep engine ([`crate::sweep`]); predictor calls stay on
 //! the caller's thread.
 

@@ -1,5 +1,5 @@
 //! Evaluation harness: regenerates every figure/table of the paper plus
-//! the ablations DESIGN.md commits to (experiment index: DESIGN.md).
+//! the design-choice ablations (experiment index: ARCHITECTURE.md).
 
 pub mod ablations;
 pub mod fig2;

@@ -13,6 +13,14 @@
 //!   sessions arrive, hold their KV across turns, and an admission
 //!   policy bounds concurrency; the analytic capacity formula is
 //!   validated against the simulated peak.
+//!
+//! The training-side architecture is reused wholesale: KV bytes per
+//! token come from the decoder blocks of the same
+//! [`crate::model::zoo`] entry the training predictor parses, so a
+//! model added to the zoo gets inference prediction for free. Entry
+//! points: [`predict_inference`] for the capacity formula (`repro
+//! infer` on the CLI) and [`simulate_serving`] for the multi-turn
+//! simulation (`examples/agent_serving.rs`).
 
 pub mod kv;
 pub mod serving;

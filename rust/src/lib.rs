@@ -12,8 +12,10 @@
 //!   simulator that serves as measured ground truth ([`simulator`]),
 //!   prior-work baselines ([`baselines`]), a batched prediction service
 //!   ([`coordinator`]), a parallel config-grid sweep engine ([`sweep`]),
-//!   and the evaluation harness regenerating every figure of the paper
-//!   ([`eval`], [`report`]).
+//!   an OOM-safe capacity planner that searches the safe-configuration
+//!   frontier under a memory budget ([`planner`]), and the evaluation
+//!   harness regenerating every figure of the paper ([`eval`],
+//!   [`report`]).
 //! * **L2/L1 (python/, build-time only)** — the batched factorization +
 //!   liveness-scan compute graph, with the per-layer factor math and the
 //!   timeline scan written as Pallas kernels, AOT-lowered to HLO text in
@@ -27,7 +29,42 @@
 //!
 //! refined with an activation-liveness timeline (forward/backward
 //! transient peaks) and operational overheads (allocator behaviour,
-//! ZeRO-2 gradient buckets, CUDA context) — see `DESIGN.md`.
+//! ZeRO-2 gradient buckets, CUDA context) — see the repository's
+//! `ARCHITECTURE.md` for the module-by-module mapping of the paper's
+//! pipeline and the invariants each boundary guarantees.
+//!
+//! ## Quick start
+//!
+//! Predict a configuration, cross-check it against the simulator, and
+//! ask the planner what *would* fit an 80 GiB GPU:
+//!
+//! ```no_run
+//! use mmpredict::config::TrainConfig;
+//! use mmpredict::planner::{plan, Axes, PlanRequest};
+//! use mmpredict::{predictor, simulator};
+//!
+//! let cfg = TrainConfig::fig2b(8); // LLaVA-1.5-7B, SeqLen 2048, MBS 8, ZeRO-2
+//! let predicted = predictor::predict(&cfg)?;
+//! let measured = simulator::simulate(&cfg)?;
+//! println!("predicted {:.1} GiB, simulated {:.1} GiB",
+//!          predicted.peak_gib(), measured.peak_gib());
+//!
+//! let base = TrainConfig::llava_finetune_default();
+//! let request = PlanRequest {
+//!     axes: Axes::standard(&base),
+//!     base,
+//!     budget_mib: 80.0 * 1024.0,
+//! };
+//! for c in plan(&request)?.recommended().take(3) {
+//!     println!("dp{} seq{} mbs{} -> {:.1} GiB", c.cfg.dp, c.cfg.seq_len,
+//!              c.cfg.mbs, c.simulated_mib / 1024.0);
+//! }
+//! # anyhow::Ok(())
+//! ```
+//!
+//! The same surface is scriptable via the `repro` binary (`repro
+//! predict`, `repro plan`, …) — see the repository `README.md` for the
+//! full CLI reference.
 
 pub mod baselines;
 pub mod config;
@@ -36,6 +73,7 @@ pub mod eval;
 pub mod inference;
 pub mod model;
 pub mod parser;
+pub mod planner;
 pub mod predictor;
 pub mod report;
 pub mod runtime;

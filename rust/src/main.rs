@@ -1,27 +1,49 @@
 //! `repro` — the mmpredict command line.
 //!
-//! Subcommands:
+//! Subcommands are declared once in the `SUBCOMMANDS` table — the dispatch
+//! table, the `--help` text and the README CLI reference (asserted by a
+//! test) all derive from it, so they cannot drift:
 //!
 //! * `predict`   — predict peak GPU memory for a training configuration
 //!   (analytical by default; `--tensorized` routes through the AOT
 //!   artifact via PJRT).
 //! * `simulate`  — run the ground-truth simulator and print the
 //!   measurement with its factor attribution.
+//! * `plan`      — search the OOM-safe configuration frontier under a
+//!   per-GPU memory budget and rank it by throughput (the capacity
+//!   planner).
 //! * `eval`      — regenerate the paper's Fig. 2a/2b sweeps (+ CSV).
 //! * `sweep`     — fan a config grid (DP × MBS × SeqLen × ZeRO) across
 //!   cores through the parallel sweep engine; predicted vs measured per
 //!   point plus capacity verdicts.
-//! * `ablations` — the DESIGN.md ablation tables.
+//! * `ablations` — the ARCHITECTURE.md ablation tables.
 //! * `baselines` — compare against Fujii/LLMem/profiling baselines.
+//! * `infer`     — inference/KV-cache memory prediction (§5 extension).
 //! * `zoo`       — list available model presets.
 
 use anyhow::{bail, Context, Result};
 
 use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
 use mmpredict::model::layer::AttnImpl;
+use mmpredict::planner::{Axes, PlanRequest};
 use mmpredict::util::cli::Args;
 use mmpredict::util::units::human_mib;
-use mmpredict::{baselines, eval, parser, predictor, report, simulator, sweep, zoo};
+use mmpredict::{baselines, eval, parser, planner, predictor, report, simulator, sweep, zoo};
+
+/// The single source of truth for the CLI surface: name, one-line
+/// description, handler. Dispatch, help and the README reference all
+/// derive from this table.
+const SUBCOMMANDS: &[(&str, &str, fn(&Args) -> Result<()>)] = &[
+    ("predict", "predict peak GPU memory for a training configuration", cmd_predict),
+    ("simulate", "simulate one iteration and print the measured peak + attribution", cmd_simulate),
+    ("plan", "search the OOM-safe config frontier under a memory budget", cmd_plan),
+    ("eval", "regenerate the paper's Fig. 2a/2b sweeps (+ CSV)", cmd_eval),
+    ("sweep", "fan a config grid across cores; predicted vs measured per point", cmd_sweep),
+    ("ablations", "factor/stage/ZeRO/LoRA/attention ablation tables", cmd_ablations),
+    ("baselines", "compare against Fujii/LLMem/profiling baselines", cmd_baselines),
+    ("infer", "inference/KV-cache memory prediction", cmd_infer),
+    ("zoo", "list available model presets", cmd_zoo),
+];
 
 fn main() {
     let args = Args::from_env();
@@ -33,15 +55,17 @@ fn main() {
 
 fn run(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
-        Some("predict") => cmd_predict(args),
-        Some("simulate") => cmd_simulate(args),
-        Some("eval") => cmd_eval(args),
-        Some("sweep") => cmd_sweep(args),
-        Some("ablations") => cmd_ablations(args),
-        Some("baselines") => cmd_baselines(args),
-        Some("infer") => cmd_infer(args),
-        Some("zoo") => cmd_zoo(),
-        Some(other) => bail!("unknown subcommand {other:?}; see --help"),
+        Some(name) => match SUBCOMMANDS.iter().find(|(n, _, _)| *n == name) {
+            Some((_, _, handler)) => handler(args),
+            None => bail!(
+                "unknown subcommand {name:?}; available: {}",
+                SUBCOMMANDS
+                    .iter()
+                    .map(|(n, _, _)| *n)
+                    .collect::<Vec<_>>()
+                    .join("|")
+            ),
+        },
         None => {
             print_help();
             Ok(())
@@ -50,10 +74,15 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn print_help() {
+    let names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _, _)| *n).collect();
+    println!("repro — GPU memory prediction for multimodal model training\n");
+    println!("usage: repro <{}> [options]\n", names.join("|"));
+    println!("subcommands:");
+    for (name, desc, _) in SUBCOMMANDS {
+        println!("  {name:<10} {desc}");
+    }
     println!(
-        "repro — GPU memory prediction for multimodal model training\n\n\
-         usage: repro <predict|simulate|eval|sweep|ablations|baselines|infer|zoo> [options]\n\n\
-         common options:\n\
+        "\ncommon options:\n\
          \x20 --config <file.toml>      load a training config file\n\
          \x20 --model <name>            zoo model (default llava-1.5-7b)\n\
          \x20 --stage <pretrain|finetune|lora|full>\n\
@@ -64,6 +93,20 @@ fn print_help() {
          \x20 --tensorized              execute the AOT artifact via PJRT\n\
          \x20 --artifacts <dir>         artifact directory (default artifacts/)\n\
          \x20 --capacity-gib <G>        also report whether the run fits\n\
+         plan options:\n\
+         \x20 --budget-mib M | --budget-gib G   per-GPU budget (default 80 GiB)\n\
+         \x20 --mbs-list 1,2,4,8,16,32  micro-batch ladder to bisect\n\
+         \x20 --seq-list 512,...,4096   sequence-length candidates\n\
+         \x20 --dp-list 1,2,4,8         DP candidates\n\
+         \x20 (passing plain --mbs/--seq-len/--dp pins that axis instead)\n\
+         \x20 --zero-list 0,2,3         free the ZeRO axis\n\
+         \x20 --precision-list bf16,fp32  free the precision axis\n\
+         \x20 --stage-list finetune,lora  free the training-stage axis\n\
+         \x20 --top N                   rows to print (default 12)\n\
+         \x20 --all                     include dominated rows\n\
+         \x20 --json                    emit the full plan as JSON\n\
+         \x20 --csv <file>              write the frontier as CSV\n\
+         \x20 --threads N               sweep worker threads\n\
          eval options:\n\
          \x20 --figure <2a|2b|all>      which sweep (default all)\n\
          \x20 --out <dir>               write CSVs (default results/)\n\
@@ -98,6 +141,124 @@ fn u64_list(args: &Args, name: &str, default: Vec<u64>) -> Result<Vec<u64>> {
             Ok(vals)
         }
     }
+}
+
+/// Parse a comma-separated list of names through `parse_one`.
+fn name_list<T>(
+    args: &Args,
+    name: &str,
+    parse_one: impl Fn(&str) -> Result<T>,
+) -> Result<Option<Vec<T>>> {
+    let Some(s) = args.get(name) else { return Ok(None) };
+    let vals: Vec<T> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(&parse_one)
+        .collect::<Result<_>>()?;
+    if vals.is_empty() {
+        bail!("--{name} must list at least one value");
+    }
+    Ok(Some(vals))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let base = config_from_args(args)?;
+    let budget_mib = match (
+        args.get_parse::<f64>("budget-mib")?,
+        args.get_parse::<f64>("budget-gib")?,
+    ) {
+        (Some(m), None) => m,
+        (None, Some(g)) => g * 1024.0,
+        (None, None) => 80.0 * 1024.0, // H100-80GB default
+        (Some(_), Some(_)) => bail!("pass either --budget-mib or --budget-gib, not both"),
+    };
+
+    let mut axes = Axes::standard(&base);
+    // The base config's own geometry is always part of the search
+    // space (a --config seq_len of e.g. 333 must get evaluated even
+    // though it is not on the standard ladder)...
+    axes.mbs.push(base.mbs);
+    axes.seq_len.push(base.seq_len);
+    axes.dp.push(base.dp);
+    // ...and explicitly passing the single-value common option pins
+    // that axis, consistent with how --zero/--precision/--stage pin
+    // theirs; a --*-list flag frees the axis again below.
+    if args.get("mbs").is_some() {
+        axes.mbs = vec![base.mbs];
+    }
+    if args.get("seq-len").is_some() {
+        axes.seq_len = vec![base.seq_len];
+    }
+    if args.get("dp").is_some() {
+        axes.dp = vec![base.dp];
+    }
+    axes.mbs = u64_list(args, "mbs-list", axes.mbs)?;
+    axes.seq_len = u64_list(args, "seq-list", axes.seq_len)?;
+    axes.dp = u64_list(args, "dp-list", axes.dp)?;
+    if args.get("zero-list").is_some() {
+        axes.zero = u64_list(args, "zero-list", vec![])?
+            .into_iter()
+            .map(ZeroStage::parse)
+            .collect::<Result<_>>()?;
+    }
+    if let Some(ps) = name_list(args, "precision-list", Precision::parse)? {
+        axes.precision = ps;
+    }
+    if let Some(ss) = name_list(args, "stage-list", Stage::parse)? {
+        axes.stage = ss;
+    }
+
+    let req = PlanRequest { base, budget_mib, axes };
+    let threads = args
+        .get_parse::<usize>("threads")?
+        .unwrap_or_else(sweep::default_threads);
+    let engine = sweep::Sweep::new(threads);
+    let t0 = std::time::Instant::now();
+    let plan = planner::plan_with(&req, &engine)?;
+    let dt = t0.elapsed();
+
+    if let Some(path) = args.get("csv") {
+        let full = report::frontier_table(&plan, usize::MAX, true);
+        std::fs::write(path, full.to_csv()).with_context(|| format!("writing {path}"))?;
+        if !args.flag("json") {
+            println!("wrote {path}");
+        }
+    }
+    if args.flag("json") {
+        println!("{}", report::plan_json(&plan).to_string());
+        return Ok(());
+    }
+
+    let top = args.get_parse::<usize>("top")?.unwrap_or(12);
+    let table = report::frontier_table(&plan, top, args.flag("all"));
+    println!(
+        "== capacity plan: {} under {} ==",
+        req.base.model,
+        human_mib(budget_mib)
+    );
+    if plan.candidates.is_empty() {
+        println!(
+            "no configuration in the search space fits {} — \
+             every branch OOMs at its smallest micro-batch",
+            human_mib(budget_mib)
+        );
+    } else {
+        println!("{}", table.render());
+    }
+    let s = &plan.stats;
+    println!(
+        "{} branches ({} feasible); {} simulations instead of the {}-point full grid \
+         (+{} predictor probes) in {:.3?} on {} worker threads",
+        s.branches,
+        s.feasible_branches,
+        s.sim_points,
+        s.grid_points,
+        s.predictor_probes,
+        dt,
+        engine.threads()
+    );
+    Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -144,7 +305,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mut row = vec![
             cfg.seq_len.to_string(),
             cfg.mbs.to_string(),
-            format!("{:?}", cfg.zero).trim_start_matches("Zero").to_string(),
+            cfg.zero.as_int().to_string(),
             cfg.dp.to_string(),
             format!("{:.2}", p / 1024.0),
             format!("{:.2}", m / 1024.0),
@@ -399,7 +560,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_zoo() -> Result<()> {
+fn cmd_zoo(_args: &Args) -> Result<()> {
     println!("available models:");
     for name in zoo::names() {
         let e = zoo::build(name, 2048, AttnImpl::Flash)?;
@@ -412,4 +573,50 @@ fn cmd_zoo() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The README's CLI reference is written as one `### `repro <name>``
+    /// heading per subcommand; this pins the heading set to the dispatch
+    /// table so docs and help text cannot drift.
+    #[test]
+    fn readme_cli_reference_matches_dispatch_table() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+        let readme = std::fs::read_to_string(path).expect("README.md at the repo root");
+        let mut documented: Vec<&str> = readme
+            .lines()
+            .filter_map(|l| l.strip_prefix("### `repro "))
+            .filter_map(|rest| rest.split('`').next())
+            .filter_map(|cmd| cmd.split_whitespace().next())
+            .collect();
+        documented.sort_unstable();
+        documented.dedup();
+        let mut have: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _, _)| *n).collect();
+        have.sort_unstable();
+        assert_eq!(
+            documented, have,
+            "README.md CLI reference (### `repro <cmd>` headings) is out of sync \
+             with the SUBCOMMANDS dispatch table in main.rs"
+        );
+    }
+
+    #[test]
+    fn dispatch_table_names_are_unique() {
+        let mut names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _, _)| *n).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn unknown_subcommand_errors_and_names_alternatives() {
+        let args = Args::parse(["frobnicate".to_string()]);
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("frobnicate"));
+        assert!(err.contains("plan"), "error should list valid subcommands: {err}");
+    }
 }

@@ -49,6 +49,16 @@ pub fn names() -> &'static [&'static str] {
 /// Build a preset. `seq_len` sizes the decoder's attention ops (training
 /// context length); `attn` selects the language-tower attention
 /// implementation (the CLIP vision tower is always eager, as in HF).
+///
+/// ```
+/// use mmpredict::model::layer::AttnImpl;
+/// use mmpredict::zoo;
+///
+/// let entry = zoo::build("llava-tiny", 128, AttnImpl::Flash).unwrap();
+/// assert_eq!(entry.spec.modules.len(), 3); // vision, projector, decoder
+/// assert!(entry.spec.param_elems() > 0);
+/// assert!(zoo::build("gpt-5", 128, AttnImpl::Flash).is_err());
+/// ```
 pub fn build(name: &str, seq_len: u64, attn: AttnImpl) -> Result<ZooEntry> {
     match name {
         "llava-1.5-7b" => Ok(llava(

@@ -1,4 +1,4 @@
-//! Feature encoding: [`LayerRecord`]s → the `[L, F]` f32 matrix + the
+//! Feature encoding: [`LayerRecord`](super::LayerRecord)s → the `[L, F]` f32 matrix + the
 //! per-request overhead vector consumed by the AOT factor-predictor
 //! artifact (and by the pure-Rust analytical mirror).
 //!

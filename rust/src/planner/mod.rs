@@ -1,0 +1,546 @@
+//! Capacity planner: search the OOM frontier of a training-configuration
+//! space under a per-GPU memory budget — the paper's deployment story
+//! (§1: a prediction is only useful if it gates job admission *before*
+//! cluster time is spent).
+//!
+//! Given a partially-fixed [`TrainConfig`], a memory budget and
+//! candidate ladders for the free dimensions ([`Axes`]), the planner
+//! finds, for every *branch* (a full assignment of the non-mbs
+//! dimensions), the largest micro-batch size whose **simulated** peak
+//! fits the budget — the OOM frontier — and ranks the safe maximal
+//! configs by a throughput proxy ([`throughput_proxy`]: tokens per
+//! optimizer step per GPU).
+//!
+//! The search is layered on the parallel sweep engine ([`crate::sweep`]):
+//!
+//! 1. a coarse pass runs the cheap analytical predictor over the whole
+//!    candidate grid in one parse-once parallel batch (dp/ZeRO variants
+//!    share a parse) and reads each branch's frontier guess off it;
+//! 2. a refinement pass bisects each branch's mbs ladder with the
+//!    ground-truth simulator, fanning each round's probes across the
+//!    sweep workers (one reused [`crate::simulator::SimContext`] per
+//!    worker);
+//! 3. every recommended config is therefore *validated by the
+//!    simulator*, and its immediate mbs escalation is either simulated
+//!    to exceed the budget ([`PlanCandidate::escalation`]) or the
+//!    ladder ended first ([`PlanCandidate::frontier_open`]).
+//!
+//! Output is deterministic: branches are enumerated in a fixed nested
+//! order, bisection probes depend only on prior simulated values, and
+//! ranking breaks ties on the full config fingerprint.
+//!
+//! ```
+//! use mmpredict::config::TrainConfig;
+//! use mmpredict::planner::{plan, Axes, PlanRequest};
+//!
+//! let base = TrainConfig {
+//!     model: "llava-tiny".into(),
+//!     mbs: 1,
+//!     seq_len: 32,
+//!     ..TrainConfig::llava_finetune_default()
+//! };
+//! let axes = Axes { mbs: vec![1, 2, 4], seq_len: vec![32, 64], ..Axes::fixed(&base) };
+//! let plan = plan(&PlanRequest { base, budget_mib: 6144.0, axes }).unwrap();
+//! for c in plan.recommended() {
+//!     assert!(c.simulated_mib <= 6144.0);
+//! }
+//! ```
+
+mod search;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Precision, Stage, TrainConfig, ZeroStage};
+use crate::model::layer::AttnImpl;
+use crate::model::lora::LoraConfig;
+use crate::parser::features;
+use crate::predictor::analytical;
+use crate::sweep::Sweep;
+
+use search::{frontier_search, Branch};
+
+/// Candidate values per searchable dimension. A one-element axis pins
+/// that dimension; multi-element axes are searched. The numeric ladders
+/// (`mbs`, `seq_len`, `dp`) are sorted ascending and deduplicated before
+/// the search runs.
+#[derive(Clone, Debug)]
+pub struct Axes {
+    /// Micro-batch sizes, ascending — the bisected ladder.
+    pub mbs: Vec<u64>,
+    /// Sequence lengths, ascending.
+    pub seq_len: Vec<u64>,
+    /// Data-parallel degrees.
+    pub dp: Vec<u64>,
+    /// ZeRO stages.
+    pub zero: Vec<ZeroStage>,
+    /// Precision policies.
+    pub precision: Vec<Precision>,
+    /// Training stages (e.g. full fine-tune vs LoRA).
+    pub stage: Vec<Stage>,
+}
+
+impl Axes {
+    /// Every dimension pinned to the base config's value.
+    pub fn fixed(base: &TrainConfig) -> Self {
+        Axes {
+            mbs: vec![base.mbs],
+            seq_len: vec![base.seq_len],
+            dp: vec![base.dp],
+            zero: vec![base.zero],
+            precision: vec![base.precision],
+            stage: vec![base.stage],
+        }
+    }
+
+    /// The default search space: free micro-batch-size, sequence-length
+    /// and DP ladders around common training settings; ZeRO stage,
+    /// precision and training stage stay pinned to the base config
+    /// (free them explicitly — on the CLI via `--zero-list`,
+    /// `--precision-list` and `--stage-list`).
+    pub fn standard(base: &TrainConfig) -> Self {
+        Axes {
+            mbs: vec![1, 2, 4, 8, 16, 32],
+            seq_len: vec![512, 1024, 2048, 4096],
+            dp: vec![1, 2, 4, 8],
+            ..Self::fixed(base)
+        }
+    }
+
+    /// Sorted/deduplicated copy; rejects empty or zero-valued axes.
+    fn normalized(&self) -> Result<Self> {
+        fn nums(name: &str, v: &[u64]) -> Result<Vec<u64>> {
+            let mut out = v.to_vec();
+            out.sort_unstable();
+            out.dedup();
+            if out.is_empty() {
+                bail!("axis {name} has no candidate values");
+            }
+            if out[0] == 0 {
+                bail!("axis {name} contains 0");
+            }
+            Ok(out)
+        }
+        fn uniq<T: PartialEq + Copy>(name: &str, v: &[T]) -> Result<Vec<T>> {
+            let mut out: Vec<T> = Vec::new();
+            for &x in v {
+                if !out.contains(&x) {
+                    out.push(x);
+                }
+            }
+            if out.is_empty() {
+                bail!("axis {name} has no candidate values");
+            }
+            Ok(out)
+        }
+        Ok(Axes {
+            mbs: nums("mbs", &self.mbs)?,
+            seq_len: nums("seq_len", &self.seq_len)?,
+            dp: nums("dp", &self.dp)?,
+            zero: uniq("zero", &self.zero)?,
+            precision: uniq("precision", &self.precision)?,
+            stage: uniq("stage", &self.stage)?,
+        })
+    }
+}
+
+/// A capacity-planning request: the partially-fixed base config, the
+/// per-GPU memory budget and the search space.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    /// Base configuration; fields not covered by an axis (model,
+    /// optimizer, attention, checkpointing, overheads, …) are taken
+    /// from here unchanged.
+    pub base: TrainConfig,
+    /// Per-GPU memory budget in MiB (e.g. 81920 for an 80 GiB H100).
+    pub budget_mib: f64,
+    /// Candidate values for the searched dimensions.
+    pub axes: Axes,
+}
+
+/// The simulated proof that a candidate is maximal: its immediate mbs
+/// escalation and that escalation's simulated peak (> budget).
+#[derive(Clone, Copy, Debug)]
+pub struct Escalation {
+    /// The next mbs rung above the recommended config.
+    pub mbs: u64,
+    /// That rung's simulated peak (MiB) — exceeds the budget.
+    pub simulated_mib: f64,
+}
+
+/// One safe, mbs-maximal configuration on the OOM frontier.
+#[derive(Clone, Debug)]
+pub struct PlanCandidate {
+    pub cfg: TrainConfig,
+    /// Analytical predictor's peak for `cfg` (MiB) — reported so
+    /// operators can see predictor-vs-simulator agreement per row.
+    pub predicted_mib: f64,
+    /// Ground-truth simulated peak for `cfg` (MiB); always ≤ budget.
+    pub simulated_mib: f64,
+    /// Budget minus simulated peak (MiB).
+    pub headroom_mib: f64,
+    /// Throughput-proxy ranking score (see [`throughput_proxy`]).
+    pub tokens_per_step: f64,
+    /// True when every mbs rung of this branch fit: the real frontier
+    /// lies beyond the candidate ladder, so no escalation was simulated.
+    pub frontier_open: bool,
+    /// The failing escalation probe (`None` iff `frontier_open`).
+    pub escalation: Option<Escalation>,
+    /// True when another safe config with the same (dp, zero, precision,
+    /// stage) has mbs and seq_len both at least as large (and one
+    /// strictly larger) — the staircase interior. Dominated rows are
+    /// kept for inspection but excluded from [`Plan::recommended`].
+    pub dominated: bool,
+}
+
+/// Search-cost accounting for one plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// Branches searched (product of the non-mbs axis lengths).
+    pub branches: usize,
+    /// Branches with at least one fitting rung.
+    pub feasible_branches: usize,
+    /// What a naive full-grid sweep would simulate
+    /// (`branches * mbs ladder length`).
+    pub grid_points: usize,
+    /// Simulations the bisection actually ran.
+    pub sim_points: usize,
+    /// Analytical-predictor evaluations spent on guess seeding — one
+    /// per grid point, run as a single parse-once parallel batch (far
+    /// cheaper than simulations; see EXPERIMENTS.md §Planner).
+    pub predictor_probes: usize,
+}
+
+/// A completed capacity plan: the ranked OOM frontier plus search
+/// statistics.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The budget the plan was computed against (MiB).
+    pub budget_mib: f64,
+    /// Every frontier config, ranked by `tokens_per_step` descending
+    /// (ties: smaller simulated peak first, then config fingerprint).
+    /// Includes dominated rows, flagged.
+    pub candidates: Vec<PlanCandidate>,
+    pub stats: PlanStats,
+}
+
+impl Plan {
+    /// The recommendation list: frontier configs not dominated by
+    /// another safe config, best throughput first.
+    pub fn recommended(&self) -> impl Iterator<Item = &PlanCandidate> + '_ {
+        self.candidates.iter().filter(|c| !c.dominated)
+    }
+}
+
+/// Deterministic tokens-per-optimizer-step-per-GPU proxy used to rank
+/// frontier configs. Absolute values are meaningless; only the ordering
+/// matters. The discount factors are coarse, documented constants:
+///
+/// * activation checkpointing replays the forward inside backward
+///   (~1/3 extra compute) — ×0.75;
+/// * ZeRO stages add collective traffic, worst for ZeRO-3 parameter
+///   re-gathering — ×0.98 / ×0.95 / ×0.85 for stages 1 / 2 / 3;
+/// * fp32 halves tensor-core throughput vs bf16/fp16 — ×0.5;
+/// * eager attention materializes the score matrix and is
+///   bandwidth-bound past ~2k tokens vs flash — ×0.85;
+/// * LoRA shrinks the optimizer step to the adapters — ×1.05.
+pub fn throughput_proxy(cfg: &TrainConfig) -> f64 {
+    let tokens = (cfg.mbs * cfg.seq_len) as f64;
+    let mut eff = 1.0;
+    if cfg.grad_checkpoint {
+        eff *= 0.75;
+    }
+    eff *= match cfg.zero {
+        ZeroStage::Zero0 => 1.0,
+        ZeroStage::Zero1 => 0.98,
+        ZeroStage::Zero2 => 0.95,
+        ZeroStage::Zero3 => 0.85,
+    };
+    if cfg.precision == Precision::Fp32 {
+        eff *= 0.5;
+    }
+    if cfg.attn == AttnImpl::Eager && cfg.seq_len >= 2048 {
+        eff *= 0.85;
+    }
+    if cfg.stage == Stage::LoraFinetune {
+        eff *= 1.05;
+    }
+    tokens * eff
+}
+
+/// Plan with a worker-per-core sweep engine. See the module docs; this
+/// is the planner's one-call public entry point.
+pub fn plan(req: &PlanRequest) -> Result<Plan> {
+    plan_with(req, &Sweep::default())
+}
+
+/// Plan through a caller-configured sweep engine (thread count).
+pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
+    if !req.budget_mib.is_finite() || req.budget_mib <= 0.0 {
+        bail!("budget_mib must be positive and finite, got {}", req.budget_mib);
+    }
+    req.base.validate()?;
+    let axes = req.axes.normalized()?;
+
+    // Branch enumeration in a fixed nested order (stage > precision >
+    // zero > dp > seq_len) keeps the whole search deterministic.
+    let mut branches: Vec<Branch> = Vec::new();
+    for &stage in &axes.stage {
+        for &precision in &axes.precision {
+            for &zero in &axes.zero {
+                for &dp in &axes.dp {
+                    for &seq_len in &axes.seq_len {
+                        let rungs: Vec<TrainConfig> = axes
+                            .mbs
+                            .iter()
+                            .map(|&mbs| {
+                                branch_cfg(&req.base, stage, precision, zero, dp, seq_len, mbs)
+                            })
+                            .collect();
+                        for r in &rungs {
+                            r.validate()?;
+                        }
+                        branches.push(Branch { rungs });
+                    }
+                }
+            }
+        }
+    }
+
+    // Coarse pass: analytical prediction of the whole candidate grid in
+    // ONE parse-once parallel batch — dp/ZeRO variants share a parse and
+    // the per-point cost after parsing is just encode + the factor math,
+    // far below a simulation. Each branch's frontier guess is read off
+    // the predicted grid; a wrong guess only costs extra bisection
+    // rounds.
+    let rungs_per_branch = axes.mbs.len();
+    let flat: Vec<TrainConfig> = branches
+        .iter()
+        .flat_map(|b| b.rungs.iter().cloned())
+        .collect();
+    let predicted: Vec<f64> = engine.run(&flat, |_ctx, pm, cfg| {
+        Ok(analytical::predict_encoded(&features::encode(pm, cfg)).peak_mib as f64)
+    })?;
+    let predictor_probes = flat.len();
+    let guesses: Vec<usize> = (0..branches.len())
+        .map(|bi| {
+            let preds = &predicted[bi * rungs_per_branch..(bi + 1) * rungs_per_branch];
+            preds
+                .iter()
+                .rposition(|&p| p <= req.budget_mib)
+                .unwrap_or(0)
+        })
+        .collect();
+
+    // Refinement: ground-truth simulator bisection, probes batched
+    // through the sweep engine each round.
+    let (outcomes, sim_points) = frontier_search(&branches, &guesses, req.budget_mib, engine)?;
+
+    let mut candidates = Vec::new();
+    let mut feasible = 0usize;
+    for (bi, (branch, out)) in branches.iter().zip(&outcomes).enumerate() {
+        let Some(idx) = out.frontier else { continue };
+        feasible += 1;
+        let cfg = branch.rungs[idx].clone();
+        let simulated = out.probed[idx]
+            .as_ref()
+            .expect("frontier rung was simulated")
+            .peak_mib;
+        let escalation = if out.open {
+            None
+        } else {
+            let up = &branch.rungs[idx + 1];
+            let m = out.probed[idx + 1]
+                .as_ref()
+                .expect("failing escalation was simulated");
+            Some(Escalation { mbs: up.mbs, simulated_mib: m.peak_mib })
+        };
+        candidates.push(PlanCandidate {
+            predicted_mib: predicted[bi * rungs_per_branch + idx],
+            simulated_mib: simulated,
+            headroom_mib: req.budget_mib - simulated,
+            tokens_per_step: throughput_proxy(&cfg),
+            frontier_open: out.open,
+            escalation,
+            dominated: false,
+            cfg,
+        });
+    }
+
+    mark_dominated(&mut candidates);
+    candidates.sort_by(|a, b| {
+        b.tokens_per_step
+            .total_cmp(&a.tokens_per_step)
+            .then(a.simulated_mib.total_cmp(&b.simulated_mib))
+            .then_with(|| a.cfg.cache_key().cmp(&b.cfg.cache_key()))
+    });
+
+    Ok(Plan {
+        budget_mib: req.budget_mib,
+        stats: PlanStats {
+            branches: branches.len(),
+            feasible_branches: feasible,
+            grid_points: branches.len() * axes.mbs.len(),
+            sim_points,
+            predictor_probes,
+        },
+        candidates,
+    })
+}
+
+/// Build one branch config from the base and an axis assignment.
+fn branch_cfg(
+    base: &TrainConfig,
+    stage: Stage,
+    precision: Precision,
+    zero: ZeroStage,
+    dp: u64,
+    seq_len: u64,
+    mbs: u64,
+) -> TrainConfig {
+    let mut c = base.clone();
+    c.stage = stage;
+    c.precision = precision;
+    c.zero = zero;
+    c.dp = dp;
+    c.seq_len = seq_len;
+    c.mbs = mbs;
+    if c.stage == Stage::LoraFinetune && c.lora.is_none() {
+        c.lora = Some(LoraConfig::default());
+    }
+    c
+}
+
+/// Flag staircase-interior rows: within a group sharing every
+/// non-(mbs, seq_len) dimension, a config is dominated when another
+/// safe config is at least as large in both mbs and seq_len and
+/// strictly larger in one.
+fn mark_dominated(cands: &mut [PlanCandidate]) {
+    for i in 0..cands.len() {
+        for j in 0..cands.len() {
+            if i == j {
+                continue;
+            }
+            let (a, b) = (&cands[i].cfg, &cands[j].cfg);
+            let same_group = a.dp == b.dp
+                && a.zero == b.zero
+                && a.precision == b.precision
+                && a.stage == b.stage;
+            if same_group
+                && b.seq_len >= a.seq_len
+                && b.mbs >= a.mbs
+                && (b.seq_len > a.seq_len || b.mbs > a.mbs)
+            {
+                cands[i].dominated = true;
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 1,
+            seq_len: 32,
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn axes_normalization_sorts_dedups_and_rejects_bad_values() {
+        let base = tiny_base();
+        let mut axes = Axes::fixed(&base);
+        axes.mbs = vec![8, 1, 8, 2];
+        let n = axes.normalized().unwrap();
+        assert_eq!(n.mbs, vec![1, 2, 8]);
+
+        axes.mbs = vec![];
+        assert!(axes.normalized().is_err());
+        axes.mbs = vec![0, 1];
+        assert!(axes.normalized().is_err());
+
+        let mut axes = Axes::fixed(&base);
+        axes.zero = vec![ZeroStage::Zero2, ZeroStage::Zero2, ZeroStage::Zero0];
+        let n = axes.normalized().unwrap();
+        assert_eq!(n.zero, vec![ZeroStage::Zero2, ZeroStage::Zero0]);
+    }
+
+    #[test]
+    fn throughput_proxy_orders_sensibly() {
+        let base = tiny_base();
+        let mut bigger = base.clone();
+        bigger.mbs = 4;
+        assert!(throughput_proxy(&bigger) > throughput_proxy(&base));
+
+        let mut fp32 = base.clone();
+        fp32.precision = Precision::Fp32;
+        assert!(throughput_proxy(&fp32) < throughput_proxy(&base));
+
+        let mut z3 = base.clone();
+        z3.zero = ZeroStage::Zero3;
+        assert!(throughput_proxy(&z3) < throughput_proxy(&base));
+
+        let mut no_ckpt = base.clone();
+        no_ckpt.grad_checkpoint = false;
+        assert!(throughput_proxy(&no_ckpt) > throughput_proxy(&base));
+    }
+
+    #[test]
+    fn bad_budget_rejected() {
+        let base = tiny_base();
+        let axes = Axes::fixed(&base);
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let req = PlanRequest { base: base.clone(), budget_mib: bad, axes: axes.clone() };
+            assert!(plan(&req).is_err(), "budget {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn unbounded_budget_keeps_only_staircase_corners() {
+        let base = tiny_base();
+        let axes = Axes {
+            mbs: vec![1, 2],
+            seq_len: vec![32, 64],
+            dp: vec![1, 2],
+            ..Axes::fixed(&base)
+        };
+        let p = plan(&PlanRequest {
+            base,
+            budget_mib: 1e9,
+            axes,
+        })
+        .unwrap();
+        // every branch is feasible and open at the top rung
+        assert_eq!(p.stats.feasible_branches, 4);
+        assert!(p.candidates.iter().all(|c| c.frontier_open && c.escalation.is_none()));
+        assert!(p.candidates.iter().all(|c| c.cfg.mbs == 2));
+        // per dp group, (seq 64, mbs 2) dominates (seq 32, mbs 2)
+        let rec: Vec<_> = p.recommended().collect();
+        assert_eq!(rec.len(), 2);
+        assert!(rec.iter().all(|c| c.cfg.seq_len == 64));
+    }
+
+    #[test]
+    fn lora_stage_axis_injects_adapter_config() {
+        let base = tiny_base();
+        let mut axes = Axes { mbs: vec![1, 2], ..Axes::fixed(&base) };
+        axes.stage = vec![Stage::Finetune, Stage::LoraFinetune];
+        let p = plan(&PlanRequest {
+            base,
+            budget_mib: 1e9,
+            axes,
+        })
+        .unwrap();
+        let lora: Vec<_> = p
+            .candidates
+            .iter()
+            .filter(|c| c.cfg.stage == Stage::LoraFinetune)
+            .collect();
+        assert!(!lora.is_empty());
+        assert!(lora.iter().all(|c| c.cfg.lora.is_some()));
+    }
+}

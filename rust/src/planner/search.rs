@@ -1,0 +1,183 @@
+//! Batched simulator bisection over branch mbs ladders — the planner's
+//! refinement engine. Kept separate from the request/plan types so the
+//! search core stays testable on synthetic ladders.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::simulator::Measurement;
+use crate::sweep::Sweep;
+
+/// One branch: a fully-assigned configuration except for the mbs ladder
+/// (`rungs[i]` is the branch config at the i-th mbs candidate,
+/// ascending).
+pub(crate) struct Branch {
+    pub rungs: Vec<TrainConfig>,
+}
+
+/// Outcome of one branch's bisection.
+pub(crate) struct BranchOutcome {
+    /// Largest rung whose simulated peak fits the budget, if any.
+    pub frontier: Option<usize>,
+    /// True when every rung fits — the ladder never OOMs, so the true
+    /// frontier lies beyond the candidate grid (frontier open).
+    pub open: bool,
+    /// Measurements for every rung the search probed. The bisection
+    /// invariant guarantees `probed[frontier]` is always present, and
+    /// `probed[frontier + 1]` is present whenever `open` is false.
+    pub probed: Vec<Option<Measurement>>,
+}
+
+/// Bisect every branch's ladder against the simulator, batching one
+/// probe per unresolved branch through the sweep engine each round (so
+/// each round's simulations fan across the worker pool and reuse its
+/// [`crate::simulator::SimContext`]s).
+///
+/// `guesses[b]` seeds branch `b`'s first probe — the planner passes the
+/// analytical predictor's frontier estimate, which collapses the typical
+/// branch to two simulations (the guess fits, the rung above fails).
+/// Correctness does not depend on the guess: bisection continues from
+/// whichever side the probe lands on.
+///
+/// Relies on simulated peak memory being monotone in mbs (guaranteed by
+/// trace generation: every activation and transient term scales with
+/// the token count). Returns the outcomes plus the total number of
+/// simulations run.
+pub(crate) fn frontier_search(
+    branches: &[Branch],
+    guesses: &[usize],
+    budget_mib: f64,
+    engine: &Sweep,
+) -> Result<(Vec<BranchOutcome>, usize)> {
+    debug_assert_eq!(branches.len(), guesses.len());
+    // Bisection state per branch: lo = largest known-fitting rung (-1 =
+    // none yet), hi = smallest known-failing rung (len = none yet).
+    struct Bisect {
+        lo: isize,
+        hi: isize,
+        first: Option<usize>,
+    }
+    let mut states: Vec<Bisect> = branches
+        .iter()
+        .zip(guesses)
+        .map(|(b, &g)| Bisect {
+            lo: -1,
+            hi: b.rungs.len() as isize,
+            first: Some(g.min(b.rungs.len().saturating_sub(1))),
+        })
+        .collect();
+    let mut probed: Vec<Vec<Option<Measurement>>> =
+        branches.iter().map(|b| vec![None; b.rungs.len()]).collect();
+    let mut sims = 0usize;
+
+    loop {
+        let mut probe_loc: Vec<(usize, usize)> = Vec::new();
+        let mut probe_cfg: Vec<TrainConfig> = Vec::new();
+        for (bi, st) in states.iter_mut().enumerate() {
+            if st.hi - st.lo <= 1 {
+                continue;
+            }
+            let rung = match st.first.take() {
+                Some(g) if (g as isize) > st.lo && (g as isize) < st.hi => g,
+                _ => ((st.lo + st.hi) / 2) as usize,
+            };
+            probe_loc.push((bi, rung));
+            probe_cfg.push(branches[bi].rungs[rung].clone());
+        }
+        if probe_cfg.is_empty() {
+            break;
+        }
+        sims += probe_cfg.len();
+        let measured = engine.simulate_grid(&probe_cfg)?;
+        for ((bi, rung), m) in probe_loc.into_iter().zip(measured) {
+            let fits = m.peak_mib <= budget_mib;
+            probed[bi][rung] = Some(m);
+            let st = &mut states[bi];
+            if fits {
+                st.lo = rung as isize;
+            } else {
+                st.hi = rung as isize;
+            }
+        }
+    }
+
+    let outcomes = states
+        .iter()
+        .zip(probed)
+        .zip(branches)
+        .map(|((st, probed), b)| BranchOutcome {
+            frontier: (st.lo >= 0).then_some(st.lo as usize),
+            open: st.hi as usize == b.rungs.len(),
+            probed,
+        })
+        .collect();
+    Ok((outcomes, sims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator;
+
+    fn ladder(seq: u64) -> Branch {
+        Branch {
+            rungs: [1u64, 2, 4, 8]
+                .iter()
+                .map(|&mbs| TrainConfig {
+                    model: "llava-tiny".into(),
+                    mbs,
+                    seq_len: seq,
+                    ..TrainConfig::llava_finetune_default()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn bisection_matches_linear_scan_regardless_of_guess() {
+        let branches = vec![ladder(32), ladder(128)];
+        let peaks: Vec<f64> = branches[0]
+            .rungs
+            .iter()
+            .map(|c| simulator::simulate(c).unwrap().peak_mib)
+            .collect();
+        // a budget that splits the first ladder mid-way
+        let budget = (peaks[1] + peaks[2]) / 2.0;
+        for wrong_guess in [0usize, 3] {
+            let (out, sims) =
+                frontier_search(&branches, &[wrong_guess, wrong_guess], budget, &Sweep::new(2))
+                    .unwrap();
+            assert!(sims > 0);
+            for (b, o) in branches.iter().zip(&out) {
+                let want = b
+                    .rungs
+                    .iter()
+                    .rposition(|c| simulator::simulate(c).unwrap().peak_mib <= budget);
+                assert_eq!(o.frontier, want);
+                assert_eq!(o.open, want == Some(b.rungs.len() - 1));
+                if let Some(k) = o.frontier {
+                    assert!(o.probed[k].as_ref().unwrap().peak_mib <= budget);
+                    if !o.open {
+                        assert!(o.probed[k + 1].as_ref().unwrap().peak_mib > budget);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_ladder_has_no_frontier() {
+        let branches = vec![ladder(64)];
+        let (out, _) = frontier_search(&branches, &[1], 1.0, &Sweep::new(1)).unwrap();
+        assert_eq!(out[0].frontier, None);
+        assert!(!out[0].open);
+    }
+
+    #[test]
+    fn unbounded_budget_leaves_frontier_open() {
+        let branches = vec![ladder(64)];
+        let (out, _) = frontier_search(&branches, &[0], 1e12, &Sweep::new(1)).unwrap();
+        assert_eq!(out[0].frontier, Some(3));
+        assert!(out[0].open);
+    }
+}

@@ -1,0 +1,171 @@
+//! Rendering for capacity plans ([`crate::planner::Plan`]): the
+//! frontier table the `repro plan` subcommand prints, its CSV form, and
+//! a machine-readable JSON document for tooling.
+
+use crate::planner::{Plan, PlanCandidate};
+use crate::util::json_mini::{obj, Json};
+
+use super::table::Table;
+
+/// Render a plan's frontier as an aligned table: the top `top`
+/// candidates by throughput rank, optionally including dominated
+/// (staircase-interior) rows.
+pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table {
+    let mut t = Table::new(vec![
+        "#",
+        "stage",
+        "prec",
+        "zero",
+        "dp",
+        "seq",
+        "mbs",
+        "pred GiB",
+        "sim GiB",
+        "headroom GiB",
+        "tok/step",
+        "frontier",
+    ]);
+    let rows = plan
+        .candidates
+        .iter()
+        .filter(|c| include_dominated || !c.dominated)
+        .take(top);
+    for (rank, c) in rows.enumerate() {
+        let frontier = if c.frontier_open {
+            "open (grid end)".to_string()
+        } else {
+            let esc = c.escalation.expect("closed frontier carries its escalation probe");
+            format!(
+                "mbs {} OOMs (+{:.1} GiB)",
+                esc.mbs,
+                (esc.simulated_mib - plan.budget_mib) / 1024.0
+            )
+        };
+        let dominated = if c.dominated { " (dominated)" } else { "" };
+        t.row(vec![
+            format!("{}", rank + 1),
+            format!("{}{}", c.cfg.stage.name(), dominated),
+            c.cfg.precision.name().to_string(),
+            c.cfg.zero.as_int().to_string(),
+            c.cfg.dp.to_string(),
+            c.cfg.seq_len.to_string(),
+            c.cfg.mbs.to_string(),
+            format!("{:.2}", c.predicted_mib / 1024.0),
+            format!("{:.2}", c.simulated_mib / 1024.0),
+            format!("{:.2}", c.headroom_mib / 1024.0),
+            format!("{:.0}", c.tokens_per_step),
+            frontier,
+        ]);
+    }
+    t
+}
+
+fn candidate_json(c: &PlanCandidate) -> Json {
+    let escalation = match &c.escalation {
+        Some(e) => obj(vec![
+            ("mbs", Json::Num(e.mbs as f64)),
+            ("simulated_mib", Json::Num(e.simulated_mib)),
+        ]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("model", Json::Str(c.cfg.model.clone())),
+        ("stage", Json::Str(c.cfg.stage.name().to_string())),
+        ("precision", Json::Str(c.cfg.precision.name().to_string())),
+        ("zero", Json::Num(c.cfg.zero.as_int() as f64)),
+        ("dp", Json::Num(c.cfg.dp as f64)),
+        ("seq_len", Json::Num(c.cfg.seq_len as f64)),
+        ("mbs", Json::Num(c.cfg.mbs as f64)),
+        ("grad_checkpoint", Json::Bool(c.cfg.grad_checkpoint)),
+        (
+            "lora_rank",
+            match &c.cfg.lora {
+                Some(l) => Json::Num(l.rank as f64),
+                None => Json::Null,
+            },
+        ),
+        ("predicted_mib", Json::Num(c.predicted_mib)),
+        ("simulated_mib", Json::Num(c.simulated_mib)),
+        ("headroom_mib", Json::Num(c.headroom_mib)),
+        ("tokens_per_step", Json::Num(c.tokens_per_step)),
+        ("frontier_open", Json::Bool(c.frontier_open)),
+        ("dominated", Json::Bool(c.dominated)),
+        ("escalation", escalation),
+    ])
+}
+
+/// Serialize a full plan (budget, stats, every candidate in rank order)
+/// as a JSON document.
+pub fn plan_json(plan: &Plan) -> Json {
+    obj(vec![
+        ("budget_mib", Json::Num(plan.budget_mib)),
+        (
+            "stats",
+            obj(vec![
+                ("branches", Json::Num(plan.stats.branches as f64)),
+                (
+                    "feasible_branches",
+                    Json::Num(plan.stats.feasible_branches as f64),
+                ),
+                ("grid_points", Json::Num(plan.stats.grid_points as f64)),
+                ("sim_points", Json::Num(plan.stats.sim_points as f64)),
+                (
+                    "predictor_probes",
+                    Json::Num(plan.stats.predictor_probes as f64),
+                ),
+            ]),
+        ),
+        (
+            "candidates",
+            Json::Arr(plan.candidates.iter().map(candidate_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::planner::{plan, Axes, PlanRequest};
+    use crate::util::json_mini;
+
+    fn tiny_plan() -> Plan {
+        let base = TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 1,
+            seq_len: 32,
+            ..TrainConfig::llava_finetune_default()
+        };
+        let axes = Axes {
+            mbs: vec![1, 2],
+            seq_len: vec![32, 64],
+            ..Axes::fixed(&base)
+        };
+        plan(&PlanRequest { base, budget_mib: 1e9, axes }).unwrap()
+    }
+
+    #[test]
+    fn table_hides_dominated_rows_by_default() {
+        let p = tiny_plan();
+        let shown = frontier_table(&p, 100, false);
+        let all = frontier_table(&p, 100, true);
+        assert_eq!(shown.render().lines().count() - 2, p.recommended().count());
+        assert_eq!(all.render().lines().count() - 2, p.candidates.len());
+        assert!(all.to_csv().contains("dominated"));
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let p = tiny_plan();
+        let doc = plan_json(&p);
+        let parsed = json_mini::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("budget_mib").unwrap().as_f64(), Some(1e9));
+        let cands = parsed.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), p.candidates.len());
+        assert_eq!(cands[0].get("model").unwrap().as_str(), Some("llava-tiny"));
+        assert_eq!(
+            parsed.get("stats").unwrap().get("grid_points").unwrap().as_u64(),
+            Some(p.stats.grid_points as u64)
+        );
+    }
+}

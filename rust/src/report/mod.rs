@@ -1,8 +1,22 @@
-//! Reporting: MAPE computation, ASCII tables/figures, and CSV emission —
-//! everything the evaluation harness prints or writes to `results/`.
+//! Reporting: everything the evaluation harness and the CLI print or
+//! write to `results/`.
+//!
+//! * [`mod@mape`] — absolute-percentage-error metrics ([`ape`] and the
+//!   [`mape()`](fn@mape) mean), the paper's headline accuracy numbers;
+//! * [`table`] — aligned ASCII tables with CSV emission ([`Table`]) and
+//!   bar "figures" ([`ascii_bars`]), the textual stand-ins for the
+//!   paper's plots;
+//! * [`frontier`] — rendering for the capacity planner's OOM-frontier
+//!   output (table, CSV and JSON forms of a [`crate::planner::Plan`]).
+//!
+//! Formatting lives here so measurement logic stays print-free: eval,
+//! planner and CLI code build data structures and hand them to this
+//! module.
 
+pub mod frontier;
 pub mod mape;
 pub mod table;
 
+pub use frontier::{frontier_table, plan_json};
 pub use mape::{ape, mape};
 pub use table::{ascii_bars, Table};

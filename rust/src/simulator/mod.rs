@@ -2,7 +2,8 @@
 //! training iteration.
 //!
 //! The paper measured `torch.cuda` peaks on an 8×H100 node; that
-//! hardware is substituted (DESIGN.md §Substitutions) by this simulator,
+//! hardware is substituted (ARCHITECTURE.md §Substitutions) by this
+//! simulator,
 //! which reproduces the mechanisms that separate *measured* memory from
 //! a clean formula: the caching allocator's rounding/splitting/
 //! fragmentation ([`allocator`]), DeepSpeed ZeRO flat buffers

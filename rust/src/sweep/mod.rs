@@ -53,6 +53,28 @@ impl Sweep {
     /// reusable [`SimContext`], the (shared, parsed-once) model for the
     /// point's geometry, and the point's config. Results are returned in
     /// input order; the lowest-index error wins if any point fails.
+    ///
+    /// ```
+    /// use mmpredict::config::TrainConfig;
+    /// use mmpredict::sweep::Sweep;
+    ///
+    /// let grid: Vec<TrainConfig> = (1..=2)
+    ///     .map(|dp| TrainConfig {
+    ///         model: "llava-tiny".into(),
+    ///         mbs: 1,
+    ///         seq_len: 32,
+    ///         dp,
+    ///         ..TrainConfig::llava_finetune_default()
+    ///     })
+    ///     .collect();
+    /// let rows = Sweep::new(2)
+    ///     .run(&grid, |ctx, pm, cfg| {
+    ///         Ok((cfg.dp, ctx.simulate_parsed(pm, cfg)?.peak_mib))
+    ///     })
+    ///     .unwrap();
+    /// assert_eq!(rows.len(), 2);
+    /// assert!(rows[0].1 > 0.0);
+    /// ```
     pub fn run<R, F>(&self, cfgs: &[TrainConfig], f: F) -> Result<Vec<R>>
     where
         R: Send,

@@ -108,6 +108,17 @@ impl Json {
     }
 }
 
+/// Build a [`Json::Obj`] from `(key, value)` pairs — the common
+/// construction for report and bench emission code.
+pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Json> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };

@@ -1,0 +1,239 @@
+//! Capacity-planner integration: frontier maximality against the
+//! ground-truth simulator (the planner's core contract), determinism,
+//! and the coordinator round-trip for the `Plan` request (served by the
+//! always-available analytical backend, so this runs without artifacts).
+
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::planner::{self, Axes, PlanRequest};
+use mmpredict::simulator;
+
+fn tiny_base() -> TrainConfig {
+    TrainConfig {
+        model: "llava-tiny".into(),
+        mbs: 1,
+        seq_len: 64,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+fn tiny_axes(base: &TrainConfig) -> Axes {
+    Axes {
+        mbs: vec![1, 2, 4, 8, 16],
+        seq_len: vec![32, 64, 128],
+        dp: vec![1, 2],
+        ..Axes::fixed(base)
+    }
+}
+
+/// A budget strictly between the grid's smallest and largest peaks, so
+/// the frontier is non-trivial (some branches feasible, none open at
+/// every corner).
+fn mid_budget(base: &TrainConfig, axes: &Axes) -> f64 {
+    let mut lo = base.clone();
+    lo.mbs = axes.mbs[0];
+    lo.seq_len = axes.seq_len[0];
+    lo.dp = *axes.dp.iter().max().unwrap();
+    let mut hi = base.clone();
+    hi.mbs = *axes.mbs.last().unwrap();
+    hi.seq_len = *axes.seq_len.last().unwrap();
+    hi.dp = axes.dp[0];
+    let p_lo = simulator::simulate(&lo).unwrap().peak_mib;
+    let p_hi = simulator::simulate(&hi).unwrap().peak_mib;
+    assert!(p_hi > p_lo);
+    (p_lo + p_hi) / 2.0
+}
+
+#[test]
+fn every_recommendation_simulates_under_budget_and_is_mbs_maximal() {
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let budget = mid_budget(&base, &axes);
+    let plan = planner::plan(&PlanRequest {
+        base: base.clone(),
+        budget_mib: budget,
+        axes: axes.clone(),
+    })
+    .unwrap();
+    assert!(
+        plan.recommended().next().is_some(),
+        "a mid-grid budget must admit something"
+    );
+
+    for c in &plan.candidates {
+        // re-simulate independently: the recommendation must hold up
+        // against fresh ground truth, not just the search's own numbers
+        let m = simulator::simulate(&c.cfg).unwrap();
+        assert_eq!(m.peak_mib, c.simulated_mib, "stale simulated peak");
+        assert!(m.peak_mib <= budget, "recommended config OOMs");
+        assert_eq!(c.headroom_mib, budget - m.peak_mib);
+
+        // maximality along mbs: the next rung must OOM, or the ladder
+        // ended (frontier open)
+        match (c.frontier_open, &c.escalation) {
+            (true, None) => assert_eq!(
+                c.cfg.mbs,
+                *axes.mbs.last().unwrap(),
+                "open frontier must sit on the top rung"
+            ),
+            (false, Some(esc)) => {
+                let next = axes.mbs.iter().copied().find(|&m| m > c.cfg.mbs).unwrap();
+                assert_eq!(esc.mbs, next, "escalation must be the adjacent rung");
+                let mut up = c.cfg.clone();
+                up.mbs = esc.mbs;
+                let m2 = simulator::simulate(&up).unwrap();
+                assert_eq!(m2.peak_mib, esc.simulated_mib);
+                assert!(
+                    m2.peak_mib > budget,
+                    "escalation to mbs {} still fits the budget",
+                    esc.mbs
+                );
+            }
+            (open, esc) => panic!("inconsistent frontier flags: open={open} esc={esc:?}"),
+        }
+    }
+}
+
+#[test]
+fn seq_len_escalations_are_covered_by_the_frontier() {
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let budget = mid_budget(&base, &axes);
+    let plan = planner::plan(&PlanRequest {
+        base,
+        budget_mib: budget,
+        axes: axes.clone(),
+    })
+    .unwrap();
+    // For every recommended config, bumping seq_len to the next rung at
+    // the same mbs either OOMs or is covered by another frontier config
+    // at that seq_len with at least this mbs (staircase completeness).
+    for c in plan.recommended() {
+        let Some(next_seq) = axes.seq_len.iter().copied().find(|&s| s > c.cfg.seq_len) else {
+            continue;
+        };
+        let mut up = c.cfg.clone();
+        up.seq_len = next_seq;
+        let m = simulator::simulate(&up).unwrap();
+        if m.peak_mib <= budget {
+            assert!(
+                plan.candidates.iter().any(|o| o.cfg.dp == c.cfg.dp
+                    && o.cfg.zero == c.cfg.zero
+                    && o.cfg.seq_len == next_seq
+                    && o.cfg.mbs >= c.cfg.mbs),
+                "fitting seq escalation (seq {} mbs {}) missing from the frontier",
+                next_seq,
+                c.cfg.mbs
+            );
+        }
+    }
+}
+
+#[test]
+fn planning_is_deterministic() {
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let budget = mid_budget(&base, &axes);
+    let req = PlanRequest { base, budget_mib: budget, axes };
+    let a = planner::plan(&req).unwrap();
+    let b = planner::plan(&req).unwrap();
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    assert_eq!(a.stats.sim_points, b.stats.sim_points);
+    for (x, y) in a.candidates.iter().zip(&b.candidates) {
+        assert_eq!(x.cfg.cache_key(), y.cfg.cache_key());
+        assert_eq!(x.simulated_mib, y.simulated_mib);
+        assert_eq!(x.predicted_mib, y.predicted_mib);
+        assert_eq!(x.tokens_per_step, y.tokens_per_step);
+        assert_eq!(x.dominated, y.dominated);
+    }
+}
+
+#[test]
+fn bisection_beats_the_full_grid_on_simulation_count() {
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let budget = mid_budget(&base, &axes);
+    let plan = planner::plan(&PlanRequest { base, budget_mib: budget, axes }).unwrap();
+    assert!(
+        plan.stats.sim_points < plan.stats.grid_points,
+        "bisection ({}) must probe fewer points than the grid ({})",
+        plan.stats.sim_points,
+        plan.stats.grid_points
+    );
+}
+
+#[test]
+fn infeasible_budget_yields_an_empty_plan() {
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let plan = planner::plan(&PlanRequest { base, budget_mib: 1.0, axes }).unwrap();
+    assert!(plan.candidates.is_empty());
+    assert_eq!(plan.stats.feasible_branches, 0);
+}
+
+#[test]
+fn service_plan_round_trip_matches_direct_planner() {
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    let base = tiny_base();
+    let axes = tiny_axes(&base);
+    let budget = mid_budget(&base, &axes);
+    let req = PlanRequest { base: base.clone(), budget_mib: budget, axes };
+
+    let direct = planner::plan(&req).unwrap();
+    let via_service = svc.plan(req.clone()).unwrap();
+    assert_eq!(via_service.candidates.len(), direct.candidates.len());
+    for (a, b) in via_service.candidates.iter().zip(&direct.candidates) {
+        assert_eq!(a.cfg.cache_key(), b.cfg.cache_key());
+        assert_eq!(a.simulated_mib, b.simulated_mib);
+        assert_eq!(a.tokens_per_step, b.tokens_per_step);
+        assert_eq!(a.dominated, b.dominated);
+    }
+    assert_eq!(svc.metrics().plans(), 1);
+    assert_eq!(svc.metrics().errors(), 0);
+
+    // predictions interleave on the same queue and still answer
+    let p = svc.predict(base.clone()).unwrap();
+    let want = mmpredict::predictor::predict(&base).unwrap();
+    assert!((p.peak_mib - want.peak_mib).abs() <= want.peak_mib * 1e-5);
+    assert_eq!(svc.metrics().responses(), 2);
+    svc.shutdown();
+}
+
+#[test]
+fn service_plan_requests_from_concurrent_clients() {
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    let base = tiny_base();
+    let mut handles = Vec::new();
+    for dp in [1u64, 2] {
+        let client = svc.client();
+        let base = base.clone();
+        handles.push(std::thread::spawn(move || {
+            let axes = Axes { mbs: vec![1, 2, 4], dp: vec![dp], ..Axes::fixed(&base) };
+            client.plan(PlanRequest { base, budget_mib: 1e9, axes })
+        }));
+    }
+    for h in handles {
+        let plan = h.join().unwrap().unwrap();
+        assert_eq!(plan.stats.branches, 1);
+        assert!(plan.recommended().next().is_some());
+    }
+    assert_eq!(svc.metrics().plans(), 2);
+    svc.shutdown();
+}
+
+#[test]
+fn service_plan_surfaces_planner_errors() {
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    let base = tiny_base();
+    let req = PlanRequest {
+        axes: Axes::fixed(&base),
+        base,
+        budget_mib: -1.0,
+    };
+    assert!(svc.plan(req).is_err());
+    assert_eq!(svc.metrics().errors(), 1);
+    // the worker survives the error
+    let ok = svc.predict(tiny_base()).unwrap();
+    assert!(ok.peak_mib > 0.0);
+    svc.shutdown();
+}
