@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::model::zoo;
+use crate::model::arch;
 
 use super::BaselineResult;
 
@@ -22,7 +22,7 @@ const MIB: f64 = 1024.0 * 1024.0;
 
 /// Predict peak memory for `cfg`, treating the model as a unimodal LLM.
 pub fn predict(cfg: &TrainConfig) -> Result<BaselineResult> {
-    let entry = zoo::build(&cfg.model, cfg.seq_len, cfg.attn)?;
+    let entry = arch::resolve(&cfg.model, cfg.seq_len, cfg.attn)?;
     let p = entry.spec.param_elems() as f64; // ALL params assumed trainable
 
     // Unimodal decoder dims: take the language module's shape by name
@@ -30,7 +30,7 @@ pub fn predict(cfg: &TrainConfig) -> Result<BaselineResult> {
     let lm = entry
         .spec
         .module("language_model")
-        .unwrap_or_else(|| &entry.spec.modules[entry.spec.modules.len() - 1]);
+        .unwrap_or_else(|| entry.spec.modules.last().expect("non-empty model"));
     let (hidden, heads, blocks) = infer_decoder_dims(lm);
 
     let (bw, _, _) = cfg.precision.byte_widths();
@@ -101,7 +101,9 @@ mod tests {
 
     #[test]
     fn decoder_dims_recovered() {
-        let entry = zoo::build("vicuna-7b", 1024, crate::model::layer::AttnImpl::Flash).unwrap();
+        let entry =
+            crate::model::zoo::build("vicuna-7b", 1024, crate::model::layer::AttnImpl::Flash)
+                .unwrap();
         let lm = entry.spec.module("language_model").unwrap();
         let (h, a, n) = infer_decoder_dims(lm);
         assert_eq!((h, a, n), (4096, 32, 32));

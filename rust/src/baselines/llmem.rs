@@ -14,8 +14,8 @@
 use anyhow::Result;
 
 use crate::config::TrainConfig;
+use crate::model::arch;
 use crate::model::layer::LayerKind;
-use crate::model::zoo;
 
 use super::BaselineResult;
 
@@ -23,11 +23,11 @@ const MIB: f64 = 1024.0 * 1024.0;
 
 /// Predict peak fine-tuning memory, LLMem-style (unimodal view).
 pub fn predict(cfg: &TrainConfig) -> Result<BaselineResult> {
-    let entry = zoo::build(&cfg.model, cfg.seq_len, cfg.attn)?;
+    let entry = arch::resolve(&cfg.model, cfg.seq_len, cfg.attn)?;
     let lm = entry
         .spec
         .module("language_model")
-        .unwrap_or(&entry.spec.modules[entry.spec.modules.len() - 1]);
+        .unwrap_or_else(|| entry.spec.modules.last().expect("non-empty model"));
 
     // Decoder-only parameter count (the unimodal description).
     let p = lm.param_elems() as f64;
@@ -93,7 +93,9 @@ mod tests {
 
     #[test]
     fn dims_from_decoder() {
-        let entry = zoo::build("vicuna-7b", 512, crate::model::layer::AttnImpl::Flash).unwrap();
+        let entry =
+            crate::model::zoo::build("vicuna-7b", 512, crate::model::layer::AttnImpl::Flash)
+                .unwrap();
         let (h, v, b) = dims(entry.spec.module("language_model").unwrap());
         assert_eq!((h, v, b), (4096, 32000, 32));
     }

@@ -188,14 +188,21 @@ impl Default for OverheadConfig {
 /// Everything that determines one training run's memory footprint.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// Zoo model name (e.g. `llava-1.5-7b`).
+    /// Zoo preset name (e.g. `llava-1.5-7b`) or a path to a TOML
+    /// architecture-IR spec (anything ending in `.toml` — see
+    /// `examples/archs/` and ARCHITECTURE.md §Architecture IR).
     pub model: String,
     pub stage: Stage,
     /// Micro-batch size per GPU (paper: MBS).
     pub mbs: u64,
-    /// LM sequence length (paper: SeqLen).
+    /// LM sequence length (paper: SeqLen), projected encoder tokens
+    /// included.
     pub seq_len: u64,
+    /// Images per sample for vision streams without a spec-fixed count.
     pub images_per_sample: u64,
+    /// Audio clips per sample for audio streams without a spec-fixed
+    /// count.
+    pub clips_per_sample: u64,
     /// Data-parallel degree (paper: DP, 1..=8).
     pub dp: u64,
     pub zero: ZeroStage,
@@ -243,6 +250,7 @@ impl TrainConfig {
             mbs: 16,
             seq_len: 1024,
             images_per_sample: 1,
+            clips_per_sample: 1,
             dp: 1,
             zero: ZeroStage::Zero2,
             optimizer: OptimizerKind::AdamW,
@@ -293,6 +301,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get_int("", "images_per_sample") {
             cfg.images_per_sample = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "clips_per_sample") {
+            cfg.clips_per_sample = v as u64;
         }
         if let Some(v) = doc.get_int("", "dp") {
             cfg.dp = v as u64;
@@ -369,12 +380,13 @@ impl TrainConfig {
             None => "none".to_string(),
         };
         format!(
-            "{}|{:?}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}",
+            "{}|{:?}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}",
             self.model,
             self.stage,
             self.mbs,
             self.seq_len,
             self.images_per_sample,
+            self.clips_per_sample,
             self.optimizer,
             self.precision,
             self.attn,

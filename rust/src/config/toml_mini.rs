@@ -74,6 +74,23 @@ impl Doc {
     pub fn has_section(&self, section: &str) -> bool {
         self.sections.iter().any(|s| s == section)
     }
+
+    /// All section headers, in document order (duplicates preserved).
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(String::as_str)
+    }
+
+    /// All keys present in a section, sorted (top-level keys: `""`).
+    pub fn keys_in(&self, section: &str) -> Vec<&str> {
+        let mut out: Vec<&str> = self
+            .values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect();
+        out.sort_unstable();
+        out
+    }
 }
 
 /// Parse a TOML-subset document.
@@ -186,6 +203,14 @@ mod tests {
         assert_eq!(d.get_bool("s", "f"), Some(false));
         assert!(d.has_section("s"));
         assert!(!d.has_section("t"));
+    }
+
+    #[test]
+    fn keys_in_lists_section_keys_sorted() {
+        let d = parse("top = 1\n[s]\nb = 2\na = 3\n").unwrap();
+        assert_eq!(d.keys_in(""), vec!["top"]);
+        assert_eq!(d.keys_in("s"), vec!["a", "b"]);
+        assert!(d.keys_in("missing").is_empty());
     }
 
     #[test]

@@ -8,15 +8,16 @@
 use anyhow::Result;
 
 use crate::config::Precision;
+use crate::model::arch;
+use crate::model::dims::Modality;
 use crate::model::layer::{AttnImpl, LayerKind};
-use crate::model::zoo;
 
 const MIB: f64 = 1024.0 * 1024.0;
 
 /// Inference-serving configuration.
 #[derive(Clone, Debug)]
 pub struct InferenceConfig {
-    /// Zoo model name.
+    /// Zoo preset name or path to a TOML architecture spec.
     pub model: String,
     /// Maximum tokens per sequence (prompt + generation), image tokens
     /// included.
@@ -76,7 +77,7 @@ impl InferencePrediction {
 
 /// Predict inference memory for a configuration.
 pub fn predict_inference(cfg: &InferenceConfig) -> Result<InferencePrediction> {
-    let entry = zoo::build(&cfg.model, cfg.context_len, AttnImpl::Flash)?;
+    let entry = arch::resolve(&cfg.model, cfg.context_len, AttnImpl::Flash)?;
     let (wb, _, _) = cfg.precision.byte_widths();
 
     // Weights: every parameter resident once (no grads/opt at inference).
@@ -86,7 +87,7 @@ pub fn predict_inference(cfg: &InferenceConfig) -> Result<InferencePrediction> {
     let lm = entry
         .spec
         .module("language_model")
-        .unwrap_or(&entry.spec.modules[entry.spec.modules.len() - 1]);
+        .unwrap_or_else(|| entry.spec.modules.last().expect("non-empty model"));
     let mut kv_width: u64 = 0;
     let mut hidden: u64 = 1;
     for l in &lm.layers {
@@ -102,17 +103,40 @@ pub fn predict_inference(cfg: &InferenceConfig) -> Result<InferencePrediction> {
         kv_bytes_per_token * (cfg.max_seqs * cfg.context_len) as f64 / MIB;
 
     // Decode workspace: one token per live sequence through the hidden
-    // chain (h + inter upper bound ~ 6h), plus logits, plus one vision
-    // forward per in-flight request with images.
+    // chain (h + inter upper bound ~ 6h), plus logits, plus one
+    // encoder forward per in-flight request carrying media (each
+    // tower priced at its own width: tokens * hidden * ~20 tensors).
     let vocab_logits = 32_000u64; // decoder vocab (LLaMA family)
     let decode = cfg.max_seqs * (6 * hidden + vocab_logits) * wb as u64;
-    let vision = if cfg.images_per_request > 0 && entry.vision_tokens > 0 {
-        // one image through the tower: tokens * hidden * ~20 tensors
-        entry.vision_tokens * 1024 * 20 * wb as u64
+    let encoders: u64 = if cfg.images_per_request > 0 {
+        entry
+            .spec
+            .modules
+            .iter()
+            .filter(|m| matches!(m.modality, Modality::Vision | Modality::Audio))
+            .map(|m| {
+                let tower_hidden = m
+                    .layers
+                    .iter()
+                    .rev()
+                    .find_map(|l| match l.kind {
+                        LayerKind::LayerNorm { dim } | LayerKind::RmsNorm { dim } => Some(dim),
+                        _ => None,
+                    })
+                    .unwrap_or(1024);
+                let tokens = entry
+                    .streams
+                    .iter()
+                    .find(|s| s.module == m.name)
+                    .map(|s| s.tokens_per_item)
+                    .unwrap_or(0);
+                tokens * tower_hidden * 20 * wb as u64
+            })
+            .sum()
     } else {
         0
     };
-    let workspace_mib = (decode + vision) as f64 / MIB;
+    let workspace_mib = (decode + encoders) as f64 / MIB;
 
     Ok(InferencePrediction {
         weights_mib,

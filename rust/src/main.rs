@@ -85,8 +85,10 @@ fn print_help() {
         "\ncommon options:\n\
          \x20 --config <file.toml>      load a training config file\n\
          \x20 --model <name>            zoo model (default llava-1.5-7b)\n\
+         \x20 --model-file <arch.toml>  architecture-IR spec file (see examples/archs/)\n\
          \x20 --stage <pretrain|finetune|lora|full>\n\
          \x20 --mbs N --seq-len N --dp N --zero 0..3\n\
+         \x20 --images-per-sample N --clips-per-sample N\n\
          \x20 --optimizer <adamw|sgdm|sgd> --precision <bf16|fp16|fp32>\n\
          \x20 --attention <flash|eager> --no-ckpt\n\
          predict options:\n\
@@ -341,6 +343,14 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     if let Some(m) = args.get("model") {
         cfg.model = m.to_string();
     }
+    if let Some(p) = args.get("model-file") {
+        // an architecture-IR spec path; wins over --model when both are
+        // passed (the file is the more specific reference)
+        if !mmpredict::model::arch::is_spec_path(p) {
+            bail!("--model-file expects a .toml architecture spec, got {p:?}");
+        }
+        cfg.model = p.to_string();
+    }
     if let Some(s) = args.get("stage") {
         cfg.stage = Stage::parse(s)?;
         if cfg.stage == Stage::LoraFinetune && cfg.lora.is_none() {
@@ -352,6 +362,12 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get_parse::<u64>("seq-len")? {
         cfg.seq_len = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("images-per-sample")? {
+        cfg.images_per_sample = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("clips-per-sample")? {
+        cfg.clips_per_sample = v;
     }
     if let Some(v) = args.get_parse::<u64>("dp")? {
         cfg.dp = v;
@@ -403,6 +419,8 @@ fn cmd_predict(args: &Args) -> Result<()> {
     println!("  M_opt       {}", human_mib(p.opt_mib as f64));
     println!("  M_act       {}", human_mib(p.act_mib as f64));
     println!("  transient   {}", human_mib(p.transient_mib as f64));
+    println!("per-modality split (Fig. 1 decomposition):");
+    println!("{}", report::modality_table(&pm).render());
     if let Some(cap) = args.get_parse::<f64>("capacity-gib")? {
         let fits = p.fits((cap * 1024.0) as f32);
         println!(
@@ -601,6 +619,21 @@ mod tests {
             "README.md CLI reference (### `repro <cmd>` headings) is out of sync \
              with the SUBCOMMANDS dispatch table in main.rs"
         );
+    }
+
+    /// The README's model list derives from the zoo registry — every
+    /// registered preset must be named in the `repro zoo` section.
+    #[test]
+    fn readme_model_list_matches_zoo_registry() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+        let readme = std::fs::read_to_string(path).expect("README.md at the repo root");
+        for name in zoo::names() {
+            assert!(
+                readme.contains(&format!("`{name}`")),
+                "README.md does not list zoo preset `{name}` — the model list \
+                 must stay in sync with the registry in model/zoo.rs"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! The declarative architecture IR (tentpole of the multi-layer
+//! refactor): multimodal architectures are *data* — an [`ArchSpec`] of
+//! ordered encoder **towers** joined to a final language decoder by
+//! typed **connectors** — instead of hard-coded compositions.
+//!
+//! An `ArchSpec` comes from one of two places:
+//!
+//! * the preset registry in [`crate::model::zoo`] (every legacy zoo
+//!   name is now an `ArchSpec` value), or
+//! * a TOML spec file ([`ArchSpec::from_file`], see the schema in
+//!   `ARCHITECTURE.md` §Architecture IR and `examples/archs/`).
+//!
+//! [`ArchSpec::lower`] materializes the IR onto the existing
+//! [`ModelSpec`]/[`crate::model::Layer`] graph through the same block
+//! builders the legacy zoo used, so lowering a legacy preset is
+//! **bit-identical** to the pre-IR composition (pinned by the golden
+//! parity suite in `tests/parity.rs`). Lowering also derives one
+//! [`StreamSpec`] per tower and per connector — the per-modality token
+//! streams that generalize the old single-image `TokenCtx`.
+
+mod toml_spec;
+
+use anyhow::{bail, Context, Result};
+
+use super::audio::{self, AudioConfig};
+use super::dims::{Modality, TokenCtx, TokenStream};
+use super::language::{self, LlamaConfig};
+use super::layer::AttnImpl;
+use super::module::ModelSpec;
+use super::projector;
+use super::vision::{self, VitConfig};
+use super::zoo;
+
+/// Block family of one tower, with its hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub enum TowerFamily {
+    /// Pre-LN ViT encoder (CLIP-style).
+    Vit(VitConfig),
+    /// LLaMA-family decoder (RMSNorm, rotary, SwiGLU).
+    Llama(LlamaConfig),
+    /// Conv-subsample audio encoder (Whisper-style).
+    AudioConv(AudioConfig),
+}
+
+impl TowerFamily {
+    /// The modality this family implies (a spec may override it).
+    pub fn default_modality(&self) -> Modality {
+        match self {
+            TowerFamily::Vit(_) => Modality::Vision,
+            TowerFamily::Llama(_) => Modality::Language,
+            TowerFamily::AudioConv(_) => Modality::Audio,
+        }
+    }
+
+    /// Output feature width of the tower.
+    pub fn hidden(&self) -> u64 {
+        match self {
+            TowerFamily::Vit(c) => c.hidden,
+            TowerFamily::Llama(c) => c.hidden,
+            TowerFamily::AudioConv(c) => c.hidden,
+        }
+    }
+
+    /// Tokens per item *inside* the tower (ViT: patches + CLS; audio:
+    /// post-subsample frames; decoders are sized by `seq_len` instead).
+    fn tower_tokens_per_item(&self) -> u64 {
+        match self {
+            TowerFamily::Vit(c) => c.seq_tokens(),
+            TowerFamily::AudioConv(c) => c.frame_tokens(),
+            TowerFamily::Llama(_) => 0,
+        }
+    }
+
+    /// Tokens per item handed to the tower's connector (ViT drops CLS).
+    fn emitted_tokens_per_item(&self) -> u64 {
+        match self {
+            TowerFamily::Vit(c) => c.patch_tokens(),
+            TowerFamily::AudioConv(c) => c.frame_tokens(),
+            TowerFamily::Llama(_) => 0,
+        }
+    }
+}
+
+/// One tower of the architecture.
+#[derive(Clone, Debug)]
+pub struct TowerSpec {
+    /// Lowered module name (e.g. `vision_tower`, `language_model`).
+    pub name: String,
+    /// Stream modality. Must agree with the family's layer tagging
+    /// (the builders stamp every lowered layer with the family's
+    /// modality) — keep it at [`TowerFamily::default_modality`], as
+    /// [`TowerSpec::new`] and the TOML loader do.
+    pub modality: Modality,
+    pub family: TowerFamily,
+    /// Take the attention implementation from the training config
+    /// instead of the family's fixed choice (legacy zoo: the language
+    /// tower of the big presets inherits, CLIP stays eager).
+    pub inherit_attn: bool,
+    /// Fixed items (images / audio clips) per sample baked into the
+    /// architecture (multi-image interleaved specs); `None` resolves
+    /// from the training config by modality.
+    pub items_per_sample: Option<u64>,
+}
+
+impl TowerSpec {
+    /// A tower with the family's default modality, config-inherited
+    /// attention disabled for encoders / enabled for decoders.
+    pub fn new(name: impl Into<String>, family: TowerFamily) -> Self {
+        TowerSpec {
+            name: name.into(),
+            modality: family.default_modality(),
+            inherit_attn: matches!(family, TowerFamily::Llama(_)),
+            family,
+            items_per_sample: None,
+        }
+    }
+}
+
+/// Connector type between a tower and the decoder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnectorKind {
+    /// LLaVA-1.5: Linear -> GELU -> Linear.
+    Mlp2xGelu,
+    /// LLaVA-1.0: single Linear.
+    Linear,
+    /// Qwen2-VL-style: merge a `merge × merge` patch neighbourhood,
+    /// then project (divides the token stream by `merge²`).
+    SpatialMerge { merge: u64 },
+}
+
+/// One typed connector, consuming a named tower's output.
+#[derive(Clone, Debug)]
+pub struct ConnectorSpec {
+    /// The tower (by name) this connector consumes.
+    pub after: String,
+    /// Lowered module name (e.g. `mm_projector`).
+    pub name: String,
+    pub kind: ConnectorKind,
+}
+
+/// A declarative multimodal architecture: ordered towers, the last of
+/// which must be the language decoder, plus connectors for the rest.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub towers: Vec<TowerSpec>,
+    pub connectors: Vec<ConnectorSpec>,
+}
+
+/// Where a stream's item multiplicity comes from at token-context time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemSource {
+    /// Baked into the architecture spec.
+    Fixed(u64),
+    /// The training config's `images_per_sample`.
+    Images,
+    /// The training config's `clips_per_sample`.
+    Clips,
+}
+
+/// A per-module token stream before batch-geometry resolution.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    pub module: String,
+    pub modality: Modality,
+    pub tokens_per_item: u64,
+    pub items: ItemSource,
+}
+
+impl StreamSpec {
+    fn resolve(&self, images_per_sample: u64, clips_per_sample: u64) -> TokenStream {
+        let items = match self.items {
+            ItemSource::Fixed(n) => n,
+            ItemSource::Images => images_per_sample,
+            ItemSource::Clips => clips_per_sample,
+        };
+        TokenStream {
+            module: self.module.clone(),
+            modality: self.modality,
+            tokens_per_item: self.tokens_per_item,
+            items_per_sample: items,
+        }
+    }
+}
+
+/// A lowered architecture: the layer graph plus its token streams.
+/// This is what the parser, baselines and the inference predictor
+/// consume — they never see the IR itself.
+#[derive(Clone, Debug)]
+pub struct ArchEntry {
+    pub spec: ModelSpec,
+    pub streams: Vec<StreamSpec>,
+}
+
+impl ArchEntry {
+    /// Token context for a batch geometry.
+    pub fn token_ctx(
+        &self,
+        mbs: u64,
+        seq_len: u64,
+        images_per_sample: u64,
+        clips_per_sample: u64,
+    ) -> TokenCtx {
+        TokenCtx {
+            mbs,
+            seq_len,
+            streams: self
+                .streams
+                .iter()
+                .map(|s| s.resolve(images_per_sample, clips_per_sample))
+                .collect(),
+        }
+    }
+
+    /// Tokens per item inside the first vision tower (legacy
+    /// `ZooEntry::vision_tokens`); 0 for models without one.
+    pub fn vision_tokens(&self) -> u64 {
+        self.streams
+            .iter()
+            .find(|s| s.modality == Modality::Vision)
+            .map(|s| s.tokens_per_item)
+            .unwrap_or(0)
+    }
+
+    /// Projected tokens per item entering the LM through the first
+    /// connector (legacy `ZooEntry::image_tokens`); 0 if unimodal.
+    pub fn image_tokens(&self) -> u64 {
+        self.streams
+            .iter()
+            .find(|s| s.modality == Modality::Projector)
+            .map(|s| s.tokens_per_item)
+            .unwrap_or(0)
+    }
+}
+
+impl ArchSpec {
+    /// Load a spec from a TOML file (see `ARCHITECTURE.md`
+    /// §Architecture IR for the schema; `examples/archs/` for
+    /// checked-in instances).
+    pub fn from_file(path: &str) -> Result<ArchSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading architecture spec {path}"))?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("unnamed-arch");
+        Self::from_toml(&text, stem).with_context(|| format!("parsing architecture spec {path}"))
+    }
+
+    /// Parse a spec from TOML text; `default_name` is used when the
+    /// document has no top-level `name` key.
+    pub fn from_toml(text: &str, default_name: &str) -> Result<ArchSpec> {
+        toml_spec::parse(text, default_name)
+    }
+
+    /// The connector declared for a tower, if any.
+    fn connector_for(&self, tower: &str) -> Option<&ConnectorSpec> {
+        self.connectors.iter().find(|c| c.after == tower)
+    }
+
+    /// Structural validation (everything lowering relies on).
+    pub fn validate(&self) -> Result<()> {
+        let Some((last, front)) = self.towers.split_last() else {
+            bail!("architecture {:?} has no towers", self.name);
+        };
+        if !matches!(last.family, TowerFamily::Llama(_)) {
+            bail!(
+                "architecture {:?}: the final tower ({:?}) must be a llama-family language decoder",
+                self.name,
+                last.name
+            );
+        }
+        for t in front {
+            if matches!(t.family, TowerFamily::Llama(_)) {
+                bail!(
+                    "architecture {:?}: decoder tower {:?} must come last",
+                    self.name,
+                    t.name
+                );
+            }
+        }
+        let mut module_names: Vec<&str> = self.towers.iter().map(|t| t.name.as_str()).collect();
+        module_names.extend(self.connectors.iter().map(|c| c.name.as_str()));
+        let total = module_names.len();
+        module_names.sort_unstable();
+        module_names.dedup();
+        if module_names.len() != total {
+            bail!("architecture {:?}: duplicate module names", self.name);
+        }
+        for c in &self.connectors {
+            let Some(t) = self.towers.iter().find(|t| t.name == c.after) else {
+                bail!(
+                    "architecture {:?}: connector {:?} references unknown tower {:?}",
+                    self.name,
+                    c.name,
+                    c.after
+                );
+            };
+            if t.name == last.name {
+                bail!(
+                    "architecture {:?}: the language decoder takes no connector",
+                    self.name
+                );
+            }
+            if let ConnectorKind::SpatialMerge { merge } = c.kind {
+                if merge == 0 {
+                    bail!("architecture {:?}: spatial_merge merge factor must be >= 1", self.name);
+                }
+                let emitted = t.family.emitted_tokens_per_item();
+                if emitted % (merge * merge) != 0 {
+                    bail!(
+                        "architecture {:?}: tower {:?} emits {} tokens/item, not divisible by merge²={}",
+                        self.name,
+                        t.name,
+                        emitted,
+                        merge * merge
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower to the layer graph + token streams. `seq_len` sizes the
+    /// decoder's attention ops; `attn` is applied to every tower with
+    /// `inherit_attn` (matching the legacy `zoo::build` contract).
+    pub fn lower(&self, seq_len: u64, attn: AttnImpl) -> Result<ArchEntry> {
+        self.validate()?;
+        let (last, front) = self.towers.split_last().expect("validated non-empty");
+        let lm_hidden = last.family.hidden();
+
+        let mut spec = ModelSpec::new(self.name.as_str());
+        let mut streams = Vec::with_capacity(front.len() * 2);
+        for t in front {
+            let items = match t.items_per_sample {
+                Some(n) => ItemSource::Fixed(n),
+                None => match t.modality {
+                    Modality::Audio => ItemSource::Clips,
+                    _ => ItemSource::Images,
+                },
+            };
+            match &t.family {
+                TowerFamily::Vit(v) => {
+                    let mut v = *v;
+                    if t.inherit_attn {
+                        v.attn = attn;
+                    }
+                    spec.modules.push(vision::build_named(&t.name, &v));
+                }
+                TowerFamily::AudioConv(a) => {
+                    let mut a = *a;
+                    if t.inherit_attn {
+                        a.attn = attn;
+                    }
+                    spec.modules.push(audio::build_named(&t.name, &a));
+                }
+                TowerFamily::Llama(_) => unreachable!("validated"),
+            }
+            streams.push(StreamSpec {
+                module: t.name.clone(),
+                modality: t.modality,
+                tokens_per_item: t.family.tower_tokens_per_item(),
+                items,
+            });
+
+            // Every encoder tower feeds the decoder through a connector
+            // (an MLP projector unless the spec says otherwise).
+            let default_name;
+            let (conn_name, kind) = match self.connector_for(&t.name) {
+                Some(c) => (c.name.as_str(), c.kind),
+                None => {
+                    default_name = format!("{}_projector", t.name);
+                    (default_name.as_str(), ConnectorKind::Mlp2xGelu)
+                }
+            };
+            let d_in = t.family.hidden();
+            let emitted = t.family.emitted_tokens_per_item();
+            let (module, conn_tokens) = match kind {
+                ConnectorKind::Mlp2xGelu => {
+                    (projector::mlp2x_gelu_named(conn_name, d_in, lm_hidden), emitted)
+                }
+                ConnectorKind::Linear => {
+                    (projector::linear_named(conn_name, d_in, lm_hidden), emitted)
+                }
+                ConnectorKind::SpatialMerge { merge } => (
+                    projector::spatial_merge_named(conn_name, d_in, lm_hidden, merge),
+                    emitted / (merge * merge),
+                ),
+            };
+            spec.modules.push(module);
+            streams.push(StreamSpec {
+                module: conn_name.to_string(),
+                modality: Modality::Projector,
+                tokens_per_item: conn_tokens,
+                items,
+            });
+        }
+
+        match &last.family {
+            TowerFamily::Llama(l) => {
+                let mut l = *l;
+                if last.inherit_attn {
+                    l.attn = attn;
+                }
+                spec.modules.push(language::build_named(&last.name, &l, seq_len));
+            }
+            _ => unreachable!("validated"),
+        }
+
+        Ok(ArchEntry { spec, streams })
+    }
+}
+
+/// Is this model reference a path to a spec file (rather than a zoo
+/// preset name)? Matched case-insensitively on the `.toml` extension.
+pub fn is_spec_path(model: &str) -> bool {
+    std::path::Path::new(model)
+        .extension()
+        .is_some_and(|e| e.eq_ignore_ascii_case("toml"))
+}
+
+/// Resolve a model reference — a zoo preset name or a path to a TOML
+/// architecture spec (anything with a `.toml` extension) — into a
+/// lowered entry. This is the single entry point the parser, baselines
+/// and the inference predictor all use, so every surface accepts
+/// IR-built models.
+pub fn resolve(model: &str, seq_len: u64, attn: AttnImpl) -> Result<ArchEntry> {
+    if is_spec_path(model) {
+        ArchSpec::from_file(model)?.lower(seq_len, attn)
+    } else {
+        zoo::build(model, seq_len, attn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lm() -> LlamaConfig {
+        language::llama_tiny()
+    }
+
+    fn tiny_vit() -> VitConfig {
+        vision::vit_tiny()
+    }
+
+    fn llava_like() -> ArchSpec {
+        ArchSpec {
+            name: "test-llava".into(),
+            towers: vec![
+                TowerSpec {
+                    inherit_attn: false,
+                    ..TowerSpec::new("vision_tower", TowerFamily::Vit(tiny_vit()))
+                },
+                TowerSpec::new("language_model", TowerFamily::Llama(tiny_lm())),
+            ],
+            connectors: vec![ConnectorSpec {
+                after: "vision_tower".into(),
+                name: "mm_projector".into(),
+                kind: ConnectorKind::Mlp2xGelu,
+            }],
+        }
+    }
+
+    #[test]
+    fn lowering_produces_module_order_and_streams() {
+        let e = llava_like().lower(128, AttnImpl::Flash).unwrap();
+        let names: Vec<_> = e.spec.modules.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["vision_tower", "mm_projector", "language_model"]);
+        assert_eq!(e.streams.len(), 2);
+        assert_eq!(e.vision_tokens(), tiny_vit().seq_tokens());
+        assert_eq!(e.image_tokens(), tiny_vit().patch_tokens());
+        let ctx = e.token_ctx(4, 128, 2, 1);
+        assert_eq!(ctx.tokens("vision_tower", Modality::Vision), 4 * 2 * tiny_vit().seq_tokens());
+        assert_eq!(ctx.tokens("language_model", Modality::Language), 4 * 128);
+    }
+
+    #[test]
+    fn three_towers_lower_in_declaration_order() {
+        let mut spec = llava_like();
+        spec.towers.insert(
+            1,
+            TowerSpec::new("audio_tower", TowerFamily::AudioConv(audio::audio_tiny())),
+        );
+        spec.connectors.push(ConnectorSpec {
+            after: "audio_tower".into(),
+            name: "audio_projector".into(),
+            kind: ConnectorKind::Linear,
+        });
+        let e = spec.lower(128, AttnImpl::Flash).unwrap();
+        let names: Vec<_> = e.spec.modules.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["vision_tower", "mm_projector", "audio_tower", "audio_projector", "language_model"]
+        );
+        // audio stream resolves through clips_per_sample, vision through images
+        let ctx = e.token_ctx(1, 64, 3, 2);
+        let audio_tokens = audio::audio_tiny().frame_tokens();
+        assert_eq!(ctx.tokens("audio_tower", Modality::Audio), 2 * audio_tokens);
+        assert_eq!(ctx.tokens("vision_tower", Modality::Vision), 3 * tiny_vit().seq_tokens());
+    }
+
+    #[test]
+    fn missing_connector_defaults_to_mlp() {
+        let mut spec = llava_like();
+        spec.connectors.clear();
+        let e = spec.lower(128, AttnImpl::Flash).unwrap();
+        let m = e.spec.module("vision_tower_projector").expect("default connector");
+        assert_eq!(m.layers.len(), 3); // mlp2x_gelu
+    }
+
+    #[test]
+    fn spatial_merge_divides_the_stream() {
+        let mut spec = llava_like();
+        spec.connectors[0].kind = ConnectorKind::SpatialMerge { merge: 2 };
+        let e = spec.lower(128, AttnImpl::Flash).unwrap();
+        assert_eq!(e.image_tokens(), tiny_vit().patch_tokens() / 4);
+    }
+
+    #[test]
+    fn fixed_items_per_sample_override_config() {
+        let mut spec = llava_like();
+        spec.towers[0].items_per_sample = Some(4);
+        let e = spec.lower(128, AttnImpl::Flash).unwrap();
+        let ctx = e.token_ctx(1, 64, 1, 1); // config says 1 image
+        assert_eq!(ctx.tokens("vision_tower", Modality::Vision), 4 * tiny_vit().seq_tokens());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_specs() {
+        // no towers
+        let empty = ArchSpec { name: "e".into(), towers: vec![], connectors: vec![] };
+        assert!(empty.validate().is_err());
+        // decoder not last
+        let mut wrong_order = llava_like();
+        wrong_order.towers.swap(0, 1);
+        assert!(wrong_order.validate().is_err());
+        // connector to unknown tower
+        let mut dangling = llava_like();
+        dangling.connectors[0].after = "nope".into();
+        assert!(dangling.validate().is_err());
+        // duplicate module names
+        let mut dup = llava_like();
+        dup.connectors[0].name = "vision_tower".into();
+        assert!(dup.validate().is_err());
+        // merge not dividing the patch grid
+        let mut merge = llava_like();
+        merge.connectors[0].kind = ConnectorKind::SpatialMerge { merge: 3 };
+        assert!(merge.validate().is_err());
+    }
+
+    #[test]
+    fn resolve_rejects_missing_spec_files() {
+        assert!(resolve("/nonexistent/arch.toml", 128, AttnImpl::Flash).is_err());
+        assert!(resolve("llava-tiny", 128, AttnImpl::Flash).is_ok());
+    }
+
+    #[test]
+    fn spec_paths_are_detected_case_insensitively() {
+        assert!(is_spec_path("examples/archs/audio-lang.toml"));
+        assert!(is_spec_path("my-arch.TOML"));
+        assert!(!is_spec_path("llava-1.5-7b"));
+        assert!(!is_spec_path("qwen2vl-ish.tml"));
+        assert!(!is_spec_path("arch.toml.bak"));
+    }
+}

@@ -1,0 +1,382 @@
+//! TOML schema for architecture IR files (parsed with the offline
+//! [`crate::config::toml_mini`] subset — one section level, so towers
+//! and connectors live in `[tower.<name>]` / `[connector.<tower>]`
+//! sections keyed by the top-level `towers` order list).
+//!
+//! ```toml
+//! name = "audio-lang"
+//! towers = ["audio_tower", "language_model"]
+//!
+//! [tower.audio_tower]
+//! family = "audio_conv"          # vit | llama | audio_conv
+//! hidden = 768
+//! heads = 12
+//! mlp = 3072
+//! blocks = 12
+//! n_mels = 80                    # audio_conv only
+//! frames = 3000
+//! subsample = 2
+//! # attention = "eager"          # eager | flash | inherit
+//! # items_per_sample = 2         # bake a multiplicity into the arch
+//!
+//! [connector.audio_tower]        # optional; default mlp2x_gelu
+//! kind = "linear"                # mlp2x_gelu | linear | spatial_merge
+//! name = "mm_projector"          # default "<tower>_projector"
+//! # merge = 2                    # spatial_merge only
+//!
+//! [tower.language_model]
+//! family = "llama"
+//! hidden = 4096
+//! heads = 32
+//! inter = 11008
+//! blocks = 32
+//! vocab = 32000
+//! # kv_heads = 32                # default: heads
+//! # with_loss = true
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::config::toml_mini::{self, Doc};
+use crate::model::audio::AudioConfig;
+use crate::model::language::LlamaConfig;
+use crate::model::layer::AttnImpl;
+use crate::model::vision::VitConfig;
+
+use super::{ArchSpec, ConnectorKind, ConnectorSpec, TowerFamily, TowerSpec};
+
+/// Parse a TOML architecture document.
+pub fn parse(text: &str, default_name: &str) -> Result<ArchSpec> {
+    let doc = toml_mini::parse(text)?;
+    check_keys(&doc, "", &["name", "towers"])?;
+    let name = doc.get_str("", "name").unwrap_or(default_name).to_string();
+    let Some(tower_names) = doc.get_str_list("", "towers") else {
+        bail!("architecture spec needs a top-level `towers = [\"...\"]` order list");
+    };
+    if tower_names.is_empty() {
+        bail!("`towers` must list at least one tower");
+    }
+
+    let mut towers = Vec::with_capacity(tower_names.len());
+    let mut connectors = Vec::new();
+    for tname in &tower_names {
+        let section = format!("tower.{tname}");
+        if !doc.has_section(&section) {
+            bail!("missing [{section}] section for tower {tname:?}");
+        }
+        towers.push(parse_tower(&doc, &section, tname)?);
+
+        let csec = format!("connector.{tname}");
+        if doc.has_section(&csec) {
+            connectors.push(parse_connector(&doc, &csec, tname)?);
+        }
+    }
+
+    // Reject connector sections that reference no declared tower (they
+    // would silently do nothing otherwise — better loud than wrong).
+    for t in doc.section_names() {
+        if let Some(after) = t.strip_prefix("connector.") {
+            if !tower_names.iter().any(|n| n == after) {
+                bail!("[connector.{after}] references a tower missing from `towers`");
+            }
+        } else if let Some(tower) = t.strip_prefix("tower.") {
+            if !tower_names.iter().any(|n| n == tower) {
+                bail!("[tower.{tower}] is missing from the `towers` order list");
+            }
+        } else {
+            bail!("unknown section [{t}] (expected [tower.<name>] or [connector.<name>])");
+        }
+    }
+
+    let spec = ArchSpec { name, towers, connectors };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Reject keys outside the allowed set — a misspelled optional key
+/// (`kvheads`, `item_per_sample`) silently falling back to its default
+/// would produce a confidently wrong prediction. Better loud than
+/// wrong, matching `toml_mini`'s own convention.
+fn check_keys(doc: &Doc, section: &str, allowed: &[&str]) -> Result<()> {
+    for k in doc.keys_in(section) {
+        if !allowed.contains(&k) {
+            let wher = if section.is_empty() {
+                "top level".to_string()
+            } else {
+                format!("[{section}]")
+            };
+            bail!("{wher}: unknown key {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn req_u64(doc: &Doc, section: &str, key: &str) -> Result<u64> {
+    match doc.get_int(section, key) {
+        Some(v) if v >= 0 => Ok(v as u64),
+        Some(v) => bail!("[{section}] {key} must be non-negative, got {v}"),
+        None => bail!("[{section}] is missing required integer key {key:?}"),
+    }
+}
+
+fn opt_u64(doc: &Doc, section: &str, key: &str, default: u64) -> Result<u64> {
+    match doc.get_int(section, key) {
+        Some(v) if v >= 0 => Ok(v as u64),
+        Some(v) => bail!("[{section}] {key} must be non-negative, got {v}"),
+        None => Ok(default),
+    }
+}
+
+/// `attention` key: a fixed implementation or "inherit" (= take the
+/// training config's choice at lowering time).
+fn parse_attn(doc: &Doc, section: &str, default: &str) -> Result<(AttnImpl, bool)> {
+    let v = doc.get_str(section, "attention").unwrap_or(default);
+    Ok(match v {
+        "eager" => (AttnImpl::Eager, false),
+        "flash" => (AttnImpl::Flash, false),
+        // the placeholder impl is overwritten at lowering time
+        "inherit" => (AttnImpl::Flash, true),
+        _ => bail!("[{section}] unknown attention {v:?} (eager|flash|inherit)"),
+    })
+}
+
+fn parse_tower(doc: &Doc, section: &str, tname: &str) -> Result<TowerSpec> {
+    let Some(family) = doc.get_str(section, "family") else {
+        bail!("[{section}] is missing `family` (vit|llama|audio_conv)");
+    };
+    const COMMON_KEYS: &[&str] = &["family", "attention", "items_per_sample"];
+    let allow = |extra: &[&str]| -> Vec<&str> {
+        COMMON_KEYS.iter().chain(extra).copied().collect()
+    };
+    let (family, inherit_attn) = match family {
+        "vit" => {
+            check_keys(doc, section, &allow(&["hidden", "heads", "mlp", "blocks", "patch", "image_size"]))?;
+            let (attn, inherit) = parse_attn(doc, section, "eager")?;
+            let cfg = VitConfig {
+                hidden: req_u64(doc, section, "hidden")?,
+                heads: req_u64(doc, section, "heads")?,
+                mlp: req_u64(doc, section, "mlp")?,
+                blocks: req_u64(doc, section, "blocks")? as usize,
+                patch: req_u64(doc, section, "patch")?,
+                image_size: req_u64(doc, section, "image_size")?,
+                attn,
+            };
+            if cfg.patch == 0 || cfg.image_size % cfg.patch != 0 {
+                bail!("[{section}] image_size must be a positive multiple of patch");
+            }
+            (TowerFamily::Vit(cfg), inherit)
+        }
+        "llama" => {
+            check_keys(
+                doc,
+                section,
+                &allow(&["hidden", "heads", "kv_heads", "inter", "blocks", "vocab", "with_loss"]),
+            )?;
+            let (attn, inherit) = parse_attn(doc, section, "inherit")?;
+            let heads = req_u64(doc, section, "heads")?;
+            let cfg = LlamaConfig {
+                hidden: req_u64(doc, section, "hidden")?,
+                heads,
+                kv_heads: opt_u64(doc, section, "kv_heads", heads)?,
+                inter: req_u64(doc, section, "inter")?,
+                blocks: req_u64(doc, section, "blocks")? as usize,
+                vocab: req_u64(doc, section, "vocab")?,
+                attn,
+                with_loss: doc.get_bool(section, "with_loss").unwrap_or(true),
+            };
+            (TowerFamily::Llama(cfg), inherit)
+        }
+        "audio_conv" | "audio" => {
+            check_keys(
+                doc,
+                section,
+                &allow(&["hidden", "heads", "mlp", "blocks", "n_mels", "frames", "subsample"]),
+            )?;
+            let (attn, inherit) = parse_attn(doc, section, "eager")?;
+            let cfg = AudioConfig {
+                hidden: req_u64(doc, section, "hidden")?,
+                heads: req_u64(doc, section, "heads")?,
+                mlp: req_u64(doc, section, "mlp")?,
+                blocks: req_u64(doc, section, "blocks")? as usize,
+                n_mels: opt_u64(doc, section, "n_mels", 80)?,
+                frames: opt_u64(doc, section, "frames", 3000)?,
+                subsample: opt_u64(doc, section, "subsample", 2)?,
+                attn,
+            };
+            if cfg.subsample == 0 {
+                bail!("[{section}] subsample must be >= 1");
+            }
+            (TowerFamily::AudioConv(cfg), inherit)
+        }
+        other => bail!("[{section}] unknown family {other:?} (vit|llama|audio_conv)"),
+    };
+
+    // Modality always derives from the family: the lowered layers are
+    // tagged by the family builders, so an independent override would
+    // let the token stream and the layer records disagree.
+    let modality = family.default_modality();
+    let items_per_sample = match doc.get_int(section, "items_per_sample") {
+        Some(v) if v > 0 => Some(v as u64),
+        Some(v) => bail!("[{section}] items_per_sample must be positive, got {v}"),
+        None => None,
+    };
+
+    Ok(TowerSpec {
+        name: tname.to_string(),
+        modality,
+        family,
+        inherit_attn,
+        items_per_sample,
+    })
+}
+
+fn parse_connector(doc: &Doc, section: &str, tower: &str) -> Result<ConnectorSpec> {
+    check_keys(doc, section, &["kind", "name", "merge"])?;
+    let kind = match doc.get_str(section, "kind").unwrap_or("mlp2x_gelu") {
+        "mlp2x_gelu" | "mlp" => ConnectorKind::Mlp2xGelu,
+        "linear" => ConnectorKind::Linear,
+        "spatial_merge" => ConnectorKind::SpatialMerge { merge: opt_u64(doc, section, "merge", 2)? },
+        other => bail!("[{section}] unknown kind {other:?} (mlp2x_gelu|linear|spatial_merge)"),
+    };
+    if !matches!(kind, ConnectorKind::SpatialMerge { .. }) && doc.get_int(section, "merge").is_some()
+    {
+        bail!("[{section}] `merge` only applies to kind = \"spatial_merge\"");
+    }
+    let name = doc
+        .get_str(section, "name")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{tower}_projector"));
+    Ok(ConnectorSpec { after: tower.to_string(), name, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch;
+    use crate::model::dims::Modality;
+
+    const AUDIO_LANG: &str = r#"
+name = "audio-lang-test"
+towers = ["audio_tower", "language_model"]
+
+[tower.audio_tower]
+family = "audio_conv"
+hidden = 64
+heads = 4
+mlp = 128
+blocks = 2
+n_mels = 16
+frames = 64
+subsample = 2
+
+[connector.audio_tower]
+kind = "linear"
+name = "mm_projector"
+
+[tower.language_model]
+family = "llama"
+hidden = 64
+heads = 4
+inter = 128
+blocks = 2
+vocab = 256
+"#;
+
+    #[test]
+    fn audio_lang_round_trips() {
+        let spec = parse(AUDIO_LANG, "fallback").unwrap();
+        assert_eq!(spec.name, "audio-lang-test");
+        assert_eq!(spec.towers.len(), 2);
+        let e = spec.lower(128, AttnImpl::Flash).unwrap();
+        let names: Vec<_> = e.spec.modules.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["audio_tower", "mm_projector", "language_model"]);
+        // linear connector: one layer
+        assert_eq!(e.spec.module("mm_projector").unwrap().layers.len(), 1);
+        assert_eq!(e.vision_tokens(), 0);
+        assert_eq!(e.image_tokens(), 64 / 2);
+        assert!(e.spec.layers().any(|l| l.modality == Modality::Audio));
+    }
+
+    #[test]
+    fn default_name_comes_from_the_file_stem() {
+        let text = AUDIO_LANG.replace("name = \"audio-lang-test\"\n", "");
+        let spec = parse(&text, "stem-name").unwrap();
+        assert_eq!(spec.name, "stem-name");
+    }
+
+    #[test]
+    fn kv_heads_defaults_to_heads_and_loss_defaults_on() {
+        let spec = parse(AUDIO_LANG, "x").unwrap();
+        match &spec.towers[1].family {
+            TowerFamily::Llama(l) => {
+                assert_eq!(l.kv_heads, 4);
+                assert!(l.with_loss);
+            }
+            other => panic!("expected llama, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_loudly() {
+        // missing towers list
+        assert!(parse("name = \"x\"\n", "x").is_err());
+        // tower without a section
+        assert!(parse("towers = [\"a\"]\n", "x").is_err());
+        // missing family
+        assert!(parse("towers = [\"a\"]\n[tower.a]\nhidden = 4\n", "x").is_err());
+        // missing required key
+        assert!(parse("towers = [\"a\"]\n[tower.a]\nfamily = \"llama\"\n", "x").is_err());
+        // connector to undeclared tower
+        let dangling = format!("{AUDIO_LANG}\n[connector.ghost]\nkind = \"linear\"\n");
+        assert!(parse(&dangling, "x").is_err());
+        // tower section missing from the order list
+        let orphan = format!("{AUDIO_LANG}\n[tower.orphan]\nfamily = \"llama\"\n");
+        assert!(parse(&orphan, "x").is_err());
+        // decoder must be last (validate() runs inside parse)
+        let swapped = AUDIO_LANG.replace(
+            "towers = [\"audio_tower\", \"language_model\"]",
+            "towers = [\"language_model\", \"audio_tower\"]",
+        );
+        assert!(parse(&swapped, "x").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_loudly() {
+        // misspelled optional keys must not silently fall back to
+        // their defaults
+        let kvheads = AUDIO_LANG.replace("vocab = 256", "vocab = 256\nkvheads = 2");
+        let err = parse(&kvheads, "x").unwrap_err().to_string();
+        assert!(err.contains("kvheads"), "{err}");
+        let items = AUDIO_LANG.replace("subsample = 2", "subsample = 2\nitem_per_sample = 4");
+        assert!(parse(&items, "x").is_err());
+        // top-level strays too (e.g. a training config passed by accident)
+        let top = format!("mbs = 8\n{AUDIO_LANG}");
+        assert!(parse(&top, "x").is_err());
+        // merge on a non-spatial connector is a mistake, not a default
+        let merge = AUDIO_LANG.replace("kind = \"linear\"", "kind = \"linear\"\nmerge = 2");
+        assert!(parse(&merge, "x").is_err());
+        // and so is a section that is neither tower nor connector
+        let stray = format!("{AUDIO_LANG}\n[overheads]\ncuda_ctx_mib = 830.0\n");
+        assert!(parse(&stray, "x").is_err());
+    }
+
+    #[test]
+    fn inherit_attention_takes_the_lowering_argument() {
+        let spec = parse(AUDIO_LANG, "x").unwrap();
+        let eager = spec.lower(128, AttnImpl::Eager).unwrap();
+        let flash = spec.lower(128, AttnImpl::Flash).unwrap();
+        // llama tower defaults to inherit: eager lowering has the 3-op
+        // attention core, flash the fused one
+        assert!(eager.spec.num_layers() > flash.spec.num_layers());
+    }
+
+    #[test]
+    fn resolve_loads_spec_files_end_to_end() {
+        let path = std::env::temp_dir().join(format!("mmpredict_arch_{}.toml", std::process::id()));
+        std::fs::write(&path, AUDIO_LANG).unwrap();
+        let e = arch::resolve(path.to_str().unwrap(), 128, AttnImpl::Flash).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(e.spec.name, "audio-lang-test");
+        assert!(e.spec.param_elems() > 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Audio encoder architectures: a Whisper-style conv-subsample frontend
+//! (two `Conv1d`s over the mel spectrogram, GELU between) followed by a
+//! pre-LN transformer stack, reconstructed at PyTorch leaf-module
+//! granularity like the vision tower.
+//!
+//! Token accounting uses the *post-subsample* frame rate as the
+//! module's token stream (Whisper-small: 3000 mel frames → 1500
+//! encoder tokens); stem layers upstream of the subsampling conv run
+//! at `subsample ×` that rate and carry the factor explicitly (the
+//! `Conv1d` kind's `rate`, a dim-scaled activation for the GELU), so
+//! their memory and FLOPs are costed at the true input rate.
+
+use super::dims::Modality;
+use super::graph::push_vit_block;
+use super::layer::{ActFn, AttnImpl, LayerKind};
+use super::module::ModuleSpec;
+
+/// Hyperparameters of a conv-subsample audio encoder tower.
+#[derive(Clone, Copy, Debug)]
+pub struct AudioConfig {
+    pub hidden: u64,
+    pub heads: u64,
+    pub mlp: u64,
+    pub blocks: usize,
+    /// Mel-filterbank channels of the input spectrogram.
+    pub n_mels: u64,
+    /// Input mel frames per clip (Whisper: 100 frames/s · 30 s = 3000).
+    pub frames: u64,
+    /// Temporal subsampling factor of the conv stem (Whisper: 2).
+    pub subsample: u64,
+    pub attn: AttnImpl,
+}
+
+impl AudioConfig {
+    /// Encoder tokens per clip (post-subsample frames).
+    pub fn frame_tokens(&self) -> u64 {
+        self.frames / self.subsample.max(1)
+    }
+}
+
+/// Whisper-small-shaped encoder: 12 blocks, hidden 768, 12 heads,
+/// MLP 3072, 80 mels, 3000 frames, 2× subsample.
+pub fn whisper_small() -> AudioConfig {
+    AudioConfig {
+        hidden: 768,
+        heads: 12,
+        mlp: 3072,
+        blocks: 12,
+        n_mels: 80,
+        frames: 3000,
+        subsample: 2,
+        attn: AttnImpl::Eager,
+    }
+}
+
+/// A tiny audio encoder for unit tests and quick examples.
+pub fn audio_tiny() -> AudioConfig {
+    AudioConfig {
+        hidden: 64,
+        heads: 4,
+        mlp: 128,
+        blocks: 2,
+        n_mels: 16,
+        frames: 64,
+        subsample: 2,
+        attn: AttnImpl::Eager,
+    }
+}
+
+/// Materialize the tower under an explicit module name.
+pub fn build_named(name: &str, cfg: &AudioConfig) -> ModuleSpec {
+    let mut m = ModuleSpec::new(name, Modality::Audio);
+    let sub = cfg.subsample.max(1);
+    // conv1 and its GELU run over the full `frames` input, i.e. at
+    // `sub ×` the module's (post-subsample) stream rate.
+    m.push(
+        "conv1",
+        LayerKind::Conv1d { c_in: cfg.n_mels, c_out: cfg.hidden, kernel: 3, stride: 1, rate: sub },
+    );
+    // parameterless + linear in tokens, so the rate folds into `dim`
+    m.push("conv1_act", LayerKind::Activation { f: ActFn::Gelu, dim: cfg.hidden * sub });
+    m.push(
+        "conv2",
+        LayerKind::Conv1d { c_in: cfg.hidden, c_out: cfg.hidden, kernel: 3, stride: sub, rate: 1 },
+    );
+    m.push("conv2_act", LayerKind::Activation { f: ActFn::Gelu, dim: cfg.hidden });
+    m.push(
+        "embed_positions",
+        LayerKind::PosEmbed { tokens: cfg.frame_tokens(), dim: cfg.hidden },
+    );
+    for i in 0..cfg.blocks {
+        // Whisper encoder blocks are pre-LN with GELU MLPs — the same
+        // shape the ViT block builder emits.
+        push_vit_block(
+            &mut m,
+            i,
+            cfg.hidden,
+            cfg.heads,
+            cfg.mlp,
+            cfg.frame_tokens(),
+            ActFn::Gelu,
+            cfg.attn,
+        );
+    }
+    m.push("layer_norm", LayerKind::LayerNorm { dim: cfg.hidden });
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whisper_small_geometry() {
+        let cfg = whisper_small();
+        assert_eq!(cfg.frame_tokens(), 1500);
+    }
+
+    #[test]
+    fn whisper_small_param_count_close_to_88m() {
+        // Whisper-small encoder is ~88M params.
+        let m = build_named("audio_tower", &whisper_small());
+        let p = m.param_elems() as f64;
+        assert!(p > 8.0e7 && p < 9.5e7, "got {p}");
+    }
+
+    #[test]
+    fn module_is_audio_modality_with_blocks() {
+        let m = build_named("audio_tower", &audio_tiny());
+        assert!(m.layers.iter().all(|l| l.modality == Modality::Audio));
+        // conv stem (5 layers incl. pos embed) + 2 blocks * 14 + final LN
+        assert_eq!(m.layers.len(), 5 + 2 * 14 + 1);
+        assert!(m.layers[0].name.starts_with("audio_tower."));
+        // blocks carry indices so activation checkpointing segments them
+        assert!(m
+            .layers
+            .iter()
+            .any(|l| crate::parser::behavior::block_index(&l.name) == Some(1)));
+    }
+}

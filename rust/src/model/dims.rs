@@ -26,10 +26,15 @@ impl DType {
 
 /// Which modality a module belongs to. Drives the paper's module
 /// extraction (Fig. 1 step 2) and the training-behaviour analysis
-/// (frozen vision tower vs trainable language decoder).
+/// (frozen encoder towers vs trainable language decoder).
+///
+/// `Projector` covers every *connector* between an encoder tower and
+/// the decoder (MLP projector, linear, spatial-merge) — reports label
+/// it "connector".
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Modality {
     Vision,
+    Audio,
     Projector,
     Language,
 }
@@ -38,41 +43,97 @@ impl Modality {
     pub fn as_str(self) -> &'static str {
         match self {
             Modality::Vision => "vision",
+            Modality::Audio => "audio",
             Modality::Projector => "projector",
             Modality::Language => "language",
         }
     }
+
+    /// Report label (the paper's Fig. 1 decomposition vocabulary:
+    /// vision / audio / connector / language).
+    pub fn label(self) -> &'static str {
+        match self {
+            Modality::Projector => "connector",
+            other => other.as_str(),
+        }
+    }
+
+    /// Every modality, in canonical report order.
+    pub const ALL: [Modality; 4] = [
+        Modality::Vision,
+        Modality::Audio,
+        Modality::Projector,
+        Modality::Language,
+    ];
 }
 
-/// Per-step token context: how many tokens flow through each modality.
+/// One resolved per-module token stream: how many tokens flow through
+/// a specific encoder/connector module per sample.
 ///
-/// For LLaVA-style models the language sequence already *includes* the
-/// projected image tokens (`SeqLen` in the paper's settings is the LM
-/// context length), the vision tower runs over `patch + CLS` tokens per
-/// image, and the projector over `patch` tokens per image.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Streams are keyed by *module name*, not modality — a three-tower
+/// model has distinct vision and audio streams, and a multi-image
+/// model has `items_per_sample > 1` on its vision stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenStream {
+    /// Module this stream feeds (e.g. `vision_tower`, `mm_projector`).
+    pub module: String,
+    pub modality: Modality,
+    /// Tokens per item (per image / audio clip) inside the module
+    /// (ViT-L/14-336: 577 in the tower, 576 in its connector).
+    pub tokens_per_item: u64,
+    /// Items (images / audio clips) per sample.
+    pub items_per_sample: u64,
+}
+
+impl TokenStream {
+    /// Tokens per sample through this stream.
+    pub fn tokens_per_sample(&self) -> u64 {
+        self.tokens_per_item * self.items_per_sample
+    }
+}
+
+/// Per-step token context: how many tokens flow through each module.
+///
+/// The language sequence already *includes* the projected
+/// encoder tokens (`SeqLen` in the paper's settings is the LM context
+/// length); encoder towers and connectors each carry their own
+/// [`TokenStream`], derived from the architecture IR instead of being
+/// assumed single-image LLaVA geometry.
+#[derive(Clone, Debug, PartialEq)]
 pub struct TokenCtx {
     /// Micro-batch size (paper: MBS).
     pub mbs: u64,
-    /// Language-model sequence length (paper: SeqLen), image tokens
-    /// included.
+    /// Language-model sequence length (paper: SeqLen), projected
+    /// encoder tokens included.
     pub seq_len: u64,
-    /// Vision-tower tokens per image (ViT-L/14-336: 24*24 + 1 = 577).
-    pub vision_tokens: u64,
-    /// Projected image tokens per image entering the LM (576).
-    pub image_tokens: u64,
-    /// Images per sample (LLaVA: 1).
-    pub images_per_sample: u64,
+    /// Per-module encoder/connector streams (empty for unimodal).
+    pub streams: Vec<TokenStream>,
 }
 
 impl TokenCtx {
-    /// Tokens flowing through a module of the given modality, per step.
-    pub fn tokens(&self, modality: Modality) -> u64 {
-        match modality {
-            Modality::Vision => self.mbs * self.images_per_sample * self.vision_tokens,
-            Modality::Projector => self.mbs * self.images_per_sample * self.image_tokens,
-            Modality::Language => self.mbs * self.seq_len,
+    /// A text-only context (no encoder streams).
+    pub fn unimodal(mbs: u64, seq_len: u64) -> Self {
+        TokenCtx { mbs, seq_len, streams: Vec::new() }
+    }
+
+    /// Tokens flowing through the named module per step. Language
+    /// modules always see `mbs * seq_len`; encoder towers and
+    /// connectors resolve through their stream (0 if the module has
+    /// none — it never runs).
+    pub fn tokens(&self, module: &str, modality: Modality) -> u64 {
+        if modality == Modality::Language {
+            return self.mbs * self.seq_len;
         }
+        self.streams
+            .iter()
+            .find(|s| s.module == module)
+            .map(|s| self.mbs * s.tokens_per_sample())
+            .unwrap_or(0)
+    }
+
+    /// First stream of a modality (reporting convenience).
+    pub fn stream(&self, modality: Modality) -> Option<&TokenStream> {
+        self.streams.iter().find(|s| s.modality == modality)
     }
 }
 
@@ -88,17 +149,62 @@ mod tests {
         assert_eq!(DType::U8.bytes(), 1);
     }
 
-    #[test]
-    fn token_counts_per_modality() {
-        let ctx = TokenCtx {
+    fn llava_ctx(images: u64) -> TokenCtx {
+        TokenCtx {
             mbs: 8,
             seq_len: 2048,
-            vision_tokens: 577,
-            image_tokens: 576,
-            images_per_sample: 1,
-        };
-        assert_eq!(ctx.tokens(Modality::Language), 8 * 2048);
-        assert_eq!(ctx.tokens(Modality::Vision), 8 * 577);
-        assert_eq!(ctx.tokens(Modality::Projector), 8 * 576);
+            streams: vec![
+                TokenStream {
+                    module: "vision_tower".into(),
+                    modality: Modality::Vision,
+                    tokens_per_item: 577,
+                    items_per_sample: images,
+                },
+                TokenStream {
+                    module: "mm_projector".into(),
+                    modality: Modality::Projector,
+                    tokens_per_item: 576,
+                    items_per_sample: images,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn token_counts_per_module() {
+        let ctx = llava_ctx(1);
+        assert_eq!(ctx.tokens("language_model", Modality::Language), 8 * 2048);
+        assert_eq!(ctx.tokens("vision_tower", Modality::Vision), 8 * 577);
+        assert_eq!(ctx.tokens("mm_projector", Modality::Projector), 8 * 576);
+    }
+
+    #[test]
+    fn multi_image_streams_scale_linearly() {
+        let one = llava_ctx(1);
+        let four = llava_ctx(4);
+        assert_eq!(
+            four.tokens("vision_tower", Modality::Vision),
+            4 * one.tokens("vision_tower", Modality::Vision)
+        );
+        // the LM stream is sized by seq_len, not by image count
+        assert_eq!(
+            four.tokens("language_model", Modality::Language),
+            one.tokens("language_model", Modality::Language)
+        );
+    }
+
+    #[test]
+    fn unknown_module_has_no_tokens() {
+        let ctx = TokenCtx::unimodal(4, 128);
+        assert_eq!(ctx.tokens("vision_tower", Modality::Vision), 0);
+        assert_eq!(ctx.tokens("anything", Modality::Language), 4 * 128);
+        assert!(ctx.stream(Modality::Vision).is_none());
+    }
+
+    #[test]
+    fn modality_labels() {
+        assert_eq!(Modality::Projector.label(), "connector");
+        assert_eq!(Modality::Audio.label(), "audio");
+        assert_eq!(Modality::ALL.len(), 4);
     }
 }

@@ -81,10 +81,10 @@ fn push_attention_core(
         AttnImpl::Eager => {
             m.push(format!("{prefix}.self_attn.scores"), LayerKind::AttnScores { heads, head_dim, kv_len });
             m.push(format!("{prefix}.self_attn.softmax"), LayerKind::AttnSoftmax { heads, kv_len });
-            m.push(format!("{prefix}.self_attn.context"), LayerKind::AttnContext { heads, head_dim });
+            m.push(format!("{prefix}.self_attn.context"), LayerKind::AttnContext { heads, head_dim, kv_len });
         }
         AttnImpl::Flash => {
-            m.push(format!("{prefix}.self_attn.flash"), LayerKind::FlashAttn { heads, head_dim });
+            m.push(format!("{prefix}.self_attn.flash"), LayerKind::FlashAttn { heads, head_dim, kv_len });
         }
     }
 }

@@ -68,7 +68,13 @@ pub fn llama_tiny() -> LlamaConfig {
 /// Materialize the decoder as a module named `language_model`, given the
 /// KV length the attention ops see (= LM sequence length in training).
 pub fn build(cfg: &LlamaConfig, kv_len: u64) -> ModuleSpec {
-    let mut m = ModuleSpec::new("language_model", Modality::Language);
+    build_named("language_model", cfg, kv_len)
+}
+
+/// Materialize the decoder under an explicit module name (the
+/// architecture IR lowers towers through this entry point).
+pub fn build_named(name: &str, cfg: &LlamaConfig, kv_len: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new(name, Modality::Language);
     m.push("embed_tokens", LayerKind::Embedding { vocab: cfg.vocab, dim: cfg.hidden });
     for i in 0..cfg.blocks {
         push_llama_block(

@@ -40,6 +40,14 @@ pub enum LayerKind {
     Embedding { vocab: u64, dim: u64 },
     /// ViT patchification conv (`Conv2d(ch, dim, k=patch, s=patch)`).
     PatchEmbed { channels: u64, dim: u64, patch: u64 },
+    /// Audio-frontend conv (`Conv1d(c_in, c_out, kernel, stride)`, with
+    /// bias — the Whisper-style mel-spectrogram subsampling stem).
+    /// `rate` is this layer's output frames per *module stream token*
+    /// (the stream runs at the post-subsample rate, so stem layers
+    /// upstream of the subsampling conv carry `rate = subsample`, the
+    /// subsampling conv and everything after it `rate = 1`); the
+    /// stride factor additionally scales the input-side transients.
+    Conv1d { c_in: u64, c_out: u64, kernel: u64, stride: u64, rate: u64 },
     /// Learned position embedding added to the patch sequence.
     PosEmbed { tokens: u64, dim: u64 },
     /// `nn.LayerNorm(dim)` (weight + bias, saves mean/rstd stats).
@@ -56,9 +64,9 @@ pub enum LayerKind {
     /// Eager attention softmax — probabilities are *saved* for backward.
     AttnSoftmax { heads: u64, kv_len: u64 },
     /// Eager attention context `probs @ V`.
-    AttnContext { heads: u64, head_dim: u64 },
+    AttnContext { heads: u64, head_dim: u64, kv_len: u64 },
     /// Fused flash attention: output + per-row logsumexp only.
-    FlashAttn { heads: u64, head_dim: u64 },
+    FlashAttn { heads: u64, head_dim: u64, kv_len: u64 },
     /// Residual addition (produces a new tensor consumed downstream).
     Add { dim: u64 },
     /// Elementwise product (SwiGLU gating).
@@ -80,6 +88,7 @@ impl LayerKind {
             LayerKind::Linear { d_in, d_out, bias } => d_in * d_out + if bias { d_out } else { 0 },
             LayerKind::Embedding { vocab, dim } => vocab * dim,
             LayerKind::PatchEmbed { channels, dim, patch } => channels * dim * patch * patch,
+            LayerKind::Conv1d { c_in, c_out, kernel, .. } => c_in * c_out * kernel + c_out,
             LayerKind::PosEmbed { tokens, dim } => tokens * dim,
             LayerKind::LayerNorm { dim } => 2 * dim,
             LayerKind::RmsNorm { dim } => dim,
@@ -96,6 +105,7 @@ impl LayerKind {
             LayerKind::Linear { d_out, .. } => t * d_out,
             LayerKind::Embedding { dim, .. } => t * dim,
             LayerKind::PatchEmbed { dim, .. } => t * dim,
+            LayerKind::Conv1d { c_out, rate, .. } => t * rate * c_out,
             LayerKind::PosEmbed { dim, .. } => t * dim,
             // output + mean/rstd stats
             LayerKind::LayerNorm { dim } => t * dim + 2 * t,
@@ -104,9 +114,9 @@ impl LayerKind {
             LayerKind::Rotary { dim } => 2 * t * dim, // rotated Q and K
             LayerKind::AttnScores { .. } => 0,        // ephemeral, see below
             LayerKind::AttnSoftmax { heads, kv_len } => t * heads * kv_len,
-            LayerKind::AttnContext { heads, head_dim } => t * heads * head_dim,
+            LayerKind::AttnContext { heads, head_dim, .. } => t * heads * head_dim,
             // flash: output + logsumexp row stats
-            LayerKind::FlashAttn { heads, head_dim } => t * heads * head_dim + t * heads,
+            LayerKind::FlashAttn { heads, head_dim, .. } => t * heads * head_dim + t * heads,
             LayerKind::Add { dim } => t * dim,
             LayerKind::Mul { dim } => t * dim,
             // fp32 log-probs saved by nll_loss backward (dtype override)
@@ -124,6 +134,7 @@ impl LayerKind {
             // fp32 upcast of logits + softmax temp
             LayerKind::CrossEntropy { vocab } => t * vocab,
             LayerKind::PatchEmbed { channels, patch, .. } => t * channels * patch * patch,
+            LayerKind::Conv1d { c_in, kernel, stride, rate, .. } => t * rate * stride * c_in * kernel,
             _ => 0,
         }
     }
@@ -137,6 +148,7 @@ impl LayerKind {
             LayerKind::Linear { d_in, .. } => t * d_in,
             LayerKind::Embedding { .. } => 0, // sparse grad into weight
             LayerKind::PatchEmbed { channels, patch, .. } => t * channels * patch * patch,
+            LayerKind::Conv1d { c_in, stride, rate, .. } => t * rate * stride * c_in,
             LayerKind::PosEmbed { dim, .. } => t * dim,
             LayerKind::LayerNorm { dim } => t * dim,
             LayerKind::RmsNorm { dim } => t * dim,
@@ -144,8 +156,8 @@ impl LayerKind {
             LayerKind::Rotary { dim } => 2 * t * dim,
             LayerKind::AttnScores { heads, kv_len, .. } => t * heads * kv_len,
             LayerKind::AttnSoftmax { heads, kv_len } => 2 * t * heads * kv_len,
-            LayerKind::AttnContext { heads, head_dim } => t * heads * head_dim,
-            LayerKind::FlashAttn { heads, head_dim } => 2 * t * heads * head_dim,
+            LayerKind::AttnContext { heads, head_dim, .. } => t * heads * head_dim,
+            LayerKind::FlashAttn { heads, head_dim, .. } => 2 * t * heads * head_dim,
             LayerKind::Add { dim } => t * dim,
             LayerKind::Mul { dim } => 2 * t * dim,
             LayerKind::CrossEntropy { vocab } => t * vocab,
@@ -169,9 +181,12 @@ impl LayerKind {
         match *self {
             LayerKind::Linear { d_in, d_out, .. } => 2 * t * d_in * d_out,
             LayerKind::PatchEmbed { channels, dim, patch } => 2 * t * channels * patch * patch * dim,
+            LayerKind::Conv1d { c_in, c_out, kernel, rate, .. } => 2 * t * rate * c_in * c_out * kernel,
             LayerKind::AttnScores { heads, head_dim, kv_len } => 2 * t * heads * head_dim * kv_len,
-            LayerKind::AttnContext { heads, head_dim } => 2 * t * heads * head_dim * head_dim,
-            LayerKind::FlashAttn { heads, head_dim } => 4 * t * heads * head_dim * head_dim,
+            // `probs @ V` contracts over the kv axis: [t, kv] x [kv, d].
+            LayerKind::AttnContext { heads, head_dim, kv_len } => 2 * t * heads * kv_len * head_dim,
+            // flash fuses both matmuls (QK^T and PV), each 2·MACs.
+            LayerKind::FlashAttn { heads, head_dim, kv_len } => 4 * t * heads * kv_len * head_dim,
             LayerKind::CrossEntropy { vocab } => 2 * t * vocab,
             LayerKind::LoraA { d_in, rank } => 2 * t * d_in * rank,
             LayerKind::LoraB { rank, d_out } => 2 * t * rank * d_out,
@@ -199,6 +214,7 @@ impl LayerKind {
             LayerKind::Linear { .. } => "linear",
             LayerKind::Embedding { .. } => "embedding",
             LayerKind::PatchEmbed { .. } => "patch_embed",
+            LayerKind::Conv1d { .. } => "conv1d",
             LayerKind::PosEmbed { .. } => "pos_embed",
             LayerKind::LayerNorm { .. } => "layer_norm",
             LayerKind::RmsNorm { .. } => "rms_norm",
@@ -266,9 +282,60 @@ mod tests {
 
     #[test]
     fn flash_attention_saves_no_quadratic_tensor() {
-        let f = LayerKind::FlashAttn { heads: 32, head_dim: 128 };
+        let f = LayerKind::FlashAttn { heads: 32, head_dim: 128, kv_len: 2048 };
         // linear in t, independent of kv_len
         assert_eq!(f.saved_act_elems(10), 10 * 32 * 128 + 10 * 32);
+    }
+
+    #[test]
+    fn attention_flops_scale_with_kv_len() {
+        // Regression: the contraction length of both attention matmuls
+        // is kv_len, not head_dim — a long-context config must cost
+        // proportionally more FLOPs.
+        let t = 64u64;
+        let (heads, head_dim) = (32u64, 128u64);
+        for kv_len in [512u64, 2048, 8192] {
+            let scores = LayerKind::AttnScores { heads, head_dim, kv_len };
+            let ctxt = LayerKind::AttnContext { heads, head_dim, kv_len };
+            let flash = LayerKind::FlashAttn { heads, head_dim, kv_len };
+            assert_eq!(scores.flops(t), 2 * t * heads * head_dim * kv_len);
+            assert_eq!(ctxt.flops(t), 2 * t * heads * kv_len * head_dim);
+            // flash = scores + context, fused
+            assert_eq!(flash.flops(t), scores.flops(t) + ctxt.flops(t));
+        }
+        // and doubling kv_len doubles the cost
+        let f1 = LayerKind::FlashAttn { heads, head_dim, kv_len: 1024 };
+        let f2 = LayerKind::FlashAttn { heads, head_dim, kv_len: 2048 };
+        assert_eq!(f2.flops(t), 2 * f1.flops(t));
+    }
+
+    #[test]
+    fn conv1d_accounting() {
+        // Whisper conv2 (the subsampling conv): Conv1d(768, 768, k=3,
+        // s=2), bias; its output IS the stream rate (rate = 1).
+        let k = LayerKind::Conv1d { c_in: 768, c_out: 768, kernel: 3, stride: 2, rate: 1 };
+        assert_eq!(k.param_elems(), 768 * 768 * 3 + 768);
+        assert_eq!(k.saved_act_elems(100), 100 * 768);
+        // input-side transients scale with the stride (input frames)
+        assert_eq!(k.ephemeral_elems(100), 100 * 2 * 768 * 3);
+        assert_eq!(k.bwd_transient_elems(100), 100 * 2 * 768);
+        assert_eq!(k.flops(100), 2 * 100 * 768 * 768 * 3);
+        assert!(k.has_params());
+        assert_eq!(k.tag(), "conv1d");
+    }
+
+    #[test]
+    fn conv1d_pre_subsample_layers_run_at_the_input_rate() {
+        // Whisper conv1: stride 1, but it lives *upstream* of the 2x
+        // subsampling conv, so per stream token it produces rate = 2
+        // output frames — everything except params scales by rate.
+        let pre = LayerKind::Conv1d { c_in: 80, c_out: 768, kernel: 3, stride: 1, rate: 2 };
+        let at_stream = LayerKind::Conv1d { c_in: 80, c_out: 768, kernel: 3, stride: 1, rate: 1 };
+        assert_eq!(pre.param_elems(), at_stream.param_elems());
+        assert_eq!(pre.saved_act_elems(100), 2 * at_stream.saved_act_elems(100));
+        assert_eq!(pre.ephemeral_elems(100), 2 * at_stream.ephemeral_elems(100));
+        assert_eq!(pre.bwd_transient_elems(100), 2 * at_stream.bwd_transient_elems(100));
+        assert_eq!(pre.flops(100), 2 * at_stream.flops(100));
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Typed description of multimodal model architectures.
 //!
-//! The paper's *model parser* (Fig. 1 steps 1–4) operates on exactly this
-//! representation: a model is a sequence of **modules** (vision encoder,
-//! projector, language decoder — distinguished by [`Modality`]), each of
-//! which decomposes into fine-grained **layers** ([`layer::Layer`], the
-//! analogue of PyTorch leaf modules such as `nn.Linear`) in forward
-//! execution order.
+//! Architectures are *data*: a declarative IR ([`arch::ArchSpec`] —
+//! ordered encoder towers joined to a language decoder by typed
+//! connectors) that comes from the preset registry ([`zoo`]) or a TOML
+//! spec file, and lowers onto the representation the paper's *model
+//! parser* (Fig. 1 steps 1–4) operates on: a model is a sequence of
+//! **modules** (vision/audio encoders, connectors, language decoder —
+//! distinguished by [`Modality`]), each of which decomposes into
+//! fine-grained **layers** ([`layer::Layer`], the analogue of PyTorch
+//! leaf modules such as `nn.Linear`) in forward execution order.
 //!
 //! Every layer knows its parameter count and its activation/workspace
 //! footprint as a function of the token context ([`dims::TokenCtx`]);
@@ -14,6 +17,8 @@
 //! them is confined to *operational* effects (allocator behaviour, buffer
 //! interleaving) — which is what the paper's MAPE measures.
 
+pub mod arch;
+pub mod audio;
 pub mod dims;
 pub mod graph;
 pub mod language;
@@ -24,6 +29,7 @@ pub mod projector;
 pub mod vision;
 pub mod zoo;
 
-pub use dims::{DType, Modality, TokenCtx};
+pub use arch::{ArchEntry, ArchSpec};
+pub use dims::{DType, Modality, TokenCtx, TokenStream};
 pub use layer::{AttnImpl, Layer, LayerKind};
 pub use module::{ModelSpec, ModuleSpec};

@@ -1,6 +1,8 @@
-//! The LLaVA multimodal projector: aligns vision-tower patch features
-//! with the language embedding space. LLaVA-1.5 uses a 2-layer MLP with
-//! GELU (`mlp2x_gelu`); LLaVA-1.0 used a single linear layer.
+//! Connector modules: align encoder-tower features with the language
+//! embedding space. LLaVA-1.5 uses a 2-layer MLP with GELU
+//! (`mlp2x_gelu`); LLaVA-1.0 used a single linear layer; Qwen2-VL-style
+//! models merge a spatial neighbourhood of patches before projecting
+//! (`spatial_merge`).
 
 use super::dims::Modality;
 use super::layer::{ActFn, LayerKind};
@@ -8,17 +10,42 @@ use super::module::ModuleSpec;
 
 /// LLaVA-1.5 `mlp2x_gelu` projector: Linear(v, h) -> GELU -> Linear(h, h).
 pub fn mlp2x_gelu(vision_hidden: u64, lm_hidden: u64) -> ModuleSpec {
-    let mut m = ModuleSpec::new("mm_projector", Modality::Projector);
-    m.push("0", LayerKind::Linear { d_in: vision_hidden, d_out: lm_hidden, bias: true });
-    m.push("1", LayerKind::Activation { f: ActFn::Gelu, dim: lm_hidden });
-    m.push("2", LayerKind::Linear { d_in: lm_hidden, d_out: lm_hidden, bias: true });
+    mlp2x_gelu_named("mm_projector", vision_hidden, lm_hidden)
+}
+
+/// `mlp2x_gelu` under an explicit module name (IR lowering entry point).
+pub fn mlp2x_gelu_named(name: &str, d_in: u64, d_out: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new(name, Modality::Projector);
+    m.push("0", LayerKind::Linear { d_in, d_out, bias: true });
+    m.push("1", LayerKind::Activation { f: ActFn::Gelu, dim: d_out });
+    m.push("2", LayerKind::Linear { d_in: d_out, d_out, bias: true });
     m
 }
 
 /// LLaVA-1.0 single-linear projector (kept for architecture ablations).
 pub fn linear(vision_hidden: u64, lm_hidden: u64) -> ModuleSpec {
-    let mut m = ModuleSpec::new("mm_projector", Modality::Projector);
-    m.push("0", LayerKind::Linear { d_in: vision_hidden, d_out: lm_hidden, bias: true });
+    linear_named("mm_projector", vision_hidden, lm_hidden)
+}
+
+/// Single-linear connector under an explicit module name.
+pub fn linear_named(name: &str, d_in: u64, d_out: u64) -> ModuleSpec {
+    let mut m = ModuleSpec::new(name, Modality::Projector);
+    m.push("0", LayerKind::Linear { d_in, d_out, bias: true });
+    m
+}
+
+/// Qwen2-VL-style patch merger: LayerNorm, then an MLP over a
+/// `merge × merge` spatial neighbourhood of patches concatenated on the
+/// channel axis (`d_in·merge²`), projecting into the LM width. The whole
+/// module is accounted at the *post-merge* token rate (the pre-merge
+/// LayerNorm is a small underestimate, ~d_in per merged token).
+pub fn spatial_merge_named(name: &str, d_in: u64, d_out: u64, merge: u64) -> ModuleSpec {
+    let merged = d_in * merge * merge;
+    let mut m = ModuleSpec::new(name, Modality::Projector);
+    m.push("ln_q", LayerKind::LayerNorm { dim: d_in });
+    m.push("mlp.0", LayerKind::Linear { d_in: merged, d_out: merged, bias: true });
+    m.push("mlp.1", LayerKind::Activation { f: ActFn::Gelu, dim: merged });
+    m.push("mlp.2", LayerKind::Linear { d_in: merged, d_out, bias: true });
     m
 }
 
@@ -38,5 +65,26 @@ mod tests {
     fn linear_param_count() {
         let m = linear(1024, 4096);
         assert_eq!(m.param_elems(), 1024 * 4096 + 4096);
+    }
+
+    #[test]
+    fn named_builders_only_change_the_prefix() {
+        let a = mlp2x_gelu(64, 128);
+        let b = mlp2x_gelu_named("connector", 64, 128);
+        assert_eq!(a.param_elems(), b.param_elems());
+        assert_eq!(a.layers.len(), b.layers.len());
+        assert!(b.layers[0].name.starts_with("connector."));
+    }
+
+    #[test]
+    fn spatial_merge_param_count() {
+        let m = spatial_merge_named("merger", 1280, 3584, 2);
+        let merged = 1280 * 4;
+        assert_eq!(
+            m.param_elems(),
+            2 * 1280 + (merged * merged + merged) + (merged * 3584 + 3584)
+        );
+        assert_eq!(m.layers.len(), 4);
+        assert!(m.layers.iter().all(|l| l.modality == Modality::Projector));
     }
 }

@@ -61,7 +61,13 @@ pub fn vit_tiny() -> VitConfig {
 
 /// Materialize the tower as a module named `vision_tower`.
 pub fn build(cfg: &VitConfig) -> ModuleSpec {
-    let mut m = ModuleSpec::new("vision_tower", Modality::Vision);
+    build_named("vision_tower", cfg)
+}
+
+/// Materialize the tower under an explicit module name (the
+/// architecture IR lowers towers through this entry point).
+pub fn build_named(name: &str, cfg: &VitConfig) -> ModuleSpec {
+    let mut m = ModuleSpec::new(name, Modality::Vision);
     m.push(
         "embeddings.patch_embedding",
         LayerKind::PatchEmbed { channels: 3, dim: cfg.hidden, patch: cfg.patch },

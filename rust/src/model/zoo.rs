@@ -1,54 +1,57 @@
-//! Named model presets — the architectures the evaluation uses, plus
-//! tiny variants for tests and quick-start examples.
+//! Named model presets — a thin registry whose entries are
+//! [`ArchSpec`] values in the declarative architecture IR. Every name
+//! lowers through exactly the same path as a TOML spec file
+//! (`--model-file`), so presets carry no special-cased composition
+//! code; the golden parity suite (`tests/parity.rs`) pins each preset's
+//! lowering to the pre-IR hand-built module sequence.
 
 use anyhow::{bail, Result};
 
-use super::dims::TokenCtx;
+use super::arch::{ArchEntry, ArchSpec, ConnectorKind, ConnectorSpec, TowerFamily, TowerSpec};
 use super::language::{self, LlamaConfig};
 use super::layer::AttnImpl;
-use super::module::ModelSpec;
-use super::projector;
 use super::vision::{self, VitConfig};
 
-/// A zoo entry: the materialized spec plus the token geometry the
-/// architecture implies (needed to build a [`TokenCtx`]).
-#[derive(Clone, Debug)]
-pub struct ZooEntry {
-    pub spec: ModelSpec,
-    /// Vision-tower tokens per image (patches + CLS); 0 for unimodal.
-    pub vision_tokens: u64,
-    /// Projected image tokens per image entering the LM; 0 for unimodal.
-    pub image_tokens: u64,
+/// A lowered preset (kept under its legacy name — see [`ArchEntry`]).
+pub type ZooEntry = ArchEntry;
+
+/// The registry: one `(name, ArchSpec constructor)` pair per preset.
+/// [`names`], [`build`] and the CLI's model list all derive from this
+/// single table.
+const PRESETS: &[(&str, fn() -> ArchSpec)] = &[
+    ("llava-1.5-7b", || {
+        llava("llava-1.5-7b", vision::clip_vit_l14_336(), language::vicuna_7b(AttnImpl::Flash), true)
+    }),
+    ("llava-1.5-13b", || {
+        llava("llava-1.5-13b", vision::clip_vit_l14_336(), language::vicuna_13b(AttnImpl::Flash), true)
+    }),
+    ("llava-tiny", || llava("llava-tiny", vision::vit_tiny(), language::llama_tiny(), false)),
+    ("vicuna-7b", || unimodal("vicuna-7b", language::vicuna_7b(AttnImpl::Flash), true)),
+    ("vicuna-13b", || unimodal("vicuna-13b", language::vicuna_13b(AttnImpl::Flash), true)),
+    ("llama-tiny", || unimodal("llama-tiny", language::llama_tiny(), false)),
+];
+
+/// All preset names `build` accepts, in registry order.
+pub fn names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
 }
 
-impl ZooEntry {
-    /// Token context for a given micro-batch/sequence setting.
-    pub fn token_ctx(&self, mbs: u64, seq_len: u64, images_per_sample: u64) -> TokenCtx {
-        TokenCtx {
-            mbs,
-            seq_len,
-            vision_tokens: self.vision_tokens,
-            image_tokens: self.image_tokens,
-            images_per_sample: if self.vision_tokens == 0 { 0 } else { images_per_sample },
-        }
-    }
-}
-
-/// All model names `build` accepts.
-pub fn names() -> &'static [&'static str] {
-    &[
-        "llava-1.5-7b",
-        "llava-1.5-13b",
-        "llava-tiny",
-        "vicuna-7b",
-        "vicuna-13b",
-        "llama-tiny",
-    ]
+/// The preset's architecture IR, if the name is registered
+/// (case-insensitive).
+pub fn arch_spec(name: &str) -> Option<ArchSpec> {
+    let name = name.trim();
+    PRESETS
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(name))
+        .map(|(_, f)| f())
 }
 
 /// Build a preset. `seq_len` sizes the decoder's attention ops (training
 /// context length); `attn` selects the language-tower attention
-/// implementation (the CLIP vision tower is always eager, as in HF).
+/// implementation for the presets that inherit it (the CLIP vision
+/// tower is always eager, as in HF; the tiny presets pin flash).
+/// Names are matched case-insensitively; unknown names get a
+/// did-you-mean suggestion.
 ///
 /// ```
 /// use mmpredict::model::layer::AttnImpl;
@@ -60,61 +63,86 @@ pub fn names() -> &'static [&'static str] {
 /// assert!(zoo::build("gpt-5", 128, AttnImpl::Flash).is_err());
 /// ```
 pub fn build(name: &str, seq_len: u64, attn: AttnImpl) -> Result<ZooEntry> {
-    match name {
-        "llava-1.5-7b" => Ok(llava(
-            "llava-1.5-7b",
-            vision::clip_vit_l14_336(),
-            language::vicuna_7b(attn),
-            seq_len,
-        )),
-        "llava-1.5-13b" => Ok(llava(
-            "llava-1.5-13b",
-            vision::clip_vit_l14_336(),
-            language::vicuna_13b(attn),
-            seq_len,
-        )),
-        "llava-tiny" => Ok(llava(
-            "llava-tiny",
-            vision::vit_tiny(),
-            language::llama_tiny(),
-            seq_len,
-        )),
-        "vicuna-7b" => Ok(unimodal("vicuna-7b", language::vicuna_7b(attn), seq_len)),
-        "vicuna-13b" => Ok(unimodal("vicuna-13b", language::vicuna_13b(attn), seq_len)),
-        "llama-tiny" => Ok(unimodal("llama-tiny", language::llama_tiny(), seq_len)),
-        other => bail!(
-            "unknown model {other:?}; available: {}",
-            names().join(", ")
-        ),
+    match arch_spec(name) {
+        Some(spec) => spec.lower(seq_len, attn),
+        None => {
+            let hint = closest_name(name)
+                .map(|c| format!(" — did you mean {c:?}?"))
+                .unwrap_or_default();
+            bail!(
+                "unknown model {name:?}{hint} (available: {}; or pass a .toml architecture spec)",
+                names().join(", ")
+            )
+        }
     }
 }
 
-/// Compose a LLaVA-style model: vision tower -> projector -> decoder.
-fn llava(name: &str, vit: VitConfig, lm: LlamaConfig, seq_len: u64) -> ZooEntry {
-    let mut spec = ModelSpec::new(name);
-    spec.modules.push(vision::build(&vit));
-    spec.modules.push(projector::mlp2x_gelu(vit.hidden, lm.hidden));
-    spec.modules.push(language::build(&lm, seq_len));
-    ZooEntry {
-        spec,
-        vision_tokens: vit.seq_tokens(),
-        image_tokens: vit.patch_tokens(),
+/// LLaVA-style composition: ViT tower -> MLP projector -> decoder.
+fn llava(name: &str, vit: VitConfig, lm: LlamaConfig, inherit_lm_attn: bool) -> ArchSpec {
+    ArchSpec {
+        name: name.to_string(),
+        towers: vec![
+            TowerSpec {
+                inherit_attn: false, // CLIP towers stay eager
+                ..TowerSpec::new("vision_tower", TowerFamily::Vit(vit))
+            },
+            TowerSpec {
+                inherit_attn: inherit_lm_attn,
+                ..TowerSpec::new("language_model", TowerFamily::Llama(lm))
+            },
+        ],
+        connectors: vec![ConnectorSpec {
+            after: "vision_tower".into(),
+            name: "mm_projector".into(),
+            kind: ConnectorKind::Mlp2xGelu,
+        }],
     }
 }
 
-fn unimodal(name: &str, lm: LlamaConfig, seq_len: u64) -> ZooEntry {
-    let mut spec = ModelSpec::new(name);
-    spec.modules.push(language::build(&lm, seq_len));
-    ZooEntry {
-        spec,
-        vision_tokens: 0,
-        image_tokens: 0,
+fn unimodal(name: &str, lm: LlamaConfig, inherit_attn: bool) -> ArchSpec {
+    ArchSpec {
+        name: name.to_string(),
+        towers: vec![TowerSpec {
+            inherit_attn,
+            ..TowerSpec::new("language_model", TowerFamily::Llama(lm))
+        }],
+        connectors: Vec::new(),
     }
+}
+
+/// The registered name closest to `name` (edit distance <= 3), for
+/// did-you-mean suggestions.
+fn closest_name(name: &str) -> Option<&'static str> {
+    let lower = name.trim().to_ascii_lowercase();
+    PRESETS
+        .iter()
+        .map(|(n, _)| (*n, edit_distance(&lower, n)))
+        .filter(|&(_, d)| d <= 3)
+        .min_by_key(|&(_, d)| d)
+        .map(|(n, _)| n)
+}
+
+/// Levenshtein distance (small strings; O(a·b) two-row DP).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::dims::Modality;
 
     #[test]
     fn llava_7b_total_params() {
@@ -123,7 +151,8 @@ mod tests {
         let p = e.spec.param_elems() as f64;
         assert!(p > 6.9e9 && p < 7.3e9, "got {p}");
         assert_eq!(e.spec.modules.len(), 3);
-        assert_eq!(e.image_tokens, 576);
+        assert_eq!(e.image_tokens(), 576);
+        assert_eq!(e.vision_tokens(), 577);
     }
 
     #[test]
@@ -140,14 +169,45 @@ mod tests {
     }
 
     #[test]
-    fn unknown_name_errors() {
+    fn unknown_name_errors_with_suggestion() {
         assert!(build("gpt-5", 128, AttnImpl::Flash).is_err());
+        let err = build("lava-1.5-7b", 128, AttnImpl::Flash).unwrap_err().to_string();
+        assert!(err.contains("did you mean"), "{err}");
+        assert!(err.contains("llava-1.5-7b"), "{err}");
+    }
+
+    #[test]
+    fn build_is_case_insensitive() {
+        let lower = build("llava-tiny", 128, AttnImpl::Flash).unwrap();
+        let upper = build("LLaVA-Tiny", 128, AttnImpl::Flash).unwrap();
+        assert_eq!(lower.spec.param_elems(), upper.spec.param_elems());
+        assert_eq!(lower.spec.num_layers(), upper.spec.num_layers());
+    }
+
+    #[test]
+    fn names_match_registry_and_all_build() {
+        let ns = names();
+        assert_eq!(ns.len(), PRESETS.len());
+        for n in ns {
+            let e = build(n, 256, AttnImpl::Flash).unwrap();
+            assert!(e.spec.param_elems() > 0, "{n}");
+            assert!(arch_spec(n).is_some(), "{n}");
+        }
     }
 
     #[test]
     fn unimodal_has_no_vision_tokens() {
         let e = build("vicuna-7b", 1024, AttnImpl::Flash).unwrap();
-        assert_eq!(e.vision_tokens, 0);
-        assert_eq!(e.token_ctx(4, 1024, 1).images_per_sample, 0);
+        assert_eq!(e.vision_tokens(), 0);
+        assert!(e.token_ctx(4, 1024, 1, 1).stream(Modality::Vision).is_none());
+        assert_eq!(e.token_ctx(4, 1024, 1, 1).tokens("vision_tower", Modality::Vision), 0);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("lava", "llava"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

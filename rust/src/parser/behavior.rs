@@ -40,30 +40,97 @@ pub fn block_index(name: &str) -> Option<u32> {
 
 /// Mark which layers backward traverses.
 ///
-/// With a sequential multimodal pipeline, layer `k`'s saved output is
-/// needed iff the backward pass reaches layer `k+1` — i.e. iff some
-/// trainable parameter lives at index `<= k+1`. Consequently a frozen
-/// module *upstream* of every trainable parameter (the vision tower in
-/// both LLaVA stages) retains nothing, while a frozen module
-/// *downstream* of one (the language tower during pre-training) retains
-/// everything — exactly the paper's `M_act` rule: "activations for
+/// The model is a set of parallel **branches** — each encoder tower
+/// plus its connector — merging into the language-decoder **trunk**
+/// (unimodal models are trunk-only). Within a chain, layer `k`'s saved
+/// output is needed iff the backward pass reaches layer `k+1`:
+///
+/// * A branch containing a trainable parameter retains from one layer
+///   before its first trainable (the boundary output is the next
+///   layer's saved input) through to its end — so a frozen tower
+///   *upstream* of its trainable connector (the vision tower in both
+///   LLaVA stages) retains only its boundary layer.
+/// * A fully-frozen branch is pruned by autograd: nothing retained,
+///   except its boundary layer when the trunk is on the backward path
+///   (the trunk's backward consumes the projected tokens).
+/// * The trunk is fully on the backward path whenever *any* branch is
+///   trainable — gradients must flow through the entire decoder back
+///   to where the projected tokens enter (the language tower during
+///   pre-training retains everything despite being frozen). With only
+///   trunk trainables, it retains from one before the first, as in
+///   unimodal training.
+///
+/// This is exactly the paper's `M_act` rule — "activations for
 /// modalities whose parameters are being updated" plus everything
-/// between them and the loss.
+/// between them and the loss — generalized from the single
+/// vision→projector→LM chain to arbitrary tower/connector graphs.
 ///
 /// Off-path layers also get their backward transients zeroed (backward
 /// never executes there).
 pub fn mark_backward_path(records: &mut [LayerRecord]) {
-    let first_trainable = records.iter().position(|r| r.trainable);
-    let Some(ft) = first_trainable else {
-        for r in records.iter_mut() {
-            r.on_bwd_path = false;
-            r.bwd_transient_elems = 0;
+    // Segment into branches and trunk by module sequence: a Vision or
+    // Audio module starts a new branch, Projector modules join the
+    // branch in progress, Language modules form the trunk.
+    let mut branches: Vec<Vec<usize>> = Vec::new();
+    let mut trunk: Vec<usize> = Vec::new();
+    for (i, r) in records.iter().enumerate() {
+        match r.modality {
+            Modality::Language => trunk.push(i),
+            Modality::Projector => match branches.last_mut() {
+                Some(b) => b.push(i),
+                None => branches.push(vec![i]),
+            },
+            Modality::Vision | Modality::Audio => {
+                let continues = i > 0
+                    && records[i - 1].module == r.module
+                    && branches.last().is_some_and(|b| b.last() == Some(&(i - 1)));
+                match branches.last_mut() {
+                    Some(b) if continues => b.push(i),
+                    _ => branches.push(vec![i]),
+                }
+            }
         }
-        return;
-    };
-    let retain_from = ft.saturating_sub(1);
-    for (k, r) in records.iter_mut().enumerate() {
-        r.on_bwd_path = k >= retain_from;
+    }
+
+    for r in records.iter_mut() {
+        r.on_bwd_path = false;
+    }
+
+    let branch_ft: Vec<Option<usize>> = branches
+        .iter()
+        .map(|b| b.iter().position(|&i| records[i].trainable))
+        .collect();
+    let any_branch_trainable = branch_ft.iter().any(Option::is_some);
+    let trunk_ft = trunk.iter().position(|&i| records[i].trainable);
+    let trunk_on = any_branch_trainable || trunk_ft.is_some();
+
+    if any_branch_trainable {
+        for &i in &trunk {
+            records[i].on_bwd_path = true;
+        }
+    } else if let Some(p) = trunk_ft {
+        for &i in &trunk[p.saturating_sub(1)..] {
+            records[i].on_bwd_path = true;
+        }
+    }
+    for (b, ft) in branches.iter().zip(&branch_ft) {
+        match ft {
+            Some(q) => {
+                for &i in &b[q.saturating_sub(1)..] {
+                    records[i].on_bwd_path = true;
+                }
+            }
+            None => {
+                if trunk_on {
+                    if let Some(&last) = b.last() {
+                        records[last].on_bwd_path = true;
+                    }
+                }
+            }
+        }
+    }
+
+    for r in records.iter_mut() {
         if !r.on_bwd_path {
             r.bwd_transient_elems = 0;
         }
@@ -170,6 +237,82 @@ mod tests {
         let mut rs = vec![rec("a", false, None), rec("b", false, None)];
         mark_backward_path(&mut rs);
         assert!(rs.iter().all(|r| !r.on_bwd_path));
+    }
+
+    fn mrec(name: &str, module: &str, modality: Modality, trainable: bool) -> LayerRecord {
+        LayerRecord {
+            module: module.into(),
+            modality,
+            ..rec(name, trainable, None)
+        }
+    }
+
+    #[test]
+    fn frozen_second_tower_is_pruned_to_its_boundary() {
+        // vision(frozen) -> vproj(trainable) | audio(frozen) ->
+        // aproj(frozen) | lm(trainable): the audio branch has no
+        // trainables, so only its connector boundary is retained.
+        let mut rs = vec![
+            mrec("v.0", "vision_tower", Modality::Vision, false),
+            mrec("v.1", "vision_tower", Modality::Vision, false),
+            mrec("vp.0", "mm_projector", Modality::Projector, true),
+            mrec("a.0", "audio_tower", Modality::Audio, false),
+            mrec("a.1", "audio_tower", Modality::Audio, false),
+            mrec("ap.0", "audio_projector", Modality::Projector, false),
+            mrec("lm.0", "language_model", Modality::Language, true),
+        ];
+        mark_backward_path(&mut rs);
+        let on: Vec<bool> = rs.iter().map(|r| r.on_bwd_path).collect();
+        //    v.0    v.1   vp.0  a.0    a.1    ap.0  lm.0
+        assert_eq!(on, [false, true, true, false, false, true, true]);
+        assert_eq!(rs[0].bwd_transient_elems, 0, "off-path transients zeroed");
+        assert_eq!(rs[4].bwd_transient_elems, 0);
+    }
+
+    #[test]
+    fn trainable_second_branch_retains_from_its_own_first_trainable() {
+        let mut rs = vec![
+            mrec("v.0", "vision_tower", Modality::Vision, false),
+            mrec("vp.0", "mm_projector", Modality::Projector, true),
+            mrec("a.0", "audio_tower", Modality::Audio, false),
+            mrec("a.1", "audio_tower", Modality::Audio, false),
+            mrec("ap.0", "audio_projector", Modality::Projector, true),
+            mrec("lm.0", "language_model", Modality::Language, false),
+        ];
+        mark_backward_path(&mut rs);
+        let on: Vec<bool> = rs.iter().map(|r| r.on_bwd_path).collect();
+        // audio interior off; boundary (one before its trainable
+        // connector) on; frozen trunk fully on (grads flow through it
+        // back to both connectors).
+        assert_eq!(on, [true, true, false, true, true, true]);
+    }
+
+    #[test]
+    fn fully_frozen_model_retains_nothing_even_with_branches() {
+        let mut rs = vec![
+            mrec("v.0", "vision_tower", Modality::Vision, false),
+            mrec("vp.0", "mm_projector", Modality::Projector, false),
+            mrec("lm.0", "language_model", Modality::Language, false),
+        ];
+        mark_backward_path(&mut rs);
+        assert!(rs.iter().all(|r| !r.on_bwd_path));
+    }
+
+    #[test]
+    fn trunk_only_trainables_keep_frozen_branch_boundary() {
+        // hypothetical: connector frozen, decoder trainable — the
+        // decoder's backward still consumes the projected tokens, so
+        // the connector's boundary layer is retained.
+        let mut rs = vec![
+            mrec("v.0", "vision_tower", Modality::Vision, false),
+            mrec("vp.0", "mm_projector", Modality::Projector, false),
+            mrec("vp.1", "mm_projector", Modality::Projector, false),
+            mrec("lm.0", "language_model", Modality::Language, true),
+            mrec("lm.1", "language_model", Modality::Language, true),
+        ];
+        mark_backward_path(&mut rs);
+        let on: Vec<bool> = rs.iter().map(|r| r.on_bwd_path).collect();
+        assert_eq!(on, [false, false, true, true, true]);
     }
 
     #[test]

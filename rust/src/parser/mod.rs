@@ -10,9 +10,9 @@ pub mod features;
 use anyhow::Result;
 
 use crate::config::{Stage, TrainConfig};
+use crate::model::arch;
 use crate::model::dims::{Modality, TokenCtx};
 use crate::model::lora::{self};
-use crate::model::zoo;
 
 /// One fine-grained layer with its resolved training behaviour and
 /// memory quantities (elements + byte widths; bytes = elems * width).
@@ -111,16 +111,38 @@ impl ParsedModel {
 
 /// Parse a training configuration into layer records.
 ///
-/// This is the end-to-end step 1→4 of Fig. 1: build the architecture
-/// from the zoo, inject LoRA if configured, resolve the freeze plan and
-/// backward-path, and size every layer for the batch geometry.
+/// This is the end-to-end step 1→4 of Fig. 1: resolve the architecture
+/// (a zoo preset name or a `.toml` spec file, via
+/// [`arch::resolve`]), inject LoRA if configured, resolve the freeze
+/// plan and backward-path, and size every layer for the batch geometry
+/// through its per-modality token streams.
 pub fn parse(cfg: &TrainConfig) -> Result<ParsedModel> {
     cfg.validate()?;
-    let mut entry = zoo::build(&cfg.model, cfg.seq_len, cfg.attn)?;
+    let mut entry = arch::resolve(&cfg.model, cfg.seq_len, cfg.attn)?;
     if let Some(lora_cfg) = &cfg.lora {
-        lora::apply(&mut entry.spec, lora_cfg);
+        let adapted = lora::apply(&mut entry.spec, lora_cfg);
+        if adapted == 0 {
+            // A LoRA run with zero adapters would silently predict
+            // projector-only training memory — loud beats wrong (e.g.
+            // a spec file whose decoder is not named "language_model"
+            // while target_modules still says it is).
+            anyhow::bail!(
+                "LoRA target_modules {:?} / target_projs {:?} matched no linear layer of {} \
+                 (modules: {})",
+                lora_cfg.target_modules,
+                lora_cfg.target_projs,
+                entry.spec.name,
+                entry
+                    .spec
+                    .modules
+                    .iter()
+                    .map(|m| m.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
     }
-    let ctx = entry.token_ctx(cfg.mbs, cfg.seq_len, cfg.images_per_sample);
+    let ctx = entry.token_ctx(cfg.mbs, cfg.seq_len, cfg.images_per_sample, cfg.clips_per_sample);
     Ok(parse_spec(&entry.spec, ctx, cfg))
 }
 
@@ -135,11 +157,14 @@ pub fn parse_spec(
     let (param_shard, grad_shard, opt_shard) = cfg.zero.shard_factors(cfg.dp);
     let opt_mult = cfg.optimizer.state_mult();
 
-    // Pass 1: flat layer list + trainability.
+    // Pass 1: flat layer list + trainability. Each module's token
+    // count resolves through its own stream (per-module, not
+    // per-modality — multi-tower models have several streams of the
+    // same modality).
     let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.num_layers());
     for module in &spec.modules {
         for layer in &module.layers {
-            let t = ctx.tokens(layer.modality);
+            let t = ctx.tokens(&module.name, layer.modality);
             let trainable = behavior::is_trainable(layer, cfg.stage) && layer.kind.has_params();
             let act_bytes = layer
                 .kind
@@ -299,6 +324,19 @@ mod tests {
         let ck = parse(&c).unwrap();
         let act = |pm: &ParsedModel| -> f64 { pm.layers.iter().map(|l| l.act_bytes_total()).sum() };
         assert!(act(&ck) < act(&base) * 0.5, "ckpt {} vs base {}", act(&ck), act(&base));
+    }
+
+    #[test]
+    fn lora_matching_nothing_is_an_error_not_a_silent_noop() {
+        let mut c = cfg();
+        c.stage = Stage::LoraFinetune;
+        c.lora = Some(crate::model::lora::LoraConfig {
+            target_modules: vec!["not_a_module".into()],
+            ..Default::default()
+        });
+        let err = parse(&c).unwrap_err().to_string();
+        assert!(err.contains("not_a_module"), "{err}");
+        assert!(err.contains("language_model"), "should list real modules: {err}");
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!   bar "figures" ([`ascii_bars`]), the textual stand-ins for the
 //!   paper's plots;
 //! * [`frontier`] — rendering for the capacity planner's OOM-frontier
-//!   output (table, CSV and JSON forms of a [`crate::planner::Plan`]).
+//!   output (table, CSV and JSON forms of a [`crate::planner::Plan`]);
+//! * [`mod@modality`] — the per-modality (vision / audio / connector /
+//!   language) split of the predicted factors, `repro predict`'s view
+//!   of the paper's Fig. 1 decomposition.
 //!
 //! Formatting lives here so measurement logic stays print-free: eval,
 //! planner and CLI code build data structures and hand them to this
@@ -15,8 +18,10 @@
 
 pub mod frontier;
 pub mod mape;
+pub mod modality;
 pub mod table;
 
 pub use frontier::{frontier_table, plan_json};
 pub use mape::{ape, mape};
+pub use modality::{modality_split, modality_table, ModalityShare};
 pub use table::{ascii_bars, Table};

@@ -1,0 +1,161 @@
+//! Per-modality memory attribution — the paper's Fig. 1 decomposition
+//! made visible: how the vision / audio / connector / language parts of
+//! a multi-tower model split the predicted footprint.
+//!
+//! Computed from [`LayerRecord`](crate::parser::LayerRecord)s with the
+//! same per-layer factor arithmetic as
+//! [`crate::predictor::analytical`], so the rows sum (up to float
+//! rounding) to the predictor's `M_param`/`M_grad`/`M_opt`/`M_act`
+//! totals.
+
+use crate::model::dims::Modality;
+use crate::parser::ParsedModel;
+
+use super::Table;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+/// One modality's share of the four memory factors (MiB).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModalityShare {
+    pub modality: Modality,
+    pub layers: usize,
+    pub param_mib: f64,
+    pub grad_mib: f64,
+    pub opt_mib: f64,
+    pub act_mib: f64,
+}
+
+impl ModalityShare {
+    pub fn total_mib(&self) -> f64 {
+        self.param_mib + self.grad_mib + self.opt_mib + self.act_mib
+    }
+}
+
+/// Split a parsed model's factor totals by modality, in canonical
+/// order (vision, audio, connector, language), skipping absent ones.
+pub fn modality_split(pm: &ParsedModel) -> Vec<ModalityShare> {
+    let mut out: Vec<ModalityShare> = Vec::new();
+    for modality in Modality::ALL {
+        let mut share = ModalityShare {
+            modality,
+            layers: 0,
+            param_mib: 0.0,
+            grad_mib: 0.0,
+            opt_mib: 0.0,
+            act_mib: 0.0,
+        };
+        for l in pm.layers.iter().filter(|l| l.modality == modality) {
+            share.layers += 1;
+            share.param_mib += l.param_bytes_total() / MIB;
+            share.grad_mib +=
+                l.param_elems as f64 * l.grad_bytes as f64 * l.grad_shard as f64 / MIB;
+            share.opt_mib += l.param_elems as f64
+                * (l.opt_state_mult as f64 * l.opt_bytes as f64 + l.master_bytes as f64)
+                * l.opt_shard as f64
+                / MIB;
+            share.act_mib += l.act_bytes_total() / MIB;
+        }
+        if share.layers > 0 {
+            out.push(share);
+        }
+    }
+    out
+}
+
+/// Render the split as an aligned table (GiB, one row per modality
+/// present, plus a Σ row).
+pub fn modality_table(pm: &ParsedModel) -> Table {
+    let shares = modality_split(pm);
+    let mut t = Table::new(vec![
+        "modality", "layers", "param GiB", "grad GiB", "opt GiB", "act GiB", "total GiB",
+    ]);
+    let gib = |v: f64| format!("{:.2}", v / 1024.0);
+    for s in &shares {
+        t.row(vec![
+            s.modality.label().to_string(),
+            s.layers.to_string(),
+            gib(s.param_mib),
+            gib(s.grad_mib),
+            gib(s.opt_mib),
+            gib(s.act_mib),
+            gib(s.total_mib()),
+        ]);
+    }
+    let sum = |f: fn(&ModalityShare) -> f64| shares.iter().map(f).sum::<f64>();
+    t.row(vec![
+        "Σ".to_string(),
+        pm.num_layers().to_string(),
+        gib(sum(|s| s.param_mib)),
+        gib(sum(|s| s.grad_mib)),
+        gib(sum(|s| s.opt_mib)),
+        gib(sum(|s| s.act_mib)),
+        gib(sum(|s| s.total_mib())),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::parser::parse;
+
+    fn tiny() -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 2,
+            seq_len: 64,
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn llava_splits_into_three_modalities() {
+        let pm = parse(&tiny()).unwrap();
+        let shares = modality_split(&pm);
+        let labels: Vec<_> = shares.iter().map(|s| s.modality.label()).collect();
+        assert_eq!(labels, ["vision", "connector", "language"]);
+        // finetune stage: vision frozen -> no grads/opt there
+        assert_eq!(shares[0].grad_mib, 0.0);
+        assert_eq!(shares[0].opt_mib, 0.0);
+        assert!(shares[2].grad_mib > 0.0);
+        assert!(shares.iter().map(|s| s.layers).sum::<usize>() == pm.num_layers());
+    }
+
+    #[test]
+    fn split_sums_match_the_predictor_factors() {
+        let cfg = tiny();
+        let pm = parse(&cfg).unwrap();
+        let p = crate::predictor::predict(&cfg).unwrap();
+        let shares = modality_split(&pm);
+        let sum = |f: fn(&ModalityShare) -> f64| shares.iter().map(f).sum::<f64>();
+        let close = |a: f64, b: f32, what: &str| {
+            assert!(
+                (a - b as f64).abs() <= (b as f64).abs() * 1e-3 + 0.05,
+                "{what}: split {a} vs predictor {b}"
+            );
+        };
+        close(sum(|s| s.param_mib), p.param_mib, "param");
+        close(sum(|s| s.grad_mib), p.grad_mib, "grad");
+        close(sum(|s| s.opt_mib), p.opt_mib, "opt");
+        close(sum(|s| s.act_mib), p.act_mib, "act");
+    }
+
+    #[test]
+    fn unimodal_is_language_only() {
+        let cfg = TrainConfig { model: "llama-tiny".into(), ..tiny() };
+        let pm = parse(&cfg).unwrap();
+        let shares = modality_split(&pm);
+        assert_eq!(shares.len(), 1);
+        assert_eq!(shares[0].modality.label(), "language");
+    }
+
+    #[test]
+    fn table_renders_a_sigma_row() {
+        let pm = parse(&tiny()).unwrap();
+        let s = modality_table(&pm).render();
+        assert!(s.contains("connector"));
+        assert!(s.contains('Σ'));
+    }
+}

@@ -143,7 +143,7 @@ mod tests {
         let m = simulate(&tiny(1)).unwrap();
         assert!(m.peak_mib > m.cuda_ctx_mib);
         assert!(m.peak_reserved_mib >= m.peak_allocated_mib);
-        assert!(m.frag_frac >= 0.0 && m.frag_frac < 0.9);
+        assert!((0.0..0.9).contains(&m.frag_frac));
         assert!(m.alloc_count > 50);
     }
 

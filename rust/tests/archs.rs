@@ -1,0 +1,195 @@
+//! Checked-in architecture specs can never rot: every
+//! `examples/archs/*.toml` round-trips through parse → lower →
+//! predict → simulate, and the IR-only architectures run end-to-end
+//! through the sweep engine and the capacity planner with no Rust code
+//! changes.
+
+use mmpredict::config::TrainConfig;
+use mmpredict::model::arch::ArchSpec;
+use mmpredict::model::layer::AttnImpl;
+use mmpredict::model::Modality;
+use mmpredict::planner::{Axes, PlanRequest};
+use mmpredict::{parser, planner, predictor, report, simulator, sweep};
+
+fn archs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/archs")
+}
+
+fn spec_paths() -> Vec<std::path::PathBuf> {
+    let mut out: Vec<_> = std::fs::read_dir(archs_dir())
+        .expect("examples/archs directory")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    out.sort();
+    assert!(out.len() >= 3, "expected >=3 checked-in specs, found {}", out.len());
+    out
+}
+
+fn cfg_for(path: &std::path::Path) -> TrainConfig {
+    TrainConfig {
+        model: path.to_str().unwrap().to_string(),
+        // long enough for 4x576 projected image tokens or 1500 audio
+        // tokens plus text
+        seq_len: 4096,
+        mbs: 2,
+        dp: 2,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+#[test]
+fn every_checked_in_spec_round_trips_to_a_prediction() {
+    for path in spec_paths() {
+        let spec = ArchSpec::from_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let entry = spec
+            .lower(4096, AttnImpl::Flash)
+            .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert!(entry.spec.param_elems() > 0, "{path:?}");
+        assert!(entry.spec.num_layers() > 10, "{path:?}");
+
+        let cfg = cfg_for(&path);
+        let pm = parser::parse(&cfg).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert_eq!(pm.model_name, spec.name, "{path:?}: ParsedModel carries the spec name");
+
+        let p = predictor::predict(&cfg).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert!(p.peak_mib > 0.0 && p.peak_mib.is_finite(), "{path:?}");
+        let m = simulator::simulate(&cfg).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let ape = report::ape(p.peak_mib as f64, m.peak_mib);
+        assert!(ape < 0.5, "{path:?}: predictor vs simulator APE {ape:.2}");
+    }
+}
+
+#[test]
+fn audio_lang_spec_has_an_audio_branch_frozen_under_finetune() {
+    let path = archs_dir().join("audio-lang.toml");
+    let cfg = cfg_for(&path);
+    let pm = parser::parse(&cfg).unwrap();
+    let audio: Vec<_> = pm.layers.iter().filter(|l| l.modality == Modality::Audio).collect();
+    assert!(!audio.is_empty(), "audio tower present");
+    // finetune trains connector + decoder; the audio tower stays frozen
+    // and (being upstream of the trainable connector) retains only its
+    // boundary layer.
+    assert!(audio.iter().all(|l| !l.trainable));
+    let (boundary, interior) = audio.split_last().unwrap();
+    assert!(boundary.on_bwd_path);
+    assert!(interior.iter().all(|l| !l.on_bwd_path));
+    assert!(pm.layers.iter().any(|l| l.modality == Modality::Projector && l.trainable));
+}
+
+#[test]
+fn three_tower_spec_has_independent_streams() {
+    let path = archs_dir().join("three-tower.toml");
+    let mut cfg = cfg_for(&path);
+    cfg.images_per_sample = 2;
+    cfg.clips_per_sample = 1;
+    let pm = parser::parse(&cfg).unwrap();
+    for m in [Modality::Vision, Modality::Audio, Modality::Projector, Modality::Language] {
+        assert!(pm.layers.iter().any(|l| l.modality == m), "{m:?} layers present");
+    }
+    // vision stream scales with images_per_sample, audio with clips
+    let vision = pm.token_ctx.tokens("vision_tower", Modality::Vision);
+    assert_eq!(vision, cfg.mbs * 2 * 577);
+    let audio = pm.token_ctx.tokens("audio_tower", Modality::Audio);
+    assert_eq!(audio, cfg.mbs * 1500);
+    // two connectors, each with its own stream
+    assert_eq!(pm.token_ctx.streams.len(), 4);
+}
+
+#[test]
+fn interleave_spec_bakes_four_images_per_sample() {
+    let path = archs_dir().join("llava-interleave.toml");
+    let cfg = cfg_for(&path); // config still says images_per_sample = 1
+    let pm = parser::parse(&cfg).unwrap();
+    assert_eq!(pm.token_ctx.tokens("vision_tower", Modality::Vision), cfg.mbs * 4 * 577);
+    assert_eq!(pm.token_ctx.tokens("mm_projector", Modality::Projector), cfg.mbs * 4 * 576);
+}
+
+#[test]
+fn qwen_spec_merges_the_patch_grid() {
+    let path = archs_dir().join("qwen2vl-ish.toml");
+    let cfg = cfg_for(&path);
+    let pm = parser::parse(&cfg).unwrap();
+    // 448/14 = 32x32 = 1024 patches, merged 2x2 -> 256 connector tokens
+    assert_eq!(pm.token_ctx.tokens("visual", Modality::Vision), cfg.mbs * 1025);
+    assert_eq!(pm.token_ctx.tokens("merger", Modality::Projector), cfg.mbs * 256);
+}
+
+#[test]
+fn spec_files_run_through_the_sweep_engine() {
+    let path = archs_dir().join("audio-lang.toml");
+    let base = cfg_for(&path);
+    let cfgs: Vec<TrainConfig> = [1u64, 2, 4]
+        .iter()
+        .map(|&dp| TrainConfig { dp, ..base.clone() })
+        .collect();
+    let engine = sweep::Sweep::new(2);
+    let rows = engine
+        .run(&cfgs, |ctx, pm, cfg| {
+            let p = predictor::predict(cfg)?.peak_mib as f64;
+            let m = ctx.simulate_parsed(pm, cfg)?.peak_mib;
+            Ok((p, m))
+        })
+        .unwrap();
+    assert_eq!(rows.len(), 3);
+    for (p, m) in &rows {
+        assert!(*p > 0.0 && *m > 0.0);
+    }
+    // ZeRO-2: per-GPU peak shrinks with DP
+    assert!(rows[2].1 < rows[0].1);
+}
+
+#[test]
+fn spec_files_run_through_the_planner() {
+    let path = archs_dir().join("three-tower.toml");
+    let base = cfg_for(&path);
+    let req = PlanRequest {
+        axes: Axes {
+            mbs: vec![1, 2, 4],
+            seq_len: vec![4096],
+            dp: vec![2],
+            ..Axes::standard(&base)
+        },
+        base,
+        budget_mib: 80.0 * 1024.0,
+    };
+    let plan = planner::plan(&req).unwrap();
+    // every simulator-validated recommendation is within budget
+    for c in plan.recommended() {
+        assert!(c.simulated_mib <= req.budget_mib);
+        assert!(c.cfg.model.ends_with("three-tower.toml"));
+    }
+}
+
+#[test]
+fn spec_files_serve_through_the_prediction_service() {
+    use mmpredict::coordinator::{PredictionService, ServiceConfig};
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    let cfg = cfg_for(&archs_dir().join("qwen2vl-ish.toml"));
+    let direct = predictor::predict(&cfg).unwrap();
+    let served = svc.predict(cfg).unwrap();
+    assert_eq!(served.peak_mib, direct.peak_mib);
+    svc.shutdown();
+}
+
+#[test]
+fn predict_prints_a_modality_split_for_multi_tower_models() {
+    let path = archs_dir().join("three-tower.toml");
+    let cfg = cfg_for(&path);
+    let pm = parser::parse(&cfg).unwrap();
+    let rendered = report::modality_table(&pm).render();
+    for label in ["vision", "audio", "connector", "language"] {
+        assert!(rendered.contains(label), "missing {label} in:\n{rendered}");
+    }
+    let shares = report::modality_split(&pm);
+    assert_eq!(shares.len(), 4);
+    // the audio tower is off the backward path under finetune except
+    // its boundary — its activation share must be far below the
+    // decoder's
+    let act = |m: Modality| {
+        shares.iter().find(|s| s.modality == m).map(|s| s.act_mib).unwrap_or(0.0)
+    };
+    assert!(act(Modality::Audio) < act(Modality::Language) * 0.5);
+}

@@ -1,0 +1,230 @@
+//! Golden parity suite: every pre-existing zoo preset, lowered through
+//! the declarative architecture IR, must match the pre-refactor
+//! hand-built composition exactly.
+//!
+//! The fixtures below reproduce the deleted `zoo::llava()` /
+//! `zoo::unimodal()` builders verbatim (captured before the old code
+//! paths were removed): a LLaVA preset was `vision::build(&vit)` +
+//! `projector::mlp2x_gelu(vit.hidden, lm.hidden)` +
+//! `language::build(&lm, seq_len)` with single-image 577/576 token
+//! geometry; a unimodal preset was the bare decoder. The suite pins
+//!
+//! * the exact layer sequence (names, kinds, modalities),
+//! * `param_elems()` totals, and
+//! * bit-identical analytical predictions
+//!
+//! between the IR path (`zoo::build` → `ArchSpec::lower`) and the
+//! legacy composition.
+
+use mmpredict::config::TrainConfig;
+use mmpredict::model::dims::{Modality, TokenCtx, TokenStream};
+use mmpredict::model::language::{self, LlamaConfig};
+use mmpredict::model::layer::AttnImpl;
+use mmpredict::model::module::ModelSpec;
+use mmpredict::model::vision::{self, VitConfig};
+use mmpredict::model::{lora, projector, zoo};
+use mmpredict::parser::{self, features};
+use mmpredict::predictor::{analytical, Prediction};
+
+/// The pre-refactor LLaVA composition (legacy `zoo::llava`).
+fn legacy_llava(name: &str, vit: VitConfig, lm: LlamaConfig, seq_len: u64) -> (ModelSpec, u64, u64) {
+    let mut spec = ModelSpec::new(name);
+    spec.modules.push(vision::build(&vit));
+    spec.modules.push(projector::mlp2x_gelu(vit.hidden, lm.hidden));
+    spec.modules.push(language::build(&lm, seq_len));
+    (spec, vit.seq_tokens(), vit.patch_tokens())
+}
+
+/// The pre-refactor unimodal composition (legacy `zoo::unimodal`).
+fn legacy_unimodal(name: &str, lm: LlamaConfig, seq_len: u64) -> (ModelSpec, u64, u64) {
+    let mut spec = ModelSpec::new(name);
+    spec.modules.push(language::build(&lm, seq_len));
+    (spec, 0, 0)
+}
+
+/// The pre-refactor `ZooEntry::token_ctx`: single vision + projector
+/// streams with the LLaVA 577/576 geometry (or none when unimodal),
+/// `images_per_sample` forced to 0 for unimodal models.
+fn legacy_token_ctx(
+    mbs: u64,
+    seq_len: u64,
+    vision_tokens: u64,
+    image_tokens: u64,
+    images_per_sample: u64,
+) -> TokenCtx {
+    let mut streams = Vec::new();
+    if vision_tokens > 0 {
+        streams.push(TokenStream {
+            module: "vision_tower".into(),
+            modality: Modality::Vision,
+            tokens_per_item: vision_tokens,
+            items_per_sample: images_per_sample,
+        });
+        streams.push(TokenStream {
+            module: "mm_projector".into(),
+            modality: Modality::Projector,
+            tokens_per_item: image_tokens,
+            items_per_sample: images_per_sample,
+        });
+    }
+    TokenCtx { mbs, seq_len, streams }
+}
+
+/// Build the legacy composition for a preset name exactly as the
+/// pre-refactor `zoo::build` match arms did (including which presets
+/// honoured the `attn` argument).
+fn legacy_build(name: &str, seq_len: u64, attn: AttnImpl) -> (ModelSpec, u64, u64) {
+    match name {
+        "llava-1.5-7b" => {
+            legacy_llava(name, vision::clip_vit_l14_336(), language::vicuna_7b(attn), seq_len)
+        }
+        "llava-1.5-13b" => {
+            legacy_llava(name, vision::clip_vit_l14_336(), language::vicuna_13b(attn), seq_len)
+        }
+        "llava-tiny" => legacy_llava(name, vision::vit_tiny(), language::llama_tiny(), seq_len),
+        "vicuna-7b" => legacy_unimodal(name, language::vicuna_7b(attn), seq_len),
+        "vicuna-13b" => legacy_unimodal(name, language::vicuna_13b(attn), seq_len),
+        "llama-tiny" => legacy_unimodal(name, language::llama_tiny(), seq_len),
+        other => panic!("no legacy fixture for {other}"),
+    }
+}
+
+const LEGACY_NAMES: [&str; 6] = [
+    "llava-1.5-7b",
+    "llava-1.5-13b",
+    "llava-tiny",
+    "vicuna-7b",
+    "vicuna-13b",
+    "llama-tiny",
+];
+
+#[test]
+fn registry_still_contains_every_legacy_name() {
+    let names = zoo::names();
+    for n in LEGACY_NAMES {
+        assert!(names.contains(&n), "preset {n} disappeared from the registry");
+    }
+}
+
+#[test]
+fn ir_lowering_matches_legacy_layer_sequences() {
+    for name in LEGACY_NAMES {
+        for attn in [AttnImpl::Flash, AttnImpl::Eager] {
+            let seq_len = 512;
+            let ir = zoo::build(name, seq_len, attn).unwrap();
+            let (legacy, vision_tokens, image_tokens) = legacy_build(name, seq_len, attn);
+
+            assert_eq!(
+                ir.spec.num_layers(),
+                legacy.num_layers(),
+                "{name}/{attn:?}: layer count"
+            );
+            assert_eq!(ir.spec.name, legacy.name, "{name}: model name");
+            assert_eq!(
+                ir.spec.modules.len(),
+                legacy.modules.len(),
+                "{name}: module count"
+            );
+            for (a, b) in ir.spec.layers().zip(legacy.layers()) {
+                assert_eq!(a.name, b.name, "{name}/{attn:?}: layer name");
+                assert_eq!(a.kind, b.kind, "{name}/{attn:?}: kind of {}", a.name);
+                assert_eq!(a.modality, b.modality, "{name}/{attn:?}: modality of {}", a.name);
+            }
+            assert_eq!(
+                ir.spec.param_elems(),
+                legacy.param_elems(),
+                "{name}/{attn:?}: param_elems"
+            );
+            assert_eq!(ir.vision_tokens(), vision_tokens, "{name}: vision tokens");
+            assert_eq!(ir.image_tokens(), image_tokens, "{name}: image tokens");
+        }
+    }
+}
+
+/// Predict through the legacy composition: fixture spec + fixture
+/// token geometry through the same parse/encode/factorize pipeline.
+fn legacy_predict(cfg: &TrainConfig) -> Prediction {
+    let (mut spec, vision_tokens, image_tokens) = legacy_build(&cfg.model, cfg.seq_len, cfg.attn);
+    if let Some(lc) = &cfg.lora {
+        lora::apply(&mut spec, lc);
+    }
+    let images = if vision_tokens == 0 { 0 } else { cfg.images_per_sample };
+    let ctx = legacy_token_ctx(cfg.mbs, cfg.seq_len, vision_tokens, image_tokens, images);
+    let pm = parser::parse_spec(&spec, ctx, cfg);
+    analytical::predict_encoded(&features::encode(&pm, cfg))
+}
+
+#[test]
+fn ir_predictions_are_bit_identical_to_legacy() {
+    for name in LEGACY_NAMES {
+        for (mbs, seq_len, dp) in [(16, 1024, 1), (8, 2048, 4)] {
+            let cfg = TrainConfig {
+                model: name.to_string(),
+                mbs,
+                seq_len,
+                dp,
+                ..TrainConfig::llava_finetune_default()
+            };
+            let ir = mmpredict::predictor::predict(&cfg).unwrap();
+            let legacy = legacy_predict(&cfg);
+            assert_eq!(ir, legacy, "{name} mbs={mbs} seq={seq_len} dp={dp}");
+        }
+    }
+}
+
+#[test]
+fn ir_predictions_match_legacy_across_stages_and_attention() {
+    use mmpredict::config::Stage;
+    for stage in [Stage::Pretrain, Stage::Finetune, Stage::Full] {
+        for attn in [AttnImpl::Flash, AttnImpl::Eager] {
+            let cfg = TrainConfig {
+                model: "llava-tiny".into(),
+                stage,
+                mbs: 4,
+                seq_len: 256,
+                attn,
+                ..TrainConfig::llava_finetune_default()
+            };
+            let ir = mmpredict::predictor::predict(&cfg).unwrap();
+            assert_eq!(ir, legacy_predict(&cfg), "stage={stage:?} attn={attn:?}");
+        }
+    }
+}
+
+#[test]
+fn ir_predictions_match_legacy_under_lora() {
+    let cfg = TrainConfig {
+        model: "llava-1.5-7b".into(),
+        stage: mmpredict::config::Stage::LoraFinetune,
+        lora: Some(mmpredict::model::lora::LoraConfig { rank: 16, ..Default::default() }),
+        mbs: 8,
+        seq_len: 1024,
+        dp: 2,
+        ..TrainConfig::llava_finetune_default()
+    };
+    let ir = mmpredict::predictor::predict(&cfg).unwrap();
+    assert_eq!(ir, legacy_predict(&cfg));
+}
+
+#[test]
+fn ir_simulator_measurements_match_legacy_parse() {
+    // The simulator consumes the same LayerRecords; a legacy-parsed
+    // model must replay to the identical measurement.
+    let cfg = TrainConfig {
+        model: "llava-tiny".into(),
+        mbs: 2,
+        seq_len: 128,
+        ..TrainConfig::llava_finetune_default()
+    };
+    let ir = mmpredict::simulator::simulate(&cfg).unwrap();
+
+    let (spec, vt, it) = legacy_build(&cfg.model, cfg.seq_len, cfg.attn);
+    let ctx = legacy_token_ctx(cfg.mbs, cfg.seq_len, vt, it, cfg.images_per_sample);
+    let pm = parser::parse_spec(&spec, ctx, &cfg);
+    let mut sim_ctx = mmpredict::simulator::SimContext::new();
+    let legacy = mmpredict::simulator::simulate_parsed(&pm, &cfg, &mut sim_ctx).unwrap();
+
+    assert_eq!(ir.peak_mib, legacy.peak_mib);
+    assert_eq!(ir.at_peak, legacy.at_peak);
+    assert_eq!(ir.alloc_count, legacy.alloc_count);
+}

@@ -18,6 +18,7 @@ fn arb_config(r: &mut Prng) -> TrainConfig {
         mbs: r.range(1, 16) as u64,
         seq_len: *r.pick(&[32u64, 64, 128, 256, 512]),
         images_per_sample: 1,
+        clips_per_sample: 1,
         dp: *r.pick(&[1u64, 2, 3, 4, 8]),
         zero: *r.pick(&[ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3]),
         optimizer: *r.pick(&[OptimizerKind::AdamW, OptimizerKind::SgdMomentum, OptimizerKind::Sgd]),
