@@ -3,18 +3,19 @@
 //! GPU capacity *before* any cluster time is spent, and answers the
 //! follow-up question every rejected user asks: "so what WOULD fit?"
 //!
-//! The guard runs through the batched prediction service: screening
-//! goes through concurrent `predict` clients (tensorized backend when
-//! AOT artifacts exist, analytical otherwise — same semantics), every
-//! verdict is cross-checked against the ground-truth simulator via the
-//! parallel sweep engine, and remediation + capacity publishing go
-//! through the service's `Plan` request, which runs the capacity
-//! planner (`mmpredict::planner`): a simulator-validated bisection of
-//! the OOM frontier instead of hand-rolled sweep loops.
+//! Since the wire-API redesign the guard talks to the service in the
+//! v1 envelope itself: every screening question is an `ApiRequest`
+//! (`method: "predict"`, id-correlated per job), remediation and
+//! capacity publishing are `"plan"` requests, and the replies are
+//! decoded with the same `api::codec` the NDJSON server uses — so this
+//! example exercises exactly the protocol a remote scheduler would
+//! speak against `repro serve`, minus the TCP socket.
 //!
 //! Run: `cargo run --release --example oom_guard`
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use mmpredict::api::codec;
+use mmpredict::api::{ApiRequest, Method, PlanParams, PredictParams};
 use mmpredict::config::{Stage, TrainConfig};
 use mmpredict::coordinator::{PredictionService, ServiceConfig};
 use mmpredict::planner::{Axes, PlanRequest};
@@ -40,6 +41,18 @@ fn job_queue() -> Vec<(String, TrainConfig)> {
     jobs
 }
 
+/// Ask the service for a plan via the wire envelope and decode the
+/// typed frontier back out of the payload.
+fn plan_via_envelope(
+    service: &PredictionService,
+    req: PlanRequest,
+) -> Result<mmpredict::planner::Plan> {
+    let base = req.base.clone();
+    let resp = service.submit(ApiRequest::new("plan", Method::Plan(PlanParams { req })));
+    let payload = resp.into_result()?;
+    Ok(codec::plan_from_json(&payload, &base)?)
+}
+
 fn main() -> Result<()> {
     let service = match PredictionService::start("artifacts", ServiceConfig::default()) {
         Ok(s) => {
@@ -52,14 +65,33 @@ fn main() -> Result<()> {
         }
     };
 
-    // -- 1. screen the submission queue (concurrent clients, batched) ----
+    // -- 1. screen the submission queue: one id-correlated "predict"
+    //       envelope per job, fired from concurrent clients (batched by
+    //       the service exactly as wire traffic would be) -------------
     let jobs = job_queue();
     let mut handles = Vec::new();
     for (name, cfg) in &jobs {
         let client = service.client();
         let (name, cfg) = (name.clone(), cfg.clone());
         handles.push(std::thread::spawn(move || {
-            let p = client.predict(cfg.clone())?;
+            let req = ApiRequest::new(
+                name.clone(),
+                Method::Predict(PredictParams {
+                    cfg: cfg.clone(),
+                    capacity_mib: Some(GPU_CAPACITY_MIB),
+                    detail: false,
+                }),
+            );
+            let resp = client.submit(req);
+            if resp.id.as_deref() != Some(name.as_str()) {
+                return Err(anyhow!("response correlation broken for {name}"));
+            }
+            let payload = resp.into_result()?;
+            let p = codec::prediction_from_json(
+                payload
+                    .get("prediction")
+                    .ok_or_else(|| anyhow!("predict payload missing prediction"))?,
+            )?;
             Ok::<_, anyhow::Error>((name, cfg, p))
         }));
     }
@@ -108,18 +140,21 @@ fn main() -> Result<()> {
         rejected_jobs.len()
     );
 
-    // -- 2. remediation: for each reject, ask the planner for the largest
-    //       safe micro-batch at the job's own geometry ------------------
+    // -- 2. remediation: for each reject, a "plan" envelope asks for the
+    //       largest safe micro-batch at the job's own geometry ---------
     for (name, cfg) in &rejected_jobs {
         let axes = Axes {
             mbs: vec![1, 2, 4, 8, 16, 32],
             ..Axes::fixed(cfg)
         };
-        let plan = service.plan(PlanRequest {
-            base: cfg.clone(),
-            budget_mib: GPU_CAPACITY_MIB,
-            axes,
-        })?;
+        let plan = plan_via_envelope(
+            &service,
+            PlanRequest {
+                base: cfg.clone(),
+                budget_mib: GPU_CAPACITY_MIB,
+                axes,
+            },
+        )?;
         match plan.recommended().next() {
             Some(best) => println!(
                 "{name}: resubmit with mbs {} -> {} simulated ({} headroom)",
@@ -136,11 +171,14 @@ fn main() -> Result<()> {
     // -- 3. publish the GPU's capacity frontier: the maximal safe LLaVA
     //       fine-tune configs, ranked by throughput --------------------
     let base = TrainConfig::llava_finetune_default();
-    let plan = service.plan(PlanRequest {
-        axes: Axes::standard(&base),
-        base,
-        budget_mib: GPU_CAPACITY_MIB,
-    })?;
+    let plan = plan_via_envelope(
+        &service,
+        PlanRequest {
+            axes: Axes::standard(&base),
+            base,
+            budget_mib: GPU_CAPACITY_MIB,
+        },
+    )?;
     println!(
         "\n== capacity frontier: llava-1.5-7b fine-tune under {} ==",
         human_mib(GPU_CAPACITY_MIB)

@@ -1,0 +1,169 @@
+"""Minimal NDJSON client for `repro serve` (mmpredict wire API v1).
+
+One TCP connection, one JSON document per line each way:
+
+    request:  {"v": 1, "id": "py-1", "method": "predict", "params": {...}}
+    response: {"v": 1, "id": "py-1", "ok": {...}}
+          or  {"v": 1, "id": "py-1", "error": {"code": "...", "message": "..."}}
+
+Usage:
+
+    from client import ReproClient
+    with ReproClient(port=7411) as c:
+        p = c.predict({"model": "llava-1.5-7b", "mbs": 8, "seq_len": 2048})
+        print(p["prediction"]["peak_mib"])
+        plan = c.plan({"model": "llava-1.5-7b"}, budget_mib=80 * 1024)
+        for cand in plan["candidates"][:3]:
+            print(cand["mbs"], cand["simulated_mib"])
+
+Demo (predict + plan round-trip against a running server):
+
+    repro serve --port 7411 &
+    python3 python/client.py --port 7411 --demo
+
+Only the standard library is used.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import socket
+import sys
+
+WIRE_VERSION = 1
+
+
+class ApiError(RuntimeError):
+    """Structured server-side failure (code + message)."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(f"{code}: {message}")
+        self.code = code
+        self.message = message
+
+
+class ProtocolError(RuntimeError):
+    """The server answered something that is not a valid v1 response."""
+
+
+class ReproClient:
+    """Blocking NDJSON client over one TCP connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 7411, timeout: float = 60.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self._rfile = self.sock.makefile("r", encoding="utf-8", newline="\n")
+        self._wfile = self.sock.makefile("w", encoding="utf-8", newline="\n")
+        self._ids = itertools.count(1)
+
+    # -- envelope -------------------------------------------------------
+
+    def call(self, method: str, params: dict | None = None):
+        """Send one request, return the `ok` payload (raises ApiError)."""
+        rid = f"py-{next(self._ids)}"
+        req = {"v": WIRE_VERSION, "id": rid, "method": method}
+        if params is not None:
+            req["params"] = params
+        self._wfile.write(json.dumps(req) + "\n")
+        self._wfile.flush()
+        line = self._rfile.readline()
+        if not line:
+            raise ProtocolError("server closed the connection")
+        resp = json.loads(line)
+        if resp.get("v") != WIRE_VERSION:
+            raise ProtocolError(f"unexpected wire version in {resp!r}")
+        if resp.get("id") != rid:
+            raise ProtocolError(f"response id {resp.get('id')!r} != request id {rid!r}")
+        if "error" in resp:
+            err = resp["error"]
+            raise ApiError(err.get("code", "internal"), err.get("message", ""))
+        if "ok" not in resp:
+            raise ProtocolError(f"response carries neither ok nor error: {resp!r}")
+        return resp["ok"]
+
+    # -- typed conveniences --------------------------------------------
+
+    def predict(self, config: dict, capacity_mib: float | None = None, detail: bool = False):
+        params: dict = {"config": config}
+        if capacity_mib is not None:
+            params["capacity_mib"] = capacity_mib
+        if detail:
+            params["detail"] = True
+        return self.call("predict", params)
+
+    def plan(self, config: dict, budget_mib: float, axes: dict | None = None):
+        params: dict = {"config": config, "budget_mib": budget_mib}
+        if axes is not None:
+            params["axes"] = axes
+        return self.call("plan", params)
+
+    def simulate(self, config: dict):
+        return self.call("simulate", {"config": config})
+
+    def models(self):
+        return self.call("models")["models"]
+
+    def metrics(self):
+        return self.call("metrics")
+
+    def close(self):
+        try:
+            self._wfile.close()
+            self._rfile.close()
+        finally:
+            self.sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *_exc):
+        self.close()
+
+
+def _demo(host: str, port: int) -> int:
+    """Predict + plan round-trip; exits nonzero on any mismatch."""
+    cfg = {"model": "llava-tiny", "mbs": 2, "seq_len": 64}
+    with ReproClient(host, port) as c:
+        names = [m["name"] for m in c.models()]
+        print(f"server models: {', '.join(names)}")
+
+        ok = c.predict(cfg, capacity_mib=80 * 1024)
+        peak = ok["prediction"]["peak_mib"]
+        print(f"predict: peak {peak:.1f} MiB, fits 80 GiB: {ok['fits']}")
+        assert peak > 0 and ok["fits"] is True
+
+        plan = c.plan(cfg, budget_mib=1e9, axes={"mbs": [1, 2], "seq_len": [32, 64]})
+        cands = plan["candidates"]
+        print(f"plan: {len(cands)} candidates, {plan['stats']['sim_points']} simulations")
+        assert cands, "expected a non-empty frontier"
+        assert all(c_["simulated_mib"] <= 1e9 for c_ in cands)
+
+        # a structured error, not a disconnect
+        try:
+            c.predict({"model": "not-a-model"})
+        except ApiError as e:
+            print(f"unknown model answered with code={e.code}")
+            assert e.code == "unknown_model"
+        else:
+            raise AssertionError("expected unknown_model")
+
+        snap = c.metrics()["per_method"]
+        print(
+            "server counters: predict={} plan={} models={}".format(
+                snap["predict"]["requests"], snap["plan"]["requests"], snap["models"]["requests"]
+            )
+        )
+    print("demo OK")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7411)
+    ap.add_argument("--demo", action="store_true", help="run the predict+plan round-trip demo")
+    args = ap.parse_args()
+    if args.demo:
+        sys.exit(_demo(args.host, args.port))
+    ap.print_help()

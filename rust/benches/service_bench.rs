@@ -48,6 +48,7 @@ fn main() {
                 max_batch: 8,
                 batch_timeout: Duration::from_millis(2),
             },
+            ..Default::default()
         },
     )
     .expect("service");

@@ -1,0 +1,873 @@
+//! Strict JSON ↔ typed conversion for the wire envelope.
+//!
+//! Requests are validated *strictly*: unknown fields, wrong types and
+//! out-of-range values all yield `bad_request` — a typo'd field name
+//! can never be silently ignored on its way into a capacity decision.
+//! Response payloads are plain [`Json`] built by
+//! [`super::dispatch`]; this module also provides the decoders the
+//! typed in-process wrappers ([`crate::coordinator::PredictionService`],
+//! the CLI) use to turn payloads back into library types.
+
+use std::collections::BTreeMap;
+
+use crate::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
+use crate::model::dims::Modality;
+use crate::model::layer::AttnImpl;
+use crate::model::lora::LoraConfig;
+use crate::model::{arch, zoo};
+use crate::planner::{
+    Axes, Escalation, Plan, PlanCandidate, PlanRequest, PlanStats,
+};
+use crate::predictor::Prediction;
+use crate::report::ModalityShare;
+use crate::simulator::Measurement;
+use crate::util::json_mini::{obj, Json};
+
+use super::{
+    ApiError, BaselinesParams, ErrorCode, Method, ModalityParams, PlanParams, PredictParams,
+    SimulateParams, SweepParams, METHOD_NAMES,
+};
+
+// ---------------------------------------------------------------- helpers
+
+fn as_obj<'a>(v: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>, ApiError> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => Err(ApiError::bad_request(format!("{what} must be a JSON object"))),
+    }
+}
+
+fn strict_keys(
+    m: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    what: &str,
+) -> Result<(), ApiError> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(ApiError::bad_request(format!(
+                "unknown field {k:?} in {what} (expected one of: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn get_u64(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<Option<u64>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n < 1e15 => Ok(Some(*n as u64)),
+        Some(v) => Err(ApiError::bad_request(format!(
+            "{what}.{key} must be a non-negative integer, got {v}"
+        ))),
+    }
+}
+
+fn get_f64(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<Option<f64>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(v) => Err(ApiError::bad_request(format!(
+            "{what}.{key} must be a number, got {v}"
+        ))),
+    }
+}
+
+fn get_bool(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<Option<bool>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(v) => Err(ApiError::bad_request(format!(
+            "{what}.{key} must be a boolean, got {v}"
+        ))),
+    }
+}
+
+fn get_str<'a>(
+    m: &'a BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<Option<&'a str>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s)),
+        Some(v) => Err(ApiError::bad_request(format!(
+            "{what}.{key} must be a string, got {v}"
+        ))),
+    }
+}
+
+fn u64_array(v: &Json, what: &str) -> Result<Vec<u64>, ApiError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request(format!("{what} must be an array")))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        match x {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 1e15 => out.push(*n as u64),
+            other => {
+                return Err(ApiError::bad_request(format!(
+                    "{what} must contain non-negative integers, got {other}"
+                )))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(ApiError::bad_request(format!("{what} must not be empty")));
+    }
+    Ok(out)
+}
+
+fn str_array<'a>(v: &'a Json, what: &str) -> Result<Vec<&'a str>, ApiError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request(format!("{what} must be an array")))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        match x {
+            Json::Str(s) => out.push(s.as_str()),
+            other => {
+                return Err(ApiError::bad_request(format!(
+                    "{what} must contain strings, got {other}"
+                )))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(ApiError::bad_request(format!("{what} must not be empty")));
+    }
+    Ok(out)
+}
+
+fn bad(e: anyhow::Error) -> ApiError {
+    ApiError::bad_request(format!("{e:#}"))
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+// ------------------------------------------------------------ TrainConfig
+
+const CONFIG_KEYS: &[&str] = &[
+    "model",
+    "stage",
+    "mbs",
+    "seq_len",
+    "images_per_sample",
+    "clips_per_sample",
+    "dp",
+    "zero",
+    "optimizer",
+    "precision",
+    "attention",
+    "grad_checkpoint",
+    "bucket_elems",
+    "lora",
+    "overheads",
+];
+
+/// Parse a `config` object into a [`TrainConfig`]. Unset fields take
+/// the LLaVA fine-tune defaults (same contract as the TOML loader);
+/// unknown fields are rejected; an unknown model name yields
+/// `unknown_model` with a did-you-mean hint.
+pub fn config_from_json(v: &Json) -> Result<TrainConfig, ApiError> {
+    let m = as_obj(v, "config")?;
+    strict_keys(m, CONFIG_KEYS, "config")?;
+    let mut cfg = TrainConfig::llava_finetune_default();
+    if let Some(model) = get_str(m, "model", "config")? {
+        cfg.model = model.to_string();
+    }
+    if let Some(st) = get_str(m, "stage", "config")? {
+        cfg.stage = Stage::parse(st).map_err(bad)?;
+        if cfg.stage == Stage::LoraFinetune && cfg.lora.is_none() {
+            cfg.lora = Some(LoraConfig::default());
+        }
+    }
+    if let Some(n) = get_u64(m, "mbs", "config")? {
+        cfg.mbs = n;
+    }
+    if let Some(n) = get_u64(m, "seq_len", "config")? {
+        cfg.seq_len = n;
+    }
+    if let Some(n) = get_u64(m, "images_per_sample", "config")? {
+        cfg.images_per_sample = n;
+    }
+    if let Some(n) = get_u64(m, "clips_per_sample", "config")? {
+        cfg.clips_per_sample = n;
+    }
+    if let Some(n) = get_u64(m, "dp", "config")? {
+        cfg.dp = n;
+    }
+    if let Some(n) = get_u64(m, "zero", "config")? {
+        cfg.zero = ZeroStage::parse(n).map_err(bad)?;
+    }
+    if let Some(o) = get_str(m, "optimizer", "config")? {
+        cfg.optimizer = OptimizerKind::parse(o).map_err(bad)?;
+    }
+    if let Some(p) = get_str(m, "precision", "config")? {
+        cfg.precision = Precision::parse(p).map_err(bad)?;
+    }
+    if let Some(a) = get_str(m, "attention", "config")? {
+        cfg.attn = attn_parse(a)?;
+    }
+    if let Some(b) = get_bool(m, "grad_checkpoint", "config")? {
+        cfg.grad_checkpoint = b;
+    }
+    if let Some(n) = get_u64(m, "bucket_elems", "config")? {
+        cfg.bucket_elems = n;
+    }
+    if let Some(l) = m.get("lora") {
+        let lm = as_obj(l, "config.lora")?;
+        strict_keys(lm, &["rank", "target_modules", "target_projs"], "config.lora")?;
+        let mut lora = LoraConfig::default();
+        if let Some(r) = get_u64(lm, "rank", "config.lora")? {
+            lora.rank = r;
+        }
+        if let Some(t) = lm.get("target_modules") {
+            lora.target_modules = str_array(t, "config.lora.target_modules")?
+                .into_iter()
+                .map(str::to_string)
+                .collect();
+        }
+        if let Some(t) = lm.get("target_projs") {
+            lora.target_projs = str_array(t, "config.lora.target_projs")?
+                .into_iter()
+                .map(str::to_string)
+                .collect();
+        }
+        cfg.lora = Some(lora);
+        if cfg.stage == Stage::Finetune {
+            cfg.stage = Stage::LoraFinetune;
+        }
+    }
+    if let Some(o) = m.get("overheads") {
+        let om = as_obj(o, "config.overheads")?;
+        strict_keys(
+            om,
+            &["cuda_ctx_mib", "alloc_frac", "workspace_mib"],
+            "config.overheads",
+        )?;
+        if let Some(x) = get_f64(om, "cuda_ctx_mib", "config.overheads")? {
+            cfg.overheads.cuda_ctx_mib = x as f32;
+        }
+        if let Some(x) = get_f64(om, "alloc_frac", "config.overheads")? {
+            cfg.overheads.alloc_frac = x as f32;
+        }
+        if let Some(x) = get_f64(om, "workspace_mib", "config.overheads")? {
+            cfg.overheads.workspace_mib = x as f32;
+        }
+    }
+    cfg.validate().map_err(bad)?;
+    // Catch unknown models at the envelope boundary so clients get the
+    // structured code (and the hint) instead of a generic failure later.
+    if !arch::is_spec_path(&cfg.model) && zoo::arch_spec(&cfg.model).is_none() {
+        let hint = crate::util::text::did_you_mean(&cfg.model, zoo::names());
+        return Err(ApiError::new(
+            ErrorCode::UnknownModel,
+            format!(
+                "unknown model {:?}{hint} (available: {}; or pass a .toml architecture spec)",
+                cfg.model,
+                zoo::names().join(", ")
+            ),
+        ));
+    }
+    Ok(cfg)
+}
+
+fn attn_parse(v: &str) -> Result<AttnImpl, ApiError> {
+    match v {
+        "flash" => Ok(AttnImpl::Flash),
+        "eager" => Ok(AttnImpl::Eager),
+        _ => Err(ApiError::bad_request(format!(
+            "unknown attention {v:?} (flash|eager)"
+        ))),
+    }
+}
+
+fn attn_name(a: AttnImpl) -> &'static str {
+    match a {
+        AttnImpl::Flash => "flash",
+        AttnImpl::Eager => "eager",
+    }
+}
+
+/// Serialize a [`TrainConfig`] as a full `config` object (every field
+/// explicit, so the document round-trips independently of defaults).
+pub fn config_to_json(cfg: &TrainConfig) -> Json {
+    let mut entries = vec![
+        ("model", s(cfg.model.clone())),
+        ("stage", s(cfg.stage.name())),
+        ("mbs", num(cfg.mbs as f64)),
+        ("seq_len", num(cfg.seq_len as f64)),
+        ("images_per_sample", num(cfg.images_per_sample as f64)),
+        ("clips_per_sample", num(cfg.clips_per_sample as f64)),
+        ("dp", num(cfg.dp as f64)),
+        ("zero", num(cfg.zero.as_int() as f64)),
+        ("optimizer", s(optimizer_name(cfg.optimizer))),
+        ("precision", s(cfg.precision.name())),
+        ("attention", s(attn_name(cfg.attn))),
+        ("grad_checkpoint", Json::Bool(cfg.grad_checkpoint)),
+        ("bucket_elems", num(cfg.bucket_elems as f64)),
+        (
+            "overheads",
+            obj(vec![
+                ("cuda_ctx_mib", num(cfg.overheads.cuda_ctx_mib as f64)),
+                ("alloc_frac", num(cfg.overheads.alloc_frac as f64)),
+                ("workspace_mib", num(cfg.overheads.workspace_mib as f64)),
+            ]),
+        ),
+    ];
+    if let Some(l) = &cfg.lora {
+        entries.push((
+            "lora",
+            obj(vec![
+                ("rank", num(l.rank as f64)),
+                (
+                    "target_modules",
+                    Json::Arr(l.target_modules.iter().map(|t| s(t.clone())).collect()),
+                ),
+                (
+                    "target_projs",
+                    Json::Arr(l.target_projs.iter().map(|t| s(t.clone())).collect()),
+                ),
+            ]),
+        ));
+    }
+    obj(entries)
+}
+
+fn optimizer_name(o: OptimizerKind) -> &'static str {
+    match o {
+        OptimizerKind::AdamW => "adamw",
+        OptimizerKind::SgdMomentum => "sgdm",
+        OptimizerKind::Sgd => "sgd",
+    }
+}
+
+// ----------------------------------------------------------------- params
+
+fn require_config(m: &BTreeMap<String, Json>, method: &str) -> Result<TrainConfig, ApiError> {
+    match m.get("config") {
+        Some(c) => config_from_json(c),
+        None => Err(ApiError::bad_request(format!(
+            "{method} requires a \"config\" object"
+        ))),
+    }
+}
+
+/// Parse a method name + `params` document into a typed [`Method`].
+pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, ApiError> {
+    let empty = BTreeMap::new();
+    let m = match params {
+        None => &empty,
+        Some(p) => as_obj(p, "params")?,
+    };
+    match name {
+        "predict" => {
+            strict_keys(m, &["config", "capacity_mib", "detail"], "predict params")?;
+            Ok(Method::Predict(PredictParams {
+                cfg: require_config(m, "predict")?,
+                capacity_mib: get_f64(m, "capacity_mib", "params")?,
+                detail: get_bool(m, "detail", "params")?.unwrap_or(false),
+            }))
+        }
+        "plan" => {
+            strict_keys(m, &["config", "budget_mib", "axes"], "plan params")?;
+            let base = require_config(m, "plan")?;
+            let budget_mib = get_f64(m, "budget_mib", "params")?.ok_or_else(|| {
+                ApiError::bad_request("plan requires a numeric \"budget_mib\"")
+            })?;
+            let axes = match m.get("axes") {
+                Some(a) => axes_from_json(a, &base)?,
+                None => Axes::standard(&base),
+            };
+            Ok(Method::Plan(PlanParams {
+                req: PlanRequest { base, budget_mib, axes },
+            }))
+        }
+        "sweep" => {
+            strict_keys(
+                m,
+                &["config", "dp_list", "mbs_list", "seq_list", "zero_list", "capacity_mib"],
+                "sweep params",
+            )?;
+            let base = require_config(m, "sweep")?;
+            let dp = match m.get("dp_list") {
+                Some(v) => u64_array(v, "params.dp_list")?,
+                None => (1..=8).collect(),
+            };
+            let mbs = match m.get("mbs_list") {
+                Some(v) => u64_array(v, "params.mbs_list")?,
+                None => vec![base.mbs],
+            };
+            let seq_len = match m.get("seq_list") {
+                Some(v) => u64_array(v, "params.seq_list")?,
+                None => vec![base.seq_len],
+            };
+            let zero = match m.get("zero_list") {
+                Some(v) => u64_array(v, "params.zero_list")?
+                    .into_iter()
+                    .map(|z| ZeroStage::parse(z).map_err(bad))
+                    .collect::<Result<_, _>>()?,
+                None => vec![base.zero],
+            };
+            Ok(Method::Sweep(SweepParams {
+                base,
+                dp,
+                mbs,
+                seq_len,
+                zero,
+                capacity_mib: get_f64(m, "capacity_mib", "params")?,
+            }))
+        }
+        "simulate" => {
+            strict_keys(m, &["config"], "simulate params")?;
+            Ok(Method::Simulate(SimulateParams {
+                cfg: require_config(m, "simulate")?,
+            }))
+        }
+        "baselines" => {
+            strict_keys(m, &["config"], "baselines params")?;
+            Ok(Method::Baselines(BaselinesParams {
+                cfg: require_config(m, "baselines")?,
+            }))
+        }
+        "modality" => {
+            strict_keys(m, &["config"], "modality params")?;
+            Ok(Method::Modality(ModalityParams {
+                cfg: require_config(m, "modality")?,
+            }))
+        }
+        "models" => {
+            strict_keys(m, &[], "models params")?;
+            Ok(Method::Models)
+        }
+        "metrics" => {
+            strict_keys(m, &[], "metrics params")?;
+            Ok(Method::Metrics)
+        }
+        other => {
+            let hint = crate::util::text::did_you_mean(other, METHOD_NAMES);
+            Err(ApiError::new(
+                ErrorCode::UnknownMethod,
+                format!(
+                    "unknown method {other:?}{hint} (available: {})",
+                    METHOD_NAMES.join(", ")
+                ),
+            ))
+        }
+    }
+}
+
+/// Serialize a typed [`Method`]'s parameters (client side); `None` for
+/// parameterless methods.
+pub fn params_to_json(method: &Method) -> Option<Json> {
+    match method {
+        Method::Predict(p) => {
+            let mut e = vec![("config", config_to_json(&p.cfg))];
+            if let Some(cap) = p.capacity_mib {
+                e.push(("capacity_mib", num(cap)));
+            }
+            if p.detail {
+                e.push(("detail", Json::Bool(true)));
+            }
+            Some(obj(e))
+        }
+        Method::Plan(p) => Some(obj(vec![
+            ("config", config_to_json(&p.req.base)),
+            ("budget_mib", num(p.req.budget_mib)),
+            ("axes", axes_to_json(&p.req.axes)),
+        ])),
+        Method::Sweep(p) => {
+            let ints = |v: &[u64]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
+            let mut e = vec![
+                ("config", config_to_json(&p.base)),
+                ("dp_list", ints(&p.dp)),
+                ("mbs_list", ints(&p.mbs)),
+                ("seq_list", ints(&p.seq_len)),
+                (
+                    "zero_list",
+                    Json::Arr(p.zero.iter().map(|z| num(z.as_int() as f64)).collect()),
+                ),
+            ];
+            if let Some(cap) = p.capacity_mib {
+                e.push(("capacity_mib", num(cap)));
+            }
+            Some(obj(e))
+        }
+        Method::Simulate(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
+        Method::Baselines(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
+        Method::Modality(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
+        Method::Models | Method::Metrics => None,
+    }
+}
+
+// ------------------------------------------------------------------- axes
+
+/// `{mbs, seq_len, dp, zero, precision, stage}` — absent keys default
+/// as in [`Axes::standard`] (free numeric ladders, pinned
+/// zero/precision/stage).
+pub fn axes_from_json(v: &Json, base: &TrainConfig) -> Result<Axes, ApiError> {
+    let m = as_obj(v, "params.axes")?;
+    strict_keys(
+        m,
+        &["mbs", "seq_len", "dp", "zero", "precision", "stage"],
+        "params.axes",
+    )?;
+    let mut axes = Axes::standard(base);
+    if let Some(x) = m.get("mbs") {
+        axes.mbs = u64_array(x, "params.axes.mbs")?;
+    }
+    if let Some(x) = m.get("seq_len") {
+        axes.seq_len = u64_array(x, "params.axes.seq_len")?;
+    }
+    if let Some(x) = m.get("dp") {
+        axes.dp = u64_array(x, "params.axes.dp")?;
+    }
+    if let Some(x) = m.get("zero") {
+        axes.zero = u64_array(x, "params.axes.zero")?
+            .into_iter()
+            .map(|z| ZeroStage::parse(z).map_err(bad))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(x) = m.get("precision") {
+        axes.precision = str_array(x, "params.axes.precision")?
+            .into_iter()
+            .map(|p| Precision::parse(p).map_err(bad))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(x) = m.get("stage") {
+        axes.stage = str_array(x, "params.axes.stage")?
+            .into_iter()
+            .map(|p| Stage::parse(p).map_err(bad))
+            .collect::<Result<_, _>>()?;
+    }
+    Ok(axes)
+}
+
+pub fn axes_to_json(axes: &Axes) -> Json {
+    let ints = |v: &[u64]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
+    obj(vec![
+        ("mbs", ints(&axes.mbs)),
+        ("seq_len", ints(&axes.seq_len)),
+        ("dp", ints(&axes.dp)),
+        (
+            "zero",
+            Json::Arr(axes.zero.iter().map(|z| num(z.as_int() as f64)).collect()),
+        ),
+        (
+            "precision",
+            Json::Arr(axes.precision.iter().map(|p| s(p.name())).collect()),
+        ),
+        (
+            "stage",
+            Json::Arr(axes.stage.iter().map(|st| s(st.name())).collect()),
+        ),
+    ])
+}
+
+// --------------------------------------------------------------- payloads
+
+pub fn prediction_to_json(p: &Prediction) -> Json {
+    obj(vec![
+        ("peak_mib", num(p.peak_mib as f64)),
+        ("param_mib", num(p.param_mib as f64)),
+        ("grad_mib", num(p.grad_mib as f64)),
+        ("opt_mib", num(p.opt_mib as f64)),
+        ("act_mib", num(p.act_mib as f64)),
+        ("transient_mib", num(p.transient_mib as f64)),
+        ("persistent_mib", num(p.persistent_mib as f64)),
+        ("fwd_peak_mib", num(p.fwd_peak_mib as f64)),
+    ])
+}
+
+pub fn prediction_from_json(v: &Json) -> Result<Prediction, ApiError> {
+    let m = as_obj(v, "prediction")?;
+    let f = |key: &str| -> Result<f32, ApiError> {
+        get_f64(m, key, "prediction")?
+            .map(|x| x as f32)
+            .ok_or_else(|| ApiError::bad_request(format!("prediction missing {key:?}")))
+    };
+    Ok(Prediction {
+        peak_mib: f("peak_mib")?,
+        param_mib: f("param_mib")?,
+        grad_mib: f("grad_mib")?,
+        opt_mib: f("opt_mib")?,
+        act_mib: f("act_mib")?,
+        transient_mib: f("transient_mib")?,
+        persistent_mib: f("persistent_mib")?,
+        fwd_peak_mib: f("fwd_peak_mib")?,
+    })
+}
+
+pub fn measurement_to_json(m: &Measurement) -> Json {
+    let breakdown = |b: &crate::simulator::Breakdown| {
+        Json::Obj(
+            b.entries()
+                .iter()
+                .filter(|(_, bytes)| *bytes > 0)
+                .map(|(tag, bytes)| (tag.as_str().to_string(), num(*bytes as f64)))
+                .collect(),
+        )
+    };
+    obj(vec![
+        ("peak_mib", num(m.peak_mib)),
+        ("peak_allocated_mib", num(m.peak_allocated_mib)),
+        ("peak_reserved_mib", num(m.peak_reserved_mib)),
+        ("cuda_ctx_mib", num(m.cuda_ctx_mib)),
+        ("frag_frac", num(m.frag_frac)),
+        ("peak_phase", s(m.peak_phase)),
+        ("alloc_count", num(m.alloc_count as f64)),
+        ("at_peak_bytes", breakdown(&m.at_peak)),
+        ("persistent_bytes", breakdown(&m.persistent)),
+    ])
+}
+
+fn modality_from_label(label: &str) -> Result<Modality, ApiError> {
+    Modality::ALL
+        .into_iter()
+        .find(|m| m.label() == label)
+        .ok_or_else(|| ApiError::bad_request(format!("unknown modality {label:?}")))
+}
+
+pub fn shares_to_json(shares: &[ModalityShare]) -> Json {
+    Json::Arr(
+        shares
+            .iter()
+            .map(|sh| {
+                obj(vec![
+                    ("modality", s(sh.modality.label())),
+                    ("layers", num(sh.layers as f64)),
+                    ("param_mib", num(sh.param_mib)),
+                    ("grad_mib", num(sh.grad_mib)),
+                    ("opt_mib", num(sh.opt_mib)),
+                    ("act_mib", num(sh.act_mib)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn shares_from_json(v: &Json) -> Result<Vec<ModalityShare>, ApiError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request("modality shares must be an array"))?;
+    arr.iter()
+        .map(|x| {
+            let m = as_obj(x, "modality share")?;
+            let f = |key: &str| -> Result<f64, ApiError> {
+                get_f64(m, key, "modality share")?
+                    .ok_or_else(|| ApiError::bad_request(format!("share missing {key:?}")))
+            };
+            Ok(ModalityShare {
+                modality: modality_from_label(
+                    get_str(m, "modality", "modality share")?
+                        .ok_or_else(|| ApiError::bad_request("share missing \"modality\""))?,
+                )?,
+                layers: get_u64(m, "layers", "modality share")?
+                    .ok_or_else(|| ApiError::bad_request("share missing \"layers\""))?
+                    as usize,
+                param_mib: f("param_mib")?,
+                grad_mib: f("grad_mib")?,
+                opt_mib: f("opt_mib")?,
+                act_mib: f("act_mib")?,
+            })
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------- plan decode
+
+/// Decode a `plan` payload (the [`crate::report::plan_json`] document)
+/// back into a typed [`Plan`]. Candidate configs are reconstructed from
+/// `base` plus the per-candidate axis overrides — exactly the fields the
+/// planner's `branch_cfg` varies — so a decoded plan's candidates carry
+/// the same `cache_key` as the planner's own.
+pub fn plan_from_json(payload: &Json, base: &TrainConfig) -> Result<Plan, ApiError> {
+    let m = as_obj(payload, "plan payload")?;
+    let budget_mib = get_f64(m, "budget_mib", "plan payload")?
+        .ok_or_else(|| ApiError::bad_request("plan payload missing \"budget_mib\""))?;
+    let stats_v = m
+        .get("stats")
+        .ok_or_else(|| ApiError::bad_request("plan payload missing \"stats\""))?;
+    let sm = as_obj(stats_v, "plan stats")?;
+    let stat = |key: &str| -> Result<usize, ApiError> {
+        get_u64(sm, key, "plan stats")?
+            .map(|x| x as usize)
+            .ok_or_else(|| ApiError::bad_request(format!("plan stats missing {key:?}")))
+    };
+    let stats = PlanStats {
+        branches: stat("branches")?,
+        feasible_branches: stat("feasible_branches")?,
+        grid_points: stat("grid_points")?,
+        sim_points: stat("sim_points")?,
+        predictor_probes: stat("predictor_probes")?,
+    };
+    let cands_v = m
+        .get("candidates")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("plan payload missing \"candidates\" array"))?;
+    let mut candidates = Vec::with_capacity(cands_v.len());
+    for c in cands_v {
+        candidates.push(candidate_from_json(c, base)?);
+    }
+    Ok(Plan { budget_mib, candidates, stats })
+}
+
+fn candidate_from_json(v: &Json, base: &TrainConfig) -> Result<PlanCandidate, ApiError> {
+    let m = as_obj(v, "plan candidate")?;
+    let f = |key: &str| -> Result<f64, ApiError> {
+        get_f64(m, key, "plan candidate")?
+            .ok_or_else(|| ApiError::bad_request(format!("candidate missing {key:?}")))
+    };
+    let mut cfg = base.clone();
+    if let Some(model) = get_str(m, "model", "plan candidate")? {
+        cfg.model = model.to_string();
+    }
+    if let Some(st) = get_str(m, "stage", "plan candidate")? {
+        cfg.stage = Stage::parse(st).map_err(bad)?;
+    }
+    if let Some(p) = get_str(m, "precision", "plan candidate")? {
+        cfg.precision = Precision::parse(p).map_err(bad)?;
+    }
+    if let Some(z) = get_u64(m, "zero", "plan candidate")? {
+        cfg.zero = ZeroStage::parse(z).map_err(bad)?;
+    }
+    if let Some(x) = get_u64(m, "dp", "plan candidate")? {
+        cfg.dp = x;
+    }
+    if let Some(x) = get_u64(m, "seq_len", "plan candidate")? {
+        cfg.seq_len = x;
+    }
+    if let Some(x) = get_u64(m, "mbs", "plan candidate")? {
+        cfg.mbs = x;
+    }
+    if let Some(b) = get_bool(m, "grad_checkpoint", "plan candidate")? {
+        cfg.grad_checkpoint = b;
+    }
+    // lora_rank: Null means "no adapters on this candidate"; a number
+    // keeps the base's target lists (the planner never varies those).
+    match m.get("lora_rank") {
+        Some(Json::Null) | None => cfg.lora = None,
+        Some(Json::Num(r)) => {
+            let mut lora = cfg.lora.take().unwrap_or_default();
+            lora.rank = *r as u64;
+            cfg.lora = Some(lora);
+        }
+        Some(other) => {
+            return Err(ApiError::bad_request(format!(
+                "candidate lora_rank must be a number or null, got {other}"
+            )))
+        }
+    }
+    let escalation = match m.get("escalation") {
+        Some(Json::Null) | None => None,
+        Some(e) => {
+            let em = as_obj(e, "candidate escalation")?;
+            Some(Escalation {
+                mbs: get_u64(em, "mbs", "escalation")?
+                    .ok_or_else(|| ApiError::bad_request("escalation missing \"mbs\""))?,
+                simulated_mib: get_f64(em, "simulated_mib", "escalation")?.ok_or_else(|| {
+                    ApiError::bad_request("escalation missing \"simulated_mib\"")
+                })?,
+            })
+        }
+    };
+    Ok(PlanCandidate {
+        predicted_mib: f("predicted_mib")?,
+        simulated_mib: f("simulated_mib")?,
+        headroom_mib: f("headroom_mib")?,
+        tokens_per_step: f("tokens_per_step")?,
+        frontier_open: get_bool(m, "frontier_open", "plan candidate")?.unwrap_or(false),
+        escalation,
+        dominated: get_bool(m, "dominated", "plan candidate")?.unwrap_or(false),
+        cfg,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json_mini::parse as jparse;
+
+    #[test]
+    fn config_round_trips_exactly() {
+        let mut cfg = TrainConfig::fig2b(4);
+        cfg.lora = Some(LoraConfig { rank: 16, ..Default::default() });
+        cfg.stage = Stage::LoraFinetune;
+        cfg.attn = AttnImpl::Eager;
+        cfg.precision = Precision::Fp32;
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.cache_key(), cfg.cache_key());
+    }
+
+    #[test]
+    fn config_rejects_unknown_fields_and_bad_values() {
+        let e = config_from_json(&jparse(r#"{"mbz": 4}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert!(e.message.contains("mbz"), "{}", e.message);
+
+        let e = config_from_json(&jparse(r#"{"mbs": -1}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+
+        let e = config_from_json(&jparse(r#"{"zero": 7}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+
+        let e = config_from_json(&jparse(r#"{"lora": {"rnak": 4}}"#).unwrap()).unwrap_err();
+        assert!(e.message.contains("rnak"), "{}", e.message);
+    }
+
+    #[test]
+    fn unknown_model_is_structured_with_hint() {
+        let e = config_from_json(&jparse(r#"{"model": "lava-tiny"}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownModel);
+        assert!(e.message.contains("did you mean"), "{}", e.message);
+        assert!(e.message.contains("llava-tiny"), "{}", e.message);
+    }
+
+    #[test]
+    fn spec_paths_pass_model_validation() {
+        // does not need to exist at parse time — only be shaped like a spec
+        let v = jparse(r#"{"model": "examples/archs/three-tower.toml"}"#).unwrap();
+        assert!(config_from_json(&v).is_ok());
+    }
+
+    #[test]
+    fn prediction_round_trips_bit_exactly() {
+        let p = Prediction {
+            peak_mib: 71234.56,
+            param_mib: 13000.25,
+            grad_mib: 812.5,
+            opt_mib: 1625.0,
+            act_mib: 9000.125,
+            transient_mib: 3000.0625,
+            persistent_mib: 15437.75,
+            fwd_peak_mib: 2999.5,
+        };
+        // through the in-memory Json value
+        let back = prediction_from_json(&prediction_to_json(&p)).unwrap();
+        assert_eq!(back, p);
+        // and through actual wire text
+        let text = prediction_to_json(&p).to_string();
+        let back = prediction_from_json(&jparse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn axes_default_to_standard_and_override_strictly() {
+        let base = TrainConfig::llava_finetune_default();
+        let a = axes_from_json(&jparse(r#"{"mbs": [1, 2]}"#).unwrap(), &base).unwrap();
+        assert_eq!(a.mbs, vec![1, 2]);
+        assert_eq!(a.seq_len, Axes::standard(&base).seq_len);
+        let e = axes_from_json(&jparse(r#"{"mbss": [1]}"#).unwrap(), &base).unwrap_err();
+        assert!(e.message.contains("mbss"), "{}", e.message);
+        let back = axes_from_json(&axes_to_json(&a), &base).unwrap();
+        assert_eq!(back.mbs, a.mbs);
+        assert_eq!(back.zero, a.zero);
+    }
+}

@@ -1,0 +1,544 @@
+//! Request execution: the [`Estimator`] abstraction that unifies every
+//! single-config estimation backend — the analytical predictor, the
+//! tensorized/PJRT artifact, the ground-truth simulator and the
+//! prior-work baselines — behind one call shape, and the
+//! [`Dispatcher`] that executes [`ApiRequest`]s against it.
+//!
+//! The same payload builders serve three surfaces, which is the
+//! redesign's core guarantee: the CLI (`repro predict/plan/sweep`
+//! build an [`ApiRequest`] and render the payload), the in-process
+//! batched service ([`crate::coordinator::PredictionService`], whose
+//! worker calls the crate-internal `predict_payload` after a batched
+//! [`Estimator::estimate_encoded`]), and the NDJSON wire server
+//! ([`super::serve`]).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::Metrics;
+use crate::model::layer::AttnImpl;
+use crate::model::zoo;
+use crate::parser::{self, features::EncodedRequest, ParsedModel};
+use crate::planner::{self, PlanRequest};
+use crate::predictor::{analytical, tensorized::TensorizedPredictor, Prediction};
+use crate::report;
+use crate::simulator::{self, SimContext};
+use crate::sweep::Sweep;
+use crate::util::json_mini::{obj, Json};
+use crate::{baselines, predictor};
+
+use super::codec;
+use super::{
+    ApiError, ApiRequest, ApiResponse, ErrorCode, Method, PredictParams, SweepParams,
+    METHOD_NAMES,
+};
+
+/// One backend's answer for one configuration: the headline peak plus
+/// whatever extra structure the backend produces.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Predicted (or measured) peak memory, MiB per GPU.
+    pub peak_mib: f64,
+    /// Full factor breakdown, when the backend computes one (the
+    /// analytical and tensorized predictors do; the simulator and the
+    /// baselines answer peak-only).
+    pub prediction: Option<Prediction>,
+    /// (Simulated) training iterations the method had to run first —
+    /// 0 for pure formulas, the cost axis of the paper's comparison.
+    pub profile_iters: u32,
+}
+
+impl Estimate {
+    fn from_prediction(p: Prediction) -> Self {
+        Estimate {
+            peak_mib: p.peak_mib as f64,
+            prediction: Some(p),
+            profile_iters: 0,
+        }
+    }
+}
+
+/// The unifying single-config estimation abstraction. Everything that
+/// can answer "how much GPU memory will this configuration take?"
+/// implements it, so the envelope dispatches to one trait instead of
+/// four ad-hoc call shapes.
+pub trait Estimator {
+    /// Stable backend name (appears in `baselines` rows and logs).
+    fn id(&self) -> &'static str;
+
+    /// Estimate one configuration.
+    fn estimate(&mut self, cfg: &TrainConfig) -> Result<Estimate>;
+
+    /// Execute a pre-encoded batch in one call. Only the predictor
+    /// backends support this (it is what the batched service executes);
+    /// the default refuses.
+    fn estimate_encoded(&mut self, reqs: &[&EncodedRequest]) -> Result<Vec<Prediction>> {
+        let _ = reqs;
+        anyhow::bail!("backend {:?} does not execute encoded batches", self.id())
+    }
+}
+
+/// The pure-Rust factor predictor (always available).
+pub struct AnalyticalEstimator;
+
+impl Estimator for AnalyticalEstimator {
+    fn id(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn estimate(&mut self, cfg: &TrainConfig) -> Result<Estimate> {
+        Ok(Estimate::from_prediction(predictor::predict(cfg)?))
+    }
+
+    fn estimate_encoded(&mut self, reqs: &[&EncodedRequest]) -> Result<Vec<Prediction>> {
+        Ok(reqs.iter().map(|&r| analytical::predict_encoded(r)).collect())
+    }
+}
+
+/// The AOT artifact executed via PJRT. Not `Send` (the PJRT client is
+/// thread-bound) — construct it on the thread that uses it.
+pub struct TensorizedEstimator(pub TensorizedPredictor);
+
+impl Estimator for TensorizedEstimator {
+    fn id(&self) -> &'static str {
+        "tensorized"
+    }
+
+    fn estimate(&mut self, cfg: &TrainConfig) -> Result<Estimate> {
+        Ok(Estimate::from_prediction(self.0.predict(cfg)?))
+    }
+
+    fn estimate_encoded(&mut self, reqs: &[&EncodedRequest]) -> Result<Vec<Prediction>> {
+        self.0.predict_encoded(reqs)
+    }
+}
+
+/// The ground-truth simulator as an estimator (one iteration per call;
+/// reuses its [`SimContext`] across calls).
+#[derive(Default)]
+pub struct SimulatorEstimator {
+    ctx: SimContext,
+}
+
+impl Estimator for SimulatorEstimator {
+    fn id(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn estimate(&mut self, cfg: &TrainConfig) -> Result<Estimate> {
+        let m = self.ctx.simulate(cfg)?;
+        Ok(Estimate {
+            peak_mib: m.peak_mib,
+            prediction: None,
+            profile_iters: 1,
+        })
+    }
+}
+
+macro_rules! baseline_estimator {
+    ($name:ident, $module:ident, $id:literal, $doc:literal) => {
+        #[doc = $doc]
+        pub struct $name;
+
+        impl Estimator for $name {
+            fn id(&self) -> &'static str {
+                // pinned to the BaselineResult name by a test, so
+                // tables and wire rows agree
+                $id
+            }
+
+            fn estimate(&mut self, cfg: &TrainConfig) -> Result<Estimate> {
+                let b = baselines::$module::predict(cfg)?;
+                debug_assert_eq!(b.name, $id);
+                Ok(Estimate {
+                    peak_mib: b.predicted_mib,
+                    prediction: None,
+                    profile_iters: b.profile_iters,
+                })
+            }
+        }
+    };
+}
+
+baseline_estimator!(
+    FujiiEstimator,
+    fujii,
+    "fujii-unimodal",
+    "Fujii et al. unimodal formulation baseline."
+);
+baseline_estimator!(
+    LlmemEstimator,
+    llmem,
+    "llmem-unimodal",
+    "LLMem-style fine-tuning baseline."
+);
+baseline_estimator!(
+    ProfilingEstimator,
+    profiling,
+    "profiling-extrapolation",
+    "Profiling-based linear extrapolation baseline."
+);
+
+/// Map an execution failure onto a structured wire error.
+pub fn classify(e: anyhow::Error) -> ApiError {
+    let msg = format!("{e:#}");
+    if msg.contains("unknown model") {
+        ApiError::new(ErrorCode::UnknownModel, msg)
+    } else if msg.contains("loading AOT artifacts") || msg.contains("manifest.json") {
+        ApiError::new(ErrorCode::BackendUnavailable, msg)
+    } else if msg.contains("reading ") || msg.contains(".toml") {
+        // spec-file problems are the caller's to fix
+        ApiError::bad_request(msg)
+    } else {
+        ApiError::internal(msg)
+    }
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+pub(crate) fn model_summary_json(pm: &ParsedModel) -> Json {
+    obj(vec![
+        ("name", s(pm.model_name.clone())),
+        ("layers", num(pm.num_layers() as f64)),
+        ("param_elems", num(pm.total_param_elems as f64)),
+        ("trainable_param_elems", num(pm.trainable_param_elems as f64)),
+    ])
+}
+
+/// Build the `predict` ok-payload from a computed prediction. Shared by
+/// the batched service worker and the dispatcher, so every surface
+/// answers with the same document.
+pub(crate) fn predict_payload(p: &Prediction, params: &PredictParams) -> Result<Json, ApiError> {
+    let mut entries = vec![("prediction", codec::prediction_to_json(p))];
+    if let Some(cap) = params.capacity_mib {
+        entries.push(("fits", Json::Bool(p.fits(cap as f32))));
+    }
+    if params.detail {
+        let pm = parser::parse(&params.cfg).map_err(classify)?;
+        entries.push(("model", model_summary_json(&pm)));
+        entries.push((
+            "modality",
+            codec::shares_to_json(&report::modality_split(&pm)),
+        ));
+    }
+    Ok(obj(entries))
+}
+
+pub(crate) fn plan_payload(req: &PlanRequest, engine: &Sweep) -> Result<Json, ApiError> {
+    let plan = planner::plan_with(req, engine).map_err(classify)?;
+    Ok(report::plan_json(&plan))
+}
+
+pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, ApiError> {
+    let mut cfgs = Vec::new();
+    for &seq_len in &p.seq_len {
+        for &mbs in &p.mbs {
+            for &zero in &p.zero {
+                for &dp in &p.dp {
+                    cfgs.push(TrainConfig { seq_len, mbs, zero, dp, ..p.base.clone() });
+                }
+            }
+        }
+    }
+    for c in &cfgs {
+        c.validate().map_err(classify)?;
+    }
+    let rows = engine
+        .run(&cfgs, |ctx, pm, cfg| {
+            let predicted = predictor::predict(cfg)?.peak_mib as f64;
+            let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
+            Ok((predicted, measured))
+        })
+        .map_err(classify)?;
+    let points = cfgs
+        .iter()
+        .zip(&rows)
+        .map(|(cfg, (pred, meas))| {
+            let mut e = vec![
+                ("seq_len", num(cfg.seq_len as f64)),
+                ("mbs", num(cfg.mbs as f64)),
+                ("zero", num(cfg.zero.as_int() as f64)),
+                ("dp", num(cfg.dp as f64)),
+                ("predicted_mib", num(*pred)),
+                ("measured_mib", num(*meas)),
+            ];
+            if let Some(cap) = p.capacity_mib {
+                e.push(("fits", Json::Bool(*pred <= cap)));
+            }
+            obj(e)
+        })
+        .collect();
+    Ok(obj(vec![
+        ("points", Json::Arr(points)),
+        ("threads", num(engine.threads() as f64)),
+    ]))
+}
+
+pub(crate) fn simulate_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
+    let m = simulator::simulate(cfg).map_err(classify)?;
+    Ok(obj(vec![("measurement", codec::measurement_to_json(&m))]))
+}
+
+pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
+    let measured = simulator::simulate(cfg).map_err(classify)?.peak_mib;
+    let mut ests: Vec<Box<dyn Estimator>> = vec![
+        Box::new(AnalyticalEstimator),
+        Box::new(FujiiEstimator),
+        Box::new(LlmemEstimator),
+        Box::new(ProfilingEstimator),
+    ];
+    let mut rows = Vec::new();
+    for est in ests.iter_mut() {
+        let e = est.estimate(cfg).map_err(classify)?;
+        rows.push(obj(vec![
+            ("name", s(est.id())),
+            ("predicted_mib", num(e.peak_mib)),
+            ("ape", num(report::ape(e.peak_mib, measured))),
+            ("profile_iters", num(e.profile_iters as f64)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("measured_mib", num(measured)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+pub(crate) fn modality_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
+    let pm = parser::parse(cfg).map_err(classify)?;
+    Ok(obj(vec![
+        ("model", model_summary_json(&pm)),
+        ("shares", codec::shares_to_json(&report::modality_split(&pm))),
+    ]))
+}
+
+pub(crate) fn models_payload() -> Result<Json, ApiError> {
+    let mut models = Vec::new();
+    for name in zoo::names() {
+        let e = zoo::build(name, 2048, AttnImpl::Flash).map_err(classify)?;
+        models.push(obj(vec![
+            ("name", s(name)),
+            ("param_elems", num(e.spec.param_elems() as f64)),
+            ("layers", num(e.spec.num_layers() as f64)),
+            ("modules", num(e.spec.modules.len() as f64)),
+        ]));
+    }
+    Ok(obj(vec![("models", Json::Arr(models))]))
+}
+
+pub(crate) fn metrics_payload(m: &Metrics) -> Json {
+    let per_method = METHOD_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let (p50, p95, max) = m.method_latency_us(i);
+            (
+                name.to_string(),
+                obj(vec![
+                    ("requests", num(m.method_requests(i) as f64)),
+                    ("errors", num(m.method_errors(i) as f64)),
+                    ("p50_us", num(p50 as f64)),
+                    ("p95_us", num(p95 as f64)),
+                    ("max_us", num(max as f64)),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("requests", num(m.requests() as f64)),
+        ("responses", num(m.responses() as f64)),
+        ("errors", num(m.errors() as f64)),
+        ("batches", num(m.batches() as f64)),
+        ("mean_batch", num(m.mean_batch_size())),
+        ("plans", num(m.plans() as f64)),
+        ("per_method", Json::Obj(per_method)),
+    ])
+}
+
+/// Executes [`ApiRequest`]s: the one place every surface's requests
+/// land. `repro predict/plan/sweep` construct one of these directly;
+/// the batched service's worker uses the same payload builders (with
+/// `predict` routed through its batcher instead).
+pub struct Dispatcher {
+    backend: Box<dyn Estimator>,
+    engine: Sweep,
+    metrics: Arc<Metrics>,
+}
+
+impl Dispatcher {
+    /// Analytical backend, worker-per-core sweep engine.
+    pub fn analytical() -> Self {
+        Self::new(Box::new(AnalyticalEstimator), Sweep::default())
+    }
+
+    pub fn new(backend: Box<dyn Estimator>, engine: Sweep) -> Self {
+        Self::with_metrics(backend, engine, Arc::new(Metrics::new()))
+    }
+
+    pub fn with_metrics(
+        backend: Box<dyn Estimator>,
+        engine: Sweep,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Dispatcher { backend, engine, metrics }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Sweep-engine worker threads (the CLI's reporting needs it).
+    pub fn threads(&self) -> usize {
+        self.engine.threads()
+    }
+
+    /// Execute one request, recording per-method metrics.
+    pub fn handle(&mut self, req: &ApiRequest) -> ApiResponse {
+        let t0 = Instant::now();
+        let result = self.payload(&req.method);
+        let ok = result.is_ok();
+        match (&req.method, ok) {
+            (Method::Plan(_), true) => self.metrics.on_plan(t0.elapsed()),
+            (_, true) => self.metrics.on_serial(),
+            (_, false) => self.metrics.on_error(1),
+        }
+        self.metrics.on_method(req.method.index(), t0.elapsed(), ok);
+        match result {
+            Ok(payload) => ApiResponse::ok(req.id.clone(), payload),
+            Err(e) => ApiResponse::err(req.id.clone(), e),
+        }
+    }
+
+    /// Execute every method *except* `predict` (the batched service
+    /// worker routes predictions through its batcher and everything
+    /// else here).
+    pub(crate) fn payload(&mut self, method: &Method) -> Result<Json, ApiError> {
+        match method {
+            Method::Predict(p) => {
+                let est = self.backend.estimate(&p.cfg).map_err(classify)?;
+                let pred = est.prediction.ok_or_else(|| {
+                    ApiError::internal(format!(
+                        "backend {:?} does not produce a factor breakdown",
+                        self.backend.id()
+                    ))
+                })?;
+                predict_payload(&pred, p)
+            }
+            Method::Plan(p) => plan_payload(&p.req, &self.engine),
+            Method::Sweep(p) => sweep_payload(p, &self.engine),
+            Method::Simulate(p) => simulate_payload(&p.cfg),
+            Method::Baselines(p) => baselines_payload(&p.cfg),
+            Method::Modality(p) => modality_payload(&p.cfg),
+            Method::Models => models_payload(),
+            Method::Metrics => Ok(metrics_payload(&self.metrics)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 2,
+            seq_len: 64,
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn estimators_agree_on_shape() {
+        let cfg = tiny();
+        let mut ests: Vec<Box<dyn Estimator>> = vec![
+            Box::new(AnalyticalEstimator),
+            Box::new(SimulatorEstimator::default()),
+            Box::new(FujiiEstimator),
+            Box::new(LlmemEstimator),
+            Box::new(ProfilingEstimator),
+        ];
+        for est in ests.iter_mut() {
+            let e = est.estimate(&cfg).unwrap();
+            assert!(e.peak_mib > 0.0, "{}", est.id());
+            assert!(e.peak_mib.is_finite(), "{}", est.id());
+        }
+    }
+
+    #[test]
+    fn analytical_estimator_matches_predictor_exactly() {
+        let cfg = tiny();
+        let mut est = AnalyticalEstimator;
+        let e = est.estimate(&cfg).unwrap();
+        let p = predictor::predict(&cfg).unwrap();
+        assert_eq!(e.prediction.unwrap(), p);
+        assert_eq!(e.profile_iters, 0);
+    }
+
+    #[test]
+    fn simulator_estimator_refuses_encoded_batches() {
+        let mut est = SimulatorEstimator::default();
+        assert!(est.estimate_encoded(&[]).is_err());
+    }
+
+    #[test]
+    fn dispatcher_serves_every_method() {
+        let mut d = Dispatcher::analytical();
+        let cfg = tiny();
+        let reqs = vec![
+            Method::Predict(PredictParams {
+                cfg: cfg.clone(),
+                capacity_mib: Some(80.0 * 1024.0),
+                detail: true,
+            }),
+            Method::Simulate(crate::api::SimulateParams { cfg: cfg.clone() }),
+            Method::Baselines(crate::api::BaselinesParams { cfg: cfg.clone() }),
+            Method::Modality(crate::api::ModalityParams { cfg: cfg.clone() }),
+            Method::Models,
+            Method::Metrics,
+        ];
+        for (i, method) in reqs.into_iter().enumerate() {
+            let req = ApiRequest::new(format!("t{i}"), method);
+            let resp = d.handle(&req);
+            assert_eq!(resp.id.as_deref(), Some(format!("t{i}").as_str()));
+            let payload = resp.result.expect("method should succeed");
+            assert!(matches!(payload, Json::Obj(_)));
+        }
+        // metrics recorded one request per method touched
+        assert_eq!(d.metrics().method_requests(0), 1); // predict
+        assert_eq!(d.metrics().method_requests(3), 1); // simulate
+        assert_eq!(d.metrics().method_requests(7), 1); // metrics
+    }
+
+    #[test]
+    fn baseline_estimator_ids_match_baseline_names() {
+        let cfg = tiny();
+        assert_eq!(FujiiEstimator.id(), baselines::fujii::predict(&cfg).unwrap().name);
+        assert_eq!(LlmemEstimator.id(), baselines::llmem::predict(&cfg).unwrap().name);
+        assert_eq!(
+            ProfilingEstimator.id(),
+            baselines::profiling::predict(&cfg).unwrap().name
+        );
+    }
+
+    #[test]
+    fn classify_maps_error_families() {
+        assert_eq!(
+            classify(anyhow::anyhow!("unknown model \"x\"")).code,
+            ErrorCode::UnknownModel
+        );
+        assert_eq!(
+            classify(anyhow::anyhow!("loading AOT artifacts failed")).code,
+            ErrorCode::BackendUnavailable
+        );
+        assert_eq!(classify(anyhow::anyhow!("boom")).code, ErrorCode::Internal);
+    }
+}

@@ -1,0 +1,543 @@
+//! The versioned wire API (v1): one typed request/response envelope
+//! over every capability of the crate.
+//!
+//! The paper's deployment story is a *screening service* — schedulers
+//! ask "will this configuration fit?" before cluster time is spent —
+//! and every capability of this crate (predict / plan / sweep /
+//! simulate / baselines / modality / models / metrics) is reachable
+//! through the same envelope:
+//!
+//! ```text
+//! request:   {"v":1, "id":"r1", "method":"predict", "params":{...}}
+//! response:  {"v":1, "id":"r1", "ok":{...}}
+//!        or  {"v":1, "id":"r1", "error":{"code":"bad_request", "message":"..."}}
+//! ```
+//!
+//! * [`ApiRequest`] / [`ApiResponse`] — the envelope. Requests carry a
+//!   client-chosen correlation `id` (echoed verbatim); responses carry
+//!   exactly one of `ok` (method-specific payload) or `error`.
+//! * [`Method`] — the typed method enum; parameters are validated
+//!   *strictly* (unknown fields are rejected) by [`codec`].
+//! * [`ApiError`] / [`ErrorCode`] — structured failures
+//!   (`bad_request`, `unknown_model`, `over_capacity`, …); a server
+//!   never answers a well-framed line with anything but a v1 response.
+//! * [`dispatch`] — the [`dispatch::Estimator`] abstraction unifying
+//!   the analytical predictor, the tensorized/PJRT backend, the
+//!   simulator and the prior-work baselines behind one call shape, plus
+//!   the [`dispatch::Dispatcher`] that executes requests.
+//! * [`serve`] — the NDJSON-over-TCP (and stdio) server, `repro
+//!   serve`.
+//! * [`render`] — CLI text rendering of response payloads, so `repro
+//!   predict/plan/sweep` are provably the same code path as the wire.
+//!
+//! The full payload schemas, error-code table and versioning policy
+//! are documented in `ARCHITECTURE.md` §Wire API. Serialization is
+//! [`crate::util::json_mini`]; framing is NDJSON (one document per
+//! line — emission is guaranteed single-line).
+//!
+//! **Versioning policy:** `v` is a required integer. Within v1,
+//! additions are backwards-compatible only on the *response* side
+//! (clients must ignore unknown response keys); request fields stay
+//! strict so typos fail loudly. A request with any other `v` is
+//! answered with `unsupported_version`, never dropped.
+
+pub mod codec;
+pub mod dispatch;
+pub mod render;
+pub mod serve;
+
+use crate::config::{TrainConfig, ZeroStage};
+use crate::planner::PlanRequest;
+use crate::util::json_mini::{obj, Json};
+
+/// The wire-protocol version this build speaks.
+pub const VERSION: u64 = 1;
+
+/// Number of API methods (sizes the per-method metrics arrays).
+pub const NUM_METHODS: usize = 8;
+
+/// Canonical method names, in [`Method::index`] order.
+pub const METHOD_NAMES: [&str; NUM_METHODS] = [
+    "predict",
+    "plan",
+    "sweep",
+    "simulate",
+    "baselines",
+    "modality",
+    "models",
+    "metrics",
+];
+
+/// Structured error codes (the `error.code` wire field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, missing/unknown fields, invalid parameter values.
+    BadRequest,
+    /// The `v` field is missing or not a version this server speaks.
+    UnsupportedVersion,
+    /// `method` is not one of [`METHOD_NAMES`].
+    UnknownMethod,
+    /// The referenced model is neither a zoo preset nor a spec path.
+    UnknownModel,
+    /// The service's bounded request queue is full — retry later.
+    OverCapacity,
+    /// The requested backend (e.g. PJRT artifacts) is not available.
+    BackendUnavailable,
+    /// The request was valid but execution failed.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::UnknownMethod => "unknown_method",
+            ErrorCode::UnknownModel => "unknown_model",
+            ErrorCode::OverCapacity => "over_capacity",
+            ErrorCode::BackendUnavailable => "backend_unavailable",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "unsupported_version" => ErrorCode::UnsupportedVersion,
+            "unknown_method" => ErrorCode::UnknownMethod,
+            "unknown_model" => ErrorCode::UnknownModel,
+            "over_capacity" => ErrorCode::OverCapacity,
+            "backend_unavailable" => ErrorCode::BackendUnavailable,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// A structured API failure: a machine-readable code plus a
+/// human-readable message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ApiError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Internal, message)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("code", Json::Str(self.code.as_str().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+
+    /// Parse the `error` object of a response (client side).
+    pub fn from_json(v: &Json) -> Option<ApiError> {
+        let code = ErrorCode::parse(v.get("code")?.as_str()?)?;
+        let message = v.get("message")?.as_str()?.to_string();
+        Some(ApiError { code, message })
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// `predict` parameters.
+#[derive(Clone, Debug)]
+pub struct PredictParams {
+    pub cfg: TrainConfig,
+    /// When set, the response carries a `fits` verdict against this
+    /// per-GPU capacity (MiB).
+    pub capacity_mib: Option<f64>,
+    /// When true, the response additionally carries the parsed-model
+    /// summary and the per-modality factor split (`model`, `modality`).
+    /// The batched service hot path leaves this off.
+    pub detail: bool,
+}
+
+/// `simulate` parameters.
+#[derive(Clone, Debug)]
+pub struct SimulateParams {
+    pub cfg: TrainConfig,
+}
+
+/// `plan` parameters (a [`PlanRequest`]: base config + budget + axes).
+#[derive(Clone, Debug)]
+pub struct PlanParams {
+    pub req: PlanRequest,
+}
+
+/// `sweep` parameters: the grid axes fanned over the base config, in
+/// the CLI's nested enumeration order (seq → mbs → zero → dp).
+#[derive(Clone, Debug)]
+pub struct SweepParams {
+    pub base: TrainConfig,
+    pub dp: Vec<u64>,
+    pub mbs: Vec<u64>,
+    pub seq_len: Vec<u64>,
+    pub zero: Vec<ZeroStage>,
+    /// When set, each point carries an ADMIT/REJECT verdict against
+    /// this capacity (MiB).
+    pub capacity_mib: Option<f64>,
+}
+
+/// `baselines` parameters.
+#[derive(Clone, Debug)]
+pub struct BaselinesParams {
+    pub cfg: TrainConfig,
+}
+
+/// `modality` parameters.
+#[derive(Clone, Debug)]
+pub struct ModalityParams {
+    pub cfg: TrainConfig,
+}
+
+/// The typed method enum — every capability of the crate, one request
+/// shape each. Wire names are [`METHOD_NAMES`].
+#[derive(Clone, Debug)]
+pub enum Method {
+    Predict(PredictParams),
+    Plan(PlanParams),
+    Sweep(SweepParams),
+    Simulate(SimulateParams),
+    Baselines(BaselinesParams),
+    Modality(ModalityParams),
+    /// Zoo + spec listing: every registered preset with its size.
+    Models,
+    /// Service metrics snapshot (per-method counters + latency
+    /// percentiles).
+    Metrics,
+}
+
+impl Method {
+    /// Wire name (an entry of [`METHOD_NAMES`]).
+    pub fn name(&self) -> &'static str {
+        METHOD_NAMES[self.index()]
+    }
+
+    /// Stable index into [`METHOD_NAMES`] (and the per-method metrics
+    /// arrays).
+    pub fn index(&self) -> usize {
+        match self {
+            Method::Predict(_) => 0,
+            Method::Plan(_) => 1,
+            Method::Sweep(_) => 2,
+            Method::Simulate(_) => 3,
+            Method::Baselines(_) => 4,
+            Method::Modality(_) => 5,
+            Method::Models => 6,
+            Method::Metrics => 7,
+        }
+    }
+}
+
+/// One request envelope.
+#[derive(Clone, Debug)]
+pub struct ApiRequest {
+    /// Client correlation id, echoed verbatim on the response.
+    pub id: Option<String>,
+    pub method: Method,
+}
+
+impl ApiRequest {
+    pub fn new(id: impl Into<String>, method: Method) -> Self {
+        ApiRequest { id: Some(id.into()), method }
+    }
+
+    /// Serialize as a v1 request document (client side).
+    pub fn to_json(&self) -> Json {
+        let mut entries = vec![("v", Json::Num(VERSION as f64))];
+        if let Some(id) = &self.id {
+            entries.push(("id", Json::Str(id.clone())));
+        }
+        entries.push(("method", Json::Str(self.method.name().to_string())));
+        if let Some(params) = codec::params_to_json(&self.method) {
+            entries.push(("params", params));
+        }
+        obj(entries)
+    }
+
+    /// Parse a request document. On failure, returns the ready-to-send
+    /// error response (id echoed when it could be extracted).
+    pub fn parse(v: &Json) -> Result<ApiRequest, ApiResponse> {
+        // Best-effort id extraction first, so even rejected requests
+        // correlate.
+        let id = v
+            .get("id")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        let fail = |e: ApiError| ApiResponse { id: id.clone(), result: Err(e) };
+
+        let Json::Obj(m) = v else {
+            return Err(fail(ApiError::bad_request("request must be a JSON object")));
+        };
+        // Version first: a non-v1 request must answer unsupported_version
+        // even when it carries envelope fields v1 does not know (extra
+        // fields are exactly why a version gets bumped).
+        match v.get("v").and_then(Json::as_f64) {
+            Some(ver) if ver == VERSION as f64 => {}
+            Some(ver) => {
+                return Err(fail(ApiError::new(
+                    ErrorCode::UnsupportedVersion,
+                    format!("unsupported version {ver}; this server speaks v{VERSION}"),
+                )))
+            }
+            None => {
+                return Err(fail(ApiError::new(
+                    ErrorCode::UnsupportedVersion,
+                    format!("missing numeric \"v\" field; this server speaks v{VERSION}"),
+                )))
+            }
+        }
+        for k in m.keys() {
+            if !matches!(k.as_str(), "v" | "id" | "method" | "params") {
+                return Err(fail(ApiError::bad_request(format!(
+                    "unknown request field {k:?} (expected v, id, method, params)"
+                ))));
+            }
+        }
+        if let Some(idv) = v.get("id") {
+            if !matches!(idv, Json::Str(_)) {
+                return Err(fail(ApiError::bad_request("\"id\" must be a string")));
+            }
+        }
+        let Some(name) = v.get("method").and_then(Json::as_str) else {
+            return Err(fail(ApiError::bad_request("missing \"method\" string")));
+        };
+        let method = codec::method_from_json(name, v.get("params")).map_err(&fail)?;
+        Ok(ApiRequest { id, method })
+    }
+
+    /// Parse one NDJSON line (server side).
+    pub fn parse_line(line: &str) -> Result<ApiRequest, ApiResponse> {
+        match crate::util::json_mini::parse(line) {
+            Ok(v) => Self::parse(&v),
+            Err(e) => Err(ApiResponse {
+                id: None,
+                result: Err(ApiError::bad_request(format!("malformed JSON: {e:#}"))),
+            }),
+        }
+    }
+}
+
+/// One response envelope: `ok` payload or structured `error`.
+#[derive(Clone, Debug)]
+pub struct ApiResponse {
+    /// The request's correlation id, echoed (None when the request's id
+    /// was unreadable).
+    pub id: Option<String>,
+    pub result: Result<Json, ApiError>,
+}
+
+impl ApiResponse {
+    pub fn ok(id: Option<String>, payload: Json) -> Self {
+        ApiResponse { id, result: Ok(payload) }
+    }
+
+    pub fn err(id: Option<String>, error: ApiError) -> Self {
+        ApiResponse { id, result: Err(error) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    /// Serialize as a v1 response document.
+    pub fn to_json(&self) -> Json {
+        let mut entries = vec![("v", Json::Num(VERSION as f64))];
+        entries.push((
+            "id",
+            match &self.id {
+                Some(id) => Json::Str(id.clone()),
+                None => Json::Null,
+            },
+        ));
+        match &self.result {
+            Ok(payload) => entries.push(("ok", payload.clone())),
+            Err(e) => entries.push(("error", e.to_json())),
+        }
+        obj(entries)
+    }
+
+    /// Parse a response document (client side).
+    pub fn parse(v: &Json) -> anyhow::Result<ApiResponse> {
+        let id = v.get("id").and_then(Json::as_str).map(str::to_string);
+        if v.get("v").and_then(Json::as_f64) != Some(VERSION as f64) {
+            anyhow::bail!("response is not wire version v{VERSION}: {v}");
+        }
+        if let Some(e) = v.get("error") {
+            let err = ApiError::from_json(e)
+                .ok_or_else(|| anyhow::anyhow!("malformed error object: {e}"))?;
+            return Ok(ApiResponse { id, result: Err(err) });
+        }
+        match v.get("ok") {
+            Some(payload) => Ok(ApiResponse { id, result: Ok(payload.clone()) }),
+            None => anyhow::bail!("response carries neither \"ok\" nor \"error\""),
+        }
+    }
+
+    /// Parse one NDJSON response line (client side).
+    pub fn parse_line(line: &str) -> anyhow::Result<ApiResponse> {
+        Self::parse(&crate::util::json_mini::parse(line)?)
+    }
+
+    /// Unwrap into the payload, converting an [`ApiError`] into a plain
+    /// error (for typed in-process wrappers).
+    pub fn into_result(self) -> anyhow::Result<Json> {
+        self.result.map_err(anyhow::Error::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json_mini::parse as jparse;
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::UnknownMethod,
+            ErrorCode::UnknownModel,
+            ErrorCode::OverCapacity,
+            ErrorCode::BackendUnavailable,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn request_round_trips_through_the_envelope() {
+        let req = ApiRequest::new(
+            "r1",
+            Method::Predict(PredictParams {
+                cfg: TrainConfig::fig2b(4),
+                capacity_mib: Some(81920.0),
+                detail: false,
+            }),
+        );
+        let parsed = ApiRequest::parse(&req.to_json()).unwrap();
+        assert_eq!(parsed.id.as_deref(), Some("r1"));
+        let Method::Predict(p) = parsed.method else {
+            panic!("wrong method")
+        };
+        assert_eq!(p.cfg.cache_key(), TrainConfig::fig2b(4).cache_key());
+        assert_eq!(p.capacity_mib, Some(81920.0));
+    }
+
+    #[test]
+    fn unknown_envelope_field_is_bad_request() {
+        let v = jparse(r#"{"v":1,"method":"models","bogus":1}"#).unwrap();
+        let resp = ApiRequest::parse(&v).unwrap_err();
+        let err = resp.result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("bogus"), "{}", err.message);
+    }
+
+    #[test]
+    fn wrong_version_is_unsupported_and_echoes_id() {
+        let v = jparse(r#"{"v":2,"id":"x","method":"models"}"#).unwrap();
+        let resp = ApiRequest::parse(&v).unwrap_err();
+        assert_eq!(resp.id.as_deref(), Some("x"));
+        assert_eq!(resp.result.unwrap_err().code, ErrorCode::UnsupportedVersion);
+        let v = jparse(r#"{"method":"models"}"#).unwrap();
+        let resp = ApiRequest::parse(&v).unwrap_err();
+        assert_eq!(resp.result.unwrap_err().code, ErrorCode::UnsupportedVersion);
+    }
+
+    /// The version check outranks field strictness: a v2 request with a
+    /// v2-only envelope field must answer unsupported_version, not
+    /// bad_request (version probing would otherwise break).
+    #[test]
+    fn version_check_precedes_unknown_field_strictness() {
+        let v = jparse(r#"{"v":2,"id":"p","method":"predict","deadline_ms":5}"#).unwrap();
+        let resp = ApiRequest::parse(&v).unwrap_err();
+        assert_eq!(resp.id.as_deref(), Some("p"));
+        assert_eq!(resp.result.unwrap_err().code, ErrorCode::UnsupportedVersion);
+    }
+
+    #[test]
+    fn unknown_method_suggests_and_errors() {
+        let v = jparse(r#"{"v":1,"method":"pedict"}"#).unwrap();
+        let err = ApiRequest::parse(&v).unwrap_err().result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownMethod);
+        assert!(err.message.contains("predict"), "{}", err.message);
+    }
+
+    #[test]
+    fn method_names_match_indices() {
+        let methods = [
+            Method::Predict(PredictParams {
+                cfg: TrainConfig::llava_finetune_default(),
+                capacity_mib: None,
+                detail: false,
+            }),
+            Method::Plan(PlanParams {
+                req: PlanRequest {
+                    base: TrainConfig::llava_finetune_default(),
+                    budget_mib: 1.0,
+                    axes: crate::planner::Axes::fixed(&TrainConfig::llava_finetune_default()),
+                },
+            }),
+            Method::Sweep(SweepParams {
+                base: TrainConfig::llava_finetune_default(),
+                dp: vec![1],
+                mbs: vec![1],
+                seq_len: vec![32],
+                zero: vec![ZeroStage::Zero0],
+                capacity_mib: None,
+            }),
+            Method::Simulate(SimulateParams {
+                cfg: TrainConfig::llava_finetune_default(),
+            }),
+            Method::Baselines(BaselinesParams {
+                cfg: TrainConfig::llava_finetune_default(),
+            }),
+            Method::Modality(ModalityParams {
+                cfg: TrainConfig::llava_finetune_default(),
+            }),
+            Method::Models,
+            Method::Metrics,
+        ];
+        for (i, m) in methods.iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(m.name(), METHOD_NAMES[i]);
+        }
+    }
+
+    #[test]
+    fn responses_serialize_one_of_ok_or_error() {
+        let ok = ApiResponse::ok(Some("a".into()), Json::Bool(true));
+        let t = ok.to_json().to_string();
+        assert!(t.contains("\"ok\"") && !t.contains("\"error\""));
+        let parsed = ApiResponse::parse_line(&t).unwrap();
+        assert_eq!(parsed.id.as_deref(), Some("a"));
+        assert_eq!(parsed.result.unwrap(), Json::Bool(true));
+
+        let err = ApiResponse::err(None, ApiError::bad_request("nope"));
+        let t = err.to_json().to_string();
+        assert!(t.contains("\"error\"") && !t.contains("\"ok\""));
+        let parsed = ApiResponse::parse_line(&t).unwrap();
+        assert_eq!(parsed.result.unwrap_err().code, ErrorCode::BadRequest);
+    }
+}

@@ -1,0 +1,132 @@
+//! CLI text rendering of wire payloads.
+//!
+//! `repro predict` and `repro sweep` construct an [`super::ApiRequest`],
+//! run it through the [`super::dispatch::Dispatcher`], and render the
+//! response payload with these functions — which reproduce the
+//! pre-redesign output byte-for-byte (pinned by the golden parity tests
+//! in `tests/api.rs`). `repro plan` instead decodes the payload back
+//! into a typed [`crate::planner::Plan`]
+//! ([`super::codec::plan_from_json`]) and reuses
+//! [`crate::report::frontier_table`] directly.
+
+use crate::report;
+use crate::util::json_mini::Json;
+use crate::util::units::human_mib;
+
+use super::codec;
+use super::ApiError;
+
+/// Render a `predict` (detail) payload exactly as `repro predict`
+/// prints it. `capacity_gib` is the CLI's `--capacity-gib` value (the
+/// payload's `fits` verdict was computed server-side).
+pub fn predict_text(payload: &Json, capacity_gib: Option<f64>) -> Result<String, ApiError> {
+    use std::fmt::Write as _;
+    let model = payload
+        .get("model")
+        .ok_or_else(|| ApiError::bad_request("predict payload missing \"model\" (detail off?)"))?;
+    let field = |key: &str| -> Result<f64, ApiError> {
+        model
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ApiError::bad_request(format!("model summary missing {key:?}")))
+    };
+    let name = model
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("model summary missing \"name\""))?;
+    let p = codec::prediction_from_json(
+        payload
+            .get("prediction")
+            .ok_or_else(|| ApiError::bad_request("predict payload missing \"prediction\""))?,
+    )?;
+    let shares = codec::shares_from_json(
+        payload
+            .get("modality")
+            .ok_or_else(|| ApiError::bad_request("predict payload missing \"modality\""))?,
+    )?;
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "model: {} ({} layers, {:.2}B params, {:.2}B trainable)",
+        name,
+        field("layers")? as u64,
+        field("param_elems")? / 1e9,
+        field("trainable_param_elems")? / 1e9,
+    );
+    let _ = writeln!(out, "predicted peak: {}", human_mib(p.peak_mib as f64));
+    let _ = writeln!(out, "  M_param     {}", human_mib(p.param_mib as f64));
+    let _ = writeln!(out, "  M_grad      {}", human_mib(p.grad_mib as f64));
+    let _ = writeln!(out, "  M_opt       {}", human_mib(p.opt_mib as f64));
+    let _ = writeln!(out, "  M_act       {}", human_mib(p.act_mib as f64));
+    let _ = writeln!(out, "  transient   {}", human_mib(p.transient_mib as f64));
+    let _ = writeln!(out, "per-modality split (Fig. 1 decomposition):");
+    let _ = writeln!(out, "{}", report::table_from_shares(&shares).render());
+    if let Some(cap) = capacity_gib {
+        let fits = payload
+            .get("fits")
+            .and_then(|f| match f {
+                Json::Bool(b) => Some(*b),
+                _ => None,
+            })
+            .ok_or_else(|| ApiError::bad_request("predict payload missing \"fits\""))?;
+        let _ = writeln!(
+            out,
+            "fits {cap:.0} GiB GPU: {}",
+            if fits { "YES" } else { "NO — would OoM" }
+        );
+    }
+    Ok(out)
+}
+
+/// Render a `sweep` payload's points as the `repro sweep` table
+/// (verdict column included when the request carried a capacity).
+pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, ApiError> {
+    let points = payload
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("sweep payload missing \"points\" array"))?;
+    let mut headers = vec!["seq", "mbs", "zero", "dp", "predicted GiB", "measured GiB", "APE %"];
+    if with_verdict {
+        headers.push("verdict");
+    }
+    let mut t = report::Table::new(headers);
+    for pt in points {
+        let f = |key: &str| -> Result<f64, ApiError> {
+            pt.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::bad_request(format!("sweep point missing {key:?}")))
+        };
+        let (p, m) = (f("predicted_mib")?, f("measured_mib")?);
+        let mut row = vec![
+            (f("seq_len")? as u64).to_string(),
+            (f("mbs")? as u64).to_string(),
+            (f("zero")? as u64).to_string(),
+            (f("dp")? as u64).to_string(),
+            format!("{:.2}", p / 1024.0),
+            format!("{:.2}", m / 1024.0),
+            format!("{:.1}", report::ape(p, m) * 100.0),
+        ];
+        if with_verdict {
+            let fits = pt
+                .get("fits")
+                .and_then(|v| match v {
+                    Json::Bool(b) => Some(*b),
+                    _ => None,
+                })
+                .ok_or_else(|| ApiError::bad_request("sweep point missing \"fits\""))?;
+            row.push(if fits { "ADMIT" } else { "REJECT" }.to_string());
+        }
+        t.row(row);
+    }
+    Ok(t)
+}
+
+/// Number of points in a `sweep` payload (for the CLI's summary line).
+pub fn sweep_points(payload: &Json) -> usize {
+    payload
+        .get("points")
+        .and_then(Json::as_arr)
+        .map(<[Json]>::len)
+        .unwrap_or(0)
+}

@@ -1,0 +1,480 @@
+//! `repro serve`: the wire API over NDJSON — one request document per
+//! line in, one response document per line out, over TCP (or stdio).
+//!
+//! Design:
+//!
+//! * **Framing** — NDJSON. [`crate::util::json_mini`] guarantees
+//!   single-line emission, and every well-framed line gets exactly one
+//!   response line, errors included; a malformed line never tears the
+//!   connection down. Frames are capped at [`MAX_FRAME_BYTES`]
+//!   (oversized answers `bad_request`, then closes — there is no way
+//!   to resync mid-frame), and partial lines survive read-timeout
+//!   ticks byte-exactly.
+//! * **Thread pool** — one accept thread hands sockets to a small
+//!   fixed pool of connection threads over a bounded channel; when all
+//!   are busy the accept loop blocks, leaving further connections in
+//!   the OS backlog.
+//! * **Backpressure** — requests enter the prediction service through
+//!   [`crate::coordinator::Client::try_submit`]: a full service queue
+//!   answers `over_capacity` instead of stalling the connection, and
+//!   batching follows the service's
+//!   [`crate::coordinator::batcher::BatchPolicy`] as for in-process
+//!   clients.
+//! * **Graceful shutdown** — [`Server::shutdown`] stops accepting,
+//!   lets in-flight lines finish (connection threads poll a stop flag
+//!   on a short read timeout), then drains the service queue so every
+//!   queued request is answered before the worker exits.
+
+use std::io::{BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Client, PredictionService};
+
+use super::{ApiError, ApiRequest, ApiResponse};
+
+/// How often an idle connection thread re-checks the stop flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(200);
+
+/// A stalled reader (client not draining its socket) is cut off after
+/// this long rather than pinning a connection thread forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Maximum bytes of one NDJSON frame (one request line). Every other
+/// request dimension is strictly validated; this bounds the one that
+/// isn't — a client streaming bytes without a newline cannot grow
+/// server memory without limit.
+pub const MAX_FRAME_BYTES: usize = 4 * 1024 * 1024;
+
+/// One framing outcome from [`FrameReader::next_frame`].
+enum Frame {
+    /// A complete line (newline stripped, not yet trimmed).
+    Line(String),
+    /// A complete line that is not valid UTF-8 (frame boundary intact —
+    /// the connection can keep serving).
+    NotUtf8,
+    /// The line under construction exceeded [`MAX_FRAME_BYTES`].
+    TooLong,
+    /// A read timeout tick — no bytes are lost; poll the stop flag and
+    /// call again.
+    TimedOut,
+    /// Clean end of stream.
+    Eof,
+    /// Hard I/O error.
+    Err,
+}
+
+/// Byte-accurate NDJSON framing over a raw reader. Unlike
+/// `BufRead::read_line`, a read-timeout tick can never lose buffered
+/// bytes (read_line's UTF-8 guard may discard a partial line that ends
+/// mid multi-byte sequence when the read errors), and frame length is
+/// capped.
+struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    fn new(inner: R) -> Self {
+        FrameReader { inner, buf: Vec::new() }
+    }
+
+    fn next_frame(&mut self) -> Frame {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop(); // tolerate CRLF framing
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Frame::Line(s),
+                    Err(_) => Frame::NotUtf8,
+                };
+            }
+            if self.buf.len() > MAX_FRAME_BYTES {
+                return Frame::TooLong;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => return Frame::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Frame::TimedOut
+                }
+                Err(_) => return Frame::Err,
+            }
+        }
+    }
+}
+
+/// Server knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Connection-handler threads (concurrent connections served;
+    /// additional connections wait in the accept queue / OS backlog).
+    pub conn_threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { conn_threads: 4 }
+    }
+}
+
+/// Answer one NDJSON line: parse → submit → response. Shared by the
+/// TCP and stdio fronts (and directly testable).
+pub fn respond_line(line: &str, client: &Client) -> ApiResponse {
+    match ApiRequest::parse_line(line) {
+        Ok(req) => client.try_submit(req),
+        Err(resp) => resp,
+    }
+}
+
+/// A running NDJSON server. Dropping it (or calling
+/// [`Server::shutdown`]) stops accepting and drains gracefully.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    service: Option<PredictionService>,
+}
+
+/// Serve `listener`'s connections against `service`.
+pub fn serve(
+    listener: TcpListener,
+    service: PredictionService,
+    opts: &ServeOptions,
+) -> Result<Server> {
+    let addr = listener.local_addr().context("reading listener address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let threads = opts.conn_threads.max(1);
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(threads);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+    let mut workers = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let rx = conn_rx.clone();
+        let client = service.client();
+        let stop = stop.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("repro-serve-conn-{i}"))
+                .spawn(move || loop {
+                    // hold the lock only for the recv, not the session
+                    let next = rx.lock().expect("connection queue lock").recv();
+                    match next {
+                        Ok(stream) => handle_connection(stream, &client, &stop),
+                        Err(_) => break, // accept thread gone: shutdown
+                    }
+                })
+                .context("spawning connection thread")?,
+        );
+    }
+
+    let accept = {
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("repro-serve-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match stream {
+                        // blocking send = backpressure when all
+                        // connection threads are busy
+                        Ok(s) => {
+                            if conn_tx.send(s).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => continue,
+                    }
+                }
+                // conn_tx drops here; idle workers drain and exit
+            })
+            .context("spawning accept thread")?
+    };
+
+    Ok(Server {
+        addr,
+        stop,
+        accept: Some(accept),
+        workers,
+        service: Some(service),
+    })
+}
+
+impl Server {
+    /// The bound address (resolves `--port 0` to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, finish in-flight lines, drain the service queue.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    /// Block on the accept thread — the foreground mode of
+    /// `repro serve` (runs until the process is terminated).
+    pub fn wait(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        if self.accept.is_none() && self.workers.is_empty() && self.service.is_none() {
+            return; // already stopped (shutdown then drop)
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(svc) = self.service.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Write one response line; false on failure (drop the connection).
+fn write_response<W: Write>(writer: &mut W, resp: &ApiResponse) -> bool {
+    writeln!(writer, "{}", resp.to_json()).is_ok() && writer.flush().is_ok()
+}
+
+/// Per-connection session: NDJSON lines in request order. Reads run on
+/// a short timeout so shutdown is noticed between lines (the
+/// [`FrameReader`] keeps partial lines across ticks byte-exactly);
+/// writes run under [`WRITE_TIMEOUT`] so a client that stops reading
+/// cannot pin this thread — and with it [`Server::shutdown`] — forever.
+fn handle_connection(stream: TcpStream, client: &Client, stop: &AtomicBool) {
+    if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut frames = FrameReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match frames.next_frame() {
+            Frame::Line(line) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let resp = respond_line(trimmed, client);
+                if !write_response(&mut writer, &resp) {
+                    break;
+                }
+            }
+            Frame::NotUtf8 => {
+                let resp = ApiResponse::err(
+                    None,
+                    ApiError::bad_request("request line is not valid UTF-8"),
+                );
+                if !write_response(&mut writer, &resp) {
+                    break;
+                }
+            }
+            Frame::TooLong => {
+                // mid-frame: no way to resync — answer, then close
+                let resp = ApiResponse::err(None, frame_too_long());
+                let _ = write_response(&mut writer, &resp);
+                break;
+            }
+            Frame::TimedOut => continue, // poll the stop flag
+            Frame::Eof | Frame::Err => break,
+        }
+    }
+}
+
+fn frame_too_long() -> ApiError {
+    ApiError::bad_request(format!(
+        "request frame exceeds {MAX_FRAME_BYTES} bytes (one JSON document per line)"
+    ))
+}
+
+/// `repro serve --stdio`: NDJSON over stdin/stdout, exiting (and
+/// draining the service) at EOF. The process-per-session shape scripts
+/// and smoke tests use.
+pub fn serve_stdio(service: PredictionService) -> Result<()> {
+    let client = service.client();
+    let stdin = std::io::stdin();
+    let mut frames = FrameReader::new(stdin.lock());
+    let mut out = BufWriter::new(std::io::stdout().lock());
+    loop {
+        match frames.next_frame() {
+            Frame::Line(line) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let resp = respond_line(trimmed, &client);
+                writeln!(out, "{}", resp.to_json()).context("writing stdout")?;
+                out.flush().context("flushing stdout")?;
+            }
+            Frame::NotUtf8 => {
+                let resp = ApiResponse::err(
+                    None,
+                    ApiError::bad_request("request line is not valid UTF-8"),
+                );
+                writeln!(out, "{}", resp.to_json()).context("writing stdout")?;
+                out.flush().context("flushing stdout")?;
+            }
+            Frame::TooLong => {
+                let resp = ApiResponse::err(None, frame_too_long());
+                writeln!(out, "{}", resp.to_json()).context("writing stdout")?;
+                out.flush().context("flushing stdout")?;
+                anyhow::bail!("oversized request frame on stdin");
+            }
+            Frame::TimedOut => continue, // stdin has no timeout; defensive
+            Frame::Eof => break,
+            Frame::Err => anyhow::bail!("reading stdin"),
+        }
+    }
+    drop(client);
+    eprintln!("repro serve --stdio: {}", service.metrics().summary());
+    service.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ErrorCode;
+    use crate::coordinator::ServiceConfig;
+
+    /// Scripted reader: data chunks interleaved with timeout errors.
+    struct ScriptedReader {
+        steps: std::collections::VecDeque<ScriptStep>,
+    }
+
+    enum ScriptStep {
+        Data(Vec<u8>),
+        Timeout,
+    }
+
+    impl Read for ScriptedReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.steps.pop_front() {
+                None => Ok(0),
+                Some(ScriptStep::Timeout) => Err(std::io::Error::new(
+                    std::io::ErrorKind::WouldBlock,
+                    "tick",
+                )),
+                Some(ScriptStep::Data(d)) => {
+                    let n = d.len().min(buf.len());
+                    buf[..n].copy_from_slice(&d[..n]);
+                    if n < d.len() {
+                        self.steps.push_front(ScriptStep::Data(d[n..].to_vec()));
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    fn scripted(steps: Vec<ScriptStep>) -> FrameReader<ScriptedReader> {
+        FrameReader::new(ScriptedReader { steps: steps.into() })
+    }
+
+    /// The code-review finding the FrameReader exists for: a timeout
+    /// tick landing mid multi-byte UTF-8 character must not lose bytes.
+    #[test]
+    fn frame_reader_survives_timeout_mid_multibyte_char() {
+        let bytes = "{\"model\":\"héllo-7b\"}\n".as_bytes().to_vec();
+        let split = bytes.iter().position(|&b| b == 0xc3).unwrap() + 1; // inside 'é'
+        let mut fr = scripted(vec![
+            ScriptStep::Data(bytes[..split].to_vec()),
+            ScriptStep::Timeout,
+            ScriptStep::Data(bytes[split..].to_vec()),
+        ]);
+        assert!(matches!(fr.next_frame(), Frame::TimedOut));
+        match fr.next_frame() {
+            Frame::Line(l) => assert_eq!(l, "{\"model\":\"héllo-7b\"}"),
+            _ => panic!("expected the intact line after the timeout tick"),
+        }
+        assert!(matches!(fr.next_frame(), Frame::Eof));
+    }
+
+    #[test]
+    fn frame_reader_splits_lines_handles_crlf_and_flags_non_utf8() {
+        let mut fr = scripted(vec![ScriptStep::Data(
+            b"{\"a\":1}\r\n{\"b\":2}\n\xff\xfe\n".to_vec(),
+        )]);
+        match fr.next_frame() {
+            Frame::Line(l) => assert_eq!(l, "{\"a\":1}"),
+            _ => panic!("first line"),
+        }
+        match fr.next_frame() {
+            Frame::Line(l) => assert_eq!(l, "{\"b\":2}"),
+            _ => panic!("second line"),
+        }
+        assert!(matches!(fr.next_frame(), Frame::NotUtf8));
+        assert!(matches!(fr.next_frame(), Frame::Eof));
+    }
+
+    #[test]
+    fn frame_reader_caps_unterminated_lines() {
+        // fed as read-sized chunks so the scripted reader stays O(n)
+        let steps: Vec<ScriptStep> = vec![b'x'; MAX_FRAME_BYTES + 2]
+            .chunks(4096)
+            .map(|c| ScriptStep::Data(c.to_vec()))
+            .collect();
+        let mut fr = scripted(steps);
+        assert!(matches!(fr.next_frame(), Frame::TooLong));
+    }
+
+    #[test]
+    fn respond_line_answers_garbage_with_bad_request() {
+        let svc = PredictionService::start_analytical(ServiceConfig::default());
+        let client = svc.client();
+        let resp = respond_line("{not json", &client);
+        assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+        let resp = respond_line(r#"{"v":1,"method":"models"}"#, &client);
+        assert!(resp.result.is_ok());
+        drop(client);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn server_starts_and_shuts_down_cleanly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let svc = PredictionService::start_analytical(ServiceConfig::default());
+        let server = serve(listener, svc, &ServeOptions::default()).unwrap();
+        let addr = server.addr();
+        assert_ne!(addr.port(), 0);
+        server.shutdown();
+    }
+}

@@ -1,12 +1,67 @@
-//! Service metrics: request/batch counters, batch-size histogram and
-//! latency accounting, all lock-free (atomics).
+//! Service metrics: request/batch counters, batch-size histogram,
+//! latency accounting, and per-API-method counters with latency
+//! percentiles — all lock-free (atomics). The per-method view is what
+//! the wire API's `metrics` method exposes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::api::NUM_METHODS;
+
 /// Histogram bucket count: batch sizes 1..=MAX_TRACKED (last bucket is
 /// "MAX_TRACKED or more").
 pub const MAX_TRACKED: usize = 16;
+
+/// Latency histogram buckets: bucket `i` counts latencies in
+/// `[2^i, 2^(i+1))` microseconds (log2 scale, ~26 h max).
+const LATENCY_BUCKETS: usize = 32;
+
+/// Per-method request accounting: counts plus a log2 latency histogram
+/// from which percentiles are read.
+#[derive(Debug, Default)]
+pub struct MethodStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    latency_hist: [AtomicU64; LATENCY_BUCKETS],
+    max_us: AtomicU64,
+}
+
+impl MethodStats {
+    fn record(&self, latency: Duration, ok: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let us = (latency.as_micros() as u64).max(1);
+        let bucket = (63 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.latency_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile (bucket upper edge, capped at the true
+    /// max) for `q` in 0..=1. Zero when nothing was recorded.
+    fn percentile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_hist
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper = 1u64 << (i + 1).min(63);
+                return upper.min(self.max_us.load(Ordering::Relaxed));
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+}
 
 /// Lock-free service metrics.
 #[derive(Debug, Default)]
@@ -19,6 +74,7 @@ pub struct Metrics {
     latency_us_total: AtomicU64,
     plans: AtomicU64,
     plan_latency_us_total: AtomicU64,
+    methods: [MethodStats; NUM_METHODS],
 }
 
 impl Metrics {
@@ -41,6 +97,38 @@ impl Metrics {
 
     pub fn on_error(&self, n: usize) {
         self.errors.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// One completed non-batched, non-plan request (sweep, simulate,
+    /// baselines, …) — counts as a response.
+    pub fn on_serial(&self) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed API request against its method's counters.
+    /// `idx` is [`crate::api::Method::index`].
+    pub fn on_method(&self, idx: usize, latency: Duration, ok: bool) {
+        self.methods[idx].record(latency, ok);
+    }
+
+    pub fn method_requests(&self, idx: usize) -> u64 {
+        self.methods[idx].requests.load(Ordering::Relaxed)
+    }
+
+    pub fn method_errors(&self, idx: usize) -> u64 {
+        self.methods[idx].errors.load(Ordering::Relaxed)
+    }
+
+    /// `(p50, p95, max)` latency in microseconds for one method.
+    /// Percentiles are log2-bucket approximations (upper bucket edge,
+    /// capped at the observed max).
+    pub fn method_latency_us(&self, idx: usize) -> (u64, u64, u64) {
+        let m = &self.methods[idx];
+        (
+            m.percentile_us(0.50),
+            m.percentile_us(0.95),
+            m.max_us.load(Ordering::Relaxed),
+        )
     }
 
     /// One completed capacity-planning request (counts as a response;
@@ -153,6 +241,34 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 0.0);
         assert_eq!(m.mean_batch_latency(), Duration::ZERO);
         assert_eq!(m.mean_plan_latency(), Duration::ZERO);
+    }
+
+    #[test]
+    fn per_method_counters_and_percentiles() {
+        let m = Metrics::new();
+        let idx = 0; // predict
+        for us in [100u64, 200, 300, 400, 50_000] {
+            m.on_method(idx, Duration::from_micros(us), true);
+        }
+        m.on_method(idx, Duration::from_micros(10), false);
+        assert_eq!(m.method_requests(idx), 6);
+        assert_eq!(m.method_errors(idx), 1);
+        let (p50, p95, max) = m.method_latency_us(idx);
+        assert_eq!(max, 50_000);
+        // p50 falls in the 128..256 or 256..512 bucket; far below p95
+        assert!(p50 >= 128 && p50 <= 512, "p50={p50}");
+        assert!(p95 > p50 && p95 <= 65_536, "p95={p95}");
+        // untouched methods stay zero
+        assert_eq!(m.method_requests(3), 0);
+        assert_eq!(m.method_latency_us(3), (0, 0, 0));
+    }
+
+    #[test]
+    fn method_percentiles_cap_at_observed_max() {
+        let m = Metrics::new();
+        m.on_method(1, Duration::from_micros(5), true);
+        let (p50, p95, max) = m.method_latency_us(1);
+        assert_eq!((p50, p95, max), (5, 5, 5));
     }
 
     #[test]

@@ -3,17 +3,23 @@
 //! A deployment of this framework sits in front of a training scheduler:
 //! job submissions ask "will this configuration fit on this GPU?" before
 //! any cluster time is spent (the paper's OoM-prevention use case).
-//! The service accepts concurrent prediction requests, batches them into
-//! the AOT artifact's `[B, L, F]` capacity, executes one PJRT call per
-//! batch, and answers with [`crate::predictor::Prediction`]s. It also
-//! serves *what-if* capacity-planning requests
-//! ([`PredictionService::plan`]): a [`crate::planner::PlanRequest`]
-//! travels the same queue and comes back as the ranked OOM frontier.
+//! Since the wire-API redesign the service is **envelope-native**: its
+//! job queue carries [`crate::api::ApiRequest`]s and answers
+//! [`crate::api::ApiResponse`]s, so the in-process typed helpers
+//! ([`PredictionService::predict`] / [`PredictionService::plan`]), the
+//! CLI and the NDJSON server (`repro serve`,
+//! [`crate::api::serve`]) are one code path. `predict` requests are
+//! batched into the AOT artifact's `[B, L, F]` capacity and executed as
+//! one PJRT (or analytical) call per batch; every other method (plan,
+//! sweep, simulate, baselines, modality, models, metrics) runs serially
+//! on the worker through the shared
+//! [`crate::api::dispatch::Dispatcher`].
 //!
 //! Two interchangeable backends: the PJRT-executed AOT artifact
 //! ([`PredictionService::start`], needs `make artifacts`) and the
 //! pure-Rust analytical mirror ([`PredictionService::start_analytical`],
-//! always available).
+//! always available). The bounded queue is the backpressure surface:
+//! [`PredictionService::try_submit`] answers `over_capacity` when full.
 //!
 //! Threads + channels (the environment has no tokio); the hot path is
 //! encode → pad → one `execute` per batch — Python is never involved.
@@ -23,4 +29,4 @@ pub mod metrics;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use server::{PredictionService, ServiceConfig};
+pub use server::{Client, PredictionService, ServiceConfig};

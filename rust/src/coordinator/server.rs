@@ -1,8 +1,15 @@
-//! The prediction server: a worker thread owning the predictor backend,
-//! fed by an MPSC queue, batching prediction requests per
-//! [`super::batcher::BatchPolicy`], serving capacity-planning requests
-//! ([`crate::planner`]) from the same queue, and answering through
-//! per-request reply channels.
+//! The prediction server: a worker thread owning an
+//! [`Estimator`](crate::api::dispatch::Estimator) backend, fed by a
+//! bounded MPSC queue of **wire-native jobs** — every queued job is an
+//! [`ApiRequest`] and every reply an [`ApiResponse`], so the in-process
+//! service, the CLI and the NDJSON server are provably one code path.
+//!
+//! `predict` requests are drained into batches per
+//! [`super::batcher::BatchPolicy`] and executed as one encoded call
+//! ([`Estimator::estimate_encoded`](crate::api::dispatch::Estimator::estimate_encoded));
+//! every other method (plan, sweep, simulate, baselines, modality,
+//! models, metrics) runs serially on the worker through the shared
+//! [`Dispatcher`](crate::api::dispatch::Dispatcher).
 //!
 //! Two backends:
 //!
@@ -13,67 +20,59 @@
 //!   semantics of the tensorized path (the two predictors are
 //!   property-tested to agree).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::api::dispatch::{
+    self, AnalyticalEstimator, Dispatcher, Estimator, TensorizedEstimator,
+};
+use crate::api::{
+    ApiError, ApiRequest, ApiResponse, ErrorCode, Method, PlanParams, PredictParams,
+};
 use crate::config::TrainConfig;
 use crate::parser::features;
-use crate::planner::{self, Plan, PlanRequest};
-use crate::predictor::{analytical, tensorized::TensorizedPredictor, Prediction};
+use crate::planner::{Plan, PlanRequest};
+use crate::predictor::{tensorized::TensorizedPredictor, Prediction};
+use crate::sweep::Sweep;
 
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
 
 /// Service configuration.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
     pub policy: BatchPolicy,
+    /// Bound of the request queue; a full queue is the service's
+    /// backpressure signal ([`PredictionService::try_submit`] answers
+    /// `over_capacity` instead of blocking).
+    pub queue_depth: usize,
 }
 
-/// The predictor the worker thread executes batches on.
-enum Backend {
-    Tensorized(TensorizedPredictor),
-    Analytical,
-}
-
-impl Backend {
-    fn predict_encoded(
-        &self,
-        requests: &[&features::EncodedRequest],
-    ) -> Result<Vec<Prediction>> {
-        match self {
-            Backend::Tensorized(tp) => tp.predict_encoded(requests),
-            Backend::Analytical => Ok(requests
-                .iter()
-                .map(|&r| analytical::predict_encoded(r))
-                .collect()),
-        }
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), queue_depth: 1024 }
     }
 }
 
-enum Job {
-    Predict {
-        cfg: TrainConfig,
-        reply: SyncSender<Result<Prediction>>,
-    },
-    Plan {
-        req: PlanRequest,
-        reply: SyncSender<Result<Plan>>,
-    },
+/// One queued unit of work: a wire request plus its reply channel.
+struct Job {
+    req: ApiRequest,
+    reply: SyncSender<ApiResponse>,
 }
 
 /// Handle to a running prediction service. Cloneable clients submit
-/// blocking predictions; dropping the last handle shuts the worker down.
+/// blocking requests; dropping the last handle shuts the worker down.
 pub struct PredictionService {
     /// `None` once shutdown has begun — the sender must actually be
     /// dropped to close the queue (not swapped for a dummy channel,
     /// which would strand any job a racing client had already queued).
     tx: Option<SyncSender<Job>>,
     metrics: Arc<Metrics>,
+    queue_depth: usize,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -85,22 +84,24 @@ impl PredictionService {
     pub fn start(artifacts_dir: &str, cfg: ServiceConfig) -> Result<Self> {
         let dir = artifacts_dir.to_string();
         Self::start_with(cfg, move || {
-            TensorizedPredictor::load(&dir).map(Backend::Tensorized)
+            TensorizedPredictor::load(&dir)
+                .map(|tp| Box::new(TensorizedEstimator(tp)) as Box<dyn Estimator>)
         })
     }
 
     /// Start the worker thread on the analytical backend — no artifacts
     /// required, so startup cannot fail.
     pub fn start_analytical(cfg: ServiceConfig) -> Self {
-        Self::start_with(cfg, || Ok(Backend::Analytical))
+        Self::start_with(cfg, || Ok(Box::new(AnalyticalEstimator) as Box<dyn Estimator>))
             .expect("analytical backend startup is infallible")
     }
 
     fn start_with(
         cfg: ServiceConfig,
-        make_backend: impl FnOnce() -> Result<Backend> + Send + 'static,
+        make_backend: impl FnOnce() -> Result<Box<dyn Estimator>> + Send + 'static,
     ) -> Result<Self> {
-        let (tx, rx) = sync_channel::<Job>(1024);
+        let queue_depth = cfg.queue_depth.max(1);
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
@@ -124,6 +125,7 @@ impl PredictionService {
             Ok(Ok(())) => Ok(Self {
                 tx: Some(tx),
                 metrics,
+                queue_depth,
                 worker: Some(worker),
             }),
             Ok(Err(e)) => {
@@ -138,18 +140,30 @@ impl PredictionService {
         &self.metrics
     }
 
-    /// Blocking prediction of one configuration.
+    /// Submit one wire request, blocking until its response. This is
+    /// *the* entry point — the typed helpers and the NDJSON server all
+    /// come through here (or [`Self::try_submit`]).
+    pub fn submit(&self, req: ApiRequest) -> ApiResponse {
+        match self.tx.as_ref() {
+            Some(tx) => submit_on(tx, &self.metrics, req),
+            None => shut_down_response(req),
+        }
+    }
+
+    /// Non-blocking submit: a full queue answers `over_capacity`
+    /// immediately instead of waiting — the backpressure surface the
+    /// NDJSON server exposes to remote clients.
+    pub fn try_submit(&self, req: ApiRequest) -> ApiResponse {
+        match self.tx.as_ref() {
+            Some(tx) => try_submit_on(tx, &self.metrics, self.queue_depth, req),
+            None => shut_down_response(req),
+        }
+    }
+
+    /// Blocking prediction of one configuration (typed convenience over
+    /// [`Self::submit`]).
     pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
-        let Some(tx) = self.tx.as_ref() else {
-            return Err(anyhow!("prediction service is shut down"));
-        };
-        self.metrics.on_request();
-        let (reply_tx, reply_rx) = sync_channel(1);
-        tx.send(Job::Predict { cfg, reply: reply_tx })
-            .map_err(|_| anyhow!("prediction service is shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+        decode_predict(self.submit(predict_request(cfg)))
     }
 
     /// Blocking capacity-planning request: answers "which configurations
@@ -157,16 +171,8 @@ impl PredictionService {
     /// admitting a job). Runs on the worker thread; the planner fans its
     /// simulator probes across the sweep engine's own thread pool.
     pub fn plan(&self, req: PlanRequest) -> Result<Plan> {
-        let Some(tx) = self.tx.as_ref() else {
-            return Err(anyhow!("prediction service is shut down"));
-        };
-        self.metrics.on_request();
-        let (reply_tx, reply_rx) = sync_channel(1);
-        tx.send(Job::Plan { req, reply: reply_tx })
-            .map_err(|_| anyhow!("prediction service is shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+        let base = req.base.clone();
+        decode_plan(self.submit(plan_request(req)), &base)
     }
 
     /// A cheap cloneable submitter usable from many threads.
@@ -177,6 +183,7 @@ impl PredictionService {
                 .clone()
                 .expect("client() called on a shut-down service"),
             metrics: self.metrics.clone(),
+            queue_depth: self.queue_depth,
         }
     }
 
@@ -212,34 +219,113 @@ impl Drop for PredictionService {
 pub struct Client {
     tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
+    queue_depth: usize,
 }
 
 impl Client {
+    /// See [`PredictionService::submit`].
+    pub fn submit(&self, req: ApiRequest) -> ApiResponse {
+        submit_on(&self.tx, &self.metrics, req)
+    }
+
+    /// See [`PredictionService::try_submit`].
+    pub fn try_submit(&self, req: ApiRequest) -> ApiResponse {
+        try_submit_on(&self.tx, &self.metrics, self.queue_depth, req)
+    }
+
     pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
-        self.metrics.on_request();
-        let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .send(Job::Predict { cfg, reply: reply_tx })
-            .map_err(|_| anyhow!("prediction service is shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+        decode_predict(self.submit(predict_request(cfg)))
     }
 
     pub fn plan(&self, req: PlanRequest) -> Result<Plan> {
-        self.metrics.on_request();
-        let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .send(Job::Plan { req, reply: reply_tx })
-            .map_err(|_| anyhow!("prediction service is shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("prediction worker dropped the request"))?
+        let base = req.base.clone();
+        decode_plan(self.submit(plan_request(req)), &base)
     }
 }
 
+fn predict_request(cfg: TrainConfig) -> ApiRequest {
+    ApiRequest {
+        id: None,
+        method: Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+    }
+}
+
+fn plan_request(req: PlanRequest) -> ApiRequest {
+    ApiRequest { id: None, method: Method::Plan(PlanParams { req }) }
+}
+
+fn decode_predict(resp: ApiResponse) -> Result<Prediction> {
+    let payload = resp.into_result()?;
+    let pred = payload
+        .get("prediction")
+        .ok_or_else(|| anyhow!("malformed predict payload: missing \"prediction\""))?;
+    Ok(crate::api::codec::prediction_from_json(pred)?)
+}
+
+fn decode_plan(resp: ApiResponse, base: &TrainConfig) -> Result<Plan> {
+    let payload = resp.into_result()?;
+    Ok(crate::api::codec::plan_from_json(&payload, base)?)
+}
+
+fn shut_down_response(req: ApiRequest) -> ApiResponse {
+    ApiResponse::err(
+        req.id,
+        ApiError::new(ErrorCode::BackendUnavailable, "prediction service is shut down"),
+    )
+}
+
+fn submit_on(tx: &SyncSender<Job>, metrics: &Metrics, req: ApiRequest) -> ApiResponse {
+    metrics.on_request();
+    let id = req.id.clone();
+    let (reply_tx, reply_rx) = sync_channel(1);
+    if let Err(e) = tx.send(Job { req, reply: reply_tx }) {
+        return shut_down_response(e.0.req);
+    }
+    match reply_rx.recv() {
+        Ok(resp) => resp,
+        Err(_) => ApiResponse::err(
+            id,
+            ApiError::internal("prediction worker dropped the request"),
+        ),
+    }
+}
+
+fn try_submit_on(
+    tx: &SyncSender<Job>,
+    metrics: &Metrics,
+    queue_depth: usize,
+    req: ApiRequest,
+) -> ApiResponse {
+    metrics.on_request();
+    let id = req.id.clone();
+    let (reply_tx, reply_rx) = sync_channel(1);
+    match tx.try_send(Job { req, reply: reply_tx }) {
+        Ok(()) => {}
+        Err(TrySendError::Full(job)) => {
+            metrics.on_error(1);
+            return ApiResponse::err(
+                job.req.id,
+                ApiError::new(
+                    ErrorCode::OverCapacity,
+                    format!("service queue is full ({queue_depth} requests in flight); retry later"),
+                ),
+            );
+        }
+        Err(TrySendError::Disconnected(job)) => return shut_down_response(job.req),
+    }
+    match reply_rx.recv() {
+        Ok(resp) => resp,
+        Err(_) => ApiResponse::err(
+            id,
+            ApiError::internal("prediction worker dropped the request"),
+        ),
+    }
+}
+
+const PREDICT_IDX: usize = 0; // Method::Predict(...).index()
+
 fn worker_loop(
-    backend: Backend,
+    mut backend: Box<dyn Estimator>,
     rx: Receiver<Job>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
@@ -247,59 +333,81 @@ fn worker_loop(
     // Parse+encode is ~45% of a request's CPU cost (see EXPERIMENTS.md
     // §Perf); schedulers re-submit near-identical configs, so memoize.
     let mut cache = features::EncodeCache::new(256);
+    // Serial methods share the payload builders with the CLI through a
+    // Dispatcher wired to this service's metrics. Its own predict
+    // backend is never exercised here — predictions take the batched
+    // path below.
+    let mut serial = Dispatcher::with_metrics(
+        Box::new(AnalyticalEstimator),
+        Sweep::default(),
+        metrics.clone(),
+    );
     while let Some(batch) = next_batch(&rx, &policy) {
         let t0 = Instant::now();
 
         // Split the drained batch: predictions execute as one padded
-        // PJRT/analytical call, plans run one at a time afterwards (a
-        // plan is a whole search, not a batchable row).
-        let mut encoded = Vec::new();
-        let mut replies = Vec::new();
-        let mut plans = Vec::new();
-        for job in batch {
-            match job {
-                Job::Predict { cfg, reply } => match cache.get_or_encode(&cfg) {
+        // PJRT/analytical call, every other method runs serially
+        // afterwards (a plan or sweep is a whole search, not a
+        // batchable row).
+        let mut predicts = Vec::new();
+        let mut serial_jobs = Vec::new();
+        for Job { req, reply } in batch {
+            match req.method {
+                Method::Predict(p) => predicts.push((p, req.id, reply)),
+                _ => serial_jobs.push((req, reply)),
+            }
+        }
+
+        if !predicts.is_empty() {
+            let mut encoded = Vec::new();
+            let mut meta = Vec::new();
+            for (params, id, reply) in predicts {
+                match cache.get_or_encode(&params.cfg) {
                     Ok(enc) => {
                         encoded.push(enc);
-                        replies.push(reply);
+                        meta.push((params, id, reply));
                     }
                     Err(e) => {
                         metrics.on_error(1);
-                        let _ = reply.send(Err(e));
-                    }
-                },
-                Job::Plan { req, reply } => plans.push((req, reply)),
-            }
-        }
-
-        if !encoded.is_empty() {
-            let refs: Vec<&features::EncodedRequest> =
-                encoded.iter().map(|e| e.as_ref()).collect();
-            match backend.predict_encoded(&refs) {
-                Ok(preds) => {
-                    metrics.on_batch(replies.len(), t0.elapsed());
-                    for (reply, p) in replies.into_iter().zip(preds) {
-                        let _ = reply.send(Ok(p));
-                    }
-                }
-                Err(e) => {
-                    metrics.on_error(replies.len());
-                    let msg = format!("batch execution failed: {e:#}");
-                    for reply in replies {
-                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                        metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
+                        let _ = reply.send(ApiResponse::err(id, dispatch::classify(e)));
                     }
                 }
             }
+            if !meta.is_empty() {
+                let refs: Vec<&features::EncodedRequest> =
+                    encoded.iter().map(|e| e.as_ref()).collect();
+                match backend.estimate_encoded(&refs) {
+                    Ok(preds) => {
+                        metrics.on_batch(meta.len(), t0.elapsed());
+                        for ((params, id, reply), p) in meta.into_iter().zip(preds) {
+                            let resp = match dispatch::predict_payload(&p, &params) {
+                                Ok(payload) => ApiResponse::ok(id, payload),
+                                Err(e) => {
+                                    metrics.on_error(1);
+                                    ApiResponse::err(id, e)
+                                }
+                            };
+                            metrics.on_method(PREDICT_IDX, t0.elapsed(), resp.is_ok());
+                            let _ = reply.send(resp);
+                        }
+                    }
+                    Err(e) => {
+                        metrics.on_error(meta.len());
+                        let msg = format!("batch execution failed: {e:#}");
+                        for (_, id, reply) in meta {
+                            metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
+                            let _ = reply
+                                .send(ApiResponse::err(id, ApiError::internal(msg.clone())));
+                        }
+                    }
+                }
+            }
         }
 
-        for (req, reply) in plans {
-            let t_plan = Instant::now();
-            let r = planner::plan(&req);
-            match &r {
-                Ok(_) => metrics.on_plan(t_plan.elapsed()),
-                Err(_) => metrics.on_error(1),
-            }
-            let _ = reply.send(r);
+        for (req, reply) in serial_jobs {
+            let resp = serial.handle(&req);
+            let _ = reply.send(resp);
         }
     }
 }

@@ -16,6 +16,11 @@
 //!   frontier under a memory budget ([`planner`]), and the evaluation
 //!   harness regenerating every figure of the paper ([`eval`],
 //!   [`report`]).
+//! Every capability is also reachable over a versioned wire protocol
+//! ([`api`]): `repro serve` speaks NDJSON v1 over TCP (or stdio), and
+//! the CLI, the batched service and the wire server all execute the
+//! same [`api::ApiRequest`] envelope.
+//!
 //! * **L2/L1 (python/, build-time only)** — the batched factorization +
 //!   liveness-scan compute graph, with the per-layer factor math and the
 //!   timeline scan written as Pallas kernels, AOT-lowered to HLO text in
@@ -66,6 +71,7 @@
 //! predict`, `repro plan`, …) — see the repository `README.md` for the
 //! full CLI reference.
 
+pub mod api;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

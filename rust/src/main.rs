@@ -20,15 +20,26 @@
 //! * `baselines` — compare against Fujii/LLMem/profiling baselines.
 //! * `infer`     — inference/KV-cache memory prediction (§5 extension).
 //! * `zoo`       — list available model presets.
+//! * `serve`     — the wire API (NDJSON v1) over TCP or stdio; the
+//!   `predict`/`plan`/`sweep` subcommands construct the same
+//!   `ApiRequest` envelopes internally, so CLI and wire are one code
+//!   path.
 
 use anyhow::{bail, Context, Result};
 
+use mmpredict::api::dispatch::{AnalyticalEstimator, Dispatcher, TensorizedEstimator};
+use mmpredict::api::{
+    self, ApiRequest, Method, PlanParams, PredictParams, SweepParams,
+};
 use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
+use mmpredict::coordinator::batcher::BatchPolicy;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
 use mmpredict::model::layer::AttnImpl;
 use mmpredict::planner::{Axes, PlanRequest};
+use mmpredict::sweep::Sweep;
 use mmpredict::util::cli::Args;
 use mmpredict::util::units::human_mib;
-use mmpredict::{baselines, eval, parser, planner, predictor, report, simulator, sweep, zoo};
+use mmpredict::{baselines, eval, parser, predictor, report, simulator, sweep, zoo};
 
 /// The single source of truth for the CLI surface: name, one-line
 /// description, handler. Dispatch, help and the README reference all
@@ -43,6 +54,7 @@ const SUBCOMMANDS: &[(&str, &str, fn(&Args) -> Result<()>)] = &[
     ("baselines", "compare against Fujii/LLMem/profiling baselines", cmd_baselines),
     ("infer", "inference/KV-cache memory prediction", cmd_infer),
     ("zoo", "list available model presets", cmd_zoo),
+    ("serve", "serve the wire API (NDJSON v1) over TCP or --stdio", cmd_serve),
 ];
 
 fn main() {
@@ -57,14 +69,20 @@ fn run(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some(name) => match SUBCOMMANDS.iter().find(|(n, _, _)| *n == name) {
             Some((_, _, handler)) => handler(args),
-            None => bail!(
-                "unknown subcommand {name:?}; available: {}",
-                SUBCOMMANDS
-                    .iter()
-                    .map(|(n, _, _)| *n)
-                    .collect::<Vec<_>>()
-                    .join("|")
-            ),
+            None => {
+                let hint = mmpredict::util::text::did_you_mean(
+                    name,
+                    SUBCOMMANDS.iter().map(|(n, _, _)| *n),
+                );
+                bail!(
+                    "unknown subcommand {name:?}{hint}; available: {}",
+                    SUBCOMMANDS
+                        .iter()
+                        .map(|(n, _, _)| *n)
+                        .collect::<Vec<_>>()
+                        .join("|")
+                )
+            }
         },
         None => {
             print_help();
@@ -119,7 +137,14 @@ fn print_help() {
          \x20 --zero-list 0,2,3         ZeRO grid axis (default: --zero)\n\
          \x20 --threads N               worker threads (default: cores)\n\
          \x20 --capacity-gib <G>        add a fits/OoM verdict per point\n\
-         \x20 --csv <file>              write the grid as CSV"
+         \x20 --csv <file>              write the grid as CSV\n\
+         serve options:\n\
+         \x20 --port N                  TCP port (default 7411; 0 = ephemeral)\n\
+         \x20 --host H                  bind address (default 127.0.0.1)\n\
+         \x20 --stdio                   NDJSON over stdin/stdout instead of TCP\n\
+         \x20 --conn-threads N          concurrent connections (default 4)\n\
+         \x20 --max-batch N --batch-timeout-ms M --queue-depth Q\n\
+         \x20 --tensorized --artifacts <dir>   PJRT backend"
     );
 }
 
@@ -212,13 +237,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     let req = PlanRequest { base, budget_mib, axes };
+    let base_for_decode = req.base.clone();
     let threads = args
         .get_parse::<usize>("threads")?
         .unwrap_or_else(sweep::default_threads);
-    let engine = sweep::Sweep::new(threads);
+
+    // The CLI is a wire client of itself: build the v1 envelope and run
+    // it through the same dispatcher `repro serve` executes.
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(threads));
+    let api_req = ApiRequest { id: None, method: Method::Plan(PlanParams { req }) };
     let t0 = std::time::Instant::now();
-    let plan = planner::plan_with(&req, &engine)?;
+    let payload = d.handle(&api_req).into_result()?;
     let dt = t0.elapsed();
+    let plan = api::codec::plan_from_json(&payload, &base_for_decode)?;
 
     if let Some(path) = args.get("csv") {
         let full = report::frontier_table(&plan, usize::MAX, true);
@@ -228,7 +259,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         }
     }
     if args.flag("json") {
-        println!("{}", report::plan_json(&plan).to_string());
+        println!("{payload}");
         return Ok(());
     }
 
@@ -236,7 +267,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let table = report::frontier_table(&plan, top, args.flag("all"));
     println!(
         "== capacity plan: {} under {} ==",
-        req.base.model,
+        base_for_decode.model,
         human_mib(budget_mib)
     );
     if plan.candidates.is_empty() {
@@ -258,7 +289,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         s.grid_points,
         s.predictor_probes,
         dt,
-        engine.threads()
+        d.threads()
     );
     Ok(())
 }
@@ -275,57 +306,38 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(|v| if v.is_empty() { vec![base.zero] } else { v })?;
     let capacity_mib = args.get_parse::<f64>("capacity-gib")?.map(|g| g * 1024.0);
 
-    let mut cfgs = Vec::new();
-    for &seq_len in &seqs {
-        for &mbs in &mbss {
-            for &zero in &zeros {
-                for &dp in &dps {
-                    cfgs.push(TrainConfig { seq_len, mbs, zero, dp, ..base.clone() });
-                }
-            }
-        }
-    }
-
     let threads = args
         .get_parse::<usize>("threads")?
         .unwrap_or_else(sweep::default_threads);
-    let engine = sweep::Sweep::new(threads);
+
+    // Same code path as the wire: envelope in, payload out, rendered by
+    // the shared api::render functions.
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(threads));
+    let api_req = ApiRequest {
+        id: None,
+        method: Method::Sweep(SweepParams {
+            base: base.clone(),
+            dp: dps,
+            mbs: mbss,
+            seq_len: seqs,
+            zero: zeros,
+            capacity_mib,
+        }),
+    };
     let t0 = std::time::Instant::now();
-    let rows = engine.run(&cfgs, |ctx, pm, cfg| {
-        let predicted = predictor::predict(cfg)?.peak_mib as f64;
-        let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
-        Ok((predicted, measured))
-    })?;
+    let payload = d.handle(&api_req).into_result()?;
     let dt = t0.elapsed();
 
-    let mut headers = vec!["seq", "mbs", "zero", "dp", "predicted GiB", "measured GiB", "APE %"];
-    if capacity_mib.is_some() {
-        headers.push("verdict");
-    }
-    let mut t = report::Table::new(headers);
-    for (cfg, (p, m)) in cfgs.iter().zip(&rows) {
-        let mut row = vec![
-            cfg.seq_len.to_string(),
-            cfg.mbs.to_string(),
-            cfg.zero.as_int().to_string(),
-            cfg.dp.to_string(),
-            format!("{:.2}", p / 1024.0),
-            format!("{:.2}", m / 1024.0),
-            format!("{:.1}", report::ape(*p, *m) * 100.0),
-        ];
-        if let Some(cap) = capacity_mib {
-            row.push(if *p <= cap { "ADMIT" } else { "REJECT" }.to_string());
-        }
-        t.row(row);
-    }
-    println!("== sweep: {} ({} points) ==", base.model, cfgs.len());
+    let t = api::render::sweep_table(&payload, capacity_mib.is_some())?;
+    let n = api::render::sweep_points(&payload);
+    println!("== sweep: {} ({} points) ==", base.model, n);
     println!("{}", t.render());
     println!(
         "{} points in {:.3?} on {} worker threads ({:.0} points/s)",
-        cfgs.len(),
+        n,
         dt,
-        engine.threads().min(cfgs.len()),
-        cfgs.len() as f64 / dt.as_secs_f64()
+        d.threads().min(n),
+        n as f64 / dt.as_secs_f64()
     );
     if let Some(path) = args.get("csv") {
         std::fs::write(path, t.to_csv()).with_context(|| format!("writing {path}"))?;
@@ -397,37 +409,28 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let pm = parser::parse(&cfg)?;
-    let p = if args.flag("tensorized") {
+    let capacity_gib = args.get_parse::<f64>("capacity-gib")?;
+    // The CLI is a wire client of itself: one v1 envelope through the
+    // same dispatcher `repro serve` executes, rendered by api::render
+    // (byte-identical to the pre-envelope output — pinned in tests/api.rs).
+    let mut d = if args.flag("tensorized") {
         let dir = args.get_or("artifacts", "artifacts");
         let tp = predictor::tensorized::TensorizedPredictor::load(dir)
             .context("loading AOT artifacts (run `make artifacts`)")?;
-        tp.predict(&cfg)?
+        Dispatcher::new(Box::new(TensorizedEstimator(tp)), Sweep::new(1))
     } else {
-        predictor::predict(&cfg)?
+        Dispatcher::analytical()
     };
-    println!(
-        "model: {} ({} layers, {:.2}B params, {:.2}B trainable)",
-        pm.model_name,
-        pm.num_layers(),
-        pm.total_param_elems as f64 / 1e9,
-        pm.trainable_param_elems as f64 / 1e9,
-    );
-    println!("predicted peak: {}", human_mib(p.peak_mib as f64));
-    println!("  M_param     {}", human_mib(p.param_mib as f64));
-    println!("  M_grad      {}", human_mib(p.grad_mib as f64));
-    println!("  M_opt       {}", human_mib(p.opt_mib as f64));
-    println!("  M_act       {}", human_mib(p.act_mib as f64));
-    println!("  transient   {}", human_mib(p.transient_mib as f64));
-    println!("per-modality split (Fig. 1 decomposition):");
-    println!("{}", report::modality_table(&pm).render());
-    if let Some(cap) = args.get_parse::<f64>("capacity-gib")? {
-        let fits = p.fits((cap * 1024.0) as f32);
-        println!(
-            "fits {cap:.0} GiB GPU: {}",
-            if fits { "YES" } else { "NO — would OoM" }
-        );
-    }
+    let req = ApiRequest {
+        id: None,
+        method: Method::Predict(PredictParams {
+            cfg,
+            capacity_mib: capacity_gib.map(|g| g * 1024.0),
+            detail: true,
+        }),
+    };
+    let payload = d.handle(&req).into_result()?;
+    print!("{}", api::render::predict_text(&payload, capacity_gib)?);
     Ok(())
 }
 
@@ -593,6 +596,48 @@ fn cmd_zoo(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let policy = BatchPolicy {
+        max_batch: args.get_parse::<usize>("max-batch")?.unwrap_or(8),
+        batch_timeout: std::time::Duration::from_millis(
+            args.get_parse::<u64>("batch-timeout-ms")?.unwrap_or(2),
+        ),
+    };
+    let svc_cfg = ServiceConfig {
+        policy,
+        queue_depth: args.get_parse::<usize>("queue-depth")?.unwrap_or(1024),
+    };
+    let service = if args.flag("tensorized") {
+        let dir = args.get_or("artifacts", "artifacts");
+        PredictionService::start(dir, svc_cfg)
+            .context("loading AOT artifacts (run `make artifacts`)")?
+    } else {
+        PredictionService::start_analytical(svc_cfg)
+    };
+    if args.flag("stdio") {
+        return api::serve::serve_stdio(service);
+    }
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.get_parse::<u16>("port")?.unwrap_or(7411);
+    let listener = std::net::TcpListener::bind((host, port))
+        .with_context(|| format!("binding {host}:{port}"))?;
+    let opts = api::serve::ServeOptions {
+        conn_threads: args.get_parse::<usize>("conn-threads")?.unwrap_or(4),
+    };
+    let server = api::serve::serve(listener, service, &opts)?;
+    eprintln!(
+        "repro serve: wire API v{} (NDJSON) on {} — {} connection threads, \
+         max batch {}, queue depth {}",
+        api::VERSION,
+        server.addr(),
+        opts.conn_threads,
+        svc_cfg.policy.max_batch,
+        svc_cfg.queue_depth,
+    );
+    server.wait();
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -651,5 +696,21 @@ mod tests {
         let err = run(&args).unwrap_err().to_string();
         assert!(err.contains("frobnicate"));
         assert!(err.contains("plan"), "error should list valid subcommands: {err}");
+        assert!(!err.contains("did you mean"), "no close candidate: {err}");
+    }
+
+    /// `repro pedict` should suggest `predict` (zoo's levenshtein
+    /// did-you-mean, reused for subcommand dispatch).
+    #[test]
+    fn misspelled_subcommand_gets_a_suggestion() {
+        let args = Args::parse(["pedict".to_string()]);
+        let err = run(&args).unwrap_err().to_string();
+        assert!(
+            err.contains("did you mean \"predict\"?"),
+            "expected a did-you-mean hint: {err}"
+        );
+        let args = Args::parse(["sreve".to_string()]);
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("did you mean \"serve\"?"), "{err}");
     }
 }

@@ -66,9 +66,7 @@ pub fn build(name: &str, seq_len: u64, attn: AttnImpl) -> Result<ZooEntry> {
     match arch_spec(name) {
         Some(spec) => spec.lower(seq_len, attn),
         None => {
-            let hint = closest_name(name)
-                .map(|c| format!(" — did you mean {c:?}?"))
-                .unwrap_or_default();
+            let hint = crate::util::text::did_you_mean(name, names());
             bail!(
                 "unknown model {name:?}{hint} (available: {}; or pass a .toml architecture spec)",
                 names().join(", ")
@@ -108,35 +106,6 @@ fn unimodal(name: &str, lm: LlamaConfig, inherit_attn: bool) -> ArchSpec {
         }],
         connectors: Vec::new(),
     }
-}
-
-/// The registered name closest to `name` (edit distance <= 3), for
-/// did-you-mean suggestions.
-fn closest_name(name: &str) -> Option<&'static str> {
-    let lower = name.trim().to_ascii_lowercase();
-    PRESETS
-        .iter()
-        .map(|(n, _)| (*n, edit_distance(&lower, n)))
-        .filter(|&(_, d)| d <= 3)
-        .min_by_key(|&(_, d)| d)
-        .map(|(n, _)| n)
-}
-
-/// Levenshtein distance (small strings; O(a·b) two-row DP).
-fn edit_distance(a: &str, b: &str) -> usize {
-    let a: Vec<char> = a.chars().collect();
-    let b: Vec<char> = b.chars().collect();
-    let mut prev: Vec<usize> = (0..=b.len()).collect();
-    let mut cur = vec![0usize; b.len() + 1];
-    for (i, ca) in a.iter().enumerate() {
-        cur[0] = i + 1;
-        for (j, cb) in b.iter().enumerate() {
-            let sub = prev[j] + usize::from(ca != cb);
-            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
-        }
-        std::mem::swap(&mut prev, &mut cur);
-    }
-    prev[b.len()]
 }
 
 #[cfg(test)]

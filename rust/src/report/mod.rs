@@ -23,5 +23,5 @@ pub mod table;
 
 pub use frontier::{frontier_table, plan_json};
 pub use mape::{ape, mape};
-pub use modality::{modality_split, modality_table, ModalityShare};
+pub use modality::{modality_split, modality_table, table_from_shares, ModalityShare};
 pub use table::{ascii_bars, Table};

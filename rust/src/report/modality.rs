@@ -66,12 +66,19 @@ pub fn modality_split(pm: &ParsedModel) -> Vec<ModalityShare> {
 /// Render the split as an aligned table (GiB, one row per modality
 /// present, plus a Σ row).
 pub fn modality_table(pm: &ParsedModel) -> Table {
-    let shares = modality_split(pm);
+    table_from_shares(&modality_split(pm))
+}
+
+/// Render already-computed shares (e.g. decoded from a wire `modality`
+/// payload) — the same table [`modality_table`] produces, so the CLI
+/// renders identically whether the split was computed locally or
+/// travelled through the API.
+pub fn table_from_shares(shares: &[ModalityShare]) -> Table {
     let mut t = Table::new(vec![
         "modality", "layers", "param GiB", "grad GiB", "opt GiB", "act GiB", "total GiB",
     ]);
     let gib = |v: f64| format!("{:.2}", v / 1024.0);
-    for s in &shares {
+    for s in shares {
         t.row(vec![
             s.modality.label().to_string(),
             s.layers.to_string(),
@@ -85,7 +92,7 @@ pub fn modality_table(pm: &ParsedModel) -> Table {
     let sum = |f: fn(&ModalityShare) -> f64| shares.iter().map(f).sum::<f64>();
     t.row(vec![
         "Σ".to_string(),
-        pm.num_layers().to_string(),
+        shares.iter().map(|s| s.layers).sum::<usize>().to_string(),
         gib(sum(|s| s.param_mib)),
         gib(sum(|s| s.grad_mib)),
         gib(sum(|s| s.opt_mib)),

@@ -1,6 +1,18 @@
 //! Minimal JSON parser/serializer (offline environment — serde_json is
-//! unavailable). Handles the artifact manifest and report emission:
-//! objects, arrays, strings (with basic escapes), numbers, bools, null.
+//! unavailable). Handles the artifact manifest, report emission and the
+//! wire API (`crate::api`): objects, arrays, strings, numbers, bools,
+//! null.
+//!
+//! Wire-path guarantees (property-tested in `tests/proptests.rs`):
+//!
+//! * emission is **NDJSON-safe** — `to_string` never contains a raw
+//!   control character (`\n`, `\r`, … inside strings are escaped), so a
+//!   serialized document is always exactly one line;
+//! * any Rust string round-trips emit → parse byte-identically;
+//! * the parser accepts the full JSON string-escape set (`\" \\ \/ \b
+//!   \f \n \r \t \uXXXX` including UTF-16 surrogate pairs), so
+//!   documents produced by external clients (e.g. Python's `json`)
+//!   parse correctly.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -51,13 +63,6 @@ impl Json {
         }
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -77,6 +82,12 @@ impl Json {
                         '\\' => out.push_str("\\\\"),
                         '\n' => out.push_str("\\n"),
                         '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        '\u{8}' => out.push_str("\\b"),
+                        '\u{c}' => out.push_str("\\f"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
                         c => out.push(c),
                     }
                 }
@@ -105,6 +116,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact single-line serialization (`Display`; `to_string()` comes
+/// from the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -206,9 +227,17 @@ impl<'a> Parser<'a> {
                     match self.peek() {
                         Some(b'n') => out.push('\n'),
                         Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
                         Some(b'"') => out.push('"'),
                         Some(b'\\') => out.push('\\'),
                         Some(b'/') => out.push('/'),
+                        Some(b'u') => {
+                            self.i += 1;
+                            out.push(self.unicode_escape()?);
+                            continue; // unicode_escape consumed its hex digits
+                        }
                         other => bail!("unsupported escape {:?}", other.map(|c| c as char)),
                     }
                     self.i += 1;
@@ -225,6 +254,44 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// After `\u`: read 4 hex digits, combining UTF-16 surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xD800..=0xDBFF).contains(&hi) {
+            // high surrogate — must be followed by \u<low surrogate>
+            if self.peek() == Some(b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                self.i += 2;
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    bail!("invalid low surrogate \\u{lo:04x}");
+                }
+                let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                return char::from_u32(c)
+                    .ok_or_else(|| anyhow::anyhow!("invalid surrogate pair"));
+            }
+            bail!("lone high surrogate \\u{hi:04x}");
+        }
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            bail!("lone low surrogate \\u{hi:04x}");
+        }
+        char::from_u32(hi).ok_or_else(|| anyhow::anyhow!("invalid \\u{hi:04x}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self
+                .peek()
+                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| anyhow::anyhow!("bad hex digit {:?} in \\u escape", c as char))?;
+            v = v * 16 + d;
+            self.i += 1;
+        }
+        Ok(v)
     }
 
     fn array(&mut self) -> Result<Json> {
@@ -311,5 +378,57 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("{} extra").is_err());
         assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn control_characters_round_trip_and_emit_escaped() {
+        let s = "line1\nline2\rtab\tbell\u{7}bs\u{8}ff\u{c}nul\u{0}end";
+        let doc = Json::Str(s.to_string());
+        let text = doc.to_string();
+        // NDJSON safety: one line, no raw control bytes
+        assert!(text.bytes().all(|b| b >= 0x20), "raw control byte in {text:?}");
+        assert_eq!(parse(&text).unwrap(), doc);
+        assert!(text.contains("\\r"));
+        assert!(text.contains("\\u0007"));
+        assert!(text.contains("\\u0000"));
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        assert_eq!(parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(parse(r#""\u00e9""#).unwrap(), Json::Str("é".into()));
+        // surrogate pair: U+1F600
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("😀".into()));
+        // escape mid-string, fast path around it
+        assert_eq!(
+            parse(r#""ab\u0009cd""#).unwrap(),
+            Json::Str("ab\tcd".into())
+        );
+    }
+
+    #[test]
+    fn bad_unicode_escapes_rejected() {
+        assert!(parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(parse(r#""\ude00""#).is_err(), "lone low surrogate");
+        assert!(parse(r#""\ud83dxx""#).is_err());
+        assert!(parse(r#""\u00""#).is_err(), "truncated");
+        assert!(parse(r#""\uzzzz""#).is_err(), "non-hex");
+    }
+
+    #[test]
+    fn nested_escapes_round_trip() {
+        // a string whose *content* looks like JSON escapes
+        for s in [r#"\"quoted\""#, r"c:\temp\new", r#"{"k":"v\n"}"#, "\\u0041"] {
+            let doc = Json::Str(s.to_string());
+            assert_eq!(parse(&doc.to_string()).unwrap(), doc, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn non_bmp_and_multibyte_round_trip() {
+        for s in ["😀😀", "héllo wörld", "日本語テキスト", "mixed 😀 and \n ctrl"] {
+            let doc = Json::Str(s.to_string());
+            assert_eq!(parse(&doc.to_string()).unwrap(), doc, "{s:?}");
+        }
     }
 }

@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod json_mini;
 pub mod prng;
+pub mod text;
 pub mod units;
 
 pub use prng::Prng;

@@ -1,0 +1,81 @@
+//! Small text helpers: Levenshtein edit distance and the "did you
+//! mean …?" suggestion used by the model zoo and the CLI dispatcher.
+
+/// Levenshtein distance (small strings; O(a·b) two-row DP).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `input` (case-insensitively) within
+/// `max_dist` edits, for did-you-mean suggestions. Ties resolve to the
+/// earliest candidate, so fixed registries suggest deterministically.
+pub fn closest<'a, I>(input: &str, candidates: I, max_dist: usize) -> Option<&'a str>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let needle = input.trim().to_ascii_lowercase();
+    candidates
+        .into_iter()
+        .map(|c| (c, edit_distance(&needle, &c.to_ascii_lowercase())))
+        .filter(|&(_, d)| d <= max_dist)
+        .min_by_key(|&(_, d)| d)
+        .map(|(c, _)| c)
+}
+
+/// Render the standard ` — did you mean "…"?` suffix (empty when no
+/// candidate is close enough).
+pub fn did_you_mean<'a, I>(input: &str, candidates: I) -> String
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    match closest(input, candidates, 3) {
+        Some(c) => format!(" — did you mean {c:?}?"),
+        None => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn closest_is_case_insensitive_and_bounded() {
+        let names = ["predict", "plan", "sweep"];
+        assert_eq!(closest("pedict", names, 3), Some("predict"));
+        assert_eq!(closest("PLAN", names, 3), Some("plan"));
+        assert_eq!(closest("zzzzzzzz", names, 3), None);
+    }
+
+    #[test]
+    fn ties_resolve_to_the_first_candidate() {
+        // "pl" is 2 edits from both "plan" and "plot"
+        assert_eq!(closest("pl", ["plan", "plot"], 3), Some("plan"));
+    }
+
+    #[test]
+    fn did_you_mean_formats_or_stays_empty() {
+        assert_eq!(did_you_mean("pedict", ["predict"]), " — did you mean \"predict\"?");
+        assert_eq!(did_you_mean("frobnicate", ["predict"]), "");
+    }
+}

@@ -1,0 +1,591 @@
+//! Wire-API integration: loopback NDJSON serving under concurrency,
+//! protocol robustness (malformed JSON / wrong version / unknown
+//! fields never hang or disconnect), structured error codes, service
+//! backpressure, per-method metrics, and the golden CLI-parity suite
+//! proving `repro predict/plan/sweep` produce byte-identical output
+//! through the envelope. Runs entirely on the analytical backend — no
+//! artifacts needed.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use mmpredict::api::dispatch::{AnalyticalEstimator, Dispatcher};
+use mmpredict::api::{
+    self, codec, render, ApiRequest, ApiResponse, ErrorCode, Method, PlanParams, PredictParams,
+    SweepParams, METHOD_NAMES,
+};
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::planner::{self, Axes, PlanRequest};
+use mmpredict::sweep::Sweep;
+use mmpredict::util::json_mini::{self, Json};
+use mmpredict::util::units::human_mib;
+use mmpredict::{parser, predictor, report};
+
+fn tiny() -> TrainConfig {
+    TrainConfig {
+        model: "llava-tiny".into(),
+        mbs: 1,
+        seq_len: 32,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+fn start_server() -> api::serve::Server {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    api::serve::serve(listener, svc, &api::serve::ServeOptions { conn_threads: 4 })
+        .expect("server start")
+}
+
+/// A minimal NDJSON client over one TCP connection.
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WireClient {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    /// Send one raw line, read one response line.
+    fn call_raw(&mut self, line: &str) -> ApiResponse {
+        writeln!(self.writer, "{line}").expect("write");
+        self.writer.flush().expect("flush");
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).expect("read");
+        assert!(n > 0, "server closed the connection");
+        assert!(!resp.trim().is_empty());
+        ApiResponse::parse_line(resp.trim()).expect("well-formed v1 response")
+    }
+
+    fn call(&mut self, req: &ApiRequest) -> ApiResponse {
+        self.call_raw(&req.to_json().to_string())
+    }
+}
+
+/// Build one request per method (cheap tiny-model parameters).
+fn request_for(method_name: &str, id: &str) -> ApiRequest {
+    let cfg = tiny();
+    let method = match method_name {
+        "predict" => Method::Predict(PredictParams {
+            cfg,
+            capacity_mib: Some(80.0 * 1024.0),
+            detail: false,
+        }),
+        "plan" => Method::Plan(PlanParams {
+            req: PlanRequest {
+                base: cfg.clone(),
+                budget_mib: 1e9,
+                axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&cfg) },
+            },
+        }),
+        "sweep" => Method::Sweep(SweepParams {
+            base: cfg.clone(),
+            dp: vec![1, 2],
+            mbs: vec![1],
+            seq_len: vec![32],
+            zero: vec![cfg.zero],
+            capacity_mib: None,
+        }),
+        "simulate" => Method::Simulate(api::SimulateParams { cfg }),
+        "baselines" => Method::Baselines(api::BaselinesParams { cfg }),
+        "modality" => Method::Modality(api::ModalityParams { cfg }),
+        "models" => Method::Models,
+        "metrics" => Method::Metrics,
+        other => panic!("unknown method {other}"),
+    };
+    ApiRequest::new(id, method)
+}
+
+/// Method-specific payload sanity (schema-valid responses).
+fn check_payload(method_name: &str, payload: &Json) {
+    match method_name {
+        "predict" => {
+            let p = codec::prediction_from_json(payload.get("prediction").unwrap()).unwrap();
+            assert!(p.peak_mib > 0.0);
+            assert!(matches!(payload.get("fits"), Some(Json::Bool(_))));
+        }
+        "plan" => {
+            let plan = codec::plan_from_json(payload, &tiny()).unwrap();
+            assert!(!plan.candidates.is_empty());
+            assert!(plan.stats.branches >= 1);
+        }
+        "sweep" => {
+            let points = payload.get("points").unwrap().as_arr().unwrap();
+            assert_eq!(points.len(), 2); // dp 1,2
+            for pt in points {
+                assert!(pt.get("predicted_mib").unwrap().as_f64().unwrap() > 0.0);
+                assert!(pt.get("measured_mib").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
+        "simulate" => {
+            let m = payload.get("measurement").unwrap();
+            assert!(m.get("peak_mib").unwrap().as_f64().unwrap() > 0.0);
+            assert!(m.get("at_peak_bytes").is_some());
+        }
+        "baselines" => {
+            let rows = payload.get("rows").unwrap().as_arr().unwrap();
+            assert_eq!(rows.len(), 4); // ours + fujii + llmem + profiling
+            assert!(payload.get("measured_mib").unwrap().as_f64().unwrap() > 0.0);
+        }
+        "modality" => {
+            let shares = codec::shares_from_json(payload.get("shares").unwrap()).unwrap();
+            assert!(!shares.is_empty());
+        }
+        "models" => {
+            let models = payload.get("models").unwrap().as_arr().unwrap();
+            assert_eq!(models.len(), mmpredict::zoo::names().len());
+        }
+        "metrics" => {
+            assert!(payload.get("per_method").is_some());
+        }
+        other => panic!("unknown method {other}"),
+    }
+}
+
+/// Acceptance: ≥8 concurrent clients mixing all eight methods against
+/// the loopback server; every response correlates by id and is
+/// schema-valid.
+#[test]
+fn concurrent_clients_mix_all_methods_over_loopback() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr);
+                // every client speaks its "own" method plus two others,
+                // several rounds each, so methods interleave across the
+                // shared service queue
+                let mine = METHOD_NAMES[i % METHOD_NAMES.len()];
+                let others = [
+                    METHOD_NAMES[(i + 3) % METHOD_NAMES.len()],
+                    METHOD_NAMES[(i + 5) % METHOD_NAMES.len()],
+                ];
+                for round in 0..3 {
+                    for name in std::iter::once(mine).chain(others) {
+                        let id = format!("c{i}-{name}-{round}");
+                        let resp = client.call(&request_for(name, &id));
+                        assert_eq!(resp.id.as_deref(), Some(id.as_str()), "id correlation");
+                        let payload = resp
+                            .result
+                            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+                        check_payload(name, &payload);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    server.shutdown();
+}
+
+/// Acceptance: malformed JSON, unknown version and unknown fields each
+/// yield a structured ApiError — never a hang or disconnect — and the
+/// connection keeps serving afterwards.
+#[test]
+fn protocol_errors_are_structured_and_nonfatal() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+
+    let resp = client.call_raw("this is not json at all");
+    assert_eq!(resp.id, None);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+
+    let resp = client.call_raw(r#"{"v":1,"id":"x","method":"predict","params":{"config":{}},"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+
+    let resp = client.call_raw(r#"{"v":99,"id":"ver","method":"models"}"#);
+    assert_eq!(resp.id.as_deref(), Some("ver"));
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+    assert!(err.message.contains("v1"), "{}", err.message);
+
+    let resp = client.call_raw(r#"{"v":1,"id":"uf","method":"models","surprise":true}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+
+    let resp = client.call_raw(r#"{"v":1,"id":"up","method":"predict","params":{"config":{},"detial":true}}"#);
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("detial"), "{}", err.message);
+
+    let resp = client.call_raw(r#"{"v":1,"id":"um","method":"pedict"}"#);
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownMethod);
+    assert!(err.message.contains("did you mean \"predict\"?"), "{}", err.message);
+
+    let resp = client.call_raw(
+        r#"{"v":1,"id":"mm","method":"predict","params":{"config":{"model":"lava-tiny"}}}"#,
+    );
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownModel);
+    assert!(err.message.contains("llava-tiny"), "{}", err.message);
+
+    // the same connection still answers real requests
+    let resp = client.call(&request_for("predict", "alive"));
+    assert_eq!(resp.id.as_deref(), Some("alive"));
+    assert!(resp.result.is_ok());
+    server.shutdown();
+}
+
+/// An oversized frame (no newline) answers a structured bad_request —
+/// bounded memory, never a hang — and then closes (no way to resync
+/// mid-frame).
+#[test]
+fn oversized_frame_answers_structured_error_then_closes() {
+    use mmpredict::api::serve::MAX_FRAME_BYTES;
+    let server = start_server();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    // send exactly ONE byte past the cap, then stop: the server can
+    // only trip the limit after consuming every sent byte, so its close
+    // is a clean FIN (not an RST that could discard the response)
+    let mut remaining = MAX_FRAME_BYTES + 1;
+    let chunk = vec![b'x'; 64 * 1024];
+    while remaining > 0 {
+        let n = remaining.min(chunk.len());
+        if writer.write_all(&chunk[..n]).is_err() {
+            break;
+        }
+        remaining -= n;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("response line");
+    let resp = ApiResponse::parse_line(resp.trim()).expect("v1 response");
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("frame"), "{}", err.message);
+    // connection is closed afterwards
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap_or(0), 0);
+    server.shutdown();
+}
+
+/// Wire predictions are bit-identical to in-process predictions: the
+/// f32 → JSON text → f64 → f32 trip loses nothing.
+#[test]
+fn wire_predictions_match_library_exactly() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+    for dp in [1u64, 2, 4] {
+        let mut cfg = tiny();
+        cfg.dp = dp;
+        let want = predictor::predict(&cfg).unwrap();
+        let resp = client.call(&ApiRequest::new(
+            format!("dp{dp}"),
+            Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+        ));
+        let payload = resp.result.unwrap();
+        let got = codec::prediction_from_json(payload.get("prediction").unwrap()).unwrap();
+        assert_eq!(got, want, "dp{dp}");
+    }
+    server.shutdown();
+}
+
+/// Backpressure: with a depth-1 queue and the worker busy on plans,
+/// `try_submit` answers `over_capacity` instead of blocking.
+#[test]
+fn full_queue_answers_over_capacity() {
+    let svc = PredictionService::start_analytical(ServiceConfig {
+        queue_depth: 1,
+        ..Default::default()
+    });
+    let planners: Vec<_> = (0..8)
+        .map(|_| {
+            let c = svc.client();
+            std::thread::spawn(move || {
+                let base = tiny();
+                let axes = Axes {
+                    mbs: vec![1, 2, 4],
+                    seq_len: vec![32, 64],
+                    ..Axes::fixed(&base)
+                };
+                c.plan(PlanRequest { base, budget_mib: 1e9, axes })
+            })
+        })
+        .collect();
+
+    let mut saw_over_capacity = false;
+    for _ in 0..2000 {
+        let resp = svc.try_submit(ApiRequest::new(
+            "bp",
+            Method::Predict(PredictParams {
+                cfg: tiny(),
+                capacity_mib: None,
+                detail: false,
+            }),
+        ));
+        match resp.result {
+            Err(e) if e.code == ErrorCode::OverCapacity => {
+                assert!(e.message.contains("retry"), "{}", e.message);
+                saw_over_capacity = true;
+                break;
+            }
+            _ => {}
+        }
+    }
+    for h in planners {
+        h.join().unwrap().expect("plan");
+    }
+    assert!(
+        saw_over_capacity,
+        "depth-1 queue under 8 queued plans never reported over_capacity"
+    );
+    svc.shutdown();
+}
+
+/// Per-method metrics advance through the service, and the `metrics`
+/// method reports them.
+#[test]
+fn per_method_metrics_advance_and_are_served() {
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    svc.predict(tiny()).unwrap();
+    svc.predict(tiny()).unwrap();
+    let base = tiny();
+    svc.plan(PlanRequest {
+        axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&base) },
+        base,
+        budget_mib: 1e9,
+    })
+    .unwrap();
+
+    let m = svc.metrics();
+    assert_eq!(m.method_requests(0), 2, "predict counter");
+    assert_eq!(m.method_requests(1), 1, "plan counter");
+    assert_eq!(m.method_errors(0), 0);
+    let (p50, p95, max) = m.method_latency_us(1);
+    assert!(p50 > 0 && p95 >= p50 && max >= 1, "plan latency: {p50}/{p95}/{max}");
+
+    let resp = svc.submit(ApiRequest::new("m", Method::Metrics));
+    let payload = resp.result.unwrap();
+    let per = payload.get("per_method").unwrap();
+    assert_eq!(
+        per.get("predict").unwrap().get("requests").unwrap().as_u64(),
+        Some(2)
+    );
+    assert_eq!(per.get("plan").unwrap().get("requests").unwrap().as_u64(), Some(1));
+    // an invalid request bumps the error counter for its method
+    let mut bad = tiny();
+    bad.model = "not-a-model".into();
+    assert!(svc.predict(bad).is_err());
+    assert_eq!(svc.metrics().method_errors(0), 1);
+    svc.shutdown();
+}
+
+// ------------------------------------------------------------- golden CLI
+
+/// `repro predict`'s output through the envelope is byte-identical to
+/// the pre-redesign direct rendering.
+#[test]
+fn golden_predict_text_matches_legacy_rendering() {
+    let mut cfg = tiny();
+    cfg.dp = 2;
+    let capacity_gib = Some(80.0);
+
+    // New path: envelope → dispatcher → payload → api::render.
+    let mut d = Dispatcher::analytical();
+    let req = ApiRequest {
+        id: None,
+        method: Method::Predict(PredictParams {
+            cfg: cfg.clone(),
+            capacity_mib: capacity_gib.map(|g| g * 1024.0),
+            detail: true,
+        }),
+    };
+    let payload = d.handle(&req).into_result().unwrap();
+    let rendered = render::predict_text(&payload, capacity_gib).unwrap();
+
+    // Legacy path: the pre-envelope cmd_predict, line for line.
+    let pm = parser::parse(&cfg).unwrap();
+    let p = predictor::predict(&cfg).unwrap();
+    let mut expected = String::new();
+    writeln!(
+        expected,
+        "model: {} ({} layers, {:.2}B params, {:.2}B trainable)",
+        pm.model_name,
+        pm.num_layers(),
+        pm.total_param_elems as f64 / 1e9,
+        pm.trainable_param_elems as f64 / 1e9,
+    )
+    .unwrap();
+    writeln!(expected, "predicted peak: {}", human_mib(p.peak_mib as f64)).unwrap();
+    writeln!(expected, "  M_param     {}", human_mib(p.param_mib as f64)).unwrap();
+    writeln!(expected, "  M_grad      {}", human_mib(p.grad_mib as f64)).unwrap();
+    writeln!(expected, "  M_opt       {}", human_mib(p.opt_mib as f64)).unwrap();
+    writeln!(expected, "  M_act       {}", human_mib(p.act_mib as f64)).unwrap();
+    writeln!(expected, "  transient   {}", human_mib(p.transient_mib as f64)).unwrap();
+    writeln!(expected, "per-modality split (Fig. 1 decomposition):").unwrap();
+    writeln!(expected, "{}", report::modality_table(&pm).render()).unwrap();
+    let fits = p.fits((80.0 * 1024.0) as f32);
+    writeln!(
+        expected,
+        "fits 80 GiB GPU: {}",
+        if fits { "YES" } else { "NO — would OoM" }
+    )
+    .unwrap();
+
+    assert_eq!(rendered, expected);
+
+    // ... and surviving an actual wire round-trip changes nothing.
+    let wire_payload = json_mini::parse(&payload.to_string()).unwrap();
+    let rendered_wire = render::predict_text(&wire_payload, capacity_gib).unwrap();
+    assert_eq!(rendered_wire, expected);
+}
+
+/// `repro plan`'s table, CSV and --json outputs through the envelope
+/// are byte-identical to the direct planner rendering.
+#[test]
+fn golden_plan_output_matches_legacy_rendering() {
+    let base = tiny();
+    let axes = Axes {
+        mbs: vec![1, 2, 4],
+        seq_len: vec![32, 64],
+        ..Axes::fixed(&base)
+    };
+    // A budget between the smallest and largest rung's peak, so the
+    // plan has both escalations and (possibly) open frontiers.
+    let lo = mmpredict::simulator::simulate(&base).unwrap().peak_mib;
+    let req = PlanRequest { base: base.clone(), budget_mib: lo * 1.6, axes };
+
+    let direct = planner::plan_with(&req, &Sweep::new(2)).unwrap();
+
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(2));
+    let payload = d
+        .handle(&ApiRequest { id: None, method: Method::Plan(PlanParams { req }) })
+        .into_result()
+        .unwrap();
+
+    // --json parity: the payload IS the plan_json document
+    assert_eq!(payload.to_string(), report::plan_json(&direct).to_string());
+
+    // table + CSV parity after decoding (what the CLI renders)
+    let decoded = codec::plan_from_json(&payload, &base).unwrap();
+    assert_eq!(
+        report::frontier_table(&decoded, 12, false).render(),
+        report::frontier_table(&direct, 12, false).render()
+    );
+    assert_eq!(
+        report::frontier_table(&decoded, usize::MAX, true).to_csv(),
+        report::frontier_table(&direct, usize::MAX, true).to_csv()
+    );
+    assert_eq!(decoded.stats.sim_points, direct.stats.sim_points);
+    assert_eq!(decoded.stats.grid_points, direct.stats.grid_points);
+    for (a, b) in decoded.candidates.iter().zip(&direct.candidates) {
+        assert_eq!(a.cfg.cache_key(), b.cfg.cache_key());
+        assert_eq!(a.simulated_mib, b.simulated_mib);
+    }
+
+    // and across a real wire round-trip
+    let wire = json_mini::parse(&payload.to_string()).unwrap();
+    let decoded_wire = codec::plan_from_json(&wire, &base).unwrap();
+    assert_eq!(
+        report::frontier_table(&decoded_wire, 12, false).render(),
+        report::frontier_table(&direct, 12, false).render()
+    );
+}
+
+/// `repro sweep`'s table through the envelope is byte-identical to the
+/// legacy direct construction.
+#[test]
+fn golden_sweep_table_matches_legacy_rendering() {
+    let base = tiny();
+    let (dps, mbss, seqs, zeros) = (vec![1u64, 2], vec![1u64, 2], vec![32u64], vec![base.zero]);
+    let capacity_mib = Some(6.0 * 1024.0);
+
+    // Legacy: enumerate + compute + format exactly as the old cmd_sweep.
+    let mut cfgs = Vec::new();
+    for &seq_len in &seqs {
+        for &mbs in &mbss {
+            for &zero in &zeros {
+                for &dp in &dps {
+                    cfgs.push(TrainConfig { seq_len, mbs, zero, dp, ..base.clone() });
+                }
+            }
+        }
+    }
+    let engine = Sweep::new(2);
+    let rows = engine
+        .run(&cfgs, |ctx, pm, cfg| {
+            let predicted = predictor::predict(cfg)?.peak_mib as f64;
+            let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
+            Ok((predicted, measured))
+        })
+        .unwrap();
+    let mut headers = vec!["seq", "mbs", "zero", "dp", "predicted GiB", "measured GiB", "APE %"];
+    headers.push("verdict");
+    let mut expected = report::Table::new(headers);
+    for (cfg, (p, m)) in cfgs.iter().zip(&rows) {
+        let mut row = vec![
+            cfg.seq_len.to_string(),
+            cfg.mbs.to_string(),
+            cfg.zero.as_int().to_string(),
+            cfg.dp.to_string(),
+            format!("{:.2}", p / 1024.0),
+            format!("{:.2}", m / 1024.0),
+            format!("{:.1}", report::ape(*p, *m) * 100.0),
+        ];
+        row.push(if *p <= capacity_mib.unwrap() { "ADMIT" } else { "REJECT" }.to_string());
+        expected.row(row);
+    }
+
+    // New: envelope → payload → api::render, including a wire trip.
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(2));
+    let payload = d
+        .handle(&ApiRequest {
+            id: None,
+            method: Method::Sweep(SweepParams {
+                base,
+                dp: dps,
+                mbs: mbss,
+                seq_len: seqs,
+                zero: zeros,
+                capacity_mib,
+            }),
+        })
+        .into_result()
+        .unwrap();
+    let rendered = render::sweep_table(&payload, true).unwrap();
+    assert_eq!(rendered.render(), expected.render());
+    assert_eq!(rendered.to_csv(), expected.to_csv());
+
+    let wire = json_mini::parse(&payload.to_string()).unwrap();
+    let rendered_wire = render::sweep_table(&wire, true).unwrap();
+    assert_eq!(rendered_wire.render(), expected.render());
+}
+
+/// Spec-path configs travel the wire like any other model reference.
+#[test]
+fn spec_file_models_serve_over_the_wire() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/archs/three-tower.toml");
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+    let mut cfg = tiny();
+    cfg.model = path.to_string();
+    cfg.seq_len = 64;
+    let want = predictor::predict(&cfg).unwrap();
+    let resp = client.call(&ApiRequest::new(
+        "spec",
+        Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+    ));
+    let payload = resp.result.expect("spec-path predict");
+    let got = codec::prediction_from_json(payload.get("prediction").unwrap()).unwrap();
+    assert_eq!(got, want);
+    server.shutdown();
+}

@@ -273,3 +273,49 @@ fn toml_roundtrip_fuzz() {
         assert_eq!(cfg.dp, dp as u64);
     }
 }
+
+/// Wire-path hardening: arbitrary strings — unicode, control
+/// characters, quotes/backslashes, escape-looking content — must
+/// round-trip emit → parse byte-identically, and the emitted document
+/// must be a single NDJSON-safe line (no raw control bytes).
+#[test]
+fn json_string_roundtrip_fuzz() {
+    use mmpredict::util::json_mini::{parse, Json};
+
+    // character pool biased toward the nasty cases
+    const POOL: &[char] = &[
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0}', '\u{1}', '\u{8}',
+        '\u{b}', '\u{c}', '\u{1b}', '\u{1f}', '\u{7f}', 'é', 'ß', '漢', '字', '🙂', '😀',
+        '\u{ffff}', '\u{10000}',
+    ];
+    // multi-char fragments that *look* like JSON escapes or structure
+    const FRAGMENTS: &[&str] = &["\\u0041", "\\\"", "\\\\n", "{\"k\":1}", "[1,2]", "\\ud83d"];
+
+    let mut r = Prng::new(0x1A7E57);
+    for case in 0..300 {
+        let mut s = String::new();
+        for _ in 0..r.range(0, 24) {
+            if r.chance(0.2) {
+                s.push_str(r.pick(FRAGMENTS));
+            } else {
+                s.push(*r.pick(POOL));
+            }
+        }
+        // wrap into a document exercising keys and nesting too
+        let doc = Json::Obj(
+            [
+                (s.clone(), Json::Str(s.clone())),
+                ("arr".to_string(), Json::Arr(vec![Json::Str(s.clone()), Json::Null])),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let text = doc.to_string();
+        assert!(
+            text.bytes().all(|b| b >= 0x20),
+            "case {case}: raw control byte in emitted JSON for {s:?}: {text:?}"
+        );
+        let back = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e:#} for {s:?}"));
+        assert_eq!(back, doc, "case {case}: round-trip mismatch for {s:?}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Prediction-service integration: concurrent clients, batching
-//! behaviour, metrics and error paths. Skips without artifacts.
+//! behaviour, metrics and error paths. The tensorized tests skip
+//! without artifacts; the analytical tests always run.
 
 use std::time::Duration;
 
+use mmpredict::api::{ApiRequest, Method, PredictParams};
 use mmpredict::config::TrainConfig;
 use mmpredict::coordinator::batcher::BatchPolicy;
 use mmpredict::coordinator::{PredictionService, ServiceConfig};
@@ -21,10 +23,64 @@ fn service() -> Option<PredictionService> {
                     max_batch: 8,
                     batch_timeout: Duration::from_millis(3),
                 },
+                ..Default::default()
             },
         )
         .unwrap(),
     )
+}
+
+/// Always-on (analytical) coverage: concurrent wire-envelope submits
+/// batch, answer correctly, and advance the global + per-method
+/// counters.
+#[test]
+fn analytical_service_batches_envelopes_and_counts_methods() {
+    let svc = PredictionService::start_analytical(ServiceConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(3),
+        },
+        ..Default::default()
+    });
+    let tiny = TrainConfig {
+        model: "llava-tiny".into(),
+        mbs: 1,
+        seq_len: 32,
+        ..TrainConfig::llava_finetune_default()
+    };
+    let expected = mmpredict::predictor::predict(&tiny).unwrap();
+
+    let handles: Vec<_> = (0..16u64)
+        .map(|i| {
+            let client = svc.client();
+            let cfg = tiny.clone();
+            std::thread::spawn(move || {
+                let resp = client.submit(ApiRequest::new(
+                    format!("r{i}"),
+                    Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+                ));
+                assert_eq!(resp.id.as_deref(), Some(format!("r{i}").as_str()));
+                resp.result.unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let payload = h.join().unwrap();
+        let p = mmpredict::api::codec::prediction_from_json(
+            payload.get("prediction").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p, expected);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests(), 16);
+    assert_eq!(m.responses(), 16);
+    assert_eq!(m.errors(), 0);
+    assert_eq!(m.method_requests(0), 16, "predict method counter");
+    assert!(m.batches() < 16, "batching should have happened: {}", m.summary());
+    let (p50, p95, max) = m.method_latency_us(0);
+    assert!(p50 > 0 && p95 >= p50 && max >= p95 / 2, "{p50}/{p95}/{max}");
+    svc.shutdown();
 }
 
 #[test]
