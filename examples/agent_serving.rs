@@ -27,7 +27,8 @@ fn main() -> Result<()> {
 
     println!("== capacity planning across GPUs ==\n");
     let mut t = Table::new(vec!["GPU", "capacity", "max sessions (analytic)"]);
-    for (name, gib) in [("L4", 24.0), ("A100-40G", 40.0), ("H100-80G", 80.0), ("H200-141G", 141.0)] {
+    let gpus = [("L4", 24.0), ("A100-40G", 40.0), ("H100-80G", 80.0), ("H200-141G", 141.0)];
+    for (name, gib) in gpus {
         t.row(vec![
             name.to_string(),
             format!("{gib:.0} GiB"),

@@ -142,6 +142,75 @@ fn main() {
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner.json");
     std::fs::write(out, json.to_string()).expect("writing BENCH_planner.json");
     println!("wrote {out}");
+
+    parallel_grid_bench(&base, &engine);
+}
+
+/// The tp/pp-enlarged search space: the same llava-1.5-7b fine-tune,
+/// but with tensor- and pipeline-parallel axes freed (2x2 larger
+/// branch count, and every pp > 1 probe simulates each stage view).
+/// Emits BENCH_planner_parallel.json so the perf trajectory tracks the
+/// multi-GPU planner from its first release.
+fn parallel_grid_bench(base: &TrainConfig, engine: &Sweep) {
+    let axes = Axes {
+        mbs: vec![1, 2, 4, 8, 16],
+        seq_len: vec![1024, 2048],
+        dp: vec![4, 8],
+        tp: vec![1, 2],
+        pp: vec![1, 2],
+        zero: vec![ZeroStage::Zero2, ZeroStage::Zero3],
+        ..Axes::fixed(base)
+    };
+    let budget_mib = 80.0 * 1024.0;
+    let req = PlanRequest { base: base.clone(), budget_mib, axes: axes.clone() };
+    println!(
+        "\nparallel workload: tp x pp x dp x zero x seq = {} branches, {} grid points",
+        2 * 2 * 2 * 2 * 2,
+        2 * 2 * 2 * 2 * 2 * axes.mbs.len()
+    );
+    let planned = bench("planner frontier search (tp/pp grid)", 1, 3, || {
+        let _ = planner::plan_with(&req, engine).unwrap();
+    });
+    report(&planned);
+
+    let plan = planner::plan_with(&req, engine).unwrap();
+    assert!(plan.stats.sim_points < plan.stats.grid_points);
+    let parallel_rows = plan
+        .candidates
+        .iter()
+        .filter(|c| c.cfg.tp > 1 || c.cfg.pp > 1)
+        .count();
+    println!(
+        "parallel frontier: {} configs ({} with tp/pp > 1), {} sims vs {} grid points",
+        plan.candidates.len(),
+        parallel_rows,
+        plan.stats.sim_points,
+        plan.stats.grid_points
+    );
+
+    let json = obj(vec![
+        (
+            "workload",
+            Json::Str("llava-1.5-7b finetune, 80 GiB budget, tp/pp grid".to_string()),
+        ),
+        ("grid_points", Json::Num(plan.stats.grid_points as f64)),
+        ("branches", Json::Num(plan.stats.branches as f64)),
+        ("sim_points", Json::Num(plan.stats.sim_points as f64)),
+        (
+            "predictor_probes",
+            Json::Num(plan.stats.predictor_probes as f64),
+        ),
+        ("frontier_size", Json::Num(plan.candidates.len() as f64)),
+        ("parallel_rows", Json::Num(parallel_rows as f64)),
+        ("planner_sec", Json::Num(planned.mean.as_secs_f64())),
+        (
+            "sim_reduction",
+            Json::Num(plan.stats.grid_points as f64 / plan.stats.sim_points.max(1) as f64),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner_parallel.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_planner_parallel.json");
+    println!("wrote {out}");
 }
 
 fn speedup(before: &BenchResult, after: &BenchResult) -> f64 {

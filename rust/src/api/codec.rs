@@ -279,6 +279,57 @@ pub fn config_from_json(v: &Json) -> Result<TrainConfig, ApiError> {
     Ok(cfg)
 }
 
+/// Allowed sub-fields of the optional `parallelism` request object.
+const PARALLELISM_KEYS: &[&str] = &["tp", "pp", "dp", "world_size"];
+
+/// Apply an optional `parallelism` object onto a parsed config.
+/// Available on every config-carrying method (additive v1 extension;
+/// absent object = single device, exactly the pre-parallelism
+/// semantics). Strict like everything else: unknown sub-fields are
+/// rejected, and a `world_size` that does not equal `tp*pp*dp` is a
+/// `bad_request`.
+pub fn apply_parallelism(cfg: &mut TrainConfig, v: &Json) -> Result<(), ApiError> {
+    let m = as_obj(v, "params.parallelism")?;
+    strict_keys(m, PARALLELISM_KEYS, "params.parallelism")?;
+    if let Some(n) = get_u64(m, "tp", "params.parallelism")? {
+        cfg.tp = n;
+    }
+    if let Some(n) = get_u64(m, "pp", "params.parallelism")? {
+        cfg.pp = n;
+    }
+    if let Some(n) = get_u64(m, "dp", "params.parallelism")? {
+        cfg.dp = n;
+    }
+    cfg.validate().map_err(bad)?;
+    if let Some(ws) = get_u64(m, "world_size", "params.parallelism")? {
+        if cfg.world_size() != ws {
+            return Err(ApiError::bad_request(format!(
+                "parallelism.world_size {} does not match tp {} x pp {} x dp {} = {}",
+                ws,
+                cfg.tp,
+                cfg.pp,
+                cfg.dp,
+                cfg.world_size()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Client-side emission: `Some` only when the config carries
+/// non-trivial tensor/pipeline parallelism, so single-device request
+/// documents are byte-identical to PR 4's.
+pub fn parallelism_to_json(cfg: &TrainConfig) -> Option<Json> {
+    if cfg.tp <= 1 && cfg.pp <= 1 {
+        return None;
+    }
+    Some(obj(vec![
+        ("tp", num(cfg.tp as f64)),
+        ("pp", num(cfg.pp as f64)),
+        ("dp", num(cfg.dp as f64)),
+    ]))
+}
+
 fn attn_parse(v: &str) -> Result<AttnImpl, ApiError> {
     match v {
         "flash" => Ok(AttnImpl::Flash),
@@ -352,12 +403,18 @@ fn optimizer_name(o: OptimizerKind) -> &'static str {
 // ----------------------------------------------------------------- params
 
 fn require_config(m: &BTreeMap<String, Json>, method: &str) -> Result<TrainConfig, ApiError> {
-    match m.get("config") {
-        Some(c) => config_from_json(c),
-        None => Err(ApiError::bad_request(format!(
-            "{method} requires a \"config\" object"
-        ))),
+    let mut cfg = match m.get("config") {
+        Some(c) => config_from_json(c)?,
+        None => {
+            return Err(ApiError::bad_request(format!(
+                "{method} requires a \"config\" object"
+            )))
+        }
+    };
+    if let Some(p) = m.get("parallelism") {
+        apply_parallelism(&mut cfg, p)?;
     }
+    Ok(cfg)
 }
 
 /// Parse a method name + `params` document into a typed [`Method`].
@@ -369,7 +426,7 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
     };
     match name {
         "predict" => {
-            strict_keys(m, &["config", "capacity_mib", "detail"], "predict params")?;
+            strict_keys(m, &["config", "parallelism", "capacity_mib", "detail"], "predict params")?;
             Ok(Method::Predict(PredictParams {
                 cfg: require_config(m, "predict")?,
                 capacity_mib: get_f64(m, "capacity_mib", "params")?,
@@ -377,7 +434,7 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
             }))
         }
         "plan" => {
-            strict_keys(m, &["config", "budget_mib", "axes"], "plan params")?;
+            strict_keys(m, &["config", "parallelism", "budget_mib", "axes"], "plan params")?;
             let base = require_config(m, "plan")?;
             let budget_mib = get_f64(m, "budget_mib", "params")?.ok_or_else(|| {
                 ApiError::bad_request("plan requires a numeric \"budget_mib\"")
@@ -393,7 +450,15 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
         "sweep" => {
             strict_keys(
                 m,
-                &["config", "dp_list", "mbs_list", "seq_list", "zero_list", "capacity_mib"],
+                &[
+                    "config",
+                    "parallelism",
+                    "dp_list",
+                    "mbs_list",
+                    "seq_list",
+                    "zero_list",
+                    "capacity_mib",
+                ],
                 "sweep params",
             )?;
             let base = require_config(m, "sweep")?;
@@ -426,19 +491,19 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
             }))
         }
         "simulate" => {
-            strict_keys(m, &["config"], "simulate params")?;
+            strict_keys(m, &["config", "parallelism"], "simulate params")?;
             Ok(Method::Simulate(SimulateParams {
                 cfg: require_config(m, "simulate")?,
             }))
         }
         "baselines" => {
-            strict_keys(m, &["config"], "baselines params")?;
+            strict_keys(m, &["config", "parallelism"], "baselines params")?;
             Ok(Method::Baselines(BaselinesParams {
                 cfg: require_config(m, "baselines")?,
             }))
         }
         "modality" => {
-            strict_keys(m, &["config"], "modality params")?;
+            strict_keys(m, &["config", "parallelism"], "modality params")?;
             Ok(Method::Modality(ModalityParams {
                 cfg: require_config(m, "modality")?,
             }))
@@ -470,6 +535,9 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
     match method {
         Method::Predict(p) => {
             let mut e = vec![("config", config_to_json(&p.cfg))];
+            if let Some(par) = parallelism_to_json(&p.cfg) {
+                e.push(("parallelism", par));
+            }
             if let Some(cap) = p.capacity_mib {
                 e.push(("capacity_mib", num(cap)));
             }
@@ -478,15 +546,22 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
             }
             Some(obj(e))
         }
-        Method::Plan(p) => Some(obj(vec![
-            ("config", config_to_json(&p.req.base)),
-            ("budget_mib", num(p.req.budget_mib)),
-            ("axes", axes_to_json(&p.req.axes)),
-        ])),
+        Method::Plan(p) => {
+            let mut e = vec![("config", config_to_json(&p.req.base))];
+            if let Some(par) = parallelism_to_json(&p.req.base) {
+                e.push(("parallelism", par));
+            }
+            e.push(("budget_mib", num(p.req.budget_mib)));
+            e.push(("axes", axes_to_json(&p.req.axes, &p.req.base)));
+            Some(obj(e))
+        }
         Method::Sweep(p) => {
             let ints = |v: &[u64]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
-            let mut e = vec![
-                ("config", config_to_json(&p.base)),
+            let mut e = vec![("config", config_to_json(&p.base))];
+            if let Some(par) = parallelism_to_json(&p.base) {
+                e.push(("parallelism", par));
+            }
+            e.extend(vec![
                 ("dp_list", ints(&p.dp)),
                 ("mbs_list", ints(&p.mbs)),
                 ("seq_list", ints(&p.seq_len)),
@@ -494,29 +569,39 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
                     "zero_list",
                     Json::Arr(p.zero.iter().map(|z| num(z.as_int() as f64)).collect()),
                 ),
-            ];
+            ]);
             if let Some(cap) = p.capacity_mib {
                 e.push(("capacity_mib", num(cap)));
             }
             Some(obj(e))
         }
-        Method::Simulate(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
-        Method::Baselines(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
-        Method::Modality(p) => Some(obj(vec![("config", config_to_json(&p.cfg))])),
+        Method::Simulate(p) => Some(config_params(&p.cfg)),
+        Method::Baselines(p) => Some(config_params(&p.cfg)),
+        Method::Modality(p) => Some(config_params(&p.cfg)),
         Method::Models | Method::Metrics => None,
     }
 }
 
+/// `{config}` (+ `parallelism` when non-trivial) — the params shape of
+/// the single-config methods.
+fn config_params(cfg: &TrainConfig) -> Json {
+    let mut e = vec![("config", config_to_json(cfg))];
+    if let Some(par) = parallelism_to_json(cfg) {
+        e.push(("parallelism", par));
+    }
+    obj(e)
+}
+
 // ------------------------------------------------------------------- axes
 
-/// `{mbs, seq_len, dp, zero, precision, stage}` — absent keys default
-/// as in [`Axes::standard`] (free numeric ladders, pinned
-/// zero/precision/stage).
+/// `{mbs, seq_len, dp, tp, pp, zero, precision, stage}` — absent keys
+/// default as in [`Axes::standard`] (free numeric ladders, pinned
+/// tp/pp/zero/precision/stage).
 pub fn axes_from_json(v: &Json, base: &TrainConfig) -> Result<Axes, ApiError> {
     let m = as_obj(v, "params.axes")?;
     strict_keys(
         m,
-        &["mbs", "seq_len", "dp", "zero", "precision", "stage"],
+        &["mbs", "seq_len", "dp", "tp", "pp", "zero", "precision", "stage"],
         "params.axes",
     )?;
     let mut axes = Axes::standard(base);
@@ -528,6 +613,12 @@ pub fn axes_from_json(v: &Json, base: &TrainConfig) -> Result<Axes, ApiError> {
     }
     if let Some(x) = m.get("dp") {
         axes.dp = u64_array(x, "params.axes.dp")?;
+    }
+    if let Some(x) = m.get("tp") {
+        axes.tp = u64_array(x, "params.axes.tp")?;
+    }
+    if let Some(x) = m.get("pp") {
+        axes.pp = u64_array(x, "params.axes.pp")?;
     }
     if let Some(x) = m.get("zero") {
         axes.zero = u64_array(x, "params.axes.zero")?
@@ -550,12 +641,25 @@ pub fn axes_from_json(v: &Json, base: &TrainConfig) -> Result<Axes, ApiError> {
     Ok(axes)
 }
 
-pub fn axes_to_json(axes: &Axes) -> Json {
+pub fn axes_to_json(axes: &Axes, base: &TrainConfig) -> Json {
     let ints = |v: &[u64]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
-    obj(vec![
+    let mut entries = vec![
         ("mbs", ints(&axes.mbs)),
         ("seq_len", ints(&axes.seq_len)),
         ("dp", ints(&axes.dp)),
+    ];
+    // Additive fields: omitted when they match the server-side default
+    // (pinned to the base config, the `Axes::standard` rule) — so
+    // single-device plan requests are byte-identical to PR 4's, while a
+    // pin that *differs* from the base (e.g. base tp=2, axes tp=[1])
+    // survives the wire.
+    if axes.tp != [base.tp] {
+        entries.push(("tp", ints(&axes.tp)));
+    }
+    if axes.pp != [base.pp] {
+        entries.push(("pp", ints(&axes.pp)));
+    }
+    entries.extend(vec![
         (
             "zero",
             Json::Arr(axes.zero.iter().map(|z| num(z.as_int() as f64)).collect()),
@@ -568,7 +672,8 @@ pub fn axes_to_json(axes: &Axes) -> Json {
             "stage",
             Json::Arr(axes.stage.iter().map(|st| s(st.name())).collect()),
         ),
-    ])
+    ]);
+    obj(entries)
 }
 
 // --------------------------------------------------------------- payloads
@@ -615,7 +720,7 @@ pub fn measurement_to_json(m: &Measurement) -> Json {
                 .collect(),
         )
     };
-    obj(vec![
+    let mut entries = vec![
         ("peak_mib", num(m.peak_mib)),
         ("peak_allocated_mib", num(m.peak_allocated_mib)),
         ("peak_reserved_mib", num(m.peak_reserved_mib)),
@@ -625,7 +730,14 @@ pub fn measurement_to_json(m: &Measurement) -> Json {
         ("alloc_count", num(m.alloc_count as f64)),
         ("at_peak_bytes", breakdown(&m.at_peak)),
         ("persistent_bytes", breakdown(&m.persistent)),
-    ])
+    ];
+    // Additive: which pipeline stage this per-rank measurement
+    // describes. Emitted only when non-zero (absent = stage 0 /
+    // single device), keeping pre-parallelism payloads byte-identical.
+    if m.pp_stage > 0 {
+        entries.push(("pp_stage", num(m.pp_stage as f64)));
+    }
+    obj(entries)
 }
 
 fn modality_from_label(label: &str) -> Result<Modality, ApiError> {
@@ -741,6 +853,10 @@ fn candidate_from_json(v: &Json, base: &TrainConfig) -> Result<PlanCandidate, Ap
     if let Some(x) = get_u64(m, "dp", "plan candidate")? {
         cfg.dp = x;
     }
+    // Absent tp/pp means 1 (the planner emits them only when searched),
+    // NOT the base's value — a parallel base can still have tp=1 rows.
+    cfg.tp = get_u64(m, "tp", "plan candidate")?.unwrap_or(1);
+    cfg.pp = get_u64(m, "pp", "plan candidate")?.unwrap_or(1);
     if let Some(x) = get_u64(m, "seq_len", "plan candidate")? {
         cfg.seq_len = x;
     }
@@ -786,6 +902,7 @@ fn candidate_from_json(v: &Json, base: &TrainConfig) -> Result<PlanCandidate, Ap
         frontier_open: get_bool(m, "frontier_open", "plan candidate")?.unwrap_or(false),
         escalation,
         dominated: get_bool(m, "dominated", "plan candidate")?.unwrap_or(false),
+        binding_stage: get_u64(m, "binding_stage", "plan candidate")?.unwrap_or(0) as usize,
         cfg,
     })
 }
@@ -859,6 +976,54 @@ mod tests {
     }
 
     #[test]
+    fn parallelism_object_applies_strictly() {
+        let mut cfg = TrainConfig::llava_finetune_default();
+        let v = jparse(r#"{"tp": 2, "pp": 2, "dp": 2, "world_size": 8}"#).unwrap();
+        apply_parallelism(&mut cfg, &v).unwrap();
+        assert_eq!((cfg.tp, cfg.pp, cfg.dp), (2, 2, 2));
+
+        let e = apply_parallelism(&mut cfg, &jparse(r#"{"tpp": 2}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert!(e.message.contains("tpp"), "{}", e.message);
+
+        let bad_ws = jparse(r#"{"tp": 2, "pp": 2, "dp": 2, "world_size": 4}"#).unwrap();
+        let e = apply_parallelism(&mut cfg, &bad_ws).unwrap_err();
+        assert!(e.message.contains("world_size"), "{}", e.message);
+
+        let e = apply_parallelism(&mut cfg, &jparse(r#"{"tp": 0}"#).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn parallelism_emission_is_additive_only() {
+        let cfg = TrainConfig::llava_finetune_default();
+        assert!(parallelism_to_json(&cfg).is_none(), "trivial config emits no object");
+        let mut par = cfg.clone();
+        par.tp = 2;
+        par.pp = 4;
+        let v = parallelism_to_json(&par).unwrap();
+        let mut back = cfg.clone();
+        apply_parallelism(&mut back, &v).unwrap();
+        assert_eq!(back.cache_key(), par.cache_key());
+    }
+
+    #[test]
+    fn predict_params_round_trip_parallelism() {
+        let mut cfg = TrainConfig::llava_finetune_default();
+        cfg.tp = 2;
+        cfg.pp = 2;
+        let method = Method::Predict(PredictParams {
+            cfg: cfg.clone(),
+            capacity_mib: None,
+            detail: false,
+        });
+        let params = params_to_json(&method).unwrap();
+        let parsed = method_from_json("predict", Some(&params)).unwrap();
+        let Method::Predict(p) = parsed else { panic!("wrong method") };
+        assert_eq!(p.cfg.cache_key(), cfg.cache_key());
+    }
+
+    #[test]
     fn axes_default_to_standard_and_override_strictly() {
         let base = TrainConfig::llava_finetune_default();
         let a = axes_from_json(&jparse(r#"{"mbs": [1, 2]}"#).unwrap(), &base).unwrap();
@@ -866,8 +1031,24 @@ mod tests {
         assert_eq!(a.seq_len, Axes::standard(&base).seq_len);
         let e = axes_from_json(&jparse(r#"{"mbss": [1]}"#).unwrap(), &base).unwrap_err();
         assert!(e.message.contains("mbss"), "{}", e.message);
-        let back = axes_from_json(&axes_to_json(&a), &base).unwrap();
+        let back = axes_from_json(&axes_to_json(&a, &base), &base).unwrap();
         assert_eq!(back.mbs, a.mbs);
         assert_eq!(back.zero, a.zero);
+    }
+
+    #[test]
+    fn axes_pin_that_differs_from_a_parallel_base_survives_the_wire() {
+        let mut base = TrainConfig::llava_finetune_default();
+        base.tp = 2;
+        // tp pinned back to 1 against a tp=2 base: must be emitted…
+        let axes = Axes { tp: vec![1], ..Axes::fixed(&base) };
+        let doc = axes_to_json(&axes, &base);
+        let back = axes_from_json(&doc, &base).unwrap();
+        assert_eq!(back.tp, vec![1]);
+        // …while a pin equal to the base may be omitted (server default)
+        let pinned = Axes::fixed(&base);
+        let doc = axes_to_json(&pinned, &base);
+        let back = axes_from_json(&doc, &base).unwrap();
+        assert_eq!(back.tp, vec![2]);
     }
 }

@@ -23,7 +23,7 @@ use crate::model::layer::AttnImpl;
 use crate::model::zoo;
 use crate::parser::{self, features::EncodedRequest, ParsedModel};
 use crate::planner::{self, PlanRequest};
-use crate::predictor::{analytical, tensorized::TensorizedPredictor, Prediction};
+use crate::predictor::{analytical, tensorized::TensorizedPredictor, Prediction, RankPrediction};
 use crate::report;
 use crate::simulator::{self, SimContext};
 use crate::sweep::Sweep;
@@ -192,6 +192,15 @@ pub fn classify(e: anyhow::Error) -> ApiError {
     } else if msg.contains("reading ") || msg.contains(".toml") {
         // spec-file problems are the caller's to fix
         ApiError::bad_request(msg)
+    } else if msg.contains("splittable pipeline units") {
+        // pp deeper than the model's layer graph — a request problem
+        ApiError::bad_request(msg)
+    } else if msg.contains("unreasonably large")
+        || msg.contains("must be positive")
+        || msg.contains("axis ")
+    {
+        // TrainConfig/Axes validation failures are request problems
+        ApiError::bad_request(msg)
     } else {
         ApiError::internal(msg)
     }
@@ -216,9 +225,40 @@ pub(crate) fn model_summary_json(pm: &ParsedModel) -> Json {
 
 /// Build the `predict` ok-payload from a computed prediction. Shared by
 /// the batched service worker and the dispatcher, so every surface
-/// answers with the same document.
-pub(crate) fn predict_payload(p: &Prediction, params: &PredictParams) -> Result<Json, ApiError> {
+/// answers with the same document. `rank` carries the per-stage
+/// predictions when the config runs pipeline-parallel; the additive
+/// `parallelism` response block is emitted only for non-trivial tp/pp,
+/// so single-device payloads stay byte-identical to PR 4.
+pub(crate) fn predict_payload(
+    p: &Prediction,
+    rank: Option<&RankPrediction>,
+    params: &PredictParams,
+) -> Result<Json, ApiError> {
     let mut entries = vec![("prediction", codec::prediction_to_json(p))];
+    let cfg = &params.cfg;
+    if cfg.tp > 1 || cfg.pp > 1 {
+        let (per_stage, binding): (Vec<f64>, usize) = match rank {
+            Some(r) => (
+                r.per_stage.iter().map(|sp| sp.peak_mib as f64).collect(),
+                r.binding_stage,
+            ),
+            None => (vec![p.peak_mib as f64], 0),
+        };
+        entries.push((
+            "parallelism",
+            obj(vec![
+                ("tp", num(cfg.tp as f64)),
+                ("pp", num(cfg.pp as f64)),
+                ("dp", num(cfg.dp as f64)),
+                ("world_size", num(cfg.world_size() as f64)),
+                ("binding_stage", num(binding as f64)),
+                (
+                    "per_stage_peak_mib",
+                    Json::Arr(per_stage.into_iter().map(num).collect()),
+                ),
+            ]),
+        ));
+    }
     if let Some(cap) = params.capacity_mib {
         entries.push(("fits", Json::Bool(p.fits(cap as f32))));
     }
@@ -254,7 +294,9 @@ pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, Api
     }
     let rows = engine
         .run(&cfgs, |ctx, pm, cfg| {
-            let predicted = predictor::predict(cfg)?.peak_mib as f64;
+            // parse-once: both sides reuse the shared full parse (the
+            // per-rank predictor slices stage views from it for pp > 1)
+            let predicted = predictor::predict_per_rank_parsed(pm, cfg)?.peak_mib() as f64;
             let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
             Ok((predicted, measured))
         })
@@ -268,9 +310,16 @@ pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, Api
                 ("mbs", num(cfg.mbs as f64)),
                 ("zero", num(cfg.zero.as_int() as f64)),
                 ("dp", num(cfg.dp as f64)),
-                ("predicted_mib", num(*pred)),
-                ("measured_mib", num(*meas)),
             ];
+            // additive: single-device sweeps render byte-identically
+            if cfg.tp > 1 {
+                e.push(("tp", num(cfg.tp as f64)));
+            }
+            if cfg.pp > 1 {
+                e.push(("pp", num(cfg.pp as f64)));
+            }
+            e.push(("predicted_mib", num(*pred)));
+            e.push(("measured_mib", num(*meas)));
             if let Some(cap) = p.capacity_mib {
                 e.push(("fits", Json::Bool(*pred <= cap)));
             }
@@ -289,6 +338,16 @@ pub(crate) fn simulate_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
 }
 
 pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
+    if cfg.tp > 1 || cfg.pp > 1 {
+        // The prior-work baselines are single-device formulations (dp/
+        // ZeRO composes; tp/pp does not reach them), so comparing them
+        // against a per-rank measurement would be apples-to-oranges.
+        return Err(ApiError::bad_request(format!(
+            "baselines compare single-device estimators: tp {} / pp {} must be 1 \
+             (dp and the ZeRO stage compose fine)",
+            cfg.tp, cfg.pp
+        )));
+    }
     let measured = simulator::simulate(cfg).map_err(classify)?.peak_mib;
     let mut ests: Vec<Box<dyn Estimator>> = vec![
         Box::new(AnalyticalEstimator),
@@ -423,6 +482,14 @@ impl Dispatcher {
     pub(crate) fn payload(&mut self, method: &Method) -> Result<Json, ApiError> {
         match method {
             Method::Predict(p) => {
+                if p.cfg.pp > 1 {
+                    // Per-rank pipeline prediction needs one encode per
+                    // stage, which the single-artifact backends cannot
+                    // express; the analytical mirror (bit-identical to
+                    // the tensorized path per stage) answers directly.
+                    let rp = predictor::predict_per_rank(&p.cfg).map_err(classify)?;
+                    return predict_payload(rp.binding(), Some(&rp), p);
+                }
                 let est = self.backend.estimate(&p.cfg).map_err(classify)?;
                 let pred = est.prediction.ok_or_else(|| {
                     ApiError::internal(format!(
@@ -430,7 +497,7 @@ impl Dispatcher {
                         self.backend.id()
                     ))
                 })?;
-                predict_payload(&pred, p)
+                predict_payload(&pred, None, p)
             }
             Method::Plan(p) => plan_payload(&p.req, &self.engine),
             Method::Sweep(p) => sweep_payload(p, &self.engine),

@@ -60,6 +60,33 @@ pub fn predict_text(payload: &Json, capacity_gib: Option<f64>) -> Result<String,
     let _ = writeln!(out, "  M_opt       {}", human_mib(p.opt_mib as f64));
     let _ = writeln!(out, "  M_act       {}", human_mib(p.act_mib as f64));
     let _ = writeln!(out, "  transient   {}", human_mib(p.transient_mib as f64));
+    // Additive block: present only when the request carried non-trivial
+    // tensor/pipeline parallelism, so single-device output is pinned
+    // byte-identical to the pre-parallelism rendering.
+    if let Some(par) = payload.get("parallelism") {
+        let g = |key: &str| -> Result<f64, ApiError> {
+            par.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::bad_request(format!("parallelism missing {key:?}")))
+        };
+        let _ = writeln!(
+            out,
+            "parallelism: tp={} pp={} dp={} (world size {}); per-rank peak binds at stage {}",
+            g("tp")? as u64,
+            g("pp")? as u64,
+            g("dp")? as u64,
+            g("world_size")? as u64,
+            g("binding_stage")? as u64,
+        );
+        if let Some(stages) = par.get("per_stage_peak_mib").and_then(Json::as_arr) {
+            let peaks: Vec<String> = stages
+                .iter()
+                .filter_map(Json::as_f64)
+                .map(human_mib)
+                .collect();
+            let _ = writeln!(out, "  per-stage peaks: {}", peaks.join(" | "));
+        }
+    }
     let _ = writeln!(out, "per-modality split (Fig. 1 decomposition):");
     let _ = writeln!(out, "{}", report::table_from_shares(&shares).render());
     if let Some(cap) = capacity_gib {
@@ -86,7 +113,16 @@ pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, 
         .get("points")
         .and_then(Json::as_arr)
         .ok_or_else(|| ApiError::bad_request("sweep payload missing \"points\" array"))?;
-    let mut headers = vec!["seq", "mbs", "zero", "dp", "predicted GiB", "measured GiB", "APE %"];
+    // tp/pp columns appear only when some point carries them (additive
+    // fields; single-device sweeps render exactly as before).
+    let parallel = points
+        .iter()
+        .any(|pt| pt.get("tp").is_some() || pt.get("pp").is_some());
+    let mut headers = vec!["seq", "mbs", "zero", "dp"];
+    if parallel {
+        headers.extend(["tp", "pp"]);
+    }
+    headers.extend(["predicted GiB", "measured GiB", "APE %"]);
     if with_verdict {
         headers.push("verdict");
     }
@@ -103,10 +139,17 @@ pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, 
             (f("mbs")? as u64).to_string(),
             (f("zero")? as u64).to_string(),
             (f("dp")? as u64).to_string(),
+        ];
+        if parallel {
+            let opt = |key: &str| pt.get(key).and_then(Json::as_f64).unwrap_or(1.0) as u64;
+            row.push(opt("tp").to_string());
+            row.push(opt("pp").to_string());
+        }
+        row.extend([
             format!("{:.2}", p / 1024.0),
             format!("{:.2}", m / 1024.0),
             format!("{:.1}", report::ape(p, m) * 100.0),
-        ];
+        ]);
         if with_verdict {
             let fits = pt
                 .get("fits")

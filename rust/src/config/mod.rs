@@ -205,6 +205,15 @@ pub struct TrainConfig {
     pub clips_per_sample: u64,
     /// Data-parallel degree (paper: DP, 1..=8).
     pub dp: u64,
+    /// Tensor-parallel degree (Megatron-style row/column sharding of
+    /// linear/embedding/LoRA weights plus head-split attention
+    /// activations; see ARCHITECTURE.md §Parallelism). 1 = off.
+    pub tp: u64,
+    /// Pipeline-parallel degree: the layer graph is partitioned into
+    /// `pp` contiguous stages at transformer-block granularity and the
+    /// per-rank peak is the max over stages (1F1B in-flight activation
+    /// retention). 1 = off.
+    pub pp: u64,
     pub zero: ZeroStage,
     pub optimizer: OptimizerKind,
     pub precision: Precision,
@@ -252,6 +261,8 @@ impl TrainConfig {
             images_per_sample: 1,
             clips_per_sample: 1,
             dp: 1,
+            tp: 1,
+            pp: 1,
             zero: ZeroStage::Zero2,
             optimizer: OptimizerKind::AdamW,
             precision: Precision::Bf16Mixed,
@@ -270,6 +281,21 @@ impl TrainConfig {
         }
         if self.dp > 1024 {
             bail!("dp {} is unreasonably large", self.dp);
+        }
+        if self.tp == 0 || self.pp == 0 {
+            bail!("tp and pp must be positive");
+        }
+        if self.tp > 64 || self.pp > 64 {
+            bail!("tp {} / pp {} is unreasonably large (max 64)", self.tp, self.pp);
+        }
+        if self.world_size() > 4096 {
+            bail!(
+                "world size {} (tp {} x pp {} x dp {}) is unreasonably large",
+                self.world_size(),
+                self.tp,
+                self.pp,
+                self.dp
+            );
         }
         if self.stage == Stage::LoraFinetune && self.lora.is_none() {
             bail!("stage=lora requires a [lora] section");
@@ -307,6 +333,24 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get_int("", "dp") {
             cfg.dp = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "tp") {
+            cfg.tp = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "pp") {
+            cfg.pp = v as u64;
+        }
+        if let Some(v) = doc.get_int("", "world_size") {
+            if cfg.world_size() != v as u64 {
+                bail!(
+                    "world_size {} does not match tp {} x pp {} x dp {} = {}",
+                    v,
+                    cfg.tp,
+                    cfg.pp,
+                    cfg.dp,
+                    cfg.world_size()
+                );
+            }
         }
         if let Some(v) = doc.get_int("", "zero") {
             cfg.zero = ZeroStage::parse(v as u64)?;
@@ -364,11 +408,18 @@ impl TrainConfig {
         self.mbs * self.dp
     }
 
+    /// Total GPU count implied by the parallelism degrees.
+    pub fn world_size(&self) -> u64 {
+        self.tp * self.pp * self.dp
+    }
+
     /// Stable fingerprint of every field that changes the *parsed*
-    /// model's geometry. `dp`, `zero`, `bucket_elems` and overheads are
-    /// deliberately excluded: they only rescale shards/buffers, which
-    /// the simulator recomputes per config — so the sweep engine shares
-    /// one parse per distinct geometry key.
+    /// model's geometry. `dp`, `pp`, `zero`, `bucket_elems` and
+    /// overheads are deliberately excluded: they only rescale
+    /// shards/buffers or re-slice the layer list into stage views,
+    /// which the simulator recomputes per config — so the sweep engine
+    /// shares one parse per distinct geometry key. `tp` IS part of the
+    /// geometry: tensor-parallel sharding is applied at parse time.
     pub fn geometry_key(&self) -> String {
         let lora = match &self.lora {
             Some(l) => format!(
@@ -380,7 +431,7 @@ impl TrainConfig {
             None => "none".to_string(),
         };
         format!(
-            "{}|{:?}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}",
+            "{}|{:?}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}|tp{}",
             self.model,
             self.stage,
             self.mbs,
@@ -392,6 +443,7 @@ impl TrainConfig {
             self.attn,
             self.grad_checkpoint,
             lora,
+            self.tp,
         )
     }
 
@@ -399,9 +451,10 @@ impl TrainConfig {
     /// feature matrix — the key for the service's encode cache.
     pub fn cache_key(&self) -> String {
         format!(
-            "{}|{}|{:?}|{}|{}|{}|{}",
+            "{}|{}|pp{}|{:?}|{}|{}|{}|{}",
             self.geometry_key(),
             self.dp,
+            self.pp,
             self.zero,
             self.bucket_elems,
             self.overheads.cuda_ctx_mib,
@@ -472,6 +525,40 @@ alloc_frac = 0.03
         assert!(TrainConfig::from_toml("zero = 5\n").is_err());
         assert!(TrainConfig::from_toml("optimizer = \"lion\"\n").is_err());
         assert!(TrainConfig::from_toml("stage = \"lora\"\n").is_err()); // no [lora]
+        assert!(TrainConfig::from_toml("tp = 0\n").is_err());
+        assert!(TrainConfig::from_toml("pp = 0\n").is_err());
+        assert!(TrainConfig::from_toml("tp = 128\n").is_err());
+    }
+
+    #[test]
+    fn parallelism_fields_parse_and_default_to_one() {
+        let cfg = TrainConfig::from_toml("mbs = 2\n").unwrap();
+        assert_eq!((cfg.tp, cfg.pp, cfg.dp), (1, 1, 1));
+        let cfg = TrainConfig::from_toml("tp = 2\npp = 4\ndp = 2\nworld_size = 16\n").unwrap();
+        assert_eq!((cfg.tp, cfg.pp, cfg.dp), (2, 4, 2));
+        assert_eq!(cfg.world_size(), 16);
+    }
+
+    #[test]
+    fn world_size_mismatch_rejected() {
+        let err = TrainConfig::from_toml("tp = 2\npp = 2\ndp = 2\nworld_size = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("world_size"), "{err}");
+        assert!(err.contains("8"), "should name the actual product: {err}");
+    }
+
+    #[test]
+    fn tp_is_in_geometry_key_but_pp_is_not() {
+        let base = TrainConfig::llava_finetune_default();
+        let mut tp2 = base.clone();
+        tp2.tp = 2;
+        assert_ne!(tp2.geometry_key(), base.geometry_key());
+        let mut pp2 = base.clone();
+        pp2.pp = 2;
+        assert_eq!(pp2.geometry_key(), base.geometry_key());
+        // ...but pp still distinguishes cache keys (predictions differ)
+        assert_ne!(pp2.cache_key(), base.cache_key());
     }
 
     #[test]

@@ -307,7 +307,9 @@ fn try_submit_on(
                 job.req.id,
                 ApiError::new(
                     ErrorCode::OverCapacity,
-                    format!("service queue is full ({queue_depth} requests in flight); retry later"),
+                    format!(
+                        "service queue is full ({queue_depth} requests in flight); retry later"
+                    ),
                 ),
             );
         }
@@ -333,6 +335,12 @@ fn worker_loop(
     // Parse+encode is ~45% of a request's CPU cost (see EXPERIMENTS.md
     // §Perf); schedulers re-submit near-identical configs, so memoize.
     let mut cache = features::EncodeCache::new(256);
+    // Pipeline-parallel predictions bypass the encoded batch (one
+    // encode per stage), so they get their own bounded FIFO memo —
+    // repeated screening of the same pp config stays O(1) too.
+    let mut rank_cache: std::collections::HashMap<String, Arc<crate::predictor::RankPrediction>> =
+        std::collections::HashMap::new();
+    let mut rank_order: std::collections::VecDeque<String> = std::collections::VecDeque::new();
     // Serial methods share the payload builders with the CLI through a
     // Dispatcher wired to this service's metrics. Its own predict
     // backend is never exercised here — predictions take the batched
@@ -362,6 +370,48 @@ fn worker_loop(
             let mut encoded = Vec::new();
             let mut meta = Vec::new();
             for (params, id, reply) in predicts {
+                if params.cfg.pp > 1 {
+                    // Pipeline-parallel predictions need one encode per
+                    // stage (per-rank = max over stage encodes), which
+                    // the single-encode batch cannot express — the
+                    // analytical mirror answers them on the worker,
+                    // memoized by cache_key (which covers pp).
+                    let key = params.cfg.cache_key();
+                    let rp = match rank_cache.get(&key) {
+                        Some(hit) => Ok(hit.clone()),
+                        None => crate::predictor::predict_per_rank(&params.cfg).map(|rp| {
+                            let rp = Arc::new(rp);
+                            if rank_cache.len() >= 256 {
+                                if let Some(old) = rank_order.pop_front() {
+                                    rank_cache.remove(&old);
+                                }
+                            }
+                            rank_cache.insert(key.clone(), rp.clone());
+                            rank_order.push_back(key);
+                            rp
+                        }),
+                    };
+                    let resp = match rp {
+                        Ok(rp) => {
+                            let payload =
+                                dispatch::predict_payload(rp.binding(), Some(rp.as_ref()), &params);
+                            match payload {
+                                Ok(payload) => ApiResponse::ok(id, payload),
+                                Err(e) => {
+                                    metrics.on_error(1);
+                                    ApiResponse::err(id, e)
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            metrics.on_error(1);
+                            ApiResponse::err(id, dispatch::classify(e))
+                        }
+                    };
+                    metrics.on_method(PREDICT_IDX, t0.elapsed(), resp.is_ok());
+                    let _ = reply.send(resp);
+                    continue;
+                }
                 match cache.get_or_encode(&params.cfg) {
                     Ok(enc) => {
                         encoded.push(enc);
@@ -381,7 +431,7 @@ fn worker_loop(
                     Ok(preds) => {
                         metrics.on_batch(meta.len(), t0.elapsed());
                         for ((params, id, reply), p) in meta.into_iter().zip(preds) {
-                            let resp = match dispatch::predict_payload(&p, &params) {
+                            let resp = match dispatch::predict_payload(&p, None, &params) {
                                 Ok(payload) => ApiResponse::ok(id, payload),
                                 Err(e) => {
                                     metrics.on_error(1);

@@ -78,7 +78,11 @@ impl SettingResult {
 /// parses it once and fans the eight simulations across cores; only the
 /// `predict` closure runs on the caller's thread (the PJRT-backed
 /// predictor is not `Sync`).
-pub fn run_setting<F>(name: &str, make_cfg: impl Fn(u64) -> TrainConfig, predict: F) -> Result<SettingResult>
+pub fn run_setting<F>(
+    name: &str,
+    make_cfg: impl Fn(u64) -> TrainConfig,
+    predict: F,
+) -> Result<SettingResult>
 where
     F: Fn(&TrainConfig) -> Result<f64>,
 {

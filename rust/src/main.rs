@@ -106,6 +106,8 @@ fn print_help() {
          \x20 --model-file <arch.toml>  architecture-IR spec file (see examples/archs/)\n\
          \x20 --stage <pretrain|finetune|lora|full>\n\
          \x20 --mbs N --seq-len N --dp N --zero 0..3\n\
+         \x20 --tp N --pp N             tensor/pipeline parallel degrees (default 1)\n\
+         \x20 --world-size N            assert tp*pp*dp == N\n\
          \x20 --images-per-sample N --clips-per-sample N\n\
          \x20 --optimizer <adamw|sgdm|sgd> --precision <bf16|fp16|fp32>\n\
          \x20 --attention <flash|eager> --no-ckpt\n\
@@ -119,6 +121,8 @@ fn print_help() {
          \x20 --seq-list 512,...,4096   sequence-length candidates\n\
          \x20 --dp-list 1,2,4,8         DP candidates\n\
          \x20 (passing plain --mbs/--seq-len/--dp pins that axis instead)\n\
+         \x20 --tp-list 1,2,4           free the tensor-parallel axis\n\
+         \x20 --pp-list 1,2,4           free the pipeline-parallel axis\n\
          \x20 --zero-list 0,2,3         free the ZeRO axis\n\
          \x20 --precision-list bf16,fp32  free the precision axis\n\
          \x20 --stage-list finetune,lora  free the training-stage axis\n\
@@ -223,6 +227,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     axes.mbs = u64_list(args, "mbs-list", axes.mbs)?;
     axes.seq_len = u64_list(args, "seq-list", axes.seq_len)?;
     axes.dp = u64_list(args, "dp-list", axes.dp)?;
+    // tp/pp stay pinned to the base (--tp/--pp) unless a list frees them.
+    axes.tp = u64_list(args, "tp-list", axes.tp)?;
+    axes.pp = u64_list(args, "pp-list", axes.pp)?;
     if args.get("zero-list").is_some() {
         axes.zero = u64_list(args, "zero-list", vec![])?
             .into_iter()
@@ -384,6 +391,24 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get_parse::<u64>("dp")? {
         cfg.dp = v;
     }
+    if let Some(v) = args.get_parse::<u64>("tp")? {
+        cfg.tp = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("pp")? {
+        cfg.pp = v;
+    }
+    if let Some(ws) = args.get_parse::<u64>("world-size")? {
+        if cfg.world_size() != ws {
+            bail!(
+                "--world-size {} does not match tp {} x pp {} x dp {} = {}",
+                ws,
+                cfg.tp,
+                cfg.pp,
+                cfg.dp,
+                cfg.world_size()
+            );
+        }
+    }
     if let Some(v) = args.get_parse::<u64>("zero")? {
         cfg.zero = ZeroStage::parse(v)?;
     }
@@ -438,7 +463,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     if let Some(path) = args.get("timeline") {
         let pm = parser::parse(&cfg)?;
-        let events = simulator::trace::generate(&pm, &cfg);
+        // For pp > 1 the timeline describes the binding rank's stage —
+        // the same per-rank view the printed measurement reports.
+        let view;
+        let traced = if cfg.pp > 1 {
+            use mmpredict::parser::pipeline;
+            let binding = simulator::simulate(&cfg)?.pp_stage;
+            let bounds = pipeline::stage_bounds(&pm, cfg.pp)?;
+            let in_flight = pipeline::in_flight(cfg.pp, binding);
+            view = pipeline::stage_view(&pm, bounds[binding], in_flight);
+            &view
+        } else {
+            &pm
+        };
+        let events = simulator::trace::generate(traced, &cfg);
         let (_, tl) = simulator::engine::replay_with_timeline(&events)?;
         let mut csv = String::from("event,phase,allocated_mib,reserved_mib\n");
         for (i, phase, a, r) in tl {
@@ -453,6 +491,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     let m = simulator::simulate(&cfg)?;
     println!("measured peak:   {}", human_mib(m.peak_mib));
+    if cfg.pp > 1 {
+        println!("  per-rank view  binding pipeline stage {}/{}", m.pp_stage, cfg.pp);
+    }
     println!("  allocated pk   {}", human_mib(m.peak_allocated_mib));
     println!("  reserved pk    {}", human_mib(m.peak_reserved_mib));
     println!("  cuda context   {}", human_mib(m.cuda_ctx_mib));

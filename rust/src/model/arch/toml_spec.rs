@@ -150,7 +150,8 @@ fn parse_tower(doc: &Doc, section: &str, tname: &str) -> Result<TowerSpec> {
     };
     let (family, inherit_attn) = match family {
         "vit" => {
-            check_keys(doc, section, &allow(&["hidden", "heads", "mlp", "blocks", "patch", "image_size"]))?;
+            let keys = allow(&["hidden", "heads", "mlp", "blocks", "patch", "image_size"]);
+            check_keys(doc, section, &keys)?;
             let (attn, inherit) = parse_attn(doc, section, "eager")?;
             let cfg = VitConfig {
                 hidden: req_u64(doc, section, "hidden")?,
@@ -235,10 +236,13 @@ fn parse_connector(doc: &Doc, section: &str, tower: &str) -> Result<ConnectorSpe
     let kind = match doc.get_str(section, "kind").unwrap_or("mlp2x_gelu") {
         "mlp2x_gelu" | "mlp" => ConnectorKind::Mlp2xGelu,
         "linear" => ConnectorKind::Linear,
-        "spatial_merge" => ConnectorKind::SpatialMerge { merge: opt_u64(doc, section, "merge", 2)? },
+        "spatial_merge" => {
+            ConnectorKind::SpatialMerge { merge: opt_u64(doc, section, "merge", 2)? }
+        }
         other => bail!("[{section}] unknown kind {other:?} (mlp2x_gelu|linear|spatial_merge)"),
     };
-    if !matches!(kind, ConnectorKind::SpatialMerge { .. }) && doc.get_int(section, "merge").is_some()
+    if !matches!(kind, ConnectorKind::SpatialMerge { .. })
+        && doc.get_int(section, "merge").is_some()
     {
         bail!("[{section}] `merge` only applies to kind = \"spatial_merge\"");
     }

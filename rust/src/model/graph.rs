@@ -21,11 +21,23 @@ pub fn push_vit_block(
     let p = format!("encoder.layers.{idx}");
     let head_dim = hidden / heads;
     m.push(format!("{p}.layer_norm1"), LayerKind::LayerNorm { dim: hidden });
-    m.push(format!("{p}.self_attn.q_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
-    m.push(format!("{p}.self_attn.k_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
-    m.push(format!("{p}.self_attn.v_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    m.push(
+        format!("{p}.self_attn.q_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true },
+    );
+    m.push(
+        format!("{p}.self_attn.k_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true },
+    );
+    m.push(
+        format!("{p}.self_attn.v_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true },
+    );
     push_attention_core(m, &p, heads, head_dim, kv_len, attn);
-    m.push(format!("{p}.self_attn.out_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true });
+    m.push(
+        format!("{p}.self_attn.out_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: true },
+    );
     m.push(format!("{p}.residual_attn"), LayerKind::Add { dim: hidden });
     m.push(format!("{p}.layer_norm2"), LayerKind::LayerNorm { dim: hidden });
     m.push(format!("{p}.mlp.fc1"), LayerKind::Linear { d_in: hidden, d_out: mlp, bias: true });
@@ -50,19 +62,40 @@ pub fn push_llama_block(
     let p = format!("layers.{idx}");
     let head_dim = hidden / heads;
     m.push(format!("{p}.input_layernorm"), LayerKind::RmsNorm { dim: hidden });
-    m.push(format!("{p}.self_attn.q_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false });
-    m.push(format!("{p}.self_attn.k_proj"), LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false });
-    m.push(format!("{p}.self_attn.v_proj"), LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false });
+    m.push(
+        format!("{p}.self_attn.q_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false },
+    );
+    m.push(
+        format!("{p}.self_attn.k_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false },
+    );
+    m.push(
+        format!("{p}.self_attn.v_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: kv_heads * head_dim, bias: false },
+    );
     m.push(format!("{p}.self_attn.rotary"), LayerKind::Rotary { dim: hidden });
     push_attention_core(m, &p, heads, head_dim, kv_len, attn);
-    m.push(format!("{p}.self_attn.o_proj"), LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false });
+    m.push(
+        format!("{p}.self_attn.o_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: hidden, bias: false },
+    );
     m.push(format!("{p}.residual_attn"), LayerKind::Add { dim: hidden });
     m.push(format!("{p}.post_attention_layernorm"), LayerKind::RmsNorm { dim: hidden });
-    m.push(format!("{p}.mlp.gate_proj"), LayerKind::Linear { d_in: hidden, d_out: inter, bias: false });
-    m.push(format!("{p}.mlp.up_proj"), LayerKind::Linear { d_in: hidden, d_out: inter, bias: false });
+    m.push(
+        format!("{p}.mlp.gate_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: inter, bias: false },
+    );
+    m.push(
+        format!("{p}.mlp.up_proj"),
+        LayerKind::Linear { d_in: hidden, d_out: inter, bias: false },
+    );
     m.push(format!("{p}.mlp.act"), LayerKind::Activation { f: ActFn::Silu, dim: inter });
     m.push(format!("{p}.mlp.gate_mul"), LayerKind::Mul { dim: inter });
-    m.push(format!("{p}.mlp.down_proj"), LayerKind::Linear { d_in: inter, d_out: hidden, bias: false });
+    m.push(
+        format!("{p}.mlp.down_proj"),
+        LayerKind::Linear { d_in: inter, d_out: hidden, bias: false },
+    );
     m.push(format!("{p}.residual_mlp"), LayerKind::Add { dim: hidden });
 }
 
@@ -79,12 +112,21 @@ fn push_attention_core(
 ) {
     match attn {
         AttnImpl::Eager => {
-            m.push(format!("{prefix}.self_attn.scores"), LayerKind::AttnScores { heads, head_dim, kv_len });
+            m.push(
+                format!("{prefix}.self_attn.scores"),
+                LayerKind::AttnScores { heads, head_dim, kv_len },
+            );
             m.push(format!("{prefix}.self_attn.softmax"), LayerKind::AttnSoftmax { heads, kv_len });
-            m.push(format!("{prefix}.self_attn.context"), LayerKind::AttnContext { heads, head_dim, kv_len });
+            m.push(
+                format!("{prefix}.self_attn.context"),
+                LayerKind::AttnContext { heads, head_dim, kv_len },
+            );
         }
         AttnImpl::Flash => {
-            m.push(format!("{prefix}.self_attn.flash"), LayerKind::FlashAttn { heads, head_dim, kv_len });
+            m.push(
+                format!("{prefix}.self_attn.flash"),
+                LayerKind::FlashAttn { heads, head_dim, kv_len },
+            );
         }
     }
 }

@@ -134,7 +134,9 @@ impl LayerKind {
             // fp32 upcast of logits + softmax temp
             LayerKind::CrossEntropy { vocab } => t * vocab,
             LayerKind::PatchEmbed { channels, patch, .. } => t * channels * patch * patch,
-            LayerKind::Conv1d { c_in, kernel, stride, rate, .. } => t * rate * stride * c_in * kernel,
+            LayerKind::Conv1d { c_in, kernel, stride, rate, .. } => {
+                t * rate * stride * c_in * kernel
+            }
             _ => 0,
         }
     }
@@ -180,8 +182,12 @@ impl LayerKind {
     pub fn flops(&self, t: u64) -> u64 {
         match *self {
             LayerKind::Linear { d_in, d_out, .. } => 2 * t * d_in * d_out,
-            LayerKind::PatchEmbed { channels, dim, patch } => 2 * t * channels * patch * patch * dim,
-            LayerKind::Conv1d { c_in, c_out, kernel, rate, .. } => 2 * t * rate * c_in * c_out * kernel,
+            LayerKind::PatchEmbed { channels, dim, patch } => {
+                2 * t * channels * patch * patch * dim
+            }
+            LayerKind::Conv1d { c_in, c_out, kernel, rate, .. } => {
+                2 * t * rate * c_in * c_out * kernel
+            }
             LayerKind::AttnScores { heads, head_dim, kv_len } => 2 * t * heads * head_dim * kv_len,
             // `probs @ V` contracts over the kv axis: [t, kv] x [kv, d].
             LayerKind::AttnContext { heads, head_dim, kv_len } => 2 * t * heads * kv_len * head_dim,

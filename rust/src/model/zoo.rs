@@ -20,10 +20,20 @@ pub type ZooEntry = ArchEntry;
 /// single table.
 const PRESETS: &[(&str, fn() -> ArchSpec)] = &[
     ("llava-1.5-7b", || {
-        llava("llava-1.5-7b", vision::clip_vit_l14_336(), language::vicuna_7b(AttnImpl::Flash), true)
+        llava(
+            "llava-1.5-7b",
+            vision::clip_vit_l14_336(),
+            language::vicuna_7b(AttnImpl::Flash),
+            true,
+        )
     }),
     ("llava-1.5-13b", || {
-        llava("llava-1.5-13b", vision::clip_vit_l14_336(), language::vicuna_13b(AttnImpl::Flash), true)
+        llava(
+            "llava-1.5-13b",
+            vision::clip_vit_l14_336(),
+            language::vicuna_13b(AttnImpl::Flash),
+            true,
+        )
     }),
     ("llava-tiny", || llava("llava-tiny", vision::vit_tiny(), language::llama_tiny(), false)),
     ("vicuna-7b", || unimodal("vicuna-7b", language::vicuna_7b(AttnImpl::Flash), true)),

@@ -29,6 +29,56 @@ pub fn is_trainable(layer: &Layer, stage: Stage) -> bool {
     }
 }
 
+/// Per-layer tensor-parallel sharding profile: which of the layer's
+/// memory quantities divide across the tp group.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TpShards {
+    /// Parameters (and hence grads / optimizer states / master copy).
+    pub params: bool,
+    /// The saved output activation.
+    pub saved_act: bool,
+    /// Forward ephemeral + backward grad-wrt-input transients.
+    pub transients: bool,
+}
+
+/// Megatron-style tensor-parallel sharding of one layer, decided by
+/// kind and (for linears) by the projection's role in its block:
+///
+/// * **column-parallel** linears (q/k/v, gate/up, the ViT `fc1`) split
+///   the weight along the output axis — the *saved output* is sharded,
+///   but the input (hence the backward's grad-wrt-input transient) is
+///   replicated;
+/// * **row-parallel** linears (`o_proj`/`out_proj`, `down_proj`,
+///   `fc2`) split along the input axis — the output is all-reduced
+///   back to full size (its saved activation is replicated), while the
+///   grad-wrt-input transient is sharded;
+/// * head-split / intermediate ops (attention tensors, the MLP
+///   activation and SwiGLU gate product, rotary Q/K) shard both their
+///   saved and transient tensors;
+/// * the vocab embedding and LoRA adapters shard parameters only;
+/// * everything else — norms, residual adds, position embeddings,
+///   conv stems, unclassified linears (projectors, heads), the loss
+///   log-probs — is fully replicated. Conservative by construction: a
+///   layer the classifier does not recognize never gets its per-rank
+///   footprint underestimated, and there is no sequence parallelism.
+pub fn tp_shards(kind_tag: &str, name: &str) -> TpShards {
+    const COLUMN: &[&str] = &["q_proj", "k_proj", "v_proj", "gate_proj", "up_proj", "fc1"];
+    const ROW: &[&str] = &["o_proj", "out_proj", "down_proj", "fc2"];
+    match kind_tag {
+        "linear" => {
+            let col = COLUMN.iter().any(|s| name.ends_with(s));
+            let row = ROW.iter().any(|s| name.ends_with(s));
+            TpShards { params: col || row, saved_act: col, transients: row }
+        }
+        "embedding" | "lora_a" | "lora_b" => {
+            TpShards { params: true, saved_act: false, transients: false }
+        }
+        "activation" | "mul" | "rotary" | "attn_scores" | "attn_softmax" | "attn_context"
+        | "flash_attn" => TpShards { params: false, saved_act: true, transients: true },
+        _ => TpShards::default(),
+    }
+}
+
 /// Extract the transformer block index from a layer name
 /// (`...layers.<n>...` → `Some(n)`).
 pub fn block_index(name: &str) -> Option<u32> {
@@ -177,6 +227,38 @@ pub fn apply_checkpointing(records: &mut [LayerRecord]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tp_shard_profiles_follow_megatron_roles() {
+        // column-parallel: params + saved output sharded, input-side full
+        for name in ["layers.0.self_attn.q_proj", "layers.0.mlp.gate_proj", "mlp.fc1"] {
+            let s = tp_shards("linear", name);
+            assert_eq!(s, TpShards { params: true, saved_act: true, transients: false }, "{name}");
+        }
+        // row-parallel: params + grad-wrt-input sharded, output replicated
+        // (it is all-reduced back to full size)
+        for name in ["layers.0.self_attn.o_proj", "encoder.self_attn.out_proj", "mlp.down_proj"] {
+            let s = tp_shards("linear", name);
+            assert_eq!(s, TpShards { params: true, saved_act: false, transients: true }, "{name}");
+        }
+        // unclassified linears (projectors, heads) are fully replicated
+        assert_eq!(tp_shards("linear", "mm_projector.0"), TpShards::default());
+        assert_eq!(tp_shards("linear", "lm_head"), TpShards::default());
+        // head-split / intermediate ops shard saved + transient tensors
+        for tag in ["flash_attn", "attn_softmax", "attn_scores", "activation", "mul", "rotary"] {
+            let s = tp_shards(tag, "layers.0.x");
+            assert!(!s.params && s.saved_act && s.transients, "{tag}");
+        }
+        // vocab embedding / LoRA adapters: weights only
+        for tag in ["embedding", "lora_a", "lora_b"] {
+            let s = tp_shards(tag, "x");
+            assert!(s.params && !s.saved_act && !s.transients, "{tag}");
+        }
+        // replicated everywhere: norms, adds, stems, the loss
+        for tag in ["layer_norm", "rms_norm", "add", "patch_embed", "conv1d", "cross_entropy"] {
+            assert_eq!(tp_shards(tag, "x"), TpShards::default(), "{tag}");
+        }
+    }
 
     #[test]
     fn block_index_extraction() {

@@ -237,7 +237,8 @@ mod tests {
         let (pm, _, enc) = encoded();
         let padded = enc.padded(1024).unwrap();
         assert_eq!(padded.len(), 1024 * NUM_FEATURES);
-        let first_pad = &padded[pm.num_layers() * NUM_FEATURES..(pm.num_layers() + 1) * NUM_FEATURES];
+        let pad_start = pm.num_layers() * NUM_FEATURES;
+        let first_pad = &padded[pad_start..pad_start + NUM_FEATURES];
         assert!(first_pad.iter().all(|&v| v == 0.0));
     }
 

@@ -6,6 +6,7 @@
 
 pub mod behavior;
 pub mod features;
+pub mod pipeline;
 
 use anyhow::Result;
 
@@ -156,11 +157,15 @@ pub fn parse_spec(
     let (act_w, grad_w, master_w) = cfg.precision.byte_widths();
     let (param_shard, grad_shard, opt_shard) = cfg.zero.shard_factors(cfg.dp);
     let opt_mult = cfg.optimizer.state_mult();
+    let tp = cfg.tp.max(1);
 
     // Pass 1: flat layer list + trainability. Each module's token
     // count resolves through its own stream (per-module, not
     // per-modality — multi-tower models have several streams of the
-    // same modality).
+    // same modality). Tensor parallelism is applied here, per layer:
+    // shardable weights and sharded-axis activations are divided by
+    // `tp` (ceil), so every downstream consumer — feature encoder,
+    // trace generator, ZeRO buffers — sees the per-rank quantities.
     let mut records: Vec<LayerRecord> = Vec::with_capacity(spec.num_layers());
     for module in &spec.modules {
         for layer in &module.layers {
@@ -171,31 +176,35 @@ pub fn parse_spec(
                 .act_dtype_override()
                 .map(|d| d.bytes())
                 .unwrap_or(act_w);
+            let tag = layer.kind.tag();
+            let tps = behavior::tp_shards(tag, &layer.name);
+            let shard = |e: u64, on: bool| if on { e.div_ceil(tp) } else { e };
+            let compute_sharded = tps.params || tps.saved_act || tps.transients;
             records.push(LayerRecord {
                 name: layer.name.clone(),
                 module: module.name.clone(),
                 modality: layer.modality,
-                kind_tag: layer.kind.tag(),
+                kind_tag: tag,
                 block: behavior::block_index(&layer.name),
                 trainable,
                 on_bwd_path: false, // pass 2
-                param_elems: layer.kind.param_elems(),
+                param_elems: shard(layer.kind.param_elems(), tps.params),
                 param_bytes: act_w,
                 grad_bytes: if trainable { grad_w } else { 0 },
                 opt_state_mult: if trainable { opt_mult } else { 0.0 },
                 opt_bytes: 4,
                 master_bytes: if trainable { master_w } else { 0 },
-                act_elems: layer.kind.saved_act_elems(t),
+                act_elems: shard(layer.kind.saved_act_elems(t), tps.saved_act),
                 act_bytes,
-                ephemeral_elems: layer.kind.ephemeral_elems(t),
-                bwd_transient_elems: layer.kind.bwd_transient_elems(t),
+                ephemeral_elems: shard(layer.kind.ephemeral_elems(t), tps.transients),
+                bwd_transient_elems: shard(layer.kind.bwd_transient_elems(t), tps.transients),
                 recompute_window_elems: 0,
                 recompute_keep: 1.0,
                 workspace_mib: 0.0,
                 param_shard,
                 grad_shard,
                 opt_shard,
-                flops: layer.kind.flops(t),
+                flops: shard(layer.kind.flops(t), compute_sharded),
             });
         }
     }
@@ -353,10 +362,55 @@ mod tests {
         assert!(!adapters.is_empty());
         assert!(adapters.iter().all(|l| l.trainable));
         // base linears frozen
-        assert!(pm
-            .layers
-            .iter()
-            .filter(|l| l.module == "language_model" && l.kind_tag == "linear" && !l.name.contains("lora"))
-            .all(|l| !l.trainable));
+        let frozen_base = |l: &&LayerRecord| {
+            l.module == "language_model" && l.kind_tag == "linear" && !l.name.contains("lora")
+        };
+        assert!(pm.layers.iter().filter(frozen_base).all(|l| !l.trainable));
+    }
+
+    #[test]
+    fn tp_shards_weights_and_sharded_axis_acts_only() {
+        let base = parse(&cfg()).unwrap();
+        let mut c2 = cfg();
+        c2.tp = 2;
+        let tp2 = parse(&c2).unwrap();
+        assert_eq!(base.num_layers(), tp2.num_layers());
+        for (a, b) in base.layers.iter().zip(&tp2.layers) {
+            assert_eq!(a.name, b.name);
+            let tps = behavior::tp_shards(a.kind_tag, &a.name);
+            let want = |e: u64, on: bool| if on { e.div_ceil(2) } else { e };
+            assert_eq!(b.param_elems, want(a.param_elems, tps.params), "{}", a.name);
+            assert_eq!(b.act_elems, want(a.act_elems, tps.saved_act), "{}", a.name);
+            assert_eq!(b.ephemeral_elems, want(a.ephemeral_elems, tps.transients), "{}", a.name);
+        }
+        // row-parallel outputs (the residual stream) stay full-size…
+        let o_proj = |pm: &ParsedModel| {
+            pm.layers.iter().find(|l| l.name.ends_with("o_proj")).unwrap().act_elems
+        };
+        assert_eq!(o_proj(&base), o_proj(&tp2));
+        // …while column-parallel outputs halve
+        let q_proj = |pm: &ParsedModel| {
+            pm.layers.iter().find(|l| l.name.ends_with("q_proj")).unwrap().act_elems
+        };
+        assert_eq!(q_proj(&tp2), q_proj(&base).div_ceil(2));
+        // weight memory strictly drops (the decoder is mostly linears)
+        assert!(tp2.total_param_elems < base.total_param_elems);
+        assert!(tp2.trainable_param_elems < base.trainable_param_elems);
+    }
+
+    #[test]
+    fn tp1_parse_is_identical_to_default() {
+        // tp = 1 must be a no-op: div_ceil(n, 1) == n for every field.
+        let base = parse(&cfg()).unwrap();
+        let mut c1 = cfg();
+        c1.tp = 1;
+        let tp1 = parse(&c1).unwrap();
+        for (a, b) in base.layers.iter().zip(&tp1.layers) {
+            assert_eq!(a.param_elems, b.param_elems);
+            assert_eq!(a.act_elems, b.act_elems);
+            assert_eq!(a.ephemeral_elems, b.ephemeral_elems);
+            assert_eq!(a.bwd_transient_elems, b.bwd_transient_elems);
+            assert_eq!(a.flops, b.flops);
+        }
     }
 }

@@ -1,0 +1,296 @@
+//! Pipeline-parallel stage partitioning: slice a parsed model's layer
+//! list into `pp` contiguous stages and build each stage's per-rank
+//! view.
+//!
+//! Partitioning rules (ARCHITECTURE.md §Parallelism):
+//!
+//! * **Block granularity** — a split never lands inside a transformer
+//!   block (the unit real pipeline engines move between stages, and
+//!   the unit activation checkpointing recomputes — splitting one
+//!   would strand a recompute window without its interior layers).
+//! * **Harmonic activation balance** — under 1F1B, stage `s` of `pp`
+//!   keeps `pp - s` in-flight microbatches of its retained
+//!   activations. Stage boundaries therefore target retained-act mass
+//!   proportional to `1/(pp - s)` (early stages get *less*), so every
+//!   stage's in-flight activation footprint is the same `A / H` where
+//!   `H = Σ 1/(pp - s) > 1` — strictly below the single-device total
+//!   `A`. Combined with weights being a subset per stage, this is what
+//!   makes the per-rank peak ≤ single-device peak invariant hold
+//!   (modulo block-granularity discretization).
+//! * Models with no retained activations (fully-frozen screening
+//!   configs) fall back to weight balance, then to unit-count balance.
+//!
+//! The stage *view* is itself a [`ParsedModel`]: the stage's layer
+//! records with retained activations scaled by the stage's in-flight
+//! depth. Every existing consumer — feature encoder, analytical
+//! predictor, trace generator, ZeRO buffer sizing — works on a view
+//! unchanged, which is how per-rank prediction and simulation reuse
+//! the whole single-device stack.
+
+use anyhow::{bail, Result};
+
+use super::{LayerRecord, ParsedModel};
+
+/// In-flight microbatch depth of stage `stage` (0-based) under 1F1B:
+/// the first stage holds `pp` activations, the last exactly one.
+pub fn in_flight(pp: u64, stage: usize) -> u64 {
+    pp - stage as u64
+}
+
+/// The deepest pipeline this model can be cut into: its splittable
+/// unit count (callers use this to skip infeasible `pp` values instead
+/// of erroring a whole search).
+pub fn max_stages(pm: &ParsedModel) -> usize {
+    split_units(pm).len()
+}
+
+/// Contiguous half-open layer ranges `[start, end)` for `pp` stages.
+/// Deterministic; errors when the model has fewer splittable units
+/// (blocks + standalone layers) than stages.
+pub fn stage_bounds(pm: &ParsedModel, pp: u64) -> Result<Vec<(usize, usize)>> {
+    let n = pm.layers.len();
+    if pp <= 1 {
+        return Ok(vec![(0, n)]);
+    }
+    let units = split_units(pm);
+    if (units.len() as u64) < pp {
+        bail!(
+            "pp {} exceeds the {} splittable pipeline units of {} \
+             (transformer blocks + standalone layers)",
+            pp,
+            units.len(),
+            pm.model_name
+        );
+    }
+
+    // Unit costs: retained activation bytes (the 1F1B-amplified term)
+    // and resident weight bytes (the fallback balance).
+    let acts: Vec<f64> = units
+        .iter()
+        .map(|&(s, e)| pm.layers[s..e].iter().map(LayerRecord::act_bytes_total).sum())
+        .collect();
+    let weights: Vec<f64> = units
+        .iter()
+        .map(|&(s, e)| pm.layers[s..e].iter().map(LayerRecord::param_bytes_total).sum())
+        .collect();
+    let total_act: f64 = acts.iter().sum();
+    let total_w: f64 = weights.iter().sum();
+
+    let pp_us = pp as usize;
+    let h: f64 = (0..pp_us).map(|s| 1.0 / in_flight(pp, s) as f64).sum();
+    let target = |s: usize| -> f64 {
+        if total_act > 0.0 {
+            total_act / (in_flight(pp, s) as f64 * h)
+        } else if total_w > 0.0 {
+            total_w / pp as f64
+        } else {
+            units.len() as f64 / pp as f64
+        }
+    };
+    let cost = |u: usize| -> f64 {
+        if total_act > 0.0 {
+            acts[u]
+        } else if total_w > 0.0 {
+            weights[u]
+        } else {
+            1.0
+        }
+    };
+
+    let mut bounds = Vec::with_capacity(pp_us);
+    let mut u = 0usize;
+    for s in 0..pp_us {
+        let start = units[u].0;
+        if s == pp_us - 1 {
+            u = units.len();
+        } else {
+            let stages_left = pp_us - s - 1;
+            let t = target(s);
+            let mut acc = 0.0;
+            // Take at least one unit, then stop at the target — always
+            // leaving one unit per remaining stage.
+            while u < units.len() - stages_left {
+                acc += cost(u);
+                u += 1;
+                if acc >= t {
+                    break;
+                }
+            }
+        }
+        bounds.push((start, units[u - 1].1));
+    }
+    debug_assert_eq!(bounds[0].0, 0);
+    debug_assert_eq!(bounds[pp_us - 1].1, n);
+    Ok(bounds)
+}
+
+/// One stage's per-rank view: the stage's layers with every retained
+/// activation scaled by the stage's in-flight microbatch depth.
+/// Per-microbatch transients (ephemeral, backward, recompute windows)
+/// stay unscaled — only one microbatch computes at a time.
+pub fn stage_view(pm: &ParsedModel, bounds: (usize, usize), in_flight: u64) -> ParsedModel {
+    let (start, end) = bounds;
+    let mut layers: Vec<LayerRecord> = pm.layers[start..end].to_vec();
+    if in_flight > 1 {
+        for l in &mut layers {
+            if l.on_bwd_path && l.recompute_keep > 0.0 {
+                l.act_elems *= in_flight;
+            }
+        }
+    }
+    let total_param_elems = layers.iter().map(|r| r.param_elems).sum();
+    let trainable_param_elems = layers
+        .iter()
+        .filter(|r| r.trainable)
+        .map(|r| r.param_elems)
+        .sum();
+    ParsedModel {
+        model_name: pm.model_name.clone(),
+        layers,
+        total_param_elems,
+        trainable_param_elems,
+        token_ctx: pm.token_ctx.clone(),
+    }
+}
+
+/// Splittable units: each transformer block is one unit (a maximal run
+/// of layers sharing `(module, block)`); every non-block layer is its
+/// own unit.
+fn split_units(pm: &ParsedModel) -> Vec<(usize, usize)> {
+    let n = pm.layers.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        match pm.layers[i].block {
+            None => {
+                out.push((i, i + 1));
+                i += 1;
+            }
+            Some(b) => {
+                let module = &pm.layers[i].module;
+                let mut j = i;
+                while j < n && pm.layers[j].block == Some(b) && &pm.layers[j].module == module {
+                    j += 1;
+                }
+                out.push((i, j));
+                i = j;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::parser::parse;
+
+    fn pm() -> ParsedModel {
+        let cfg = TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 2,
+            seq_len: 64,
+            ..TrainConfig::llava_finetune_default()
+        };
+        parse(&cfg).unwrap()
+    }
+
+    #[test]
+    fn bounds_cover_the_model_exactly_and_contiguously() {
+        let pm = pm();
+        for pp in [1u64, 2, 3, 4] {
+            let b = stage_bounds(&pm, pp).unwrap();
+            assert_eq!(b.len(), pp as usize);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, pm.layers.len());
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "stages must tile the layer list");
+                assert!(w[0].0 < w[0].1, "empty stage");
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_never_split_a_block() {
+        let pm = pm();
+        for pp in [2u64, 3, 4] {
+            for &(start, _end) in &stage_bounds(&pm, pp).unwrap() {
+                if start > 0 {
+                    let prev = &pm.layers[start - 1];
+                    let cur = &pm.layers[start];
+                    let same_block = prev.block.is_some()
+                        && prev.block == cur.block
+                        && prev.module == cur.module;
+                    assert!(!same_block, "split inside block at layer {start}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn excessive_pp_is_a_clear_error() {
+        let pm = pm();
+        let e = stage_bounds(&pm, 64).unwrap_err().to_string();
+        assert!(e.contains("pp 64"), "{e}");
+        assert!(e.contains("units"), "{e}");
+    }
+
+    #[test]
+    fn early_stages_carry_less_retained_act_mass() {
+        // Harmonic balance: stage 0 (deepest in-flight pile) should get
+        // at most the retained-act mass of the last stage (which keeps
+        // only one microbatch), up to block discretization.
+        let pm = pm();
+        let bounds = stage_bounds(&pm, 2).unwrap();
+        let act = |b: (usize, usize)| -> f64 {
+            pm.layers[b.0..b.1].iter().map(LayerRecord::act_bytes_total).sum()
+        };
+        let a0 = act(bounds[0]);
+        let a1 = act(bounds[1]);
+        assert!(a0 > 0.0 && a1 > 0.0);
+        // in-flight-weighted masses should be within one block of equal
+        assert!(2.0 * a0 <= (a0 + a1) * 1.5, "a0 {a0} vs a1 {a1}");
+    }
+
+    #[test]
+    fn stage_views_partition_weights_exactly() {
+        let pm = pm();
+        for pp in [2u64, 4] {
+            let bounds = stage_bounds(&pm, pp).unwrap();
+            let views: Vec<ParsedModel> = bounds
+                .iter()
+                .enumerate()
+                .map(|(s, &b)| stage_view(&pm, b, in_flight(pp, s)))
+                .collect();
+            let total: u64 = views.iter().map(|v| v.total_param_elems).sum();
+            let trainable: u64 = views.iter().map(|v| v.trainable_param_elems).sum();
+            assert_eq!(total, pm.total_param_elems);
+            assert_eq!(trainable, pm.trainable_param_elems);
+        }
+    }
+
+    #[test]
+    fn stage_view_scales_only_retained_acts() {
+        let pm = pm();
+        let bounds = stage_bounds(&pm, 2).unwrap();
+        let view = stage_view(&pm, bounds[0], 2);
+        for (v, orig) in view.layers.iter().zip(&pm.layers[bounds[0].0..bounds[0].1]) {
+            if orig.on_bwd_path && orig.recompute_keep > 0.0 {
+                assert_eq!(v.act_elems, orig.act_elems * 2, "{}", orig.name);
+            } else {
+                assert_eq!(v.act_elems, orig.act_elems, "{}", orig.name);
+            }
+            assert_eq!(v.ephemeral_elems, orig.ephemeral_elems);
+            assert_eq!(v.bwd_transient_elems, orig.bwd_transient_elems);
+            assert_eq!(v.recompute_window_elems, orig.recompute_window_elems);
+        }
+    }
+
+    #[test]
+    fn in_flight_depths_follow_1f1b() {
+        assert_eq!(in_flight(4, 0), 4);
+        assert_eq!(in_flight(4, 3), 1);
+        assert_eq!(in_flight(1, 0), 1);
+    }
+}

@@ -14,8 +14,9 @@
 //! The search is layered on the parallel sweep engine ([`crate::sweep`]):
 //!
 //! 1. a coarse pass runs the cheap analytical predictor over the whole
-//!    candidate grid in one parse-once parallel batch (dp/ZeRO variants
-//!    share a parse) and reads each branch's frontier guess off it;
+//!    candidate grid in one parse-once parallel batch (dp/pp/ZeRO
+//!    variants share a parse; tp changes the parsed geometry) and reads
+//!    each branch's frontier guess off it;
 //! 2. a refinement pass bisects each branch's mbs ladder with the
 //!    ground-truth simulator, fanning each round's probes across the
 //!    sweep workers (one reused [`crate::simulator::SimContext`] per
@@ -53,8 +54,6 @@ use anyhow::{bail, Result};
 use crate::config::{Precision, Stage, TrainConfig, ZeroStage};
 use crate::model::layer::AttnImpl;
 use crate::model::lora::LoraConfig;
-use crate::parser::features;
-use crate::predictor::analytical;
 use crate::sweep::Sweep;
 
 use search::{frontier_search, Branch};
@@ -71,6 +70,10 @@ pub struct Axes {
     pub seq_len: Vec<u64>,
     /// Data-parallel degrees.
     pub dp: Vec<u64>,
+    /// Tensor-parallel degrees.
+    pub tp: Vec<u64>,
+    /// Pipeline-parallel degrees.
+    pub pp: Vec<u64>,
     /// ZeRO stages.
     pub zero: Vec<ZeroStage>,
     /// Precision policies.
@@ -86,6 +89,8 @@ impl Axes {
             mbs: vec![base.mbs],
             seq_len: vec![base.seq_len],
             dp: vec![base.dp],
+            tp: vec![base.tp],
+            pp: vec![base.pp],
             zero: vec![base.zero],
             precision: vec![base.precision],
             stage: vec![base.stage],
@@ -93,10 +98,11 @@ impl Axes {
     }
 
     /// The default search space: free micro-batch-size, sequence-length
-    /// and DP ladders around common training settings; ZeRO stage,
-    /// precision and training stage stay pinned to the base config
-    /// (free them explicitly — on the CLI via `--zero-list`,
-    /// `--precision-list` and `--stage-list`).
+    /// and DP ladders around common training settings; tp/pp, ZeRO
+    /// stage, precision and training stage stay pinned to the base
+    /// config (free them explicitly — on the CLI via `--tp-list`,
+    /// `--pp-list`, `--zero-list`, `--precision-list` and
+    /// `--stage-list`).
     pub fn standard(base: &TrainConfig) -> Self {
         Axes {
             mbs: vec![1, 2, 4, 8, 16, 32],
@@ -136,6 +142,8 @@ impl Axes {
             mbs: nums("mbs", &self.mbs)?,
             seq_len: nums("seq_len", &self.seq_len)?,
             dp: nums("dp", &self.dp)?,
+            tp: nums("tp", &self.tp)?,
+            pp: nums("pp", &self.pp)?,
             zero: uniq("zero", &self.zero)?,
             precision: uniq("precision", &self.precision)?,
             stage: uniq("stage", &self.stage)?,
@@ -185,11 +193,15 @@ pub struct PlanCandidate {
     pub frontier_open: bool,
     /// The failing escalation probe (`None` iff `frontier_open`).
     pub escalation: Option<Escalation>,
-    /// True when another safe config with the same (dp, zero, precision,
-    /// stage) has mbs and seq_len both at least as large (and one
-    /// strictly larger) — the staircase interior. Dominated rows are
-    /// kept for inspection but excluded from [`Plan::recommended`].
+    /// True when another safe config with the same (dp, tp, pp, zero,
+    /// precision, stage) has mbs and seq_len both at least as large
+    /// (and one strictly larger) — the staircase interior. Dominated
+    /// rows are kept for inspection but excluded from
+    /// [`Plan::recommended`].
     pub dominated: bool,
+    /// The pipeline stage whose rank binds this candidate's simulated
+    /// peak (0 when `pp == 1`).
+    pub binding_stage: usize,
 }
 
 /// Search-cost accounting for one plan.
@@ -242,13 +254,27 @@ impl Plan {
 /// * fp32 halves tensor-core throughput vs bf16/fp16 — ×0.5;
 /// * eager attention materializes the score matrix and is
 ///   bandwidth-bound past ~2k tokens vs flash — ×0.85;
-/// * LoRA shrinks the optimizer step to the adapters — ×1.05.
+/// * LoRA shrinks the optimizer step to the adapters — ×1.05;
+/// * tensor parallelism all-reduces activations twice per block —
+///   ×0.95 at tp 2, ×0.88 beyond;
+/// * pipeline parallelism idles ranks in the warmup/drain bubble —
+///   ×0.92 at pp 2, ×0.85 beyond.
 pub fn throughput_proxy(cfg: &TrainConfig) -> f64 {
     let tokens = (cfg.mbs * cfg.seq_len) as f64;
     let mut eff = 1.0;
     if cfg.grad_checkpoint {
         eff *= 0.75;
     }
+    eff *= match cfg.tp {
+        1 => 1.0,
+        2 => 0.95,
+        _ => 0.88,
+    };
+    eff *= match cfg.pp {
+        1 => 1.0,
+        2 => 0.92,
+        _ => 0.85,
+    };
     eff *= match cfg.zero {
         ZeroStage::Zero0 => 1.0,
         ZeroStage::Zero1 => 0.98,
@@ -282,69 +308,109 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
     let axes = req.axes.normalized()?;
 
     // Branch enumeration in a fixed nested order (stage > precision >
-    // zero > dp > seq_len) keeps the whole search deterministic.
-    let mut branches: Vec<Branch> = Vec::new();
+    // zero > tp > pp > dp > seq_len) keeps the whole search
+    // deterministic.
+    let mut points: Vec<BranchPoint> = Vec::new();
     for &stage in &axes.stage {
         for &precision in &axes.precision {
             for &zero in &axes.zero {
-                for &dp in &axes.dp {
-                    for &seq_len in &axes.seq_len {
-                        let rungs: Vec<TrainConfig> = axes
-                            .mbs
-                            .iter()
-                            .map(|&mbs| {
-                                branch_cfg(&req.base, stage, precision, zero, dp, seq_len, mbs)
-                            })
-                            .collect();
-                        for r in &rungs {
-                            r.validate()?;
+                for &tp in &axes.tp {
+                    for &pp in &axes.pp {
+                        for &dp in &axes.dp {
+                            for &seq_len in &axes.seq_len {
+                                points.push(BranchPoint {
+                                    stage,
+                                    precision,
+                                    zero,
+                                    tp,
+                                    pp,
+                                    dp,
+                                    seq_len,
+                                });
+                            }
                         }
-                        branches.push(Branch { rungs });
                     }
                 }
             }
         }
     }
+    let mut branches: Vec<Branch> = Vec::new();
+    for pt in &points {
+        let rungs: Vec<TrainConfig> = axes
+            .mbs
+            .iter()
+            .map(|&mbs| branch_cfg(&req.base, pt, mbs))
+            .collect();
+        for r in &rungs {
+            r.validate()?;
+        }
+        branches.push(Branch { rungs });
+    }
 
     // Coarse pass: analytical prediction of the whole candidate grid in
-    // ONE parse-once parallel batch — dp/ZeRO variants share a parse and
-    // the per-point cost after parsing is just encode + the factor math,
-    // far below a simulation. Each branch's frontier guess is read off
-    // the predicted grid; a wrong guess only costs extra bisection
-    // rounds.
+    // ONE parse-once parallel batch — dp/pp/ZeRO variants share a parse
+    // and the per-point cost after parsing is just encode + the factor
+    // math, far below a simulation. Each branch's frontier guess is
+    // read off the predicted grid; a wrong guess only costs extra
+    // bisection rounds.
     let rungs_per_branch = axes.mbs.len();
     let flat: Vec<TrainConfig> = branches
         .iter()
         .flat_map(|b| b.rungs.iter().cloned())
         .collect();
-    let predicted: Vec<f64> = engine.run(&flat, |_ctx, pm, cfg| {
-        Ok(analytical::predict_encoded(&features::encode(pm, cfg)).peak_mib as f64)
+    // `None` marks a point whose pp exceeds the model's splittable
+    // depth — that branch is skipped (no candidates) instead of
+    // aborting the whole plan.
+    let predicted: Vec<Option<f64>> = engine.run(&flat, |_ctx, pm, cfg| {
+        if (crate::parser::pipeline::max_stages(pm) as u64) < cfg.pp {
+            return Ok(None);
+        }
+        Ok(Some(crate::predictor::predict_per_rank_parsed(pm, cfg)?.peak_mib() as f64))
     })?;
     let predictor_probes = flat.len();
-    let guesses: Vec<usize> = (0..branches.len())
-        .map(|bi| {
+    let splittable: Vec<bool> = (0..branches.len())
+        .map(|bi| predicted[bi * rungs_per_branch].is_some())
+        .collect();
+    let searched: Vec<Branch> = branches
+        .iter()
+        .zip(&splittable)
+        .filter(|(_, &ok)| ok)
+        .map(|(b, _)| Branch { rungs: b.rungs.clone() })
+        .collect();
+    let searched_bi: Vec<usize> = (0..branches.len()).filter(|&bi| splittable[bi]).collect();
+    if searched.is_empty() && !branches.is_empty() {
+        // Every branch infeasible is a request problem, not an empty
+        // frontier — report the cause instead of "nothing fits".
+        bail!(
+            "no branch is searchable: every pp candidate in {:?} exceeds the model's \
+             splittable pipeline units",
+            axes.pp
+        );
+    }
+    let guesses: Vec<usize> = searched_bi
+        .iter()
+        .map(|&bi| {
             let preds = &predicted[bi * rungs_per_branch..(bi + 1) * rungs_per_branch];
             preds
                 .iter()
-                .rposition(|&p| p <= req.budget_mib)
+                .rposition(|&p| p.unwrap_or(f64::INFINITY) <= req.budget_mib)
                 .unwrap_or(0)
         })
         .collect();
 
     // Refinement: ground-truth simulator bisection, probes batched
     // through the sweep engine each round.
-    let (outcomes, sim_points) = frontier_search(&branches, &guesses, req.budget_mib, engine)?;
+    let (outcomes, sim_points) = frontier_search(&searched, &guesses, req.budget_mib, engine)?;
 
     let mut candidates = Vec::new();
     let mut feasible = 0usize;
-    for (bi, (branch, out)) in branches.iter().zip(&outcomes).enumerate() {
+    for ((&bi, branch), out) in searched_bi.iter().zip(&searched).zip(&outcomes) {
         let Some(idx) = out.frontier else { continue };
         feasible += 1;
         let cfg = branch.rungs[idx].clone();
-        let simulated = out.probed[idx]
-            .as_ref()
-            .expect("frontier rung was simulated")
-            .peak_mib;
+        let frontier_m = out.probed[idx].as_ref().expect("frontier rung was simulated");
+        let simulated = frontier_m.peak_mib;
+        let binding_stage = frontier_m.pp_stage;
         let escalation = if out.open {
             None
         } else {
@@ -355,13 +421,15 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
             Some(Escalation { mbs: up.mbs, simulated_mib: m.peak_mib })
         };
         candidates.push(PlanCandidate {
-            predicted_mib: predicted[bi * rungs_per_branch + idx],
+            predicted_mib: predicted[bi * rungs_per_branch + idx]
+                .expect("searched branches carry predictions"),
             simulated_mib: simulated,
             headroom_mib: req.budget_mib - simulated,
             tokens_per_step: throughput_proxy(&cfg),
             frontier_open: out.open,
             escalation,
             dominated: false,
+            binding_stage,
             cfg,
         });
     }
@@ -387,22 +455,28 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
     })
 }
 
-/// Build one branch config from the base and an axis assignment.
-fn branch_cfg(
-    base: &TrainConfig,
+/// One non-mbs axis assignment (the identity of a search branch).
+#[derive(Clone, Copy)]
+struct BranchPoint {
     stage: Stage,
     precision: Precision,
     zero: ZeroStage,
+    tp: u64,
+    pp: u64,
     dp: u64,
     seq_len: u64,
-    mbs: u64,
-) -> TrainConfig {
+}
+
+/// Build one branch config from the base and an axis assignment.
+fn branch_cfg(base: &TrainConfig, pt: &BranchPoint, mbs: u64) -> TrainConfig {
     let mut c = base.clone();
-    c.stage = stage;
-    c.precision = precision;
-    c.zero = zero;
-    c.dp = dp;
-    c.seq_len = seq_len;
+    c.stage = pt.stage;
+    c.precision = pt.precision;
+    c.zero = pt.zero;
+    c.tp = pt.tp;
+    c.pp = pt.pp;
+    c.dp = pt.dp;
+    c.seq_len = pt.seq_len;
     c.mbs = mbs;
     if c.stage == Stage::LoraFinetune && c.lora.is_none() {
         c.lora = Some(LoraConfig::default());
@@ -422,6 +496,8 @@ fn mark_dominated(cands: &mut [PlanCandidate]) {
             }
             let (a, b) = (&cands[i].cfg, &cands[j].cfg);
             let same_group = a.dp == b.dp
+                && a.tp == b.tp
+                && a.pp == b.pp
                 && a.zero == b.zero
                 && a.precision == b.precision
                 && a.stage == b.stage;
@@ -522,6 +598,55 @@ mod tests {
         let rec: Vec<_> = p.recommended().collect();
         assert_eq!(rec.len(), 2);
         assert!(rec.iter().all(|c| c.cfg.seq_len == 64));
+    }
+
+    #[test]
+    fn tp_pp_axes_enumerate_and_rank_with_binding_stage() {
+        let base = tiny_base();
+        let axes = Axes {
+            mbs: vec![1, 2],
+            tp: vec![1, 2],
+            pp: vec![1, 2],
+            ..Axes::fixed(&base)
+        };
+        let p = plan(&PlanRequest { base, budget_mib: 1e9, axes }).unwrap();
+        assert_eq!(p.stats.branches, 4);
+        for c in &p.candidates {
+            if c.cfg.pp == 1 {
+                assert_eq!(c.binding_stage, 0);
+            } else {
+                assert!(c.binding_stage < c.cfg.pp as usize);
+            }
+        }
+        // larger parallel degrees are present in the frontier
+        assert!(p.candidates.iter().any(|c| c.cfg.tp == 2));
+        assert!(p.candidates.iter().any(|c| c.cfg.pp == 2));
+        // dominance groups split by (tp, pp): every group keeps its
+        // own staircase corner, so 4 groups => 4 recommended rows
+        assert_eq!(p.recommended().count(), 4);
+    }
+
+    #[test]
+    fn infeasible_pp_branches_are_skipped_not_fatal() {
+        // llava-tiny has ~a dozen splittable units; pp=32 is a valid
+        // config but cannot be partitioned — its branches must be
+        // skipped while the pp=1 branches still plan normally.
+        let base = tiny_base();
+        let axes = Axes { mbs: vec![1, 2], pp: vec![1, 32], ..Axes::fixed(&base) };
+        let p = plan(&PlanRequest { base, budget_mib: 1e9, axes }).unwrap();
+        assert_eq!(p.stats.branches, 2);
+        assert_eq!(p.stats.feasible_branches, 1);
+        assert!(!p.candidates.is_empty());
+        assert!(p.candidates.iter().all(|c| c.cfg.pp == 1));
+
+        // …while an ALL-infeasible pp axis is a loud error, not an
+        // empty plan masquerading as "nothing fits the budget"
+        let base = tiny_base();
+        let axes = Axes { pp: vec![32], ..Axes::fixed(&base) };
+        let err = plan(&PlanRequest { base, budget_mib: 1e9, axes })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("splittable pipeline units"), "{err}");
     }
 
     #[test]

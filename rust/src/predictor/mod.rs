@@ -17,6 +17,7 @@ use crate::parser::features::{
     self, NUM_OUTPUTS, OUT_ACT, OUT_FWD_PEAK, OUT_GRAD, OUT_OPT, OUT_PARAM, OUT_PEAK,
     OUT_PERSISTENT, OUT_TRANSIENT,
 };
+use crate::parser::pipeline;
 
 /// One prediction (all quantities in MiB, per GPU).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -65,12 +66,81 @@ impl Prediction {
     }
 }
 
+/// The per-rank view of a prediction under pipeline parallelism: one
+/// [`Prediction`] per pipeline stage (each already reflecting ZeRO/dp
+/// and tensor-parallel sharding), with the per-rank peak defined as
+/// the max over stages — the *binding* stage is where a distributed
+/// run OOMs first.
+#[derive(Clone, Debug)]
+pub struct RankPrediction {
+    /// One prediction per pipeline stage, in stage order. Length 1
+    /// when `pp == 1`.
+    pub per_stage: Vec<Prediction>,
+    /// Index of the stage with the largest peak (ties: first).
+    pub binding_stage: usize,
+}
+
+impl RankPrediction {
+    /// The binding stage's full prediction.
+    pub fn binding(&self) -> &Prediction {
+        &self.per_stage[self.binding_stage]
+    }
+
+    /// The per-rank peak: max over pipeline stages.
+    pub fn peak_mib(&self) -> f32 {
+        self.binding().peak_mib
+    }
+}
+
 /// Predict from a training config via the analytical path (parse →
-/// encode → factorize). The one-call public API.
+/// encode → factorize). The one-call public API. For `pp > 1` this is
+/// the *binding pipeline stage's* prediction (the per-rank peak);
+/// [`predict_per_rank`] exposes every stage.
 pub fn predict(cfg: &crate::config::TrainConfig) -> anyhow::Result<Prediction> {
+    if cfg.pp <= 1 {
+        let pm = crate::parser::parse(cfg)?;
+        let enc = features::encode(&pm, cfg);
+        return Ok(analytical::predict_encoded(&enc));
+    }
+    Ok(*predict_per_rank(cfg)?.binding())
+}
+
+/// Per-rank prediction: parse once, partition the layer graph into
+/// `cfg.pp` stages ([`crate::parser::pipeline`]), encode and predict
+/// each stage's view. For `pp == 1` this is exactly [`predict`] in a
+/// one-element vector (bit-identical — same code path).
+pub fn predict_per_rank(cfg: &crate::config::TrainConfig) -> anyhow::Result<RankPrediction> {
     let pm = crate::parser::parse(cfg)?;
-    let enc = features::encode(&pm, cfg);
-    Ok(analytical::predict_encoded(&enc))
+    predict_per_rank_parsed(&pm, cfg)
+}
+
+/// [`predict_per_rank`] from an already-parsed **full** model — the
+/// parse-once entry the sweep and planner engines use (`pp` variants
+/// share one parse; stage views are sliced here per call).
+pub fn predict_per_rank_parsed(
+    pm: &crate::parser::ParsedModel,
+    cfg: &crate::config::TrainConfig,
+) -> anyhow::Result<RankPrediction> {
+    if cfg.pp <= 1 {
+        let p = analytical::predict_encoded(&features::encode(pm, cfg));
+        return Ok(RankPrediction { per_stage: vec![p], binding_stage: 0 });
+    }
+    let bounds = pipeline::stage_bounds(pm, cfg.pp)?;
+    let per_stage: Vec<Prediction> = bounds
+        .iter()
+        .enumerate()
+        .map(|(s, &b)| {
+            let view = pipeline::stage_view(pm, b, pipeline::in_flight(cfg.pp, s));
+            analytical::predict_encoded(&features::encode(&view, cfg))
+        })
+        .collect();
+    let mut binding_stage = 0;
+    for (i, p) in per_stage.iter().enumerate().skip(1) {
+        if p.peak_mib > per_stage[binding_stage].peak_mib {
+            binding_stage = i;
+        }
+    }
+    Ok(RankPrediction { per_stage, binding_stage })
 }
 
 #[cfg(test)]
@@ -91,5 +161,61 @@ mod tests {
         let p = Prediction { peak_mib: 70_000.0, ..Default::default() };
         assert!(p.fits(81_920.0)); // 80 GiB
         assert!(!p.fits(40_960.0)); // 40 GiB
+    }
+
+    fn tiny() -> crate::config::TrainConfig {
+        crate::config::TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 2,
+            seq_len: 64,
+            ..crate::config::TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn per_rank_pp1_is_bitwise_predict() {
+        let cfg = tiny();
+        let rp = predict_per_rank(&cfg).unwrap();
+        assert_eq!(rp.per_stage.len(), 1);
+        assert_eq!(rp.binding_stage, 0);
+        assert_eq!(*rp.binding(), predict(&cfg).unwrap());
+    }
+
+    #[test]
+    fn pp_predict_reports_the_binding_stage_max() {
+        let mut cfg = tiny();
+        cfg.pp = 2;
+        let rp = predict_per_rank(&cfg).unwrap();
+        assert_eq!(rp.per_stage.len(), 2);
+        let max = rp.per_stage.iter().map(|p| p.peak_mib).fold(f32::MIN, f32::max);
+        assert_eq!(rp.peak_mib(), max);
+        assert_eq!(predict(&cfg).unwrap().peak_mib, max);
+    }
+
+    #[test]
+    fn pp_peak_does_not_exceed_single_device() {
+        let single = predict(&tiny()).unwrap().peak_mib;
+        for pp in [2u64, 4] {
+            let mut cfg = tiny();
+            cfg.pp = pp;
+            let peak = predict(&cfg).unwrap().peak_mib;
+            // 1% + 8 MiB: block-granularity partition discretization
+            assert!(
+                peak <= single * 1.01 + 8.0,
+                "pp {pp}: per-rank {peak} exceeds single-device {single}"
+            );
+        }
+    }
+
+    #[test]
+    fn tp_shrinks_weight_terms() {
+        let base = predict(&tiny()).unwrap();
+        let mut cfg = tiny();
+        cfg.tp = 4;
+        let tp4 = predict(&cfg).unwrap();
+        assert!(tp4.param_mib < base.param_mib);
+        assert!(tp4.grad_mib <= base.grad_mib);
+        assert!(tp4.opt_mib < base.opt_mib);
+        assert!(tp4.peak_mib < base.peak_mib);
     }
 }

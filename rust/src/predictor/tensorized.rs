@@ -39,6 +39,16 @@ impl TensorizedPredictor {
         let encoded: Vec<features::EncodedRequest> = cfgs
             .iter()
             .map(|cfg| {
+                if cfg.pp > 1 {
+                    // One artifact execution is one stage view; per-rank
+                    // pipeline prediction (max over stage encodes) is
+                    // served by the analytical mirror instead.
+                    anyhow::bail!(
+                        "the tensorized backend predicts single pipeline stages only \
+                         (pp = {}); use the analytical predictor for pp > 1",
+                        cfg.pp
+                    );
+                }
                 let pm = parser::parse(cfg)?;
                 Ok(features::encode(&pm, cfg))
             })

@@ -9,22 +9,17 @@ use super::table::Table;
 
 /// Render a plan's frontier as an aligned table: the top `top`
 /// candidates by throughput rank, optionally including dominated
-/// (staircase-interior) rows.
+/// (staircase-interior) rows. Plans that search tensor/pipeline
+/// parallelism gain `tp`/`pp`/`bind` columns (the binding pipeline
+/// stage); single-device plans render exactly as before.
 pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table {
-    let mut t = Table::new(vec![
-        "#",
-        "stage",
-        "prec",
-        "zero",
-        "dp",
-        "seq",
-        "mbs",
-        "pred GiB",
-        "sim GiB",
-        "headroom GiB",
-        "tok/step",
-        "frontier",
-    ]);
+    let parallel = plan.candidates.iter().any(|c| c.cfg.tp > 1 || c.cfg.pp > 1);
+    let mut headers = vec!["#", "stage", "prec", "zero", "dp"];
+    if parallel {
+        headers.extend(["tp", "pp", "bind"]);
+    }
+    headers.extend(["seq", "mbs", "pred GiB", "sim GiB", "headroom GiB", "tok/step", "frontier"]);
+    let mut t = Table::new(headers);
     let rows = plan
         .candidates
         .iter()
@@ -42,12 +37,19 @@ pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table
             )
         };
         let dominated = if c.dominated { " (dominated)" } else { "" };
-        t.row(vec![
+        let mut row = vec![
             format!("{}", rank + 1),
             format!("{}{}", c.cfg.stage.name(), dominated),
             c.cfg.precision.name().to_string(),
             c.cfg.zero.as_int().to_string(),
             c.cfg.dp.to_string(),
+        ];
+        if parallel {
+            row.push(c.cfg.tp.to_string());
+            row.push(c.cfg.pp.to_string());
+            row.push(c.binding_stage.to_string());
+        }
+        row.extend([
             c.cfg.seq_len.to_string(),
             c.cfg.mbs.to_string(),
             format!("{:.2}", c.predicted_mib / 1024.0),
@@ -56,6 +58,7 @@ pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table
             format!("{:.0}", c.tokens_per_step),
             frontier,
         ]);
+        t.row(row);
     }
     t
 }
@@ -68,12 +71,23 @@ fn candidate_json(c: &PlanCandidate) -> Json {
         ]),
         None => Json::Null,
     };
-    obj(vec![
+    let mut entries = vec![
         ("model", Json::Str(c.cfg.model.clone())),
         ("stage", Json::Str(c.cfg.stage.name().to_string())),
         ("precision", Json::Str(c.cfg.precision.name().to_string())),
         ("zero", Json::Num(c.cfg.zero.as_int() as f64)),
         ("dp", Json::Num(c.cfg.dp as f64)),
+    ];
+    // Additive v1 fields: absent means tp/pp = 1 (single device), so
+    // single-device plan documents stay byte-identical to PR 4.
+    if c.cfg.tp > 1 {
+        entries.push(("tp", Json::Num(c.cfg.tp as f64)));
+    }
+    if c.cfg.pp > 1 {
+        entries.push(("pp", Json::Num(c.cfg.pp as f64)));
+        entries.push(("binding_stage", Json::Num(c.binding_stage as f64)));
+    }
+    entries.extend(vec![
         ("seq_len", Json::Num(c.cfg.seq_len as f64)),
         ("mbs", Json::Num(c.cfg.mbs as f64)),
         ("grad_checkpoint", Json::Bool(c.cfg.grad_checkpoint)),
@@ -91,7 +105,8 @@ fn candidate_json(c: &PlanCandidate) -> Json {
         ("frontier_open", Json::Bool(c.frontier_open)),
         ("dominated", Json::Bool(c.dominated)),
         ("escalation", escalation),
-    ])
+    ]);
+    obj(entries)
 }
 
 /// Serialize a full plan (budget, stats, every candidate in rank order)

@@ -51,10 +51,56 @@ impl SimContext {
 
     /// Simulate with an already-parsed model, reusing this context's
     /// buffers. The simulator only reads shard-independent fields of
-    /// `pm` (sharding is recomputed from `cfg` during trace generation),
-    /// so one parse covers every `dp`/`zero`/`bucket_elems`/overhead
-    /// variation of a configuration — the basis of parse-once sweeps.
+    /// `pm` (ZeRO sharding is recomputed from `cfg` during trace
+    /// generation, pipeline stage views are sliced from `pm` per call),
+    /// so one parse covers every `dp`/`pp`/`zero`/`bucket_elems`/
+    /// overhead variation of a configuration — the basis of parse-once
+    /// sweeps. For `pp > 1`, `pm` must be the *full* parse and the
+    /// result is the binding pipeline stage's measurement (the
+    /// per-rank peak); [`SimContext::simulate_per_rank`] exposes every
+    /// stage.
     pub fn simulate_parsed(&mut self, pm: &ParsedModel, cfg: &TrainConfig) -> Result<Measurement> {
+        if cfg.pp <= 1 {
+            return self.simulate_single(pm, cfg);
+        }
+        let mut per_stage = self.simulate_per_rank(pm, cfg)?;
+        let mut binding = 0;
+        for (i, m) in per_stage.iter().enumerate().skip(1) {
+            if m.peak_mib > per_stage[binding].peak_mib {
+                binding = i;
+            }
+        }
+        Ok(per_stage.swap_remove(binding))
+    }
+
+    /// Simulate every pipeline stage's rank: one [`Measurement`] per
+    /// stage, each tagged with its stage index ([`Measurement::pp_stage`]).
+    /// `pm` must be the full (unpartitioned) parse of `cfg`'s model.
+    pub fn simulate_per_rank(
+        &mut self,
+        pm: &ParsedModel,
+        cfg: &TrainConfig,
+    ) -> Result<Vec<Measurement>> {
+        if cfg.pp <= 1 {
+            return Ok(vec![self.simulate_single(pm, cfg)?]);
+        }
+        let bounds = parser::pipeline::stage_bounds(pm, cfg.pp)?;
+        bounds
+            .iter()
+            .enumerate()
+            .map(|(s, &b)| {
+                let view =
+                    parser::pipeline::stage_view(pm, b, parser::pipeline::in_flight(cfg.pp, s));
+                let mut m = self.simulate_single(&view, cfg)?;
+                m.pp_stage = s;
+                Ok(m)
+            })
+            .collect()
+    }
+
+    /// One-device replay of exactly the layers in `pm` (a full model or
+    /// one stage view).
+    fn simulate_single(&mut self, pm: &ParsedModel, cfg: &TrainConfig) -> Result<Measurement> {
         trace::generate_into(pm, cfg, &mut self.events);
         let replay = engine::replay_in(&self.events, &mut self.scratch)?;
         Ok(Measurement::from_replay(replay, cfg))
@@ -78,6 +124,10 @@ pub struct Measurement {
     pub frag_frac: f64,
     /// Phase in which the peak occurred.
     pub peak_phase: &'static str,
+    /// Pipeline stage (0-based) whose rank this measurement describes;
+    /// 0 for `pp == 1`. For the binding measurement returned by
+    /// [`simulate`], this is the binding stage.
+    pub pp_stage: usize,
     /// Factor attribution at peak.
     pub at_peak: Breakdown,
     /// Persistent (end-of-iteration) attribution.
@@ -101,6 +151,7 @@ impl Measurement {
             cuda_ctx_mib: ctx,
             frag_frac: s.frag_frac(),
             peak_phase: replay.peak_phase,
+            pp_stage: 0,
             at_peak: replay.at_peak,
             persistent: replay.persistent,
             alloc_count: s.alloc_count,
@@ -108,9 +159,16 @@ impl Measurement {
     }
 }
 
-/// Simulate one training iteration for a configuration.
+/// Simulate one training iteration for a configuration. For `pp > 1`
+/// this is the binding pipeline stage's per-rank measurement.
 pub fn simulate(cfg: &TrainConfig) -> Result<Measurement> {
     SimContext::new().simulate(cfg)
+}
+
+/// Simulate every pipeline stage's rank for a configuration.
+pub fn simulate_per_rank(cfg: &TrainConfig) -> Result<Vec<Measurement>> {
+    let pm = parser::parse(cfg)?;
+    SimContext::new().simulate_per_rank(&pm, cfg)
 }
 
 /// Simulate with an already-parsed model through a reusable context
@@ -192,7 +250,8 @@ mod tests {
     #[test]
     fn zero_stage_ordering_at_dp8() {
         // peak(zero3) <= peak(zero2) <= peak(zero1) <= peak(zero0)
-        let peaks: Vec<f64> = [ZeroStage::Zero3, ZeroStage::Zero2, ZeroStage::Zero1, ZeroStage::Zero0]
+        let stages = [ZeroStage::Zero3, ZeroStage::Zero2, ZeroStage::Zero1, ZeroStage::Zero0];
+        let peaks: Vec<f64> = stages
             .iter()
             .map(|&z| {
                 let mut c = tiny(8);
@@ -239,6 +298,69 @@ mod tests {
                 assert_eq!(shared.peak_mib, fresh.peak_mib, "dp={dp} zero={z:?}");
                 assert_eq!(shared.at_peak, fresh.at_peak, "dp={dp} zero={z:?}");
             }
+        }
+    }
+
+    #[test]
+    fn pp_binding_measurement_is_the_stage_max() {
+        let mut cfg = tiny(1);
+        cfg.pp = 2;
+        let per_stage = simulate_per_rank(&cfg).unwrap();
+        assert_eq!(per_stage.len(), 2);
+        for (s, m) in per_stage.iter().enumerate() {
+            assert_eq!(m.pp_stage, s);
+        }
+        let max = per_stage.iter().map(|m| m.peak_mib).fold(f64::MIN, f64::max);
+        let binding = simulate(&cfg).unwrap();
+        assert_eq!(binding.peak_mib, max);
+        assert!(per_stage.iter().any(|m| m.pp_stage == binding.pp_stage));
+    }
+
+    #[test]
+    fn pp_per_rank_peak_below_single_device() {
+        let single = simulate(&tiny(1)).unwrap().peak_mib;
+        for pp in [2u64, 4] {
+            let mut cfg = tiny(1);
+            cfg.pp = pp;
+            let peak = simulate(&cfg).unwrap().peak_mib;
+            // 1% + 8 MiB: block-granularity partition discretization
+            // plus allocator rounding noise
+            assert!(
+                peak <= single * 1.01 + 8.0,
+                "pp {pp}: per-rank {peak} vs single {single}"
+            );
+        }
+    }
+
+    #[test]
+    fn tp_monotone_peak() {
+        let peaks: Vec<f64> = [1u64, 2, 4]
+            .iter()
+            .map(|&tp| {
+                let mut cfg = tiny(1);
+                cfg.tp = tp;
+                simulate(&cfg).unwrap().peak_mib
+            })
+            .collect();
+        for w in peaks.windows(2) {
+            assert!(w[1] <= w[0] + 1.0, "{peaks:?}");
+        }
+    }
+
+    #[test]
+    fn parse_once_covers_pp_variants() {
+        // simulate_parsed slices stage views from the full parse, so a
+        // pm parsed once must reproduce every pp variant exactly.
+        let base = tiny(1);
+        let pm = crate::parser::parse(&base).unwrap();
+        let mut ctx = SimContext::new();
+        for pp in [1u64, 2, 3] {
+            let mut cfg = tiny(1);
+            cfg.pp = pp;
+            let shared = simulate_parsed(&pm, &cfg, &mut ctx).unwrap();
+            let fresh = simulate(&cfg).unwrap();
+            assert_eq!(shared.peak_mib, fresh.peak_mib, "pp={pp}");
+            assert_eq!(shared.pp_stage, fresh.pp_stage, "pp={pp}");
         }
     }
 

@@ -323,13 +323,16 @@ mod tests {
         // Only persistent state stays live at iteration end.
         for id in live {
             let tag = tags[&id];
-            assert!(
-                matches!(
-                    tag,
-                    Tag::Param | Tag::Master | Tag::OptState | Tag::Grad | Tag::Bucket | Tag::Workspace
-                ),
-                "leaked transient {tag:?}"
+            let persistent = matches!(
+                tag,
+                Tag::Param
+                    | Tag::Master
+                    | Tag::OptState
+                    | Tag::Grad
+                    | Tag::Bucket
+                    | Tag::Workspace
             );
+            assert!(persistent, "leaked transient {tag:?}");
         }
     }
 

@@ -352,7 +352,8 @@ mod tests {
 
     #[test]
     fn roundtrip_manifest_shape() {
-        let text = r#"{"schema_version": 1, "variants": [{"file": "a.hlo.txt", "batch": 8, "layers": 1024}]}"#;
+        let text =
+            r#"{"schema_version": 1, "variants": [{"file": "a.hlo.txt", "batch": 8, "layers": 1024}]}"#;
         let v = parse(text).unwrap();
         assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(1));
         let variants = v.get("variants").unwrap().as_arr().unwrap();

@@ -217,7 +217,8 @@ fn protocol_errors_are_structured_and_nonfatal() {
     let resp = client.call_raw(r#"{"v":1,"id":"uf","method":"models","surprise":true}"#);
     assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
 
-    let resp = client.call_raw(r#"{"v":1,"id":"up","method":"predict","params":{"config":{},"detial":true}}"#);
+    let resp = client
+        .call_raw(r#"{"v":1,"id":"up","method":"predict","params":{"config":{},"detial":true}}"#);
     let err = resp.result.unwrap_err();
     assert_eq!(err.code, ErrorCode::BadRequest);
     assert!(err.message.contains("detial"), "{}", err.message);
@@ -568,6 +569,182 @@ fn golden_sweep_table_matches_legacy_rendering() {
     let wire = json_mini::parse(&payload.to_string()).unwrap();
     let rendered_wire = render::sweep_table(&wire, true).unwrap();
     assert_eq!(rendered_wire.render(), expected.render());
+}
+
+// ------------------------------------------------------- parallelism (v1+)
+
+/// The optional `parallelism` request object round-trips: a tp/pp
+/// predict over the wire answers exactly the per-rank library
+/// prediction, and the response carries the additive parallelism block.
+#[test]
+fn parallelism_object_round_trips_over_the_wire() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+
+    let mut cfg = tiny();
+    cfg.seq_len = 64;
+    cfg.tp = 2;
+    cfg.pp = 2;
+    let want = predictor::predict(&cfg).unwrap();
+    let rp = predictor::predict_per_rank(&cfg).unwrap();
+    let req = ApiRequest::new(
+        "par",
+        Method::Predict(PredictParams { cfg: cfg.clone(), capacity_mib: None, detail: false }),
+    );
+    // the client-side document carries the object…
+    let doc = req.to_json().to_string();
+    assert!(doc.contains("\"parallelism\""), "{doc}");
+    let resp = client.call(&req);
+    let payload = resp.result.expect("parallel predict");
+    let got = codec::prediction_from_json(payload.get("prediction").unwrap()).unwrap();
+    assert_eq!(got, want, "wire parallel prediction diverged");
+    // …and the response block reports the per-rank structure
+    let par = payload.get("parallelism").expect("parallelism response block");
+    assert_eq!(par.get("tp").unwrap().as_u64(), Some(2));
+    assert_eq!(par.get("pp").unwrap().as_u64(), Some(2));
+    assert_eq!(par.get("world_size").unwrap().as_u64(), Some(4));
+    let binding = par.get("binding_stage").unwrap().as_u64().unwrap() as usize;
+    assert_eq!(binding, rp.binding_stage);
+    let stages = par.get("per_stage_peak_mib").unwrap().as_arr().unwrap();
+    assert_eq!(stages.len(), 2);
+
+    // a raw-JSON parallelism object works too (dp inside the object)
+    let resp = client.call_raw(concat!(
+        r#"{"v":1,"id":"raw","method":"predict","params":{"config":{"model":"llava-tiny","#,
+        r#""mbs":1,"seq_len":64},"parallelism":{"tp":2,"pp":1,"dp":2,"world_size":4}}}"#,
+    ));
+    let payload = resp.result.expect("raw parallel predict");
+    let mut expect = tiny();
+    expect.seq_len = 64;
+    expect.tp = 2;
+    expect.dp = 2;
+    let got = codec::prediction_from_json(payload.get("prediction").unwrap()).unwrap();
+    assert_eq!(got, predictor::predict(&expect).unwrap());
+    server.shutdown();
+}
+
+/// Unknown sub-fields of `parallelism` and world-size mismatches are
+/// strict bad_requests — on every config-carrying method.
+#[test]
+fn parallelism_sub_fields_are_strict() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+
+    for method in ["predict", "plan", "sweep", "simulate", "baselines", "modality"] {
+        let extra = match method {
+            "plan" => r#""budget_mib":1e9,"#,
+            _ => "",
+        };
+        let line = format!(
+            r#"{{"v":1,"id":"s","method":"{method}","params":{{"config":{{"model":"llava-tiny"}},{extra}"parallelism":{{"tpp":2}}}}}}"#,
+        );
+        let err = client.call_raw(&line).result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest, "{method}");
+        assert!(err.message.contains("tpp"), "{method}: {}", err.message);
+    }
+
+    let resp = client.call_raw(concat!(
+        r#"{"v":1,"id":"ws","method":"predict","params":{"config":{"model":"llava-tiny"},"#,
+        r#""parallelism":{"tp":2,"pp":2,"dp":2,"world_size":16}}}"#,
+    ));
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("world_size"), "{}", err.message);
+    server.shutdown();
+}
+
+/// Golden: envelopes *without* a parallelism object produce documents
+/// and renderings byte-identical to the pre-parallelism (PR 4) wire —
+/// no new keys leak into single-device payloads.
+#[test]
+fn golden_no_parallelism_payloads_carry_no_new_keys() {
+    let mut d = Dispatcher::analytical();
+
+    // predict: no "parallelism" key anywhere in the payload
+    let req = ApiRequest {
+        id: None,
+        method: Method::Predict(PredictParams {
+            cfg: tiny(),
+            capacity_mib: Some(80.0 * 1024.0),
+            detail: true,
+        }),
+    };
+    let text = d.handle(&req).into_result().unwrap().to_string();
+    assert!(!text.contains("parallelism"), "{text}");
+    assert!(!text.contains("per_stage"), "{text}");
+    // and the client-side request document has none either
+    assert!(!req.to_json().to_string().contains("parallelism"));
+
+    // plan: candidates carry no tp/pp/binding_stage keys, axes none
+    let base = tiny();
+    let plan_req = ApiRequest {
+        id: None,
+        method: Method::Plan(PlanParams {
+            req: PlanRequest {
+                base: base.clone(),
+                budget_mib: 1e9,
+                axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&base) },
+            },
+        }),
+    };
+    assert!(!plan_req.to_json().to_string().contains("\"tp\""));
+    let text = d.handle(&plan_req).into_result().unwrap().to_string();
+    assert!(!text.contains("\"tp\""), "{text}");
+    assert!(!text.contains("\"pp\""), "{text}");
+    assert!(!text.contains("binding_stage"), "{text}");
+
+    // sweep: points carry no tp/pp keys, and the rendered table keeps
+    // the pre-parallelism header set
+    let sweep_req = ApiRequest {
+        id: None,
+        method: Method::Sweep(SweepParams {
+            base: tiny(),
+            dp: vec![1, 2],
+            mbs: vec![1],
+            seq_len: vec![32],
+            zero: vec![tiny().zero],
+            capacity_mib: None,
+        }),
+    };
+    let payload = d.handle(&sweep_req).into_result().unwrap();
+    assert!(!payload.to_string().contains("\"tp\""));
+    let table = render::sweep_table(&payload, false).unwrap();
+    let header = table.render().lines().next().unwrap().to_string();
+    assert!(!header.contains("tp"), "{header}");
+}
+
+/// A tp/pp plan travels the wire: candidates decode with their tp/pp
+/// and binding stage intact, and the frontier table gains the parallel
+/// columns.
+#[test]
+fn parallel_plan_round_trips_with_binding_stage() {
+    let base = tiny();
+    let axes = Axes {
+        mbs: vec![1, 2],
+        tp: vec![1, 2],
+        pp: vec![1, 2],
+        ..Axes::fixed(&base)
+    };
+    let req = PlanRequest { base: base.clone(), budget_mib: 1e9, axes };
+    let direct = planner::plan_with(&req, &Sweep::new(2)).unwrap();
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(2));
+    let payload = d
+        .handle(&ApiRequest { id: None, method: Method::Plan(PlanParams { req }) })
+        .into_result()
+        .unwrap();
+    let wire = json_mini::parse(&payload.to_string()).unwrap();
+    let decoded = codec::plan_from_json(&wire, &base).unwrap();
+    assert_eq!(decoded.candidates.len(), direct.candidates.len());
+    for (a, b) in decoded.candidates.iter().zip(&direct.candidates) {
+        assert_eq!(a.cfg.cache_key(), b.cfg.cache_key(), "tp/pp lost on the wire");
+        assert_eq!(a.binding_stage, b.binding_stage);
+    }
+    let header = report::frontier_table(&decoded, 100, true).render();
+    assert!(header.lines().next().unwrap().contains("tp"), "{header}");
+    assert_eq!(
+        report::frontier_table(&decoded, 100, true).render(),
+        report::frontier_table(&direct, 100, true).render()
+    );
 }
 
 /// Spec-path configs travel the wire like any other model reference.

@@ -1,0 +1,263 @@
+//! Parallelism invariant suite: property tests over every zoo preset
+//! and every checked-in architecture spec (`examples/archs/*.toml`),
+//! driven by the deterministic [`mmpredict::util::prng::Prng`] fuzzer.
+//!
+//! The invariants (ARCHITECTURE.md §Parallelism):
+//!
+//! 1. per-rank weight/grad/optimizer terms — and hence the peak — are
+//!    non-increasing in the tensor-parallel degree `tp`;
+//! 2. for `pp > 1`, the per-rank peak (max over pipeline stages) never
+//!    exceeds the single-device peak, and the stage views partition
+//!    the weights exactly;
+//! 3. ZeRO-3 + dp shards divide the optimizer state exactly: per-rank
+//!    state is `ceil(T/dp)` elements, and (for power-of-two dp) the
+//!    predictor's optimizer term scales *bitwise* by `1/dp`;
+//! 4. `tp = pp = dp = 1` runs the byte-identical single-device code
+//!    path (the golden parity fixtures in `tests/parity.rs` pin those
+//!    numbers; here we pin that the per-rank APIs degenerate to them).
+
+use mmpredict::config::{Precision, Stage, TrainConfig, ZeroStage};
+use mmpredict::parser::{self, pipeline};
+use mmpredict::predictor::{self, Prediction};
+use mmpredict::simulator::{self, zero};
+use mmpredict::util::prng::Prng;
+
+/// Every model reference the suite fuzzes over: the zoo registry plus
+/// every checked-in architecture spec.
+fn all_models() -> Vec<String> {
+    let mut models: Vec<String> = mmpredict::zoo::names()
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/archs");
+    let mut specs: Vec<String> = std::fs::read_dir(dir)
+        .expect("examples/archs exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path().to_string_lossy().into_owned())
+        .filter(|p| p.ends_with(".toml"))
+        .collect();
+    specs.sort();
+    models.extend(specs);
+    models
+}
+
+/// A random small-but-valid config for `model` (LoRA excluded: spec
+/// files name their decoders freely, so the default target list can
+/// legitimately refuse to apply).
+fn random_cfg(rng: &mut Prng, model: &str) -> TrainConfig {
+    let stage = *rng.pick(&[Stage::Pretrain, Stage::Finetune, Stage::Full]);
+    TrainConfig {
+        model: model.to_string(),
+        stage,
+        mbs: *rng.pick(&[1u64, 2, 4]),
+        seq_len: *rng.pick(&[64u64, 128, 256]),
+        dp: *rng.pick(&[1u64, 2, 4, 8]),
+        zero: *rng.pick(&[ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3]),
+        precision: *rng.pick(&[Precision::Bf16Mixed, Precision::Fp32]),
+        grad_checkpoint: rng.chance(0.7),
+        lora: None,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+/// Invariant 1: weight/grad/optimizer terms (and the peak they anchor)
+/// are non-increasing in tp. Exact in f32 — every per-layer element
+/// count is `div_ceil`-monotone and f32 add/mul/max are monotone — so
+/// the slack is a pure guard against platform-float surprises.
+#[test]
+fn tp_weight_grad_opt_terms_non_increasing() {
+    let mut rng = Prng::new(0xA11CE);
+    for model in all_models() {
+        for _case in 0..2 {
+            let base = random_cfg(&mut rng, &model);
+            let mut prev: Option<Prediction> = None;
+            for tp in [1u64, 2, 4, 8] {
+                let mut cfg = base.clone();
+                cfg.tp = tp;
+                let p = predictor::predict(&cfg).unwrap();
+                if let Some(q) = prev {
+                    let ctx = format!("{model} tp {tp} ({base:?})");
+                    assert!(p.param_mib <= q.param_mib + 1e-3, "param grew: {ctx}");
+                    assert!(p.grad_mib <= q.grad_mib + 1e-3, "grad grew: {ctx}");
+                    assert!(p.opt_mib <= q.opt_mib + 1e-3, "opt grew: {ctx}");
+                    assert!(p.peak_mib <= q.peak_mib + 1e-3, "peak grew: {ctx}");
+                }
+                prev = Some(p);
+            }
+        }
+    }
+}
+
+/// Invariant 1 on the ground-truth side: the simulator's per-rank peak
+/// is non-increasing in tp too (allocator rounding gets a small slack).
+#[test]
+fn tp_simulated_peak_non_increasing() {
+    let mut rng = Prng::new(0xB0B);
+    for model in all_models() {
+        let base = random_cfg(&mut rng, &model);
+        let peaks: Vec<f64> = [1u64, 2, 4]
+            .iter()
+            .map(|&tp| {
+                let mut cfg = base.clone();
+                cfg.tp = tp;
+                simulator::simulate(&cfg).unwrap().peak_mib
+            })
+            .collect();
+        for w in peaks.windows(2) {
+            // small slack: the caching allocator's segment rounding is
+            // not perfectly monotone in request sizes
+            assert!(w[1] <= w[0] + 8.0, "{model}: {peaks:?}");
+        }
+    }
+}
+
+/// Invariant 2: max-over-stages per-rank peak <= single-device peak.
+/// The harmonic act-balanced partition guarantees this up to
+/// block-granularity discretization, hence the small tolerance.
+#[test]
+fn pp_max_stage_peak_le_single_device() {
+    let mut rng = Prng::new(0xC0FFEE);
+    for model in all_models() {
+        for _case in 0..2 {
+            let base = random_cfg(&mut rng, &model);
+            let single_pred = predictor::predict(&base).unwrap().peak_mib as f64;
+            let single_sim = simulator::simulate(&base).unwrap().peak_mib;
+            for pp in [2u64, 4] {
+                let mut cfg = base.clone();
+                cfg.pp = pp;
+                let rp = predictor::predict_per_rank(&cfg).unwrap();
+                assert_eq!(rp.per_stage.len(), pp as usize);
+                let rank_pred = rp.peak_mib() as f64;
+                assert!(
+                    rank_pred <= single_pred * 1.02 + 16.0,
+                    "{model} pp {pp}: predicted per-rank {rank_pred} vs single {single_pred}"
+                );
+                let rank_sim = simulator::simulate(&cfg).unwrap().peak_mib;
+                assert!(
+                    rank_sim <= single_sim * 1.02 + 16.0,
+                    "{model} pp {pp}: simulated per-rank {rank_sim} vs single {single_sim}"
+                );
+            }
+        }
+    }
+}
+
+/// Invariant 2b: the stage views tile the layer list and partition the
+/// (tp-sharded) weights exactly — no layer counted twice or dropped.
+#[test]
+fn pp_stage_views_partition_weights_exactly() {
+    let mut rng = Prng::new(0xD1CE);
+    for model in all_models() {
+        let mut cfg = random_cfg(&mut rng, &model);
+        cfg.tp = *rng.pick(&[1u64, 2]);
+        let pm = parser::parse(&cfg).unwrap();
+        for pp in [2u64, 3, 4] {
+            let bounds = pipeline::stage_bounds(&pm, pp).unwrap();
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds.last().unwrap().1, pm.layers.len());
+            let mut total = 0u64;
+            let mut trainable = 0u64;
+            for (s, &b) in bounds.iter().enumerate() {
+                let view = pipeline::stage_view(&pm, b, pipeline::in_flight(pp, s));
+                total += view.total_param_elems;
+                trainable += view.trainable_param_elems;
+            }
+            assert_eq!(total, pm.total_param_elems, "{model} pp {pp}");
+            assert_eq!(trainable, pm.trainable_param_elems, "{model} pp {pp}");
+        }
+    }
+}
+
+/// Invariant 3: ZeRO-3 + dp divides the optimizer state exactly. The
+/// simulator's flat buffers hold `ceil(T/dp)` elements per state; the
+/// predictor's optimizer term scales bitwise by `1/dp` for
+/// power-of-two dp (multiplication by 2^-k commutes with f32
+/// rounding).
+#[test]
+fn zero3_dp_sharding_divides_optimizer_exactly() {
+    let mut rng = Prng::new(0xFEED);
+    for model in all_models() {
+        let mut base = random_cfg(&mut rng, &model);
+        base.stage = Stage::Finetune;
+        base.zero = ZeroStage::Zero3;
+        base.dp = 1;
+        let pm = parser::parse(&base).unwrap();
+        let t = pm.trainable_param_elems;
+        if t == 0 {
+            continue; // unimodal pretrain-style configs have no states
+        }
+        let opt1 = predictor::predict(&base).unwrap().opt_mib;
+        for dp in [2u64, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.dp = dp;
+            // flat buffers: ceil(T/dp) elements per state, 4 bytes each
+            let bufs = zero::buffers(&pm, &cfg);
+            for &state in &bufs.opt_state_bytes {
+                assert_eq!(state, t.div_ceil(dp) * 4, "{model} dp {dp}");
+            }
+            assert_eq!(bufs.master_bytes % 4, 0);
+            // the shards cover T exactly (last rank padded < dp elems)
+            assert!(dp * t.div_ceil(dp) >= t);
+            assert!(dp * t.div_ceil(dp) < t + dp);
+            // predictor term divides bitwise for power-of-two dp
+            let optd = predictor::predict(&cfg).unwrap().opt_mib;
+            assert!(
+                (optd * dp as f32 - opt1).abs() <= opt1 * 1e-6,
+                "{model} dp {dp}: {optd} * {dp} != {opt1}"
+            );
+        }
+    }
+}
+
+/// Invariant 4: tp = pp = dp = 1 degenerates to the single-device code
+/// path bitwise — the per-rank APIs return exactly what the plain
+/// `predict`/`simulate` calls return (whose absolute values the golden
+/// parity suite in tests/parity.rs pins against the legacy fixtures).
+#[test]
+fn trivial_parallelism_is_bitwise_single_device() {
+    for model in all_models() {
+        let cfg = TrainConfig {
+            model: model.clone(),
+            mbs: 1,
+            seq_len: 64,
+            ..TrainConfig::llava_finetune_default()
+        };
+        let p = predictor::predict(&cfg).unwrap();
+        let rp = predictor::predict_per_rank(&cfg).unwrap();
+        assert_eq!(rp.per_stage.len(), 1, "{model}");
+        assert_eq!(rp.binding_stage, 0, "{model}");
+        assert_eq!(*rp.binding(), p, "{model}");
+
+        let m = simulator::simulate(&cfg).unwrap();
+        let per = simulator::simulate_per_rank(&cfg).unwrap();
+        assert_eq!(per.len(), 1, "{model}");
+        assert_eq!(per[0].peak_mib, m.peak_mib, "{model}");
+        assert_eq!(per[0].pp_stage, 0, "{model}");
+        assert_eq!(m.pp_stage, 0, "{model}");
+    }
+}
+
+/// tp composes with ZeRO: the bucket and step transients size off the
+/// tp-sharded trainable footprint, so they shrink monotonically too.
+#[test]
+fn tp_shrinks_zero_buffers() {
+    let mut rng = Prng::new(0x5EED);
+    for model in all_models() {
+        let mut cfg = random_cfg(&mut rng, &model);
+        cfg.stage = Stage::Finetune;
+        cfg.zero = ZeroStage::Zero2;
+        let pm1 = parser::parse(&cfg).unwrap();
+        if pm1.trainable_param_elems == 0 {
+            continue;
+        }
+        let b1 = zero::buffers(&pm1, &cfg);
+        let mut cfg2 = cfg.clone();
+        cfg2.tp = 4;
+        let pm2 = parser::parse(&cfg2).unwrap();
+        let b2 = zero::buffers(&pm2, &cfg2);
+        assert!(pm2.trainable_param_elems < pm1.trainable_param_elems, "{model}");
+        assert!(b2.master_bytes <= b1.master_bytes, "{model}");
+        assert!(b2.step_temp_bytes <= b1.step_temp_bytes, "{model}");
+        assert!(b2.bucket_capacity <= b1.bucket_capacity, "{model}");
+    }
+}

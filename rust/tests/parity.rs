@@ -27,7 +27,12 @@ use mmpredict::parser::{self, features};
 use mmpredict::predictor::{analytical, Prediction};
 
 /// The pre-refactor LLaVA composition (legacy `zoo::llava`).
-fn legacy_llava(name: &str, vit: VitConfig, lm: LlamaConfig, seq_len: u64) -> (ModelSpec, u64, u64) {
+fn legacy_llava(
+    name: &str,
+    vit: VitConfig,
+    lm: LlamaConfig,
+    seq_len: u64,
+) -> (ModelSpec, u64, u64) {
     let mut spec = ModelSpec::new(name);
     spec.modules.push(vision::build(&vit));
     spec.modules.push(projector::mlp2x_gelu(vit.hidden, lm.hidden));

@@ -7,6 +7,7 @@ use mmpredict::config::TrainConfig;
 use mmpredict::coordinator::{PredictionService, ServiceConfig};
 use mmpredict::planner::{self, Axes, PlanRequest};
 use mmpredict::simulator;
+use mmpredict::sweep::Sweep;
 
 fn tiny_base() -> TrainConfig {
     TrainConfig {
@@ -145,6 +146,87 @@ fn planning_is_deterministic() {
         assert_eq!(x.predicted_mib, y.predicted_mib);
         assert_eq!(x.tokens_per_step, y.tokens_per_step);
         assert_eq!(x.dominated, y.dominated);
+    }
+}
+
+fn parallel_axes(base: &TrainConfig) -> Axes {
+    Axes {
+        mbs: vec![1, 2, 4, 8],
+        tp: vec![1, 2],
+        pp: vec![1, 2],
+        ..Axes::fixed(base)
+    }
+}
+
+/// The enlarged tp/pp grid's frontier holds up against fresh
+/// simulations: every candidate re-simulates to the recorded per-rank
+/// peak (≤ budget), its escalation OOMs, and its binding pipeline
+/// stage matches ground truth.
+#[test]
+fn tp_pp_frontier_is_maximal_against_fresh_simulations() {
+    let base = tiny_base();
+    let axes = parallel_axes(&base);
+    // a budget splitting the single-device mbs ladder exercises both
+    // escalations and open frontiers across the parallel branches
+    let lo = simulator::simulate(&base).unwrap().peak_mib;
+    let mut hi_cfg = base.clone();
+    hi_cfg.mbs = 8;
+    let hi = simulator::simulate(&hi_cfg).unwrap().peak_mib;
+    assert!(hi > lo);
+    let budget = (lo + hi) / 2.0;
+    let plan = planner::plan(&PlanRequest {
+        base: base.clone(),
+        budget_mib: budget,
+        axes: axes.clone(),
+    })
+    .unwrap();
+    assert_eq!(plan.stats.branches, 4, "tp x pp grid");
+    assert!(plan.recommended().next().is_some());
+
+    for c in &plan.candidates {
+        let m = simulator::simulate(&c.cfg).unwrap();
+        assert_eq!(m.peak_mib, c.simulated_mib, "stale per-rank peak");
+        assert!(m.peak_mib <= budget);
+        assert_eq!(m.pp_stage, c.binding_stage, "binding stage diverged");
+        if c.cfg.pp == 1 {
+            assert_eq!(c.binding_stage, 0);
+        } else {
+            assert!(c.binding_stage < c.cfg.pp as usize);
+        }
+        match (c.frontier_open, &c.escalation) {
+            (true, None) => assert_eq!(c.cfg.mbs, *axes.mbs.last().unwrap()),
+            (false, Some(esc)) => {
+                let mut up = c.cfg.clone();
+                up.mbs = esc.mbs;
+                let m2 = simulator::simulate(&up).unwrap();
+                assert_eq!(m2.peak_mib, esc.simulated_mib);
+                assert!(m2.peak_mib > budget);
+            }
+            (open, esc) => panic!("inconsistent flags: open={open} esc={esc:?}"),
+        }
+    }
+
+}
+
+/// The tp/pp plan is deterministic across sweep-engine thread counts.
+#[test]
+fn tp_pp_planning_is_deterministic_across_thread_counts() {
+    let base = tiny_base();
+    let axes = parallel_axes(&base);
+    let lo = simulator::simulate(&base).unwrap().peak_mib;
+    let mut hi_cfg = base.clone();
+    hi_cfg.mbs = 8;
+    let hi = simulator::simulate(&hi_cfg).unwrap().peak_mib;
+    let req = PlanRequest { base, budget_mib: (lo + hi) / 2.0, axes };
+    let one = planner::plan_with(&req, &Sweep::new(1)).unwrap();
+    let many = planner::plan_with(&req, &Sweep::new(4)).unwrap();
+    assert_eq!(one.candidates.len(), many.candidates.len());
+    assert_eq!(one.stats.sim_points, many.stats.sim_points);
+    for (a, b) in one.candidates.iter().zip(&many.candidates) {
+        assert_eq!(a.cfg.cache_key(), b.cfg.cache_key());
+        assert_eq!(a.simulated_mib, b.simulated_mib);
+        assert_eq!(a.binding_stage, b.binding_stage);
+        assert_eq!(a.dominated, b.dominated);
     }
 }
 

@@ -112,7 +112,9 @@ fn trace_is_balanced_for_random_configs() {
         let mut live = std::collections::HashSet::new();
         for e in &events {
             match e {
-                simulator::Event::Alloc { id, .. } => assert!(live.insert(*id), "case {case}: id reuse"),
+                simulator::Event::Alloc { id, .. } => {
+                    assert!(live.insert(*id), "case {case}: id reuse")
+                }
                 simulator::Event::Free { id } => assert!(live.remove(id), "case {case}: bad free"),
                 simulator::Event::Phase { .. } => {}
             }
