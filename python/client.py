@@ -31,17 +31,23 @@ import itertools
 import json
 import socket
 import sys
+import time
 
 WIRE_VERSION = 1
 
 
 class ApiError(RuntimeError):
-    """Structured server-side failure (code + message)."""
+    """Structured server-side failure (code + message).
 
-    def __init__(self, code: str, message: str):
+    ``retry_after_ms`` is the server's backoff hint, present on
+    ``over_capacity`` responses; ``call`` honors it automatically.
+    """
+
+    def __init__(self, code: str, message: str, retry_after_ms: int | None = None):
         super().__init__(f"{code}: {message}")
         self.code = code
         self.message = message
+        self.retry_after_ms = retry_after_ms
 
 
 class ProtocolError(RuntimeError):
@@ -59,12 +65,39 @@ class ReproClient:
 
     # -- envelope -------------------------------------------------------
 
-    def call(self, method: str, params: dict | None = None):
-        """Send one request, return the `ok` payload (raises ApiError)."""
+    def call(
+        self,
+        method: str,
+        params: dict | None = None,
+        deadline_ms: int | None = None,
+        max_attempts: int = 3,
+    ):
+        """Send one request, return the `ok` payload (raises ApiError).
+
+        ``over_capacity`` responses are retried up to ``max_attempts``
+        times, sleeping the server's ``retry_after_ms`` hint between
+        attempts (pass ``max_attempts=1`` to disable). Other errors
+        raise immediately.
+        """
+        last: ApiError | None = None
+        for _attempt in range(max(1, max_attempts)):
+            try:
+                return self._call_once(method, params, deadline_ms)
+            except ApiError as e:
+                if e.code != "over_capacity":
+                    raise
+                last = e
+                time.sleep((e.retry_after_ms or 100) / 1000.0)
+        assert last is not None
+        raise last
+
+    def _call_once(self, method: str, params: dict | None, deadline_ms: int | None):
         rid = f"py-{next(self._ids)}"
         req = {"v": WIRE_VERSION, "id": rid, "method": method}
         if params is not None:
             req["params"] = params
+        if deadline_ms is not None:
+            req["deadline_ms"] = deadline_ms
         self._wfile.write(json.dumps(req) + "\n")
         self._wfile.flush()
         line = self._rfile.readline()
@@ -77,7 +110,11 @@ class ReproClient:
             raise ProtocolError(f"response id {resp.get('id')!r} != request id {rid!r}")
         if "error" in resp:
             err = resp["error"]
-            raise ApiError(err.get("code", "internal"), err.get("message", ""))
+            raise ApiError(
+                err.get("code", "internal"),
+                err.get("message", ""),
+                err.get("retry_after_ms"),
+            )
         if "ok" not in resp:
             raise ProtocolError(f"response carries neither ok nor error: {resp!r}")
         return resp["ok"]
@@ -107,6 +144,10 @@ class ReproClient:
     def metrics(self):
         return self.call("metrics")
 
+    def health(self):
+        """Liveness + pressure snapshot: status, queue depth, fault state."""
+        return self.call("health")
+
     def close(self):
         try:
             self._wfile.close()
@@ -127,6 +168,10 @@ def _demo(host: str, port: int) -> int:
     with ReproClient(host, port) as c:
         names = [m["name"] for m in c.models()]
         print(f"server models: {', '.join(names)}")
+
+        h = c.health()
+        print(f"health: {h['status']}, queue {h['queue_depth']}/{h['queue_capacity']}")
+        assert h["status"] in ("ok", "degraded")
 
         ok = c.predict(cfg, capacity_mib=80 * 1024)
         peak = ok["prediction"]["peak_mib"]

@@ -20,6 +20,20 @@ fn main() {
         let _ = mmpredict::predictor::predict(&cfg).unwrap();
     }));
 
+    println!("=== inert fault layer overhead ===\n");
+    // The chaos failpoints are compiled in unconditionally; with the
+    // default (inert) plan every roll is a rate==0 early return that
+    // touches no atomics. This round-trip pins the happy path flat —
+    // compare against the analytical predict above plus queue cost.
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    let client = svc.client();
+    report(&bench("analytical service round-trip (inert faults)", 3, 200, || {
+        let _ = client.predict(TrainConfig::fig2b(4)).unwrap();
+    }));
+    drop(client);
+    svc.shutdown();
+    println!();
+
     let dir = mmpredict::runtime::default_artifacts_dir();
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         eprintln!("no artifacts — skipping PJRT benches (run `make artifacts`)");

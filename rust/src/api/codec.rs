@@ -516,6 +516,10 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
             strict_keys(m, &[], "metrics params")?;
             Ok(Method::Metrics)
         }
+        "health" => {
+            strict_keys(m, &[], "health params")?;
+            Ok(Method::Health)
+        }
         other => {
             let hint = crate::util::text::did_you_mean(other, METHOD_NAMES);
             Err(ApiError::new(
@@ -578,7 +582,7 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
         Method::Simulate(p) => Some(config_params(&p.cfg)),
         Method::Baselines(p) => Some(config_params(&p.cfg)),
         Method::Modality(p) => Some(config_params(&p.cfg)),
-        Method::Models | Method::Metrics => None,
+        Method::Models | Method::Metrics | Method::Health => None,
     }
 }
 

@@ -13,7 +13,7 @@
 //! ([`super::serve`]).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -31,10 +31,70 @@ use crate::util::json_mini::{obj, Json};
 use crate::{baselines, predictor};
 
 use super::codec;
+use super::fault::{FaultState, Site};
 use super::{
     ApiError, ApiRequest, ApiResponse, ErrorCode, Method, PredictParams, SweepParams,
     METHOD_NAMES,
 };
+
+/// Deadline headroom below which `plan`/`sweep` skip the simulator and
+/// answer analytically (marked `degraded` in the payload): a simulator
+/// pass routinely costs hundreds of milliseconds, so starting one with
+/// less budget than this converts the request into a
+/// `deadline_exceeded` failure instead of a useful (if coarser) answer.
+pub const DEGRADE_HEADROOM: Duration = Duration::from_millis(500);
+
+/// Per-request execution context: the armed deadline plus the
+/// queue-pressure flag the service worker computes at dequeue time.
+/// [`ExecCtx::default`] (no deadline, no pressure) is the CLI path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecCtx {
+    /// Absolute deadline (armed at submission); `None` = unbounded.
+    pub deadline: Option<Instant>,
+    /// True when the service queue is under pressure (more than 3/4
+    /// full at dequeue) — `plan`/`sweep` degrade to analytical-only.
+    pub pressure: bool,
+}
+
+impl ExecCtx {
+    /// Arm a deadline `budget` from now.
+    pub fn with_deadline(budget: Duration) -> Self {
+        ExecCtx { deadline: Instant::now().checked_add(budget), pressure: false }
+    }
+
+    /// True when the armed deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Remaining budget (`None` when no deadline is armed; zero when
+    /// expired).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// Why this request must degrade, if it must: queue pressure, or a
+    /// deadline too close to afford the simulator.
+    pub fn degrade_reason(&self) -> Option<&'static str> {
+        if self.pressure {
+            return Some("queue pressure: simulator validation skipped");
+        }
+        match self.remaining() {
+            Some(r) if r < DEGRADE_HEADROOM => {
+                Some("deadline headroom too small for simulator validation")
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The structured `deadline_exceeded` error every surface answers with.
+pub(crate) fn deadline_exceeded() -> ApiError {
+    ApiError::new(
+        ErrorCode::DeadlineExceeded,
+        "deadline expired before execution completed",
+    )
+}
 
 /// One backend's answer for one configuration: the headline peak plus
 /// whatever extra structure the backend produces.
@@ -273,12 +333,35 @@ pub(crate) fn predict_payload(
     Ok(obj(entries))
 }
 
+/// Stamp a payload as degraded (additive v1 response fields; decode
+/// paths ignore unknown top-level keys, so clients that predate the
+/// marker still parse the document).
+fn mark_degraded(mut payload: Json, reason: &str) -> Json {
+    if let Json::Obj(m) = &mut payload {
+        m.insert("degraded".to_string(), Json::Bool(true));
+        m.insert("degraded_reason".to_string(), Json::Str(reason.to_string()));
+    }
+    payload
+}
+
 pub(crate) fn plan_payload(req: &PlanRequest, engine: &Sweep) -> Result<Json, ApiError> {
     let plan = planner::plan_with(req, engine).map_err(classify)?;
     Ok(report::plan_json(&plan))
 }
 
-pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, ApiError> {
+/// Degraded tier of `plan`: analytical-only (no simulator bisection).
+/// Candidates carry the predictor's peak as `simulated_mib` and
+/// `stats.sim_points` is 0 — the top-level `degraded` marker (added by
+/// the caller) tells the client the frontier is *not*
+/// simulator-validated.
+pub(crate) fn plan_payload_degraded(req: &PlanRequest, engine: &Sweep) -> Result<Json, ApiError> {
+    let plan = planner::plan_analytical_with(req, engine).map_err(classify)?;
+    Ok(report::plan_json(&plan))
+}
+
+/// Enumerate + validate a sweep's config grid (seq → mbs → zero → dp,
+/// the CLI's nested order).
+fn sweep_cfgs(p: &SweepParams) -> Result<Vec<TrainConfig>, ApiError> {
     let mut cfgs = Vec::new();
     for &seq_len in &p.seq_len {
         for &mbs in &p.mbs {
@@ -292,6 +375,50 @@ pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, Api
     for c in &cfgs {
         c.validate().map_err(classify)?;
     }
+    Ok(cfgs)
+}
+
+/// Degraded tier of `sweep`: predictor-only points, no `measured_mib`
+/// (the simulator is skipped entirely). `fits` verdicts still come from
+/// the predicted peak, exactly as in the full path.
+pub(crate) fn sweep_payload_degraded(p: &SweepParams, engine: &Sweep) -> Result<Json, ApiError> {
+    let cfgs = sweep_cfgs(p)?;
+    let preds = engine
+        .run(&cfgs, |_ctx, pm, cfg| {
+            Ok(predictor::predict_per_rank_parsed(pm, cfg)?.peak_mib() as f64)
+        })
+        .map_err(classify)?;
+    let points = cfgs
+        .iter()
+        .zip(&preds)
+        .map(|(cfg, pred)| {
+            let mut e = vec![
+                ("seq_len", num(cfg.seq_len as f64)),
+                ("mbs", num(cfg.mbs as f64)),
+                ("zero", num(cfg.zero.as_int() as f64)),
+                ("dp", num(cfg.dp as f64)),
+            ];
+            if cfg.tp > 1 {
+                e.push(("tp", num(cfg.tp as f64)));
+            }
+            if cfg.pp > 1 {
+                e.push(("pp", num(cfg.pp as f64)));
+            }
+            e.push(("predicted_mib", num(*pred)));
+            if let Some(cap) = p.capacity_mib {
+                e.push(("fits", Json::Bool(*pred <= cap)));
+            }
+            obj(e)
+        })
+        .collect();
+    Ok(obj(vec![
+        ("points", Json::Arr(points)),
+        ("threads", num(engine.threads() as f64)),
+    ]))
+}
+
+pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, ApiError> {
+    let cfgs = sweep_cfgs(p)?;
     let rows = engine
         .run(&cfgs, |ctx, pm, cfg| {
             // parse-once: both sides reuse the shared full parse (the
@@ -422,6 +549,36 @@ pub(crate) fn metrics_payload(m: &Metrics) -> Json {
     ])
 }
 
+/// The `health` payload: liveness + pressure snapshot. `status` flips
+/// to `"degraded"` when the queue sits above 3/4 of its capacity — the
+/// same threshold at which the worker starts degrading plan/sweep.
+pub(crate) fn health_payload(
+    m: &Metrics,
+    faults: &FaultState,
+    queue_capacity: usize,
+) -> Json {
+    let depth = m.queue_depth();
+    let pressured = queue_capacity > 0 && depth as usize * 4 > queue_capacity * 3;
+    obj(vec![
+        ("status", s(if pressured { "degraded" } else { "ok" })),
+        ("queue_depth", num(depth as f64)),
+        ("queue_capacity", num(queue_capacity as f64)),
+        ("worker_restarts", num(m.worker_restarts() as f64)),
+        ("degraded_responses", num(m.degraded() as f64)),
+        ("deadlines_exceeded", num(m.deadlines_exceeded() as f64)),
+        ("requests", num(m.requests() as f64)),
+        ("responses", num(m.responses() as f64)),
+        ("errors", num(m.errors() as f64)),
+        (
+            "faults",
+            obj(vec![
+                ("active", Json::Bool(faults.active())),
+                ("injected", num(faults.injected() as f64)),
+            ]),
+        ),
+    ])
+}
+
 /// Executes [`ApiRequest`]s: the one place every surface's requests
 /// land. `repro predict/plan/sweep` construct one of these directly;
 /// the batched service's worker uses the same payload builders (with
@@ -430,6 +587,12 @@ pub struct Dispatcher {
     backend: Box<dyn Estimator>,
     engine: Sweep,
     metrics: Arc<Metrics>,
+    /// Fault-injection state ([inert](FaultState::inert) by default —
+    /// zero-cost, cannot change any output).
+    faults: Arc<FaultState>,
+    /// Service queue capacity, surfaced by `health` (0 = no queue: the
+    /// CLI / in-process path).
+    queue_capacity: usize,
 }
 
 impl Dispatcher {
@@ -447,7 +610,26 @@ impl Dispatcher {
         engine: Sweep,
         metrics: Arc<Metrics>,
     ) -> Self {
-        Dispatcher { backend, engine, metrics }
+        Dispatcher {
+            backend,
+            engine,
+            metrics,
+            faults: FaultState::inert_arc(),
+            queue_capacity: 0,
+        }
+    }
+
+    /// Attach a fault-injection state (builder style).
+    pub fn with_faults(mut self, faults: Arc<FaultState>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Record the service queue capacity for `health` reporting
+    /// (builder style).
+    pub fn with_queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -459,10 +641,17 @@ impl Dispatcher {
         self.engine.threads()
     }
 
-    /// Execute one request, recording per-method metrics.
+    /// Execute one request with no deadline or pressure (the CLI and
+    /// in-process path).
     pub fn handle(&mut self, req: &ApiRequest) -> ApiResponse {
+        self.handle_with(req, &ExecCtx::default())
+    }
+
+    /// Execute one request under an execution context, recording
+    /// per-method metrics.
+    pub fn handle_with(&mut self, req: &ApiRequest, ctx: &ExecCtx) -> ApiResponse {
         let t0 = Instant::now();
-        let result = self.payload(&req.method);
+        let result = self.payload_with(&req.method, ctx);
         let ok = result.is_ok();
         match (&req.method, ok) {
             (Method::Plan(_), true) => self.metrics.on_plan(t0.elapsed()),
@@ -480,6 +669,33 @@ impl Dispatcher {
     /// worker routes predictions through its batcher and everything
     /// else here).
     pub(crate) fn payload(&mut self, method: &Method) -> Result<Json, ApiError> {
+        self.payload_with(method, &ExecCtx::default())
+    }
+
+    pub(crate) fn payload_with(
+        &mut self,
+        method: &Method,
+        ctx: &ExecCtx,
+    ) -> Result<Json, ApiError> {
+        // Injected dispatch faults fire before execution — latency
+        // first, so the deadline check below observes it (exactly what
+        // a slow backend would look like to the defense).
+        if let Some(d) = self.faults.stall(Site::DispatchLatency) {
+            std::thread::sleep(d);
+        }
+        if ctx.expired() {
+            self.metrics.on_deadline_exceeded();
+            return Err(deadline_exceeded());
+        }
+        if self.faults.roll(Site::DispatchInternal) {
+            return Err(ApiError::internal("injected fault: forced internal error"));
+        }
+        if self.faults.roll(Site::DispatchBackendUnavailable) {
+            return Err(ApiError::new(
+                ErrorCode::BackendUnavailable,
+                "injected fault: backend unavailable",
+            ));
+        }
         match method {
             Method::Predict(p) => {
                 if p.cfg.pp > 1 {
@@ -499,13 +715,32 @@ impl Dispatcher {
                 })?;
                 predict_payload(&pred, None, p)
             }
-            Method::Plan(p) => plan_payload(&p.req, &self.engine),
-            Method::Sweep(p) => sweep_payload(p, &self.engine),
+            Method::Plan(p) => match ctx.degrade_reason() {
+                Some(reason) => {
+                    self.metrics.on_degraded();
+                    plan_payload_degraded(&p.req, &self.engine)
+                        .map(|j| mark_degraded(j, reason))
+                }
+                None => plan_payload(&p.req, &self.engine),
+            },
+            Method::Sweep(p) => match ctx.degrade_reason() {
+                Some(reason) => {
+                    self.metrics.on_degraded();
+                    sweep_payload_degraded(p, &self.engine)
+                        .map(|j| mark_degraded(j, reason))
+                }
+                None => sweep_payload(p, &self.engine),
+            },
             Method::Simulate(p) => simulate_payload(&p.cfg),
             Method::Baselines(p) => baselines_payload(&p.cfg),
             Method::Modality(p) => modality_payload(&p.cfg),
             Method::Models => models_payload(),
             Method::Metrics => Ok(metrics_payload(&self.metrics)),
+            Method::Health => Ok(health_payload(
+                &self.metrics,
+                &self.faults,
+                self.queue_capacity,
+            )),
         }
     }
 }
@@ -571,6 +806,7 @@ mod tests {
             Method::Modality(crate::api::ModalityParams { cfg: cfg.clone() }),
             Method::Models,
             Method::Metrics,
+            Method::Health,
         ];
         for (i, method) in reqs.into_iter().enumerate() {
             let req = ApiRequest::new(format!("t{i}"), method);
@@ -583,6 +819,114 @@ mod tests {
         assert_eq!(d.metrics().method_requests(0), 1); // predict
         assert_eq!(d.metrics().method_requests(3), 1); // simulate
         assert_eq!(d.metrics().method_requests(7), 1); // metrics
+        assert_eq!(d.metrics().method_requests(8), 1); // health
+    }
+
+    #[test]
+    fn health_payload_reports_ok_and_fault_status() {
+        let mut d = Dispatcher::analytical().with_queue_capacity(8);
+        let payload = d.handle(&ApiRequest::new("h", Method::Health)).result.unwrap();
+        assert_eq!(payload.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(payload.get("queue_capacity").and_then(Json::as_u64), Some(8));
+        assert_eq!(payload.get("worker_restarts").and_then(Json::as_u64), Some(0));
+        let faults = payload.get("faults").unwrap();
+        assert_eq!(faults.get("active"), Some(&Json::Bool(false)));
+        assert_eq!(faults.get("injected").and_then(Json::as_u64), Some(0));
+    }
+
+    #[test]
+    fn pressure_degrades_plan_and_sweep_with_markers() {
+        use crate::planner::{Axes, PlanRequest};
+        let mut d = Dispatcher::analytical();
+        let base = tiny();
+        let ctx = ExecCtx { deadline: None, pressure: true };
+
+        let axes = Axes { mbs: vec![1, 2], ..Axes::fixed(&base) };
+        let req = ApiRequest::new(
+            "p",
+            Method::Plan(crate::api::PlanParams {
+                req: PlanRequest { base: base.clone(), budget_mib: 1e9, axes },
+            }),
+        );
+        let payload = d.handle_with(&req, &ctx).result.unwrap();
+        assert_eq!(payload.get("degraded"), Some(&Json::Bool(true)));
+        assert!(payload
+            .get("degraded_reason")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("queue pressure"));
+        // analytical-only: no simulations, candidates mirror predictions
+        let stats = payload.get("stats").unwrap();
+        assert_eq!(stats.get("sim_points").and_then(Json::as_u64), Some(0));
+        for c in payload.get("candidates").unwrap().as_arr().unwrap() {
+            assert_eq!(c.get("predicted_mib"), c.get("simulated_mib"));
+        }
+
+        let sweep = ApiRequest::new(
+            "s",
+            Method::Sweep(SweepParams {
+                base: base.clone(),
+                dp: vec![1],
+                mbs: vec![1, 2],
+                seq_len: vec![base.seq_len],
+                zero: vec![base.zero],
+                capacity_mib: None,
+            }),
+        );
+        let payload = d.handle_with(&sweep, &ctx).result.unwrap();
+        assert_eq!(payload.get("degraded"), Some(&Json::Bool(true)));
+        for pt in payload.get("points").unwrap().as_arr().unwrap() {
+            assert!(pt.get("predicted_mib").is_some());
+            assert!(pt.get("measured_mib").is_none(), "degraded sweep must skip the simulator");
+        }
+        assert_eq!(d.metrics().degraded(), 2);
+        // non-degraded requests through the same dispatcher stay clean
+        let payload = d.handle(&sweep).result.unwrap();
+        assert!(payload.get("degraded").is_none());
+        assert!(payload.get("points").unwrap().as_arr().unwrap()[0]
+            .get("measured_mib")
+            .is_some());
+    }
+
+    #[test]
+    fn expired_deadline_is_structured_and_counted() {
+        let mut d = Dispatcher::analytical();
+        let ctx = ExecCtx {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            pressure: false,
+        };
+        let resp = d.handle_with(&ApiRequest::new("x", Method::Models), &ctx);
+        let err = resp.result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded);
+        assert_eq!(d.metrics().deadlines_exceeded(), 1);
+        assert_eq!(d.metrics().method_errors(6), 1);
+        // a generous deadline executes normally
+        let ctx = ExecCtx::with_deadline(Duration::from_secs(60));
+        assert!(d.handle_with(&ApiRequest::new("y", Method::Models), &ctx).is_ok());
+    }
+
+    #[test]
+    fn injected_dispatch_faults_force_structured_errors() {
+        use crate::api::fault::{FaultPlan, FaultState};
+        let faults = Arc::new(FaultState::new(FaultPlan {
+            seed: 3,
+            internal: 1.0,
+            ..FaultPlan::default()
+        }));
+        let mut d = Dispatcher::analytical().with_faults(Arc::clone(&faults));
+        let err = d.handle(&ApiRequest::new("f", Method::Models)).result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::Internal);
+        assert!(err.message.contains("injected"), "{}", err.message);
+        assert_eq!(faults.injected(), 1);
+
+        let faults = Arc::new(FaultState::new(FaultPlan {
+            seed: 3,
+            backend_unavailable: 1.0,
+            ..FaultPlan::default()
+        }));
+        let mut d = Dispatcher::analytical().with_faults(faults);
+        let err = d.handle(&ApiRequest::new("g", Method::Models)).result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::BackendUnavailable);
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is schedule-as-data: a seed plus per-failpoint
+//! probabilities (and stall durations), loadable from a TOML file or the
+//! `REPRO_FAULT_PLAN` environment variable. The plan compiles into a
+//! [`FaultState`] whose [`FaultState::roll`] decides, per failpoint
+//! *arrival*, whether the fault fires — and the decision is a pure
+//! function of `(seed, site, arrival index)`, so a chaos run is
+//! reproducible from its seed alone: thread interleaving changes which
+//! request draws which arrival index, but the *sequence* of injected
+//! faults at every site is identical across runs.
+//!
+//! Failpoint catalog (threaded through `api/serve.rs`,
+//! `api/dispatch.rs` and `coordinator/server.rs`):
+//!
+//! | site | layer | effect when it fires |
+//! |------|-------|----------------------|
+//! | `accept_drop` | serve | accepted connection closed immediately |
+//! | `accept_stall` | serve | accept loop sleeps `accept_stall_ms` |
+//! | `read_stall` | serve | request handling delayed `read_stall_ms` |
+//! | `write_stall` | serve | response write delayed `write_stall_ms` |
+//! | `partial_frame` | serve | response truncated mid-frame, then close |
+//! | `conn_drop` | serve | connection closed after a response |
+//! | `dispatch_latency` | dispatch | `latency_ms` added before execution |
+//! | `dispatch_internal` | dispatch | forced `internal` error |
+//! | `dispatch_backend_unavailable` | dispatch | forced `backend_unavailable` |
+//! | `worker_panic` | coordinator | worker thread panics mid-job |
+//! | `queue_reject` | coordinator | `over_capacity` burst on submit |
+//!
+//! The default state is [`FaultState::inert`]: every rate is zero and
+//! every `roll` returns `false` without touching an atomic, so the
+//! fault layer costs nothing on the happy path and — by construction —
+//! cannot change any golden output.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml_mini;
+
+/// Environment variable naming a TOML fault-plan file; read by
+/// [`FaultState::from_env`] (used by `repro serve` when `--fault-plan`
+/// is not given).
+pub const FAULT_PLAN_ENV: &str = "REPRO_FAULT_PLAN";
+
+/// One failpoint. The numbering is stable (it salts the deterministic
+/// hash), so adding sites at the end never reshuffles existing
+/// schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    AcceptDrop = 0,
+    AcceptStall = 1,
+    ReadStall = 2,
+    WriteStall = 3,
+    PartialFrame = 4,
+    ConnDrop = 5,
+    DispatchLatency = 6,
+    DispatchInternal = 7,
+    DispatchBackendUnavailable = 8,
+    WorkerPanic = 9,
+    QueueReject = 10,
+}
+
+/// Number of failpoints ([`Site`] variants).
+pub const NUM_SITES: usize = 11;
+
+impl Site {
+    /// Stable wire/debug name of the site.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::AcceptDrop => "accept_drop",
+            Site::AcceptStall => "accept_stall",
+            Site::ReadStall => "read_stall",
+            Site::WriteStall => "write_stall",
+            Site::PartialFrame => "partial_frame",
+            Site::ConnDrop => "conn_drop",
+            Site::DispatchLatency => "dispatch_latency",
+            Site::DispatchInternal => "dispatch_internal",
+            Site::DispatchBackendUnavailable => "dispatch_backend_unavailable",
+            Site::WorkerPanic => "worker_panic",
+            Site::QueueReject => "queue_reject",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// A seeded fault schedule: per-site firing probabilities in `[0, 1]`
+/// plus stall durations. Pure data — see the module docs for the TOML
+/// shape and [`FaultState`] for the execution side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the deterministic per-arrival decisions.
+    pub seed: u64,
+    // -- serve layer ([serve] section) --
+    /// P(drop an accepted connection before reading anything).
+    pub accept_drop: f64,
+    /// P(stall the accept loop), paired with `accept_stall_ms`.
+    pub accept_stall: f64,
+    pub accept_stall_ms: u64,
+    /// P(stall between framing a request and handling it).
+    pub read_stall: f64,
+    pub read_stall_ms: u64,
+    /// P(stall before writing a response).
+    pub write_stall: f64,
+    pub write_stall_ms: u64,
+    /// P(truncate a response mid-frame and close the connection).
+    pub partial_frame: f64,
+    /// P(close the connection after a complete response).
+    pub conn_drop: f64,
+    // -- dispatch layer ([dispatch] section) --
+    /// P(inject `latency_ms` of latency before executing a method).
+    pub latency: f64,
+    pub latency_ms: u64,
+    /// P(force an `internal` error instead of executing).
+    pub internal: f64,
+    /// P(force a `backend_unavailable` error instead of executing).
+    pub backend_unavailable: f64,
+    // -- coordinator layer ([worker] section) --
+    /// P(panic inside the worker while executing a job).
+    pub worker_panic: f64,
+    /// P(reject a submit with `over_capacity` even when the queue has
+    /// room — simulates a queue-full burst).
+    pub queue_reject: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            accept_drop: 0.0,
+            accept_stall: 0.0,
+            accept_stall_ms: 0,
+            read_stall: 0.0,
+            read_stall_ms: 0,
+            write_stall: 0.0,
+            write_stall_ms: 0,
+            partial_frame: 0.0,
+            conn_drop: 0.0,
+            latency: 0.0,
+            latency_ms: 0,
+            internal: 0.0,
+            backend_unavailable: 0.0,
+            worker_panic: 0.0,
+            queue_reject: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when every rate is zero — no site can ever fire.
+    pub fn is_inert(&self) -> bool {
+        [
+            self.accept_drop,
+            self.accept_stall,
+            self.read_stall,
+            self.write_stall,
+            self.partial_frame,
+            self.conn_drop,
+            self.latency,
+            self.internal,
+            self.backend_unavailable,
+            self.worker_panic,
+            self.queue_reject,
+        ]
+        .iter()
+        .all(|&r| r == 0.0)
+    }
+
+    /// Parse a plan from TOML text. Unknown sections or keys are
+    /// rejected loudly — a typo'd failpoint name silently doing nothing
+    /// is exactly the kind of bug a chaos harness exists to prevent.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_mini::parse(text).context("parsing fault plan")?;
+        for s in doc.section_names() {
+            if !matches!(s, "serve" | "dispatch" | "worker") {
+                bail!("fault plan: unknown section [{s}] (expected serve/dispatch/worker)");
+            }
+        }
+        let allowed: [(&str, &[&str]); 4] = [
+            ("", &["seed"]),
+            (
+                "serve",
+                &[
+                    "accept_drop",
+                    "accept_stall",
+                    "accept_stall_ms",
+                    "read_stall",
+                    "read_stall_ms",
+                    "write_stall",
+                    "write_stall_ms",
+                    "partial_frame",
+                    "conn_drop",
+                ],
+            ),
+            ("dispatch", &["latency", "latency_ms", "internal", "backend_unavailable"]),
+            ("worker", &["worker_panic", "queue_reject"]),
+        ];
+        for (section, keys) in &allowed {
+            for k in doc.keys_in(section) {
+                if !keys.contains(&k) {
+                    let where_ = if section.is_empty() {
+                        "top level".to_string()
+                    } else {
+                        format!("[{section}]")
+                    };
+                    bail!("fault plan: unknown key `{k}` at {where_}");
+                }
+            }
+        }
+        let rate = |section: &str, key: &str| -> Result<f64> {
+            match doc.get_float(section, key) {
+                None => Ok(0.0),
+                Some(r) if (0.0..=1.0).contains(&r) => Ok(r),
+                Some(r) => bail!("fault plan: {key} = {r} outside [0, 1]"),
+            }
+        };
+        let ms = |section: &str, key: &str| -> Result<u64> {
+            match doc.get_int(section, key) {
+                None => Ok(0),
+                Some(v) if v >= 0 => Ok(v as u64),
+                Some(v) => bail!("fault plan: {key} = {v} must be non-negative"),
+            }
+        };
+        let seed = match doc.get_int("", "seed") {
+            None => 0,
+            Some(v) if v >= 0 => v as u64,
+            Some(v) => bail!("fault plan: seed = {v} must be non-negative"),
+        };
+        Ok(FaultPlan {
+            seed,
+            accept_drop: rate("serve", "accept_drop")?,
+            accept_stall: rate("serve", "accept_stall")?,
+            accept_stall_ms: ms("serve", "accept_stall_ms")?,
+            read_stall: rate("serve", "read_stall")?,
+            read_stall_ms: ms("serve", "read_stall_ms")?,
+            write_stall: rate("serve", "write_stall")?,
+            write_stall_ms: ms("serve", "write_stall_ms")?,
+            partial_frame: rate("serve", "partial_frame")?,
+            conn_drop: rate("serve", "conn_drop")?,
+            latency: rate("dispatch", "latency")?,
+            latency_ms: ms("dispatch", "latency_ms")?,
+            internal: rate("dispatch", "internal")?,
+            backend_unavailable: rate("dispatch", "backend_unavailable")?,
+            worker_panic: rate("worker", "worker_panic")?,
+            queue_reject: rate("worker", "queue_reject")?,
+        })
+    }
+
+    /// Load a plan from a TOML file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path}"))?;
+        Self::from_toml(&text).with_context(|| format!("in fault plan {path}"))
+    }
+
+    fn rate(&self, site: Site) -> f64 {
+        match site {
+            Site::AcceptDrop => self.accept_drop,
+            Site::AcceptStall => self.accept_stall,
+            Site::ReadStall => self.read_stall,
+            Site::WriteStall => self.write_stall,
+            Site::PartialFrame => self.partial_frame,
+            Site::ConnDrop => self.conn_drop,
+            Site::DispatchLatency => self.latency,
+            Site::DispatchInternal => self.internal,
+            Site::DispatchBackendUnavailable => self.backend_unavailable,
+            Site::WorkerPanic => self.worker_panic,
+            Site::QueueReject => self.queue_reject,
+        }
+    }
+
+    fn stall_ms(&self, site: Site) -> u64 {
+        match site {
+            Site::AcceptStall => self.accept_stall_ms,
+            Site::ReadStall => self.read_stall_ms,
+            Site::WriteStall => self.write_stall_ms,
+            Site::DispatchLatency => self.latency_ms,
+            _ => 0,
+        }
+    }
+}
+
+/// SplitMix64 — the same finalizer `util::prng` seeds with; good
+/// avalanche, no state.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Runtime side of a [`FaultPlan`]: per-site arrival counters plus the
+/// deterministic decision function. Shared (`Arc`) between the accept
+/// loop, connection threads, the dispatcher and the service worker.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    arrivals: [AtomicU64; NUM_SITES],
+    injected: AtomicU64,
+}
+
+impl Default for FaultState {
+    fn default() -> Self {
+        Self::inert()
+    }
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultState {
+            plan,
+            arrivals: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// The zero-rate state: nothing ever fires, `roll` is a constant
+    /// load-free `false`.
+    pub fn inert() -> Self {
+        Self::new(FaultPlan::default())
+    }
+
+    /// Load from the `REPRO_FAULT_PLAN` environment variable (a TOML
+    /// file path). Returns `None` when the variable is unset.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(path) if !path.is_empty() => Ok(Some(Self::new(FaultPlan::from_file(&path)?))),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// True when any site can fire.
+    pub fn active(&self) -> bool {
+        !self.plan.is_inert()
+    }
+
+    /// Total faults injected so far, across all sites.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Arrivals observed at one site (fired or not).
+    pub fn arrivals(&self, site: Site) -> u64 {
+        self.arrivals[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Decide whether `site` fires for its next arrival. The decision
+    /// is `hash(seed, site, arrival#) < rate`: deterministic per
+    /// arrival index, so a seeded schedule replays exactly.
+    pub fn roll(&self, site: Site) -> bool {
+        let rate = self.plan.rate(site);
+        if rate <= 0.0 {
+            return false;
+        }
+        let n = self.arrivals[site.index()].fetch_add(1, Ordering::Relaxed);
+        let fired = if rate >= 1.0 {
+            true
+        } else {
+            let salt = (site.index() as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F);
+            let h = splitmix64(splitmix64(self.plan.seed ^ salt) ^ n);
+            (h as f64) < rate * (u64::MAX as f64)
+        };
+        if fired {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// Roll a stall site; `Some(duration)` when it fires. The caller
+    /// sleeps — the state never blocks by itself.
+    pub fn stall(&self, site: Site) -> Option<Duration> {
+        if self.roll(site) {
+            Some(Duration::from_millis(self.plan.stall_ms(site)))
+        } else {
+            None
+        }
+    }
+
+    /// Convenience: an `Arc`'d inert state (the default everywhere a
+    /// config wants one).
+    pub fn inert_arc() -> Arc<Self> {
+        Arc::new(Self::inert())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN_TOML: &str = r#"
+seed = 42
+
+[serve]
+accept_stall = 0.25
+accept_stall_ms = 5
+partial_frame = 0.1
+conn_drop = 0.2
+
+[dispatch]
+latency = 0.5
+latency_ms = 10
+internal = 0.05
+
+[worker]
+worker_panic = 0.3
+queue_reject = 0.15
+"#;
+
+    #[test]
+    fn toml_round_trip_and_defaults() {
+        let p = FaultPlan::from_toml(PLAN_TOML).unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.accept_stall, 0.25);
+        assert_eq!(p.accept_stall_ms, 5);
+        assert_eq!(p.latency, 0.5);
+        assert_eq!(p.latency_ms, 10);
+        assert_eq!(p.worker_panic, 0.3);
+        // unset sites default to 0
+        assert_eq!(p.accept_drop, 0.0);
+        assert_eq!(p.read_stall_ms, 0);
+        assert!(!p.is_inert());
+        assert!(FaultPlan::default().is_inert());
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_rejected() {
+        let err = FaultPlan::from_toml("[serve]\ntypo_site = 0.5\n").unwrap_err().to_string();
+        assert!(err.contains("typo_site"), "{err}");
+        let err = FaultPlan::from_toml("[network]\nconn_drop = 0.5\n").unwrap_err().to_string();
+        assert!(err.contains("[network]"), "{err}");
+        let err = FaultPlan::from_toml("[dispatch]\nlatency = 1.5\n").unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+        let err = FaultPlan::from_toml("seed = -3\n").unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn rolls_are_deterministic_per_seed_and_site() {
+        let plan = FaultPlan { seed: 7, conn_drop: 0.5, internal: 0.5, ..FaultPlan::default() };
+        let take = |st: &FaultState, site: Site| -> Vec<bool> {
+            (0..64).map(|_| st.roll(site)).collect()
+        };
+        let a = FaultState::new(plan);
+        let b = FaultState::new(plan);
+        assert_eq!(take(&a, Site::ConnDrop), take(&b, Site::ConnDrop));
+        assert_eq!(take(&a, Site::DispatchInternal), take(&b, Site::DispatchInternal));
+        // different sites draw independent schedules
+        assert_ne!(take(&a, Site::ConnDrop), take(&a, Site::DispatchInternal));
+        // a different seed changes the schedule
+        let c = FaultState::new(FaultPlan { seed: 8, ..plan });
+        assert_ne!(take(&a, Site::ConnDrop), take(&c, Site::ConnDrop));
+        // ~half fire at rate 0.5 (deterministic, so exact per seed)
+        let fired = take(&FaultState::new(plan), Site::ConnDrop).iter().filter(|&&f| f).count();
+        assert!((16..=48).contains(&fired), "rate 0.5 fired {fired}/64");
+    }
+
+    #[test]
+    fn inert_state_never_fires_and_counts_nothing() {
+        let st = FaultState::inert();
+        for site in [Site::AcceptDrop, Site::WorkerPanic, Site::DispatchLatency] {
+            for _ in 0..32 {
+                assert!(!st.roll(site));
+                assert!(st.stall(site).is_none());
+            }
+            assert_eq!(st.arrivals(site), 0, "inert rolls must not touch counters");
+        }
+        assert_eq!(st.injected(), 0);
+        assert!(!st.active());
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_stalls_carry_duration() {
+        let plan = FaultPlan {
+            seed: 1,
+            read_stall: 1.0,
+            read_stall_ms: 7,
+            ..FaultPlan::default()
+        };
+        let st = FaultState::new(plan);
+        for _ in 0..8 {
+            assert_eq!(st.stall(Site::ReadStall), Some(Duration::from_millis(7)));
+        }
+        assert_eq!(st.injected(), 8);
+        assert_eq!(st.arrivals(Site::ReadStall), 8);
+    }
+}

@@ -43,6 +43,7 @@
 
 pub mod codec;
 pub mod dispatch;
+pub mod fault;
 pub mod render;
 pub mod serve;
 
@@ -54,7 +55,7 @@ use crate::util::json_mini::{obj, Json};
 pub const VERSION: u64 = 1;
 
 /// Number of API methods (sizes the per-method metrics arrays).
-pub const NUM_METHODS: usize = 8;
+pub const NUM_METHODS: usize = 9;
 
 /// Canonical method names, in [`Method::index`] order.
 pub const METHOD_NAMES: [&str; NUM_METHODS] = [
@@ -66,6 +67,7 @@ pub const METHOD_NAMES: [&str; NUM_METHODS] = [
     "modality",
     "models",
     "metrics",
+    "health",
 ];
 
 /// Structured error codes (the `error.code` wire field).
@@ -83,6 +85,9 @@ pub enum ErrorCode {
     OverCapacity,
     /// The requested backend (e.g. PJRT artifacts) is not available.
     BackendUnavailable,
+    /// The request's deadline (`deadline_ms`, or the server's
+    /// `--deadline-ms` default) expired before execution finished.
+    DeadlineExceeded,
     /// The request was valid but execution failed.
     Internal,
 }
@@ -96,6 +101,7 @@ impl ErrorCode {
             ErrorCode::UnknownModel => "unknown_model",
             ErrorCode::OverCapacity => "over_capacity",
             ErrorCode::BackendUnavailable => "backend_unavailable",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
             ErrorCode::Internal => "internal",
         }
     }
@@ -108,6 +114,7 @@ impl ErrorCode {
             "unknown_model" => ErrorCode::UnknownModel,
             "over_capacity" => ErrorCode::OverCapacity,
             "backend_unavailable" => ErrorCode::BackendUnavailable,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
             "internal" => ErrorCode::Internal,
             _ => return None,
         })
@@ -115,16 +122,20 @@ impl ErrorCode {
 }
 
 /// A structured API failure: a machine-readable code plus a
-/// human-readable message.
+/// human-readable message. `over_capacity` errors additionally carry a
+/// `retry_after_ms` backoff hint (additive v1 response field — clients
+/// that predate it ignore it).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ApiError {
     pub code: ErrorCode,
     pub message: String,
+    /// Backoff hint in milliseconds; serialized only when present.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
-        ApiError { code, message: message.into() }
+        ApiError { code, message: message.into(), retry_after_ms: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> Self {
@@ -135,18 +146,29 @@ impl ApiError {
         Self::new(ErrorCode::Internal, message)
     }
 
+    /// Attach a `retry_after_ms` backoff hint (used by `over_capacity`).
+    pub fn with_retry_after(mut self, ms: u64) -> Self {
+        self.retry_after_ms = Some(ms);
+        self
+    }
+
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut entries = vec![
             ("code", Json::Str(self.code.as_str().to_string())),
             ("message", Json::Str(self.message.clone())),
-        ])
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            entries.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        obj(entries)
     }
 
     /// Parse the `error` object of a response (client side).
     pub fn from_json(v: &Json) -> Option<ApiError> {
         let code = ErrorCode::parse(v.get("code")?.as_str()?)?;
         let message = v.get("message")?.as_str()?.to_string();
-        Some(ApiError { code, message })
+        let retry_after_ms = v.get("retry_after_ms").and_then(Json::as_u64);
+        Some(ApiError { code, message, retry_after_ms })
     }
 }
 
@@ -224,6 +246,9 @@ pub enum Method {
     /// Service metrics snapshot (per-method counters + latency
     /// percentiles).
     Metrics,
+    /// Liveness/pressure snapshot: queue depth, worker restarts,
+    /// degradation counters, fault-injection status.
+    Health,
 }
 
 impl Method {
@@ -244,6 +269,7 @@ impl Method {
             Method::Modality(_) => 5,
             Method::Models => 6,
             Method::Metrics => 7,
+            Method::Health => 8,
         }
     }
 }
@@ -254,11 +280,23 @@ pub struct ApiRequest {
     /// Client correlation id, echoed verbatim on the response.
     pub id: Option<String>,
     pub method: Method,
+    /// Per-request execution deadline in milliseconds, armed when the
+    /// service dequeues nothing — the clock starts at submission. A
+    /// request that cannot finish in time answers `deadline_exceeded`;
+    /// `plan`/`sweep` degrade to analytical-only first (see
+    /// [`dispatch`]). `None` falls back to the server default.
+    pub deadline_ms: Option<u64>,
 }
 
 impl ApiRequest {
     pub fn new(id: impl Into<String>, method: Method) -> Self {
-        ApiRequest { id: Some(id.into()), method }
+        ApiRequest { id: Some(id.into()), method, deadline_ms: None }
+    }
+
+    /// Set the per-request deadline (builder style).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
     }
 
     /// Serialize as a v1 request document (client side).
@@ -266,6 +304,9 @@ impl ApiRequest {
         let mut entries = vec![("v", Json::Num(VERSION as f64))];
         if let Some(id) = &self.id {
             entries.push(("id", Json::Str(id.clone())));
+        }
+        if let Some(ms) = self.deadline_ms {
+            entries.push(("deadline_ms", Json::Num(ms as f64)));
         }
         entries.push(("method", Json::Str(self.method.name().to_string())));
         if let Some(params) = codec::params_to_json(&self.method) {
@@ -307,9 +348,9 @@ impl ApiRequest {
             }
         }
         for k in m.keys() {
-            if !matches!(k.as_str(), "v" | "id" | "method" | "params") {
+            if !matches!(k.as_str(), "v" | "id" | "method" | "params" | "deadline_ms") {
                 return Err(fail(ApiError::bad_request(format!(
-                    "unknown request field {k:?} (expected v, id, method, params)"
+                    "unknown request field {k:?} (expected v, id, method, params, deadline_ms)"
                 ))));
             }
         }
@@ -318,11 +359,22 @@ impl ApiRequest {
                 return Err(fail(ApiError::bad_request("\"id\" must be a string")));
             }
         }
+        let deadline_ms = match v.get("deadline_ms") {
+            None => None,
+            Some(Json::Num(n)) if *n >= 1.0 && n.fract() == 0.0 && *n <= 86_400_000.0 => {
+                Some(*n as u64)
+            }
+            Some(_) => {
+                return Err(fail(ApiError::bad_request(
+                    "\"deadline_ms\" must be a positive integer (≤ 86400000)",
+                )))
+            }
+        };
         let Some(name) = v.get("method").and_then(Json::as_str) else {
             return Err(fail(ApiError::bad_request("missing \"method\" string")));
         };
         let method = codec::method_from_json(name, v.get("params")).map_err(&fail)?;
-        Ok(ApiRequest { id, method })
+        Ok(ApiRequest { id, method, deadline_ms })
     }
 
     /// Parse one NDJSON line (server side).
@@ -419,11 +471,41 @@ mod tests {
             ErrorCode::UnknownModel,
             ErrorCode::OverCapacity,
             ErrorCode::BackendUnavailable,
+            ErrorCode::DeadlineExceeded,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
         }
         assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn retry_after_hint_round_trips_and_stays_optional() {
+        let plain = ApiError::new(ErrorCode::OverCapacity, "full");
+        assert!(!plain.to_json().to_string().contains("retry_after_ms"));
+        let hinted = plain.clone().with_retry_after(250);
+        let t = hinted.to_json();
+        assert_eq!(t.get("retry_after_ms").and_then(Json::as_u64), Some(250));
+        assert_eq!(ApiError::from_json(&t), Some(hinted));
+        assert_eq!(ApiError::from_json(&plain.to_json()), Some(plain));
+    }
+
+    #[test]
+    fn deadline_ms_round_trips_and_rejects_junk() {
+        let req = ApiRequest::new("d1", Method::Models).with_deadline_ms(500);
+        let parsed = ApiRequest::parse(&req.to_json()).unwrap();
+        assert_eq!(parsed.deadline_ms, Some(500));
+        let parsed = ApiRequest::parse(&ApiRequest::new("d2", Method::Models).to_json()).unwrap();
+        assert_eq!(parsed.deadline_ms, None);
+        for bad in [r#"{"v":1,"method":"models","deadline_ms":0}"#,
+                    r#"{"v":1,"method":"models","deadline_ms":-5}"#,
+                    r#"{"v":1,"method":"models","deadline_ms":1.5}"#,
+                    r#"{"v":1,"method":"models","deadline_ms":"soon"}"#] {
+            let v = jparse(bad).unwrap();
+            let err = ApiRequest::parse(&v).unwrap_err().result.unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{bad}");
+            assert!(err.message.contains("deadline_ms"), "{}", err.message);
+        }
     }
 
     #[test]
@@ -518,7 +600,9 @@ mod tests {
             }),
             Method::Models,
             Method::Metrics,
+            Method::Health,
         ];
+        assert_eq!(methods.len(), NUM_METHODS);
         for (i, m) in methods.iter().enumerate() {
             assert_eq!(m.index(), i);
             assert_eq!(m.name(), METHOD_NAMES[i]);

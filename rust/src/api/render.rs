@@ -133,7 +133,10 @@ pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, 
                 .and_then(Json::as_f64)
                 .ok_or_else(|| ApiError::bad_request(format!("sweep point missing {key:?}")))
         };
-        let (p, m) = (f("predicted_mib")?, f("measured_mib")?);
+        let p = f("predicted_mib")?;
+        // Degraded sweeps (deadline/queue pressure) carry no simulator
+        // measurement — render "-" for the measured and APE cells.
+        let m = pt.get("measured_mib").and_then(Json::as_f64);
         let mut row = vec![
             (f("seq_len")? as u64).to_string(),
             (f("mbs")? as u64).to_string(),
@@ -145,11 +148,14 @@ pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, 
             row.push(opt("tp").to_string());
             row.push(opt("pp").to_string());
         }
-        row.extend([
-            format!("{:.2}", p / 1024.0),
-            format!("{:.2}", m / 1024.0),
-            format!("{:.1}", report::ape(p, m) * 100.0),
-        ]);
+        row.push(format!("{:.2}", p / 1024.0));
+        match m {
+            Some(m) => row.extend([
+                format!("{:.2}", m / 1024.0),
+                format!("{:.1}", report::ape(p, m) * 100.0),
+            ]),
+            None => row.extend(["-".to_string(), "-".to_string()]),
+        }
         if with_verdict {
             let fits = pt
                 .get("fits")

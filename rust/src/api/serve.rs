@@ -37,13 +37,15 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{Client, PredictionService};
 
+use super::fault::{FaultState, Site};
 use super::{ApiError, ApiRequest, ApiResponse};
 
 /// How often an idle connection thread re-checks the stop flag.
 const POLL_INTERVAL: Duration = Duration::from_millis(200);
 
-/// A stalled reader (client not draining its socket) is cut off after
-/// this long rather than pinning a connection thread forever.
+/// Default for [`ServeOptions::write_timeout`]: a stalled reader
+/// (client not draining its socket) is cut off after this long rather
+/// than pinning a connection thread forever.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Maximum bytes of one NDJSON frame (one request line). Every other
@@ -124,11 +126,15 @@ pub struct ServeOptions {
     /// Connection-handler threads (concurrent connections served;
     /// additional connections wait in the accept queue / OS backlog).
     pub conn_threads: usize,
+    /// Per-write timeout: a client that stops reading its socket is
+    /// disconnected after this long so it cannot pin a connection
+    /// thread — and with it [`Server::shutdown`] — forever.
+    pub write_timeout: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { conn_threads: 4 }
+        Self { conn_threads: 4, write_timeout: WRITE_TIMEOUT }
     }
 }
 
@@ -160,6 +166,11 @@ pub fn serve(
     let addr = listener.local_addr().context("reading listener address")?;
     let stop = Arc::new(AtomicBool::new(false));
     let threads = opts.conn_threads.max(1);
+    let write_timeout = opts.write_timeout;
+    // One fault schedule governs the whole stack: the connection-layer
+    // failpoints here draw from the same plan the service worker and
+    // dispatcher use (inert unless a plan was loaded).
+    let faults = service.faults().clone();
     let (conn_tx, conn_rx) = sync_channel::<TcpStream>(threads);
     let conn_rx = Arc::new(Mutex::new(conn_rx));
 
@@ -168,6 +179,7 @@ pub fn serve(
         let rx = conn_rx.clone();
         let client = service.client();
         let stop = stop.clone();
+        let faults = faults.clone();
         workers.push(
             std::thread::Builder::new()
                 .name(format!("repro-serve-conn-{i}"))
@@ -175,7 +187,9 @@ pub fn serve(
                     // hold the lock only for the recv, not the session
                     let next = rx.lock().expect("connection queue lock").recv();
                     match next {
-                        Ok(stream) => handle_connection(stream, &client, &stop),
+                        Ok(stream) => {
+                            handle_connection(stream, &client, &stop, &faults, write_timeout)
+                        }
                         Err(_) => break, // accept thread gone: shutdown
                     }
                 })
@@ -185,6 +199,7 @@ pub fn serve(
 
     let accept = {
         let stop = stop.clone();
+        let faults = faults.clone();
         std::thread::Builder::new()
             .name("repro-serve-accept".into())
             .spawn(move || {
@@ -196,6 +211,13 @@ pub fn serve(
                         // blocking send = backpressure when all
                         // connection threads are busy
                         Ok(s) => {
+                            if let Some(d) = faults.stall(Site::AcceptStall) {
+                                std::thread::sleep(d);
+                            }
+                            if faults.roll(Site::AcceptDrop) {
+                                drop(s); // injected: close before reading
+                                continue;
+                            }
                             if conn_tx.send(s).is_err() {
                                 break;
                             }
@@ -270,11 +292,24 @@ fn write_response<W: Write>(writer: &mut W, resp: &ApiResponse) -> bool {
 /// Per-connection session: NDJSON lines in request order. Reads run on
 /// a short timeout so shutdown is noticed between lines (the
 /// [`FrameReader`] keeps partial lines across ticks byte-exactly);
-/// writes run under [`WRITE_TIMEOUT`] so a client that stops reading
-/// cannot pin this thread — and with it [`Server::shutdown`] — forever.
-fn handle_connection(stream: TcpStream, client: &Client, stop: &AtomicBool) {
+/// writes run under [`ServeOptions::write_timeout`] so a client that
+/// stops reading cannot pin this thread — and with it
+/// [`Server::shutdown`] — forever.
+///
+/// Connection-layer failpoints (inert unless a fault plan is active):
+/// `read_stall`/`write_stall` delay handling, `partial_frame` tears a
+/// response mid-frame then closes, `conn_drop` closes after a complete
+/// response. Each is indistinguishable from a real network fault to
+/// the client — which is the point.
+fn handle_connection(
+    stream: TcpStream,
+    client: &Client,
+    stop: &AtomicBool,
+    faults: &FaultState,
+    write_timeout: Duration,
+) {
     if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err()
-        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+        || stream.set_write_timeout(Some(write_timeout)).is_err()
     {
         return;
     }
@@ -293,9 +328,27 @@ fn handle_connection(stream: TcpStream, client: &Client, stop: &AtomicBool) {
                 if trimmed.is_empty() {
                     continue;
                 }
+                if let Some(d) = faults.stall(Site::ReadStall) {
+                    std::thread::sleep(d);
+                }
                 let resp = respond_line(trimmed, client);
+                if let Some(d) = faults.stall(Site::WriteStall) {
+                    std::thread::sleep(d);
+                }
+                if faults.roll(Site::PartialFrame) {
+                    // injected: write roughly half the frame, no
+                    // newline, then close — the torn-frame case a
+                    // robust client must treat as a failed request
+                    let bytes = format!("{}\n", resp.to_json()).into_bytes();
+                    let _ = writer.write_all(&bytes[..bytes.len() / 2]);
+                    let _ = writer.flush();
+                    break;
+                }
                 if !write_response(&mut writer, &resp) {
                     break;
+                }
+                if faults.roll(Site::ConnDrop) {
+                    break; // injected: drop after a complete response
                 }
             }
             Frame::NotUtf8 => {

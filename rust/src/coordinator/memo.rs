@@ -1,0 +1,160 @@
+//! Bounded FIFO memo used by the service worker for pp>1 per-rank
+//! predictions. Extracted from an inline `HashMap` + `VecDeque` pair so
+//! the bound and eviction semantics are testable in isolation — the
+//! worker keys entries by the full [`crate::config::TrainConfig`]
+//! cache key, so a config change produces a different key and can never
+//! observe a stale value.
+//!
+//! Internally a `Mutex` (one coarse lock): the worker is the only
+//! writer on the hot path, and the structure is `Sync` so chaos tests
+//! can hammer it from many threads and assert the bound holds under
+//! concurrent eviction.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// A bounded insertion-order (FIFO) memo: at most `cap` entries; the
+/// oldest insertion is evicted first. Values are shared via `Arc` so a
+/// hit costs one clone of the pointer, not the value.
+#[derive(Debug)]
+pub struct BoundedMemo<V> {
+    cap: usize,
+    inner: Mutex<Inner<V>>,
+}
+
+#[derive(Debug)]
+struct Inner<V> {
+    map: HashMap<String, Arc<V>>,
+    order: VecDeque<String>,
+}
+
+impl<V> BoundedMemo<V> {
+    /// `cap` of 0 disables memoization entirely (every `get` misses).
+    pub fn new(cap: usize) -> Self {
+        BoundedMemo {
+            cap,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        self.inner.lock().unwrap().map.get(key).cloned()
+    }
+
+    /// Insert, evicting the oldest entry when at capacity. Re-inserting
+    /// an existing key replaces the value without consuming a slot.
+    pub fn insert(&self, key: &str, value: Arc<V>) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key.to_string(), value).is_none() {
+            inner.order.push_back(key.to_string());
+            while inner.order.len() > self.cap {
+                if let Some(old) = inner.order.pop_front() {
+                    inner.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (the worker clears its memo after a panic
+    /// respawn so a poisoned computation cannot leave partial state).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.order.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_eviction_keeps_the_bound_and_drops_oldest() {
+        let memo: BoundedMemo<u64> = BoundedMemo::new(3);
+        for i in 0..5u64 {
+            memo.insert(&format!("k{i}"), Arc::new(i));
+            assert!(memo.len() <= 3);
+        }
+        // k0, k1 evicted; k2..k4 alive
+        assert!(memo.get("k0").is_none());
+        assert!(memo.get("k1").is_none());
+        for i in 2..5u64 {
+            assert_eq!(memo.get(&format!("k{i}")).as_deref(), Some(&i));
+        }
+    }
+
+    #[test]
+    fn reinsert_replaces_without_growing_and_evicted_keys_stay_dead() {
+        let memo: BoundedMemo<u64> = BoundedMemo::new(2);
+        memo.insert("a", Arc::new(1));
+        memo.insert("a", Arc::new(2));
+        assert_eq!(memo.len(), 1);
+        assert_eq!(memo.get("a").as_deref(), Some(&2));
+        memo.insert("b", Arc::new(3));
+        memo.insert("c", Arc::new(4)); // evicts "a"
+        assert!(memo.get("a").is_none(), "evicted key must not resurface");
+        memo.insert("a", Arc::new(5)); // fresh insert after eviction is fine
+        assert_eq!(memo.get("a").as_deref(), Some(&5));
+        assert!(memo.len() <= 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_memoization() {
+        let memo: BoundedMemo<u64> = BoundedMemo::new(0);
+        memo.insert("a", Arc::new(1));
+        assert!(memo.get("a").is_none());
+        assert!(memo.is_empty());
+    }
+
+    /// The satellite invariant: under concurrent insert/get churn far
+    /// past capacity, the memo never exceeds its bound and never serves
+    /// a value that disagrees with its key (a "stale hit"). Keys embed
+    /// the value — exactly how the worker keys per-rank predictions by
+    /// the full config cache key, so any config change is a new key.
+    #[test]
+    fn concurrent_churn_holds_bound_and_never_serves_stale_values() {
+        let memo: Arc<BoundedMemo<u64>> = Arc::new(BoundedMemo::new(16));
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let memo = Arc::clone(&memo);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let v = t * 10_000 + i;
+                        let key = format!("cfg-{v}");
+                        memo.insert(&key, Arc::new(v));
+                        assert!(memo.len() <= 16, "bound violated");
+                        // a hit must return exactly the keyed value
+                        if let Some(got) = memo.get(&key) {
+                            assert_eq!(*got, v, "stale value for {key}");
+                        }
+                        // other threads' keys, when present, also match
+                        let other = format!("cfg-{}", ((t + 1) % 8) * 10_000 + i);
+                        if let Some(got) = memo.get(&other) {
+                            assert_eq!(format!("cfg-{got}"), other);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(memo.len() <= 16);
+        memo.clear();
+        assert!(memo.is_empty());
+    }
+}

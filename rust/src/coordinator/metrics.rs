@@ -75,6 +75,13 @@ pub struct Metrics {
     plans: AtomicU64,
     plan_latency_us_total: AtomicU64,
     methods: [MethodStats; NUM_METHODS],
+    // Robustness counters (PR 6): queue gauge + failure-mode accounting
+    // surfaced by the `health` wire method.
+    enqueued: AtomicU64,
+    dequeued: AtomicU64,
+    worker_restarts: AtomicU64,
+    degraded: AtomicU64,
+    deadlines_exceeded: AtomicU64,
 }
 
 impl Metrics {
@@ -129,6 +136,51 @@ impl Metrics {
             m.percentile_us(0.95),
             m.max_us.load(Ordering::Relaxed),
         )
+    }
+
+    /// A job entered the service queue (pairs with [`Self::on_dequeue`]
+    /// to form the queue-depth gauge).
+    pub fn on_enqueue(&self) {
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The worker pulled a job off the queue.
+    pub fn on_dequeue(&self) {
+        self.dequeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Jobs currently enqueued but not yet picked up by the worker.
+    pub fn queue_depth(&self) -> u64 {
+        self.enqueued
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.dequeued.load(Ordering::Relaxed))
+    }
+
+    /// The worker isolated a panic and rebuilt its backend.
+    pub fn on_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    /// A response was served in degraded (analytical-only) mode.
+    pub fn on_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// A request was answered `deadline_exceeded`.
+    pub fn on_deadline_exceeded(&self) {
+        self.deadlines_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn deadlines_exceeded(&self) -> u64 {
+        self.deadlines_exceeded.load(Ordering::Relaxed)
     }
 
     /// One completed capacity-planning request (counts as a response;
@@ -269,6 +321,29 @@ mod tests {
         m.on_method(1, Duration::from_micros(5), true);
         let (p50, p95, max) = m.method_latency_us(1);
         assert_eq!((p50, p95, max), (5, 5, 5));
+    }
+
+    #[test]
+    fn queue_gauge_and_robustness_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(), 0);
+        m.on_enqueue();
+        m.on_enqueue();
+        assert_eq!(m.queue_depth(), 2);
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 1);
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 0);
+        // the gauge never underflows even if accounting races transiently
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 0);
+        m.on_worker_restart();
+        m.on_degraded();
+        m.on_deadline_exceeded();
+        assert_eq!(
+            (m.worker_restarts(), m.degraded(), m.deadlines_exceeded()),
+            (1, 1, 1)
+        );
     }
 
     #[test]

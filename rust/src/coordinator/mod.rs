@@ -25,8 +25,10 @@
 //! encode → pad → one `execute` per batch — Python is never involved.
 
 pub mod batcher;
+pub mod memo;
 pub mod metrics;
 pub mod server;
 
+pub use memo::BoundedMemo;
 pub use metrics::Metrics;
 pub use server::{Client, PredictionService, ServiceConfig};

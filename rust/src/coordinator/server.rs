@@ -8,8 +8,22 @@
 //! [`super::batcher::BatchPolicy`] and executed as one encoded call
 //! ([`Estimator::estimate_encoded`](crate::api::dispatch::Estimator::estimate_encoded));
 //! every other method (plan, sweep, simulate, baselines, modality,
-//! models, metrics) runs serially on the worker through the shared
-//! [`Dispatcher`](crate::api::dispatch::Dispatcher).
+//! models, metrics, health) runs serially on the worker through the
+//! shared [`Dispatcher`](crate::api::dispatch::Dispatcher).
+//!
+//! Robustness surface (see `api/fault.rs` for the failpoint catalog):
+//!
+//! * **Deadlines** — a request's `deadline_ms` (or the service-wide
+//!   [`ServiceConfig::default_deadline`]) is armed at submission into an
+//!   absolute [`Instant`]; expired jobs answer a structured
+//!   `deadline_exceeded` instead of executing, and `plan`/`sweep` with
+//!   too little remaining budget degrade to analytical-only answers
+//!   (marked `degraded: true`) rather than failing.
+//! * **Panic isolation** — every job executes under `catch_unwind`; a
+//!   panicking job answers `internal`, the backend is respawned through
+//!   its factory, and caches are cleared so no partial state survives.
+//! * **Backpressure** — a full queue (or an injected `queue_reject`
+//!   burst) answers `over_capacity` carrying a `retry_after_ms` hint.
 //!
 //! Two backends:
 //!
@@ -20,47 +34,73 @@
 //!   semantics of the tensorized path (the two predictors are
 //!   property-tested to agree).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::api::dispatch::{
-    self, AnalyticalEstimator, Dispatcher, Estimator, TensorizedEstimator,
+    self, AnalyticalEstimator, Dispatcher, Estimator, ExecCtx, TensorizedEstimator,
 };
+use crate::api::fault::{FaultState, Site};
 use crate::api::{
     ApiError, ApiRequest, ApiResponse, ErrorCode, Method, PlanParams, PredictParams,
 };
 use crate::config::TrainConfig;
 use crate::parser::features;
 use crate::planner::{Plan, PlanRequest};
-use crate::predictor::{tensorized::TensorizedPredictor, Prediction};
+use crate::predictor::{tensorized::TensorizedPredictor, Prediction, RankPrediction};
 use crate::sweep::Sweep;
 
 use super::batcher::{next_batch, BatchPolicy};
+use super::memo::BoundedMemo;
 use super::metrics::Metrics;
 
 /// Service configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub policy: BatchPolicy,
     /// Bound of the request queue; a full queue is the service's
     /// backpressure signal ([`PredictionService::try_submit`] answers
     /// `over_capacity` instead of blocking).
     pub queue_depth: usize,
+    /// Deadline applied to every request that does not carry its own
+    /// `deadline_ms`; `None` leaves such requests unbounded.
+    pub default_deadline: Option<Duration>,
+    /// Fault-injection schedule. The default is inert (every rate
+    /// zero), which by construction cannot change any output.
+    pub faults: Arc<FaultState>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), queue_depth: 1024 }
+        Self {
+            policy: BatchPolicy::default(),
+            queue_depth: 1024,
+            default_deadline: None,
+            faults: FaultState::inert_arc(),
+        }
     }
 }
 
-/// One queued unit of work: a wire request plus its reply channel.
+/// State shared between the service handle and its cloneable clients.
+struct Shared {
+    metrics: Arc<Metrics>,
+    queue_depth: usize,
+    default_deadline: Option<Duration>,
+    faults: Arc<FaultState>,
+}
+
+/// One queued unit of work: a wire request, its armed deadline, and its
+/// reply channel.
 struct Job {
     req: ApiRequest,
+    /// Absolute deadline, armed at submission — queue time counts
+    /// against the budget.
+    deadline: Option<Instant>,
     reply: SyncSender<ApiResponse>,
 }
 
@@ -71,8 +111,7 @@ pub struct PredictionService {
     /// dropped to close the queue (not swapped for a dummy channel,
     /// which would strand any job a racing client had already queued).
     tx: Option<SyncSender<Job>>,
-    metrics: Arc<Metrics>,
-    queue_depth: usize,
+    shared: Arc<Shared>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -80,7 +119,7 @@ impl PredictionService {
     /// Start the worker thread on the tensorized backend; the PJRT
     /// client and compiled artifacts are not `Send`, so the predictor is
     /// constructed *on* the worker thread (load errors surface here via
-    /// a handshake).
+    /// a handshake). The factory is retained for respawn after a panic.
     pub fn start(artifacts_dir: &str, cfg: ServiceConfig) -> Result<Self> {
         let dir = artifacts_dir.to_string();
         Self::start_with(cfg, move || {
@@ -98,12 +137,20 @@ impl PredictionService {
 
     fn start_with(
         cfg: ServiceConfig,
-        make_backend: impl FnOnce() -> Result<Box<dyn Estimator>> + Send + 'static,
+        make_backend: impl Fn() -> Result<Box<dyn Estimator>> + Send + 'static,
     ) -> Result<Self> {
         let queue_depth = cfg.queue_depth.max(1);
         let (tx, rx) = sync_channel::<Job>(queue_depth);
         let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
+        let shared = Arc::new(Shared {
+            metrics: metrics.clone(),
+            queue_depth,
+            default_deadline: cfg.default_deadline,
+            faults: cfg.faults.clone(),
+        });
+        let m = metrics;
+        let faults = cfg.faults;
+        let policy = cfg.policy;
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let worker = std::thread::Builder::new()
             .name("mmpredict-batcher".into())
@@ -118,16 +165,11 @@ impl PredictionService {
                         return;
                     }
                 };
-                worker_loop(backend, rx, cfg.policy, m)
+                worker_loop(backend, &make_backend, rx, policy, m, faults, queue_depth)
             })
             .expect("spawning service worker");
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Self {
-                tx: Some(tx),
-                metrics,
-                queue_depth,
-                worker: Some(worker),
-            }),
+            Ok(Ok(())) => Ok(Self { tx: Some(tx), shared, worker: Some(worker) }),
             Ok(Err(e)) => {
                 let _ = worker.join();
                 Err(e)
@@ -137,7 +179,14 @@ impl PredictionService {
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        &self.shared.metrics
+    }
+
+    /// The fault schedule this service runs under (inert by default).
+    /// The NDJSON server pulls its connection-layer failpoints from
+    /// here so one plan governs the whole stack.
+    pub fn faults(&self) -> &Arc<FaultState> {
+        &self.shared.faults
     }
 
     /// Submit one wire request, blocking until its response. This is
@@ -145,7 +194,7 @@ impl PredictionService {
     /// come through here (or [`Self::try_submit`]).
     pub fn submit(&self, req: ApiRequest) -> ApiResponse {
         match self.tx.as_ref() {
-            Some(tx) => submit_on(tx, &self.metrics, req),
+            Some(tx) => submit_on(tx, &self.shared, req),
             None => shut_down_response(req),
         }
     }
@@ -155,7 +204,7 @@ impl PredictionService {
     /// NDJSON server exposes to remote clients.
     pub fn try_submit(&self, req: ApiRequest) -> ApiResponse {
         match self.tx.as_ref() {
-            Some(tx) => try_submit_on(tx, &self.metrics, self.queue_depth, req),
+            Some(tx) => try_submit_on(tx, &self.shared, req),
             None => shut_down_response(req),
         }
     }
@@ -182,8 +231,7 @@ impl PredictionService {
                 .tx
                 .clone()
                 .expect("client() called on a shut-down service"),
-            metrics: self.metrics.clone(),
-            queue_depth: self.queue_depth,
+            shared: self.shared.clone(),
         }
     }
 
@@ -218,19 +266,18 @@ impl Drop for PredictionService {
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Job>,
-    metrics: Arc<Metrics>,
-    queue_depth: usize,
+    shared: Arc<Shared>,
 }
 
 impl Client {
     /// See [`PredictionService::submit`].
     pub fn submit(&self, req: ApiRequest) -> ApiResponse {
-        submit_on(&self.tx, &self.metrics, req)
+        submit_on(&self.tx, &self.shared, req)
     }
 
     /// See [`PredictionService::try_submit`].
     pub fn try_submit(&self, req: ApiRequest) -> ApiResponse {
-        try_submit_on(&self.tx, &self.metrics, self.queue_depth, req)
+        try_submit_on(&self.tx, &self.shared, req)
     }
 
     pub fn predict(&self, cfg: TrainConfig) -> Result<Prediction> {
@@ -247,11 +294,12 @@ fn predict_request(cfg: TrainConfig) -> ApiRequest {
     ApiRequest {
         id: None,
         method: Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+        deadline_ms: None,
     }
 }
 
 fn plan_request(req: PlanRequest) -> ApiRequest {
-    ApiRequest { id: None, method: Method::Plan(PlanParams { req }) }
+    ApiRequest { id: None, method: Method::Plan(PlanParams { req }), deadline_ms: None }
 }
 
 fn decode_predict(resp: ApiResponse) -> Result<Prediction> {
@@ -274,13 +322,42 @@ fn shut_down_response(req: ApiRequest) -> ApiResponse {
     )
 }
 
-fn submit_on(tx: &SyncSender<Job>, metrics: &Metrics, req: ApiRequest) -> ApiResponse {
-    metrics.on_request();
+/// Arm the absolute deadline for one request: its own `deadline_ms`
+/// wins, else the service-wide default. Queue time counts against it.
+fn arm_deadline(shared: &Shared, req: &ApiRequest) -> Option<Instant> {
+    req.deadline_ms
+        .map(Duration::from_millis)
+        .or(shared.default_deadline)
+        .and_then(|d| Instant::now().checked_add(d))
+}
+
+/// How long a rejected client should wait before retrying: scaled to
+/// the queue bound (a deeper queue drains slower), clamped to a sane
+/// band so tiny test queues don't suggest sub-millisecond retries.
+fn retry_hint_ms(queue_depth: usize) -> u64 {
+    ((queue_depth as u64) * 2).clamp(50, 2000)
+}
+
+fn submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiResponse {
+    shared.metrics.on_request();
+    if shared.faults.roll(Site::QueueReject) {
+        shared.metrics.on_error(1);
+        return ApiResponse::err(
+            req.id,
+            ApiError::new(
+                ErrorCode::OverCapacity,
+                "injected fault: queue-full burst; retry later",
+            )
+            .with_retry_after(retry_hint_ms(shared.queue_depth)),
+        );
+    }
     let id = req.id.clone();
+    let deadline = arm_deadline(shared, &req);
     let (reply_tx, reply_rx) = sync_channel(1);
-    if let Err(e) = tx.send(Job { req, reply: reply_tx }) {
+    if let Err(e) = tx.send(Job { req, deadline, reply: reply_tx }) {
         return shut_down_response(e.0.req);
     }
+    shared.metrics.on_enqueue();
     match reply_rx.recv() {
         Ok(resp) => resp,
         Err(_) => ApiResponse::err(
@@ -290,19 +367,27 @@ fn submit_on(tx: &SyncSender<Job>, metrics: &Metrics, req: ApiRequest) -> ApiRes
     }
 }
 
-fn try_submit_on(
-    tx: &SyncSender<Job>,
-    metrics: &Metrics,
-    queue_depth: usize,
-    req: ApiRequest,
-) -> ApiResponse {
-    metrics.on_request();
+fn try_submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiResponse {
+    shared.metrics.on_request();
+    if shared.faults.roll(Site::QueueReject) {
+        shared.metrics.on_error(1);
+        return ApiResponse::err(
+            req.id,
+            ApiError::new(
+                ErrorCode::OverCapacity,
+                "injected fault: queue-full burst; retry later",
+            )
+            .with_retry_after(retry_hint_ms(shared.queue_depth)),
+        );
+    }
     let id = req.id.clone();
+    let deadline = arm_deadline(shared, &req);
     let (reply_tx, reply_rx) = sync_channel(1);
-    match tx.try_send(Job { req, reply: reply_tx }) {
-        Ok(()) => {}
+    match tx.try_send(Job { req, deadline, reply: reply_tx }) {
+        Ok(()) => shared.metrics.on_enqueue(),
         Err(TrySendError::Full(job)) => {
-            metrics.on_error(1);
+            shared.metrics.on_error(1);
+            let queue_depth = shared.queue_depth;
             return ApiResponse::err(
                 job.req.id,
                 ApiError::new(
@@ -310,7 +395,8 @@ fn try_submit_on(
                     format!(
                         "service queue is full ({queue_depth} requests in flight); retry later"
                     ),
-                ),
+                )
+                .with_retry_after(retry_hint_ms(queue_depth)),
             );
         }
         Err(TrySendError::Disconnected(job)) => return shut_down_response(job.req),
@@ -326,11 +412,26 @@ fn try_submit_on(
 
 const PREDICT_IDX: usize = 0; // Method::Predict(...).index()
 
+/// The serial dispatcher the worker routes non-predict methods through;
+/// rebuilt from scratch after a panic so no partial state survives.
+fn new_serial(metrics: &Arc<Metrics>, faults: &Arc<FaultState>, capacity: usize) -> Dispatcher {
+    Dispatcher::with_metrics(Box::new(AnalyticalEstimator), Sweep::default(), metrics.clone())
+        .with_faults(faults.clone())
+        .with_queue_capacity(capacity)
+}
+
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
 fn worker_loop(
     mut backend: Box<dyn Estimator>,
+    make_backend: &(dyn Fn() -> Result<Box<dyn Estimator>>),
     rx: Receiver<Job>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    faults: Arc<FaultState>,
+    capacity: usize,
 ) {
     // Parse+encode is ~45% of a request's CPU cost (see EXPERIMENTS.md
     // §Perf); schedulers re-submit near-identical configs, so memoize.
@@ -338,18 +439,12 @@ fn worker_loop(
     // Pipeline-parallel predictions bypass the encoded batch (one
     // encode per stage), so they get their own bounded FIFO memo —
     // repeated screening of the same pp config stays O(1) too.
-    let mut rank_cache: std::collections::HashMap<String, Arc<crate::predictor::RankPrediction>> =
-        std::collections::HashMap::new();
-    let mut rank_order: std::collections::VecDeque<String> = std::collections::VecDeque::new();
+    let rank_cache: BoundedMemo<RankPrediction> = BoundedMemo::new(256);
     // Serial methods share the payload builders with the CLI through a
     // Dispatcher wired to this service's metrics. Its own predict
     // backend is never exercised here — predictions take the batched
     // path below.
-    let mut serial = Dispatcher::with_metrics(
-        Box::new(AnalyticalEstimator),
-        Sweep::default(),
-        metrics.clone(),
-    );
+    let mut serial = new_serial(&metrics, &faults, capacity);
     while let Some(batch) = next_batch(&rx, &policy) {
         let t0 = Instant::now();
 
@@ -359,17 +454,34 @@ fn worker_loop(
         // batchable row).
         let mut predicts = Vec::new();
         let mut serial_jobs = Vec::new();
-        for Job { req, reply } in batch {
+        for Job { req, deadline, reply } in batch {
+            metrics.on_dequeue();
             match req.method {
-                Method::Predict(p) => predicts.push((p, req.id, reply)),
-                _ => serial_jobs.push((req, reply)),
+                Method::Predict(p) => predicts.push((p, req.id, deadline, reply)),
+                _ => serial_jobs.push((req, deadline, reply)),
             }
         }
+        // Queue pressure observed *after* this drain: more than 3/4 of
+        // the bound still waiting means the service is falling behind,
+        // so plan/sweep in this batch degrade to analytical-only.
+        let pressure = capacity > 0 && metrics.queue_depth() as usize * 4 > capacity * 3;
 
         if !predicts.is_empty() {
+            // One injected-latency roll covers the whole batch (it
+            // models a slow backend call, not per-row work).
+            if let Some(d) = faults.stall(Site::DispatchLatency) {
+                std::thread::sleep(d);
+            }
             let mut encoded = Vec::new();
             let mut meta = Vec::new();
-            for (params, id, reply) in predicts {
+            for (params, id, deadline, reply) in predicts {
+                if expired(deadline) {
+                    metrics.on_deadline_exceeded();
+                    metrics.on_error(1);
+                    metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
+                    let _ = reply.send(ApiResponse::err(id, dispatch::deadline_exceeded()));
+                    continue;
+                }
                 if params.cfg.pp > 1 {
                     // Pipeline-parallel predictions need one encode per
                     // stage (per-rank = max over stage encodes), which
@@ -377,19 +489,22 @@ fn worker_loop(
                     // analytical mirror answers them on the worker,
                     // memoized by cache_key (which covers pp).
                     let key = params.cfg.cache_key();
-                    let rp = match rank_cache.get(&key) {
-                        Some(hit) => Ok(hit.clone()),
-                        None => crate::predictor::predict_per_rank(&params.cfg).map(|rp| {
-                            let rp = Arc::new(rp);
-                            if rank_cache.len() >= 256 {
-                                if let Some(old) = rank_order.pop_front() {
-                                    rank_cache.remove(&old);
+                    let rp: Result<Arc<RankPrediction>> = match rank_cache.get(&key) {
+                        Some(hit) => Ok(hit),
+                        None => {
+                            let cfg = params.cfg.clone();
+                            match catch_unwind(AssertUnwindSafe(|| {
+                                crate::predictor::predict_per_rank(&cfg)
+                            })) {
+                                Ok(Ok(rp)) => {
+                                    let rp = Arc::new(rp);
+                                    rank_cache.insert(&key, rp.clone());
+                                    Ok(rp)
                                 }
+                                Ok(Err(e)) => Err(e),
+                                Err(_) => Err(anyhow!("per-rank prediction panicked")),
                             }
-                            rank_cache.insert(key.clone(), rp.clone());
-                            rank_order.push_back(key);
-                            rp
-                        }),
+                        }
                     };
                     let resp = match rp {
                         Ok(rp) => {
@@ -415,7 +530,7 @@ fn worker_loop(
                 match cache.get_or_encode(&params.cfg) {
                     Ok(enc) => {
                         encoded.push(enc);
-                        meta.push((params, id, reply));
+                        meta.push((params, id, deadline, reply));
                     }
                     Err(e) => {
                         metrics.on_error(1);
@@ -427,10 +542,20 @@ fn worker_loop(
             if !meta.is_empty() {
                 let refs: Vec<&features::EncodedRequest> =
                     encoded.iter().map(|e| e.as_ref()).collect();
-                match backend.estimate_encoded(&refs) {
-                    Ok(preds) => {
+                // The batch executes under catch_unwind: a panicking
+                // backend (or an injected worker_panic) answers every
+                // job in the batch with a structured `internal`, then
+                // the backend is respawned and caches cleared.
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if faults.roll(Site::WorkerPanic) {
+                        panic!("injected worker panic (chaos plan)");
+                    }
+                    backend.estimate_encoded(&refs)
+                }));
+                match outcome {
+                    Ok(Ok(preds)) => {
                         metrics.on_batch(meta.len(), t0.elapsed());
-                        for ((params, id, reply), p) in meta.into_iter().zip(preds) {
+                        for ((params, id, _deadline, reply), p) in meta.into_iter().zip(preds) {
                             let resp = match dispatch::predict_payload(&p, None, &params) {
                                 Ok(payload) => ApiResponse::ok(id, payload),
                                 Err(e) => {
@@ -442,21 +567,66 @@ fn worker_loop(
                             let _ = reply.send(resp);
                         }
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         metrics.on_error(meta.len());
                         let msg = format!("batch execution failed: {e:#}");
-                        for (_, id, reply) in meta {
+                        for (_, id, _, reply) in meta {
                             metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
                             let _ = reply
                                 .send(ApiResponse::err(id, ApiError::internal(msg.clone())));
+                        }
+                    }
+                    Err(_) => {
+                        metrics.on_error(meta.len());
+                        for (_, id, _, reply) in meta {
+                            metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
+                            let _ = reply.send(ApiResponse::err(
+                                id,
+                                ApiError::internal(
+                                    "prediction worker panicked mid-batch; backend restarted",
+                                ),
+                            ));
+                        }
+                        metrics.on_worker_restart();
+                        cache = features::EncodeCache::new(256);
+                        rank_cache.clear();
+                        match make_backend() {
+                            Ok(b) => backend = b,
+                            Err(e) => {
+                                // Respawn failed: exit the loop. Queued
+                                // jobs still answer — their reply
+                                // channels disconnect, which the submit
+                                // path converts into `internal`.
+                                eprintln!("service worker: backend respawn failed: {e:#}");
+                                return;
+                            }
                         }
                     }
                 }
             }
         }
 
-        for (req, reply) in serial_jobs {
-            let resp = serial.handle(&req);
+        for (req, deadline, reply) in serial_jobs {
+            let ctx = ExecCtx { deadline, pressure };
+            let resp = match catch_unwind(AssertUnwindSafe(|| {
+                if faults.roll(Site::WorkerPanic) {
+                    panic!("injected worker panic (chaos plan)");
+                }
+                serial.handle_with(&req, &ctx)
+            })) {
+                Ok(resp) => resp,
+                Err(_) => {
+                    metrics.on_worker_restart();
+                    metrics.on_error(1);
+                    serial = new_serial(&metrics, &faults, capacity);
+                    ApiResponse::err(
+                        req.id.clone(),
+                        ApiError::internal(
+                            "prediction worker panicked mid-request; worker state restarted",
+                        ),
+                    )
+                }
+            };
             let _ = reply.send(resp);
         }
     }

@@ -148,6 +148,10 @@ fn print_help() {
          \x20 --stdio                   NDJSON over stdin/stdout instead of TCP\n\
          \x20 --conn-threads N          concurrent connections (default 4)\n\
          \x20 --max-batch N --batch-timeout-ms M --queue-depth Q\n\
+         \x20 --deadline-ms M           default per-request deadline (requests\n\
+         \x20                           may override via the deadline_ms field)\n\
+         \x20 --fault-plan <file.toml>  seeded chaos schedule (see docs; also\n\
+         \x20                           read from $REPRO_FAULT_PLAN)\n\
          \x20 --tensorized --artifacts <dir>   PJRT backend"
     );
 }
@@ -252,7 +256,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     // The CLI is a wire client of itself: build the v1 envelope and run
     // it through the same dispatcher `repro serve` executes.
     let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(threads));
-    let api_req = ApiRequest { id: None, method: Method::Plan(PlanParams { req }) };
+    let api_req =
+        ApiRequest { id: None, method: Method::Plan(PlanParams { req }), deadline_ms: None };
     let t0 = std::time::Instant::now();
     let payload = d.handle(&api_req).into_result()?;
     let dt = t0.elapsed();
@@ -330,6 +335,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             zero: zeros,
             capacity_mib,
         }),
+        deadline_ms: None,
     };
     let t0 = std::time::Instant::now();
     let payload = d.handle(&api_req).into_result()?;
@@ -453,6 +459,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
             capacity_mib: capacity_gib.map(|g| g * 1024.0),
             detail: true,
         }),
+        deadline_ms: None,
     };
     let payload = d.handle(&req).into_result()?;
     print!("{}", api::render::predict_text(&payload, capacity_gib)?);
@@ -638,16 +645,37 @@ fn cmd_zoo(_args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use mmpredict::api::fault::{FaultPlan, FaultState};
     let policy = BatchPolicy {
         max_batch: args.get_parse::<usize>("max-batch")?.unwrap_or(8),
         batch_timeout: std::time::Duration::from_millis(
             args.get_parse::<u64>("batch-timeout-ms")?.unwrap_or(2),
         ),
     };
+    // `--fault-plan <file>` wins over the REPRO_FAULT_PLAN env var;
+    // with neither, the schedule is inert (zero-rate, zero-cost).
+    let faults = match args.get("fault-plan") {
+        Some(path) => std::sync::Arc::new(FaultState::new(FaultPlan::from_file(path)?)),
+        None => FaultState::from_env()?
+            .map(std::sync::Arc::new)
+            .unwrap_or_else(FaultState::inert_arc),
+    };
+    if faults.active() {
+        eprintln!(
+            "repro serve: FAULT PLAN ACTIVE (seed {}) — injected faults ahead",
+            faults.plan().seed
+        );
+    }
     let svc_cfg = ServiceConfig {
         policy,
         queue_depth: args.get_parse::<usize>("queue-depth")?.unwrap_or(1024),
+        default_deadline: args
+            .get_parse::<u64>("deadline-ms")?
+            .map(std::time::Duration::from_millis),
+        faults,
     };
+    let max_batch = svc_cfg.policy.max_batch;
+    let queue_depth = svc_cfg.queue_depth;
     let service = if args.flag("tensorized") {
         let dir = args.get_or("artifacts", "artifacts");
         PredictionService::start(dir, svc_cfg)
@@ -664,6 +692,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .with_context(|| format!("binding {host}:{port}"))?;
     let opts = api::serve::ServeOptions {
         conn_threads: args.get_parse::<usize>("conn-threads")?.unwrap_or(4),
+        ..Default::default()
     };
     let server = api::serve::serve(listener, service, &opts)?;
     eprintln!(
@@ -672,8 +701,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         api::VERSION,
         server.addr(),
         opts.conn_threads,
-        svc_cfg.policy.max_batch,
-        svc_cfg.queue_depth,
+        max_batch,
+        queue_depth,
     );
     server.wait();
     Ok(())

@@ -299,8 +299,28 @@ pub fn plan(req: &PlanRequest) -> Result<Plan> {
     plan_with(req, &Sweep::default())
 }
 
-/// Plan through a caller-configured sweep engine (thread count).
-pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
+/// Shared first half of every plan: branch enumeration plus the
+/// analytical coarse pass over the whole grid. The simulator-validated
+/// path ([`plan_with`]) refines it by bisection; the degraded path
+/// ([`plan_analytical_with`]) reads the frontier straight off the
+/// predictions.
+struct CoarsePass {
+    /// Total branches enumerated (searchable or not).
+    branches_total: usize,
+    /// mbs ladder length (rungs per branch).
+    rungs_per_branch: usize,
+    /// Predicted peak per grid point (branch-major); `None` marks a
+    /// point whose pp exceeds the model's splittable depth.
+    predicted: Vec<Option<f64>>,
+    predictor_probes: usize,
+    /// Searchable branches (pp fits the model), original indices, and
+    /// each one's predicted-frontier guess.
+    searched: Vec<Branch>,
+    searched_bi: Vec<usize>,
+    guesses: Vec<usize>,
+}
+
+fn coarse_pass(req: &PlanRequest, engine: &Sweep) -> Result<CoarsePass> {
     if !req.budget_mib.is_finite() || req.budget_mib <= 0.0 {
         bail!("budget_mib must be positive and finite, got {}", req.budget_mib);
     }
@@ -398,13 +418,41 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
         })
         .collect();
 
+    Ok(CoarsePass {
+        branches_total: branches.len(),
+        rungs_per_branch,
+        predicted,
+        predictor_probes,
+        searched,
+        searched_bi,
+        guesses,
+    })
+}
+
+/// Shared ranking tail: flag dominated rows, sort by throughput
+/// (ties: smaller peak, then config fingerprint).
+fn rank_candidates(candidates: &mut Vec<PlanCandidate>) {
+    mark_dominated(candidates);
+    candidates.sort_by(|a, b| {
+        b.tokens_per_step
+            .total_cmp(&a.tokens_per_step)
+            .then(a.simulated_mib.total_cmp(&b.simulated_mib))
+            .then_with(|| a.cfg.cache_key().cmp(&b.cfg.cache_key()))
+    });
+}
+
+/// Plan through a caller-configured sweep engine (thread count).
+pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
+    let cp = coarse_pass(req, engine)?;
+
     // Refinement: ground-truth simulator bisection, probes batched
     // through the sweep engine each round.
-    let (outcomes, sim_points) = frontier_search(&searched, &guesses, req.budget_mib, engine)?;
+    let (outcomes, sim_points) =
+        frontier_search(&cp.searched, &cp.guesses, req.budget_mib, engine)?;
 
     let mut candidates = Vec::new();
     let mut feasible = 0usize;
-    for ((&bi, branch), out) in searched_bi.iter().zip(&searched).zip(&outcomes) {
+    for ((&bi, branch), out) in cp.searched_bi.iter().zip(&cp.searched).zip(&outcomes) {
         let Some(idx) = out.frontier else { continue };
         feasible += 1;
         let cfg = branch.rungs[idx].clone();
@@ -421,7 +469,7 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
             Some(Escalation { mbs: up.mbs, simulated_mib: m.peak_mib })
         };
         candidates.push(PlanCandidate {
-            predicted_mib: predicted[bi * rungs_per_branch + idx]
+            predicted_mib: cp.predicted[bi * cp.rungs_per_branch + idx]
                 .expect("searched branches carry predictions"),
             simulated_mib: simulated,
             headroom_mib: req.budget_mib - simulated,
@@ -434,22 +482,82 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
         });
     }
 
-    mark_dominated(&mut candidates);
-    candidates.sort_by(|a, b| {
-        b.tokens_per_step
-            .total_cmp(&a.tokens_per_step)
-            .then(a.simulated_mib.total_cmp(&b.simulated_mib))
-            .then_with(|| a.cfg.cache_key().cmp(&b.cfg.cache_key()))
-    });
+    rank_candidates(&mut candidates);
 
     Ok(Plan {
         budget_mib: req.budget_mib,
         stats: PlanStats {
-            branches: branches.len(),
+            branches: cp.branches_total,
             feasible_branches: feasible,
-            grid_points: branches.len() * axes.mbs.len(),
+            grid_points: cp.branches_total * cp.rungs_per_branch,
             sim_points,
-            predictor_probes,
+            predictor_probes: cp.predictor_probes,
+        },
+        candidates,
+    })
+}
+
+/// The degraded tier: plan from the analytical coarse pass alone — no
+/// simulator bisection. The serving stack falls back to this when a
+/// deadline or queue pressure cannot afford simulation (the response
+/// then carries a `degraded: true` marker).
+///
+/// Differences from [`plan_with`], by construction:
+/// * `simulated_mib` is the *predicted* peak (the two columns agree
+///   exactly), and `stats.sim_points` is 0;
+/// * each closed frontier's [`Escalation::simulated_mib`] is likewise
+///   the predicted peak of the failing rung — still strictly over
+///   budget, because the frontier was read off the same predictions;
+/// * `binding_stage` is 0 (the coarse grid keeps only the scalar peak,
+///   not the per-stage split).
+pub fn plan_analytical_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
+    let cp = coarse_pass(req, engine)?;
+
+    let mut candidates = Vec::new();
+    let mut feasible = 0usize;
+    for (&bi, branch) in cp.searched_bi.iter().zip(&cp.searched) {
+        let preds = &cp.predicted[bi * cp.rungs_per_branch..(bi + 1) * cp.rungs_per_branch];
+        let Some(idx) = preds
+            .iter()
+            .rposition(|&p| p.unwrap_or(f64::INFINITY) <= req.budget_mib)
+        else {
+            continue;
+        };
+        feasible += 1;
+        let cfg = branch.rungs[idx].clone();
+        let predicted_mib = preds[idx].expect("searched branches carry predictions");
+        let open = idx + 1 == branch.rungs.len();
+        let escalation = if open {
+            None
+        } else {
+            Some(Escalation {
+                mbs: branch.rungs[idx + 1].mbs,
+                simulated_mib: preds[idx + 1].expect("searched branches carry predictions"),
+            })
+        };
+        candidates.push(PlanCandidate {
+            predicted_mib,
+            simulated_mib: predicted_mib,
+            headroom_mib: req.budget_mib - predicted_mib,
+            tokens_per_step: throughput_proxy(&cfg),
+            frontier_open: open,
+            escalation,
+            dominated: false,
+            binding_stage: 0,
+            cfg,
+        });
+    }
+
+    rank_candidates(&mut candidates);
+
+    Ok(Plan {
+        budget_mib: req.budget_mib,
+        stats: PlanStats {
+            branches: cp.branches_total,
+            feasible_branches: feasible,
+            grid_points: cp.branches_total * cp.rungs_per_branch,
+            sim_points: 0,
+            predictor_probes: cp.predictor_probes,
         },
         candidates,
     })
@@ -543,6 +651,43 @@ mod tests {
         axes.zero = vec![ZeroStage::Zero2, ZeroStage::Zero2, ZeroStage::Zero0];
         let n = axes.normalized().unwrap();
         assert_eq!(n.zero, vec![ZeroStage::Zero2, ZeroStage::Zero0]);
+    }
+
+    #[test]
+    fn analytical_plan_reads_frontier_off_predictions_without_simulating() {
+        let base = tiny_base();
+        let req = PlanRequest {
+            base: base.clone(),
+            budget_mib: 1e9,
+            axes: Axes { mbs: vec![1, 2, 4], ..Axes::fixed(&base) },
+        };
+        let engine = Sweep::new(2);
+        let plan = plan_analytical_with(&req, &engine).unwrap();
+        assert_eq!(plan.stats.sim_points, 0, "degraded tier must not simulate");
+        assert!(plan.stats.predictor_probes >= 3);
+        assert!(!plan.candidates.is_empty());
+        for c in &plan.candidates {
+            // the two columns agree by construction in the degraded tier
+            assert_eq!(c.predicted_mib, c.simulated_mib);
+            assert!(c.predicted_mib <= req.budget_mib);
+            assert_eq!(c.binding_stage, 0);
+            match &c.escalation {
+                None => assert!(c.frontier_open),
+                Some(e) => {
+                    assert!(!c.frontier_open);
+                    assert!(e.simulated_mib > req.budget_mib);
+                }
+            }
+        }
+        // a huge budget leaves the frontier open at the ladder top
+        assert!(plan.candidates.iter().any(|c| c.cfg.mbs == 4 && c.frontier_open));
+
+        // a budget below every prediction has no feasible branch
+        let tight = PlanRequest { budget_mib: 1.0, ..req };
+        let p2 = plan_analytical_with(&tight, &engine).unwrap();
+        assert!(p2.candidates.is_empty());
+        assert_eq!(p2.stats.feasible_branches, 0);
+        assert_eq!(p2.stats.sim_points, 0);
     }
 
     #[test]

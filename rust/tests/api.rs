@@ -35,8 +35,12 @@ fn tiny() -> TrainConfig {
 fn start_server() -> api::serve::Server {
     let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("loopback bind");
     let svc = PredictionService::start_analytical(ServiceConfig::default());
-    api::serve::serve(listener, svc, &api::serve::ServeOptions { conn_threads: 4 })
-        .expect("server start")
+    api::serve::serve(
+        listener,
+        svc,
+        &api::serve::ServeOptions { conn_threads: 4, ..Default::default() },
+    )
+    .expect("server start")
 }
 
 /// A minimal NDJSON client over one TCP connection.
@@ -102,6 +106,7 @@ fn request_for(method_name: &str, id: &str) -> ApiRequest {
         "modality" => Method::Modality(api::ModalityParams { cfg }),
         "models" => Method::Models,
         "metrics" => Method::Metrics,
+        "health" => Method::Health,
         other => panic!("unknown method {other}"),
     };
     ApiRequest::new(id, method)
@@ -148,6 +153,10 @@ fn check_payload(method_name: &str, payload: &Json) {
         }
         "metrics" => {
             assert!(payload.get("per_method").is_some());
+        }
+        "health" => {
+            assert!(matches!(payload.get("status"), Some(Json::Str(_))));
+            assert!(payload.get("queue_depth").is_some());
         }
         other => panic!("unknown method {other}"),
     }
@@ -409,6 +418,7 @@ fn golden_predict_text_matches_legacy_rendering() {
             capacity_mib: capacity_gib.map(|g| g * 1024.0),
             detail: true,
         }),
+        deadline_ms: None,
     };
     let payload = d.handle(&req).into_result().unwrap();
     let rendered = render::predict_text(&payload, capacity_gib).unwrap();
@@ -469,7 +479,11 @@ fn golden_plan_output_matches_legacy_rendering() {
 
     let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(2));
     let payload = d
-        .handle(&ApiRequest { id: None, method: Method::Plan(PlanParams { req }) })
+        .handle(&ApiRequest {
+            id: None,
+            method: Method::Plan(PlanParams { req }),
+            deadline_ms: None,
+        })
         .into_result()
         .unwrap();
 
@@ -559,6 +573,7 @@ fn golden_sweep_table_matches_legacy_rendering() {
                 zero: zeros,
                 capacity_mib,
             }),
+            deadline_ms: None,
         })
         .into_result()
         .unwrap();
@@ -668,6 +683,7 @@ fn golden_no_parallelism_payloads_carry_no_new_keys() {
             capacity_mib: Some(80.0 * 1024.0),
             detail: true,
         }),
+        deadline_ms: None,
     };
     let text = d.handle(&req).into_result().unwrap().to_string();
     assert!(!text.contains("parallelism"), "{text}");
@@ -686,6 +702,7 @@ fn golden_no_parallelism_payloads_carry_no_new_keys() {
                 axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&base) },
             },
         }),
+        deadline_ms: None,
     };
     assert!(!plan_req.to_json().to_string().contains("\"tp\""));
     let text = d.handle(&plan_req).into_result().unwrap().to_string();
@@ -705,6 +722,7 @@ fn golden_no_parallelism_payloads_carry_no_new_keys() {
             zero: vec![tiny().zero],
             capacity_mib: None,
         }),
+        deadline_ms: None,
     };
     let payload = d.handle(&sweep_req).into_result().unwrap();
     assert!(!payload.to_string().contains("\"tp\""));
@@ -729,7 +747,11 @@ fn parallel_plan_round_trips_with_binding_stage() {
     let direct = planner::plan_with(&req, &Sweep::new(2)).unwrap();
     let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(2));
     let payload = d
-        .handle(&ApiRequest { id: None, method: Method::Plan(PlanParams { req }) })
+        .handle(&ApiRequest {
+            id: None,
+            method: Method::Plan(PlanParams { req }),
+            deadline_ms: None,
+        })
         .into_result()
         .unwrap();
     let wire = json_mini::parse(&payload.to_string()).unwrap();
