@@ -8,11 +8,16 @@
 //! frontier equals the frontier derived from exhaustively simulating
 //! the grid — the two must agree point for point.
 //!
+//! The final section benches the columnar lane engine against
+//! independent scalar replays on a pinned grid and emits
+//! `BENCH_columnar.json`, gating CI on the >=3x lane-speedup floor and
+//! on a planner frontier that is identical with the engine on or off.
+//!
 //! Run: `cargo bench --bench planner`
 
 use mmpredict::config::{TrainConfig, ZeroStage};
 use mmpredict::planner::{self, Axes, PlanRequest};
-use mmpredict::sweep::Sweep;
+use mmpredict::sweep::{columnar, Sweep};
 use mmpredict::util::bench::{bench, report, BenchResult};
 use mmpredict::util::json_mini::{obj, Json};
 
@@ -144,6 +149,7 @@ fn main() {
     println!("wrote {out}");
 
     parallel_grid_bench(&base, &engine);
+    columnar_bench(&base);
 }
 
 /// The tp/pp-enlarged search space: the same llava-1.5-7b fine-tune,
@@ -211,6 +217,116 @@ fn parallel_grid_bench(base: &TrainConfig, engine: &Sweep) {
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner_parallel.json");
     std::fs::write(out, json.to_string()).expect("writing BENCH_planner_parallel.json");
     println!("wrote {out}");
+}
+
+/// The columnar lane engine vs independent scalar replays on a pinned
+/// dp x zero x mbs grid — the planner's neighborhood shape: a few
+/// geometries, many size-only / shard-only variants, so lanes collapse
+/// into shared skeleton groups. Single-threaded on both sides, so the
+/// ratio is pure lane sharing plus the columnar allocator, not thread
+/// count. Asserts bitwise-equal measurements, a planner frontier that
+/// is config-for-config identical with the engine on vs off, and the
+/// >=3x lane-speedup floor; emits BENCH_columnar.json for CI.
+fn columnar_bench(base: &TrainConfig) {
+    let zeros = [ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3];
+    let mut cfgs: Vec<TrainConfig> = Vec::new();
+    for &mbs in &[1u64, 2, 4] {
+        for &dp in &[1u64, 2, 4, 8] {
+            for &zero in &zeros {
+                cfgs.push(TrainConfig { mbs, seq_len: 2048, dp, zero, ..base.clone() });
+            }
+        }
+    }
+    println!(
+        "\ncolumnar workload: mbs x dp x zero = {} grid points, single thread both sides",
+        cfgs.len()
+    );
+
+    let scalar_engine = Sweep::new(1).with_columnar(false);
+    let scalar = bench("scalar per-point replays (1 thread)", 1, 3, || {
+        let _ = scalar_engine.simulate_grid(&cfgs).unwrap();
+    });
+    report(&scalar);
+    let col = bench("columnar lane engine (1 thread)", 1, 3, || {
+        let _ = columnar::simulate_grid(&cfgs, 1).unwrap();
+    });
+    report(&col);
+    let lane_speedup = speedup(&scalar, &col);
+    println!("  -> lane speedup: {lane_speedup:.2}x");
+
+    // Correctness gate first: the speedup is meaningless unless every
+    // measurement is bitwise-identical to the scalar oracle's.
+    let want = scalar_engine.simulate_grid(&cfgs).unwrap();
+    let (got, stats) = columnar::simulate_grid_with_stats(&cfgs, 1).unwrap();
+    for (i, (c, s)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(c, s, "columnar measurement diverged from scalar at grid point {i}");
+    }
+    println!(
+        "sharing: {} lanes -> {} groups -> {} final classes ({} forks); {} engine ops vs {} scalar",
+        stats.lanes, stats.groups, stats.final_classes, stats.forks, stats.engine_ops,
+        stats.scalar_ops
+    );
+
+    // Planner A/B: the frontier must be engine-independent.
+    let req = PlanRequest {
+        base: base.clone(),
+        budget_mib: 80.0 * 1024.0,
+        axes: Axes {
+            mbs: vec![1, 2, 4, 8],
+            seq_len: vec![2048],
+            dp: vec![4, 8],
+            zero: vec![ZeroStage::Zero2, ZeroStage::Zero3],
+            ..Axes::fixed(base)
+        },
+    };
+    let on = planner::plan_with(&req, &Sweep::default().with_columnar(true)).unwrap();
+    let off = planner::plan_with(&req, &Sweep::default().with_columnar(false)).unwrap();
+    assert_eq!(on.candidates.len(), off.candidates.len(), "frontier size diverged");
+    for (a, b) in on.candidates.iter().zip(&off.candidates) {
+        assert_eq!(a.cfg.cache_key(), b.cfg.cache_key(), "frontier order diverged");
+        assert_eq!(
+            a.simulated_mib,
+            b.simulated_mib,
+            "simulated peak diverged for {}",
+            a.cfg.cache_key()
+        );
+    }
+    println!(
+        "planner frontier A/B OK: {} configs identical with columnar on/off",
+        on.candidates.len()
+    );
+
+    let json = obj(vec![
+        (
+            "workload",
+            Json::Str("llava-1.5-7b finetune, mbs x dp x zero grid, 1 thread".to_string()),
+        ),
+        ("configs", Json::Num(stats.configs as f64)),
+        ("lanes", Json::Num(stats.lanes as f64)),
+        ("groups", Json::Num(stats.groups as f64)),
+        ("final_classes", Json::Num(stats.final_classes as f64)),
+        ("forks", Json::Num(stats.forks as f64)),
+        ("engine_ops", Json::Num(stats.engine_ops as f64)),
+        ("scalar_ops", Json::Num(stats.scalar_ops as f64)),
+        (
+            "op_reduction",
+            Json::Num(stats.scalar_ops as f64 / (stats.engine_ops.max(1)) as f64),
+        ),
+        ("scalar_sec", Json::Num(scalar.mean.as_secs_f64())),
+        ("columnar_sec", Json::Num(col.mean.as_secs_f64())),
+        ("lane_speedup", Json::Num(lane_speedup)),
+        ("speedup_floor", Json::Num(3.0)),
+        ("frontier_size", Json::Num(on.candidates.len() as f64)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_columnar.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_columnar.json");
+    println!("wrote {out}");
+
+    // Perf gate last, after the artifact exists for post-mortems.
+    assert!(
+        lane_speedup >= 3.0,
+        "columnar lane speedup {lane_speedup:.2}x fell below the 3x floor"
+    );
 }
 
 fn speedup(before: &BenchResult, after: &BenchResult) -> f64 {

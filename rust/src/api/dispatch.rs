@@ -419,15 +419,22 @@ pub(crate) fn sweep_payload_degraded(p: &SweepParams, engine: &Sweep) -> Result<
 
 pub(crate) fn sweep_payload(p: &SweepParams, engine: &Sweep) -> Result<Json, ApiError> {
     let cfgs = sweep_cfgs(p)?;
-    let rows = engine
-        .run(&cfgs, |ctx, pm, cfg| {
-            // parse-once: both sides reuse the shared full parse (the
-            // per-rank predictor slices stage views from it for pp > 1)
-            let predicted = predictor::predict_per_rank_parsed(pm, cfg)?.peak_mib() as f64;
-            let measured = ctx.simulate_parsed(pm, cfg)?.peak_mib;
-            Ok((predicted, measured))
+    // Two passes over the grid: predictions through the worker pool
+    // (parse-once; the per-rank predictor slices stage views from the
+    // shared parse for pp > 1), then measurements through
+    // `simulate_grid` so grid neighbors batch into columnar lane
+    // groups (or the scalar per-point path under `--no-columnar`).
+    let preds = engine
+        .run(&cfgs, |_ctx, pm, cfg| {
+            Ok(predictor::predict_per_rank_parsed(pm, cfg)?.peak_mib() as f64)
         })
         .map_err(classify)?;
+    let measured = engine.simulate_grid(&cfgs).map_err(classify)?;
+    let rows: Vec<(f64, f64)> = preds
+        .into_iter()
+        .zip(&measured)
+        .map(|(pred, m)| (pred, m.peak_mib))
+        .collect();
     let points = cfgs
         .iter()
         .zip(&rows)

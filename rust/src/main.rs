@@ -131,6 +131,9 @@ fn print_help() {
          \x20 --json                    emit the full plan as JSON\n\
          \x20 --csv <file>              write the frontier as CSV\n\
          \x20 --threads N               sweep worker threads\n\
+         \x20 --no-columnar             per-point scalar replay instead of the\n\
+         \x20                           columnar lane engine (A/B oracle; also\n\
+         \x20                           REPRO_NO_COLUMNAR=1)\n\
          eval options:\n\
          \x20 --figure <2a|2b|all>      which sweep (default all)\n\
          \x20 --out <dir>               write CSVs (default results/)\n\
@@ -140,6 +143,7 @@ fn print_help() {
          \x20 --seq-list 1024,2048      SeqLen grid axis (default: --seq-len)\n\
          \x20 --zero-list 0,2,3         ZeRO grid axis (default: --zero)\n\
          \x20 --threads N               worker threads (default: cores)\n\
+         \x20 --no-columnar             disable the columnar lane engine\n\
          \x20 --capacity-gib <G>        add a fits/OoM verdict per point\n\
          \x20 --csv <file>              write the grid as CSV\n\
          serve options:\n\
@@ -255,7 +259,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
     // The CLI is a wire client of itself: build the v1 envelope and run
     // it through the same dispatcher `repro serve` executes.
-    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(threads));
+    let engine = Sweep::new(threads).with_columnar(!args.flag("no-columnar"));
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), engine);
     let api_req =
         ApiRequest { id: None, method: Method::Plan(PlanParams { req }), deadline_ms: None };
     let t0 = std::time::Instant::now();
@@ -324,7 +329,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     // Same code path as the wire: envelope in, payload out, rendered by
     // the shared api::render functions.
-    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), Sweep::new(threads));
+    let engine = Sweep::new(threads).with_columnar(!args.flag("no-columnar"));
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), engine);
     let api_req = ApiRequest {
         id: None,
         method: Method::Sweep(SweepParams {

@@ -29,9 +29,15 @@ pub(crate) struct BranchOutcome {
 }
 
 /// Bisect every branch's ladder against the simulator, batching one
-/// probe per unresolved branch through the sweep engine each round (so
-/// each round's simulations fan across the worker pool and reuse its
-/// [`crate::simulator::SimContext`]s).
+/// probe per unresolved branch through the sweep engine each round.
+/// With the columnar engine enabled (the default), each round's probes
+/// are grid neighbors that collapse into skeleton lane groups — one
+/// shared trace traversal per group, allocator state shared up to each
+/// lane's divergence point
+/// ([`crate::sweep::columnar::simulate_grid`]); with `--no-columnar`
+/// they fan across the scalar worker pool and reuse its
+/// [`crate::simulator::SimContext`]s. Both paths return identical
+/// measurements, so the frontier is engine-independent.
 ///
 /// `guesses[b]` seeds branch `b`'s first probe — the planner passes the
 /// analytical predictor's frontier estimate, which collapses the typical

@@ -1,0 +1,844 @@
+//! Columnar multi-variant replay: one trace skeleton, N config lanes.
+//!
+//! The planner/sweep hot path replays near-identical traces over and
+//! over: grid neighbours share the model's layer structure and differ
+//! only in per-event byte sizes (mbs/seq scale activations, dp/ZeRO
+//! scale the flat buffers, precision scales widths). This module
+//! factors a trace into
+//!
+//! * a [`Skeleton`] — the structure (alloc/free/phase ordering, tags,
+//!   dense rows) with every byte size stripped, and
+//! * a per-variant **lane table** — a row-major `Vec<u64>` of sizes,
+//!   stride `n_lanes`, so the sizes of one event sit contiguously
+//!   (`sizes[row * n_lanes + lane]`, SIMD-friendly inner loops).
+//!
+//! [`replay_lanes`] then replays the skeleton once for all lanes.
+//! Per-lane live bytes per tag live in stride-N lanes updated by a
+//! branch-free loop; the caching-allocator state is shared through
+//! **lane classes**: every lane starts in one class, and a class forks
+//! (clones its allocator) at the first event whose size differs between
+//! its members — incremental re-replay from the divergence point, with
+//! the class state acting as the cached baseline. Lanes whose size
+//! columns are fully identical therefore collapse into a single replay.
+//!
+//! The per-class allocator ([`LaneAllocator`]) reproduces
+//! [`super::allocator::CachingAllocator`] decision-for-decision (same
+//! rounding, pools, best-fit order, splitting and coalescing) but keeps
+//! its free index in sorted flat vectors instead of a `BTreeSet` —
+//! contiguous memory, cheap clones for class forks, no per-replay node
+//! allocation. The scalar [`super::engine::replay_with`] core is
+//! deliberately left untouched: it is the ground-truth oracle, and the
+//! differential battery in `tests/columnar.rs` asserts every lane is
+//! bitwise-identical to it (and to [`super::engine::reference`]).
+
+use anyhow::{bail, Result};
+
+use super::allocator::{Stats, LARGE_GRAN, ROUND, SMALL_LIMIT, SMALL_SEGMENT};
+use super::engine::{Breakdown, Replay};
+use super::trace::{Event, Tag, TAG_COUNT};
+
+// ---------------------------------------------------------------------------
+// Skeleton: trace structure without sizes
+// ---------------------------------------------------------------------------
+
+/// One structural trace operation. `row` indexes the dense alloc-row
+/// space (the lane table's row axis); frees reference the row of the
+/// allocation they release.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Alloc { row: u32 },
+    Free { row: u32 },
+    Phase { name: &'static str },
+}
+
+/// The size-free structure of a trace: event ordering, per-row tags and
+/// the alloc-id → row mapping. Two traces with equal skeletons differ
+/// only in byte sizes and can replay as lanes of one columnar group.
+#[derive(Clone, Debug)]
+pub struct Skeleton {
+    ops: Vec<Op>,
+    /// Tag of each alloc row, in row order.
+    row_tag: Vec<Tag>,
+    /// Event index of each alloc row (divergence rows → event indices).
+    row_event: Vec<u32>,
+    hash: u64,
+}
+
+impl Skeleton {
+    /// Split a trace into its skeleton and its size column (one `u64`
+    /// per alloc row, in row order). Validates the same trace
+    /// invariants the scalar engine enforces (dense ids, no reuse, no
+    /// unknown frees) so an invalid trace fails here exactly like it
+    /// would at replay time.
+    pub fn extract(events: &[Event]) -> Result<(Skeleton, Vec<u64>)> {
+        let mut ops = Vec::with_capacity(events.len());
+        let mut row_tag = Vec::new();
+        let mut row_event = Vec::new();
+        let mut sizes = Vec::new();
+        // id -> row while live; u32::MAX = never allocated or freed
+        let mut row_of_id = vec![u32::MAX; events.len()];
+        let mut hash = Fnv::new();
+        for (ei, ev) in events.iter().enumerate() {
+            match *ev {
+                Event::Alloc { id, bytes, tag } => {
+                    let Some(slot) = usize::try_from(id).ok().filter(|&s| s < events.len()) else {
+                        bail!("trace id {id} outside dense range 0..{}", events.len());
+                    };
+                    if row_of_id[slot] != u32::MAX {
+                        bail!("trace reused id {id}");
+                    }
+                    let row = row_tag.len() as u32;
+                    row_of_id[slot] = row;
+                    row_tag.push(tag);
+                    row_event.push(ei as u32);
+                    sizes.push(bytes);
+                    ops.push(Op::Alloc { row });
+                    hash.byte(1).word(u64::from(row)).byte(tag.index() as u8);
+                }
+                Event::Free { id } => {
+                    let row = usize::try_from(id)
+                        .ok()
+                        .and_then(|s| row_of_id.get_mut(s))
+                        .map(|r| std::mem::replace(r, u32::MAX))
+                        .filter(|&r| r != u32::MAX);
+                    let Some(row) = row else {
+                        bail!("trace freed unknown id {id}");
+                    };
+                    ops.push(Op::Free { row });
+                    hash.byte(2).word(u64::from(row));
+                }
+                Event::Phase { name } => {
+                    ops.push(Op::Phase { name });
+                    hash.byte(3).str(name);
+                }
+            }
+        }
+        Ok((
+            Skeleton {
+                ops,
+                row_tag,
+                row_event,
+                hash: hash.finish(),
+            },
+            sizes,
+        ))
+    }
+
+    /// Structural fingerprint (grouping pre-filter; equality is always
+    /// confirmed by [`Skeleton::same_shape`]).
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Number of alloc rows (the lane table's row count).
+    pub fn num_rows(&self) -> usize {
+        self.row_tag.len()
+    }
+
+    /// Number of events.
+    pub fn num_events(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Exact structural equality (two traces can share a lane group).
+    pub fn same_shape(&self, other: &Skeleton) -> bool {
+        self.hash == other.hash && self.ops == other.ops && self.row_tag == other.row_tag
+    }
+
+    /// Event index of an alloc row.
+    pub fn event_of_row(&self, row: usize) -> usize {
+        self.row_event[row] as usize
+    }
+}
+
+/// FNV-1a accumulator for skeleton hashing.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn byte(&mut self, b: u8) -> &mut Self {
+        self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x100000001b3);
+        self
+    }
+    fn word(&mut self, w: u64) -> &mut Self {
+        for b in w.to_le_bytes() {
+            self.byte(b);
+        }
+        self
+    }
+    fn str(&mut self, s: &str) -> &mut Self {
+        for &b in s.as_bytes() {
+            self.byte(b);
+        }
+        self.byte(0xff)
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// First event index whose size differs between two size columns of the
+/// same skeleton (`None` = the variants are identical and the baseline
+/// replay can be reused outright).
+pub fn divergence_event(skel: &Skeleton, a: &[u64], b: &[u64]) -> Option<usize> {
+    debug_assert_eq!(a.len(), skel.num_rows());
+    debug_assert_eq!(b.len(), skel.num_rows());
+    a.iter()
+        .zip(b)
+        .position(|(x, y)| x != y)
+        .map(|row| skel.event_of_row(row))
+}
+
+/// Interleave per-lane size columns into the row-major stride-N lane
+/// table [`replay_lanes`] consumes (`out[row * n + lane]`).
+pub fn interleave(columns: &[Vec<u64>]) -> Vec<u64> {
+    let n = columns.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let rows = columns[0].len();
+    let mut out = vec![0u64; rows * n];
+    for (lane, col) in columns.iter().enumerate() {
+        assert_eq!(col.len(), rows, "lane columns must have equal row counts");
+        for (row, &sz) in col.iter().enumerate() {
+            out[row * n + lane] = sz;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lane allocator: CachingAllocator semantics on flat sorted vectors
+// ---------------------------------------------------------------------------
+
+/// Handle into a [`LaneAllocator`] (same shape as the scalar
+/// allocator's handle; kept separate so the oracle stays untouched).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct LaneHandle {
+    segment: u32,
+    offset: u64,
+}
+
+const NO_HANDLE: LaneHandle = LaneHandle {
+    segment: u32::MAX,
+    offset: u64::MAX,
+};
+
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    offset: u64,
+    size: u64,
+    free: bool,
+}
+
+#[derive(Clone, Debug)]
+struct Segment {
+    size: u64,
+    small: bool,
+    /// Sorted by offset; contiguous cover of `[0, size)`.
+    blocks: Vec<Block>,
+}
+
+/// Decision-for-decision port of the scalar `CachingAllocator` with the
+/// free index in sorted flat `Vec`s: identical rounding, pool split,
+/// best-fit `(size, segment, offset)` order, block splitting and
+/// coalescing — so its `Stats` match the oracle bit for bit — but
+/// contiguous storage, O(1)-ish clones for class forks, and no
+/// per-replay `BTreeSet` node churn.
+#[derive(Clone, Default)]
+struct LaneAllocator {
+    segments: Vec<Segment>,
+    /// Sorted `(size, segment, offset)` of free blocks, small pool.
+    free_small: Vec<(u64, u32, u64)>,
+    /// Sorted `(size, segment, offset)` of free blocks, large pool.
+    free_large: Vec<(u64, u32, u64)>,
+    stats: Stats,
+}
+
+impl LaneAllocator {
+    fn stats(&self) -> Stats {
+        self.stats
+    }
+
+    fn index(&mut self, small: bool) -> &mut Vec<(u64, u32, u64)> {
+        if small {
+            &mut self.free_small
+        } else {
+            &mut self.free_large
+        }
+    }
+
+    fn index_insert(&mut self, small: bool, entry: (u64, u32, u64)) {
+        let idx = self.index(small);
+        let pos = idx.partition_point(|e| *e < entry);
+        idx.insert(pos, entry);
+    }
+
+    fn index_remove(&mut self, small: bool, entry: (u64, u32, u64)) {
+        let idx = self.index(small);
+        let pos = idx.binary_search(&entry).expect("free index out of sync");
+        idx.remove(pos);
+    }
+
+    /// Mirror of `CachingAllocator::alloc`. The best-fit pick is the
+    /// smallest `(size, segment, offset)` tuple with `size >= request`
+    /// — `partition_point` on the sorted vector selects exactly the
+    /// element `BTreeSet::range((size, 0, 0)..).next()` would.
+    fn alloc(&mut self, bytes: u64) -> LaneHandle {
+        let size = bytes.max(1).div_ceil(ROUND) * ROUND;
+        let small = size < SMALL_LIMIT;
+
+        let idx = self.index(small);
+        let pos = idx.partition_point(|e| *e < (size, 0, 0));
+        let found = idx.get(pos).copied();
+
+        let (si, bi) = match found {
+            Some((_, seg, offset)) => {
+                self.index(small).remove(pos);
+                let si = seg as usize;
+                let bi = self.segments[si]
+                    .blocks
+                    .binary_search_by_key(&offset, |b| b.offset)
+                    .expect("free index out of sync");
+                (si, bi)
+            }
+            None => {
+                let seg_size = if small {
+                    SMALL_SEGMENT
+                } else {
+                    size.div_ceil(LARGE_GRAN) * LARGE_GRAN
+                };
+                self.segments.push(Segment {
+                    size: seg_size,
+                    small,
+                    blocks: vec![Block { offset: 0, size: seg_size, free: true }],
+                });
+                self.stats.reserved += seg_size;
+                self.stats.segment_count += 1;
+                self.stats.peak_reserved = self.stats.peak_reserved.max(self.stats.reserved);
+                (self.segments.len() - 1, 0)
+            }
+        };
+
+        let seg_id = si as u32;
+        let seg = &mut self.segments[si];
+        let block = seg.blocks[bi];
+        debug_assert!(block.free && block.size >= size);
+        if block.size - size >= ROUND {
+            seg.blocks[bi] = Block { offset: block.offset, size, free: false };
+            let rem = Block { offset: block.offset + size, size: block.size - size, free: true };
+            seg.blocks.insert(bi + 1, rem);
+            self.index_insert(small, (rem.size, seg_id, rem.offset));
+        } else {
+            self.segments[si].blocks[bi].free = false;
+        }
+        let seg = &self.segments[si];
+        let final_size = seg.blocks[bi].size;
+
+        self.stats.allocated += final_size;
+        self.stats.alloc_count += 1;
+        self.stats.peak_allocated = self.stats.peak_allocated.max(self.stats.allocated);
+        LaneHandle { segment: seg_id, offset: seg.blocks[bi].offset }
+    }
+
+    /// Mirror of `CachingAllocator::free` (coalesce with next, then
+    /// previous, dropping stale index entries of merged neighbours).
+    fn free(&mut self, h: LaneHandle) {
+        let si = h.segment as usize;
+        let small = self.segments[si].small;
+        let seg = &mut self.segments[si];
+        let mut bi = seg
+            .blocks
+            .binary_search_by_key(&h.offset, |b| b.offset)
+            .unwrap_or_else(|_| panic!("free of unknown handle {h:?}"));
+        assert!(!seg.blocks[bi].free, "double free of {h:?}");
+        seg.blocks[bi].free = true;
+        self.stats.allocated -= seg.blocks[bi].size;
+
+        let mut stale: [Option<(u64, u32, u64)>; 2] = [None, None];
+        if bi + 1 < seg.blocks.len() && seg.blocks[bi + 1].free {
+            let nb = seg.blocks[bi + 1];
+            stale[0] = Some((nb.size, h.segment, nb.offset));
+            seg.blocks[bi].size += nb.size;
+            seg.blocks.remove(bi + 1);
+        }
+        if bi > 0 && seg.blocks[bi - 1].free {
+            let pb = seg.blocks[bi - 1];
+            stale[1] = Some((pb.size, h.segment, pb.offset));
+            seg.blocks[bi - 1].size += seg.blocks[bi].size;
+            seg.blocks.remove(bi);
+            bi -= 1;
+        }
+        let merged = seg.blocks[bi];
+        for e in stale.into_iter().flatten() {
+            self.index_remove(small, e);
+        }
+        self.index_insert(small, (merged.size, h.segment, merged.offset));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Columnar group replay: lane classes fork at divergence points
+// ---------------------------------------------------------------------------
+
+/// One class of lanes whose size columns have been identical so far:
+/// they share one allocator state, peak bookkeeping and handle table.
+/// `lanes[0]` is the representative whose live-byte lane is read for
+/// peak snapshots (all members are equal by the class invariant).
+#[derive(Clone)]
+struct LaneClass {
+    lanes: Vec<u32>,
+    alloc: LaneAllocator,
+    /// Handle per alloc row (NO_HANDLE until allocated).
+    handles: Vec<LaneHandle>,
+    peak: u64,
+    peak_phase: &'static str,
+    at_peak: [u64; TAG_COUNT],
+}
+
+/// Sharing telemetry for one group replay.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupStats {
+    pub n_lanes: usize,
+    /// Classes alive at the end (1 = every lane was identical).
+    pub final_classes: usize,
+    /// Class forks performed (divergence points hit).
+    pub forks: usize,
+    /// Allocator operations the columnar engine actually executed.
+    pub engine_ops: u64,
+    /// Allocator operations N independent scalar replays would execute.
+    pub scalar_ops: u64,
+}
+
+/// Result of a columnar group replay: one [`Replay`] per lane, bitwise
+/// identical to the scalar oracle's, plus sharing telemetry.
+pub struct GroupReplay {
+    pub replays: Vec<Replay>,
+    pub stats: GroupStats,
+}
+
+/// Replay one skeleton for `n_lanes` variants. `sizes` is the row-major
+/// lane table (`sizes[row * n_lanes + lane]`). Every lane's result is
+/// bitwise identical to replaying that lane's trace through the scalar
+/// engine.
+pub fn replay_lanes(skel: &Skeleton, sizes: &[u64], n_lanes: usize) -> GroupReplay {
+    assert!(n_lanes > 0, "a lane group needs at least one lane");
+    assert_eq!(
+        sizes.len(),
+        skel.num_rows() * n_lanes,
+        "lane table shape mismatch"
+    );
+    let n = n_lanes;
+    let rows = skel.num_rows();
+
+    // Per-lane live bytes per tag: stride-N lanes, one contiguous run
+    // per (tag, event) update — the SoA core.
+    let mut live = vec![0u64; TAG_COUNT * n];
+    let mut classes = vec![LaneClass {
+        lanes: (0..n as u32).collect(),
+        alloc: LaneAllocator::default(),
+        handles: vec![NO_HANDLE; rows],
+        peak: 0,
+        peak_phase: "startup",
+        at_peak: [0u64; TAG_COUNT],
+    }];
+    let mut phase = "startup";
+    let mut stats = GroupStats { n_lanes: n, ..GroupStats::default() };
+
+    for op in &skel.ops {
+        match *op {
+            Op::Phase { name } => phase = name,
+            Op::Alloc { row } => {
+                let base = row as usize * n;
+                let row_sizes = &sizes[base..base + n];
+                let tbase = skel.row_tag[row as usize].index() * n;
+                for (lv, sz) in live[tbase..tbase + n].iter_mut().zip(row_sizes) {
+                    *lv += *sz;
+                }
+                // Fork every class whose members disagree on this row's
+                // size — the incremental-re-replay divergence point.
+                // New classes are appended and then processed by the
+                // same alloc pass below.
+                let prior = classes.len();
+                for ci in 0..prior {
+                    split_class(&mut classes, ci, row_sizes, &mut stats.forks);
+                }
+                for class in &mut classes {
+                    let sz = row_sizes[class.lanes[0] as usize];
+                    class.handles[row as usize] = class.alloc.alloc(sz);
+                    stats.engine_ops += 1;
+                    let allocated = class.alloc.stats().allocated;
+                    if allocated > class.peak {
+                        class.peak = allocated;
+                        class.peak_phase = phase;
+                        let rep = class.lanes[0] as usize;
+                        for (t, slot) in class.at_peak.iter_mut().enumerate() {
+                            *slot = live[t * n + rep];
+                        }
+                    }
+                }
+                stats.scalar_ops += n as u64;
+            }
+            Op::Free { row } => {
+                let base = row as usize * n;
+                let tbase = skel.row_tag[row as usize].index() * n;
+                for (lv, sz) in live[tbase..tbase + n].iter_mut().zip(&sizes[base..base + n]) {
+                    *lv -= *sz;
+                }
+                for class in &mut classes {
+                    class.alloc.free(class.handles[row as usize]);
+                    stats.engine_ops += 1;
+                }
+                stats.scalar_ops += n as u64;
+            }
+        }
+    }
+
+    stats.final_classes = classes.len();
+    let mut replays: Vec<Option<Replay>> = vec![None; n];
+    for class in &classes {
+        let end_stats = class.alloc.stats();
+        for &lane in &class.lanes {
+            let mut persistent = [0u64; TAG_COUNT];
+            for (t, slot) in persistent.iter_mut().enumerate() {
+                *slot = live[t * n + lane as usize];
+            }
+            replays[lane as usize] = Some(Replay {
+                stats: end_stats,
+                at_peak: Breakdown::from_live(&class.at_peak),
+                peak_phase: class.peak_phase,
+                persistent: Breakdown::from_live(&persistent),
+            });
+        }
+    }
+    GroupReplay {
+        replays: replays
+            .into_iter()
+            .map(|r| r.expect("every lane belongs to exactly one class"))
+            .collect(),
+        stats,
+    }
+}
+
+/// Partition `classes[ci]`'s lanes by their size on the current row; if
+/// they disagree, the first value's lanes keep the existing state and
+/// each other distinct value forks a clone (pre-event state). Appended
+/// classes keep lane order, so results are deterministic.
+fn split_class(classes: &mut Vec<LaneClass>, ci: usize, row_sizes: &[u64], forks: &mut usize) {
+    if classes[ci].lanes.len() == 1 {
+        return;
+    }
+    let s0 = row_sizes[classes[ci].lanes[0] as usize];
+    if classes[ci]
+        .lanes
+        .iter()
+        .all(|&l| row_sizes[l as usize] == s0)
+    {
+        return;
+    }
+    // Distinct sizes in first-occurrence order, with their member lanes.
+    let mut parts: Vec<(u64, Vec<u32>)> = Vec::new();
+    for &lane in &classes[ci].lanes {
+        let sz = row_sizes[lane as usize];
+        match parts.iter_mut().find(|(s, _)| *s == sz) {
+            Some((_, lanes)) => lanes.push(lane),
+            None => parts.push((sz, vec![lane])),
+        }
+    }
+    let keep = parts.remove(0).1;
+    for (_, lanes) in parts {
+        let mut forked = classes[ci].clone();
+        forked.lanes = lanes;
+        classes.push(forked);
+        *forks += 1;
+    }
+    classes[ci].lanes = keep;
+}
+
+// ---------------------------------------------------------------------------
+// Incremental baseline-vs-probe replay
+// ---------------------------------------------------------------------------
+
+/// Single-lane replay state (the checkpointable form of the scalar
+/// engine's loop variables).
+#[derive(Clone)]
+struct SingleState {
+    alloc: LaneAllocator,
+    handles: Vec<LaneHandle>,
+    live: [u64; TAG_COUNT],
+    peak: u64,
+    phase: &'static str,
+    peak_phase: &'static str,
+    at_peak: [u64; TAG_COUNT],
+}
+
+impl SingleState {
+    fn fresh(rows: usize) -> Self {
+        SingleState {
+            alloc: LaneAllocator::default(),
+            handles: vec![NO_HANDLE; rows],
+            live: [0; TAG_COUNT],
+            peak: 0,
+            phase: "startup",
+            peak_phase: "startup",
+            at_peak: [0; TAG_COUNT],
+        }
+    }
+
+    fn finish(&self) -> Replay {
+        Replay {
+            stats: self.alloc.stats(),
+            at_peak: Breakdown::from_live(&self.at_peak),
+            peak_phase: self.peak_phase,
+            persistent: Breakdown::from_live(&self.live),
+        }
+    }
+}
+
+/// Replay `skel.ops[from..]` on `state` with the given size column.
+fn run_single(
+    skel: &Skeleton,
+    sizes: &[u64],
+    from: usize,
+    state: &mut SingleState,
+    mut checkpoint: Option<(usize, &mut Vec<(usize, SingleState)>)>,
+) {
+    for (ei, op) in skel.ops.iter().enumerate().skip(from) {
+        if let Some((stride, saved)) = checkpoint.as_mut() {
+            if ei % *stride == 0 {
+                saved.push((ei, state.clone()));
+            }
+        }
+        match *op {
+            Op::Phase { name } => state.phase = name,
+            Op::Alloc { row } => {
+                let sz = sizes[row as usize];
+                state.live[skel.row_tag[row as usize].index()] += sz;
+                state.handles[row as usize] = state.alloc.alloc(sz);
+                let allocated = state.alloc.stats().allocated;
+                if allocated > state.peak {
+                    state.peak = allocated;
+                    state.peak_phase = state.phase;
+                    state.at_peak = state.live;
+                }
+            }
+            Op::Free { row } => {
+                state.live[skel.row_tag[row as usize].index()] -=
+                    sizes[row as usize];
+                state.alloc.free(state.handles[row as usize]);
+            }
+        }
+    }
+}
+
+/// Cached baseline replay with periodic state checkpoints. A probe
+/// variant sharing the skeleton re-replays only from the checkpoint
+/// preceding the first event whose size differs from the baseline —
+/// the planner's repeated-probe pattern (same branch, next rung) pays
+/// for the shared prefix once.
+pub struct Incremental {
+    skel: Skeleton,
+    base_sizes: Vec<u64>,
+    checkpoints: Vec<(usize, SingleState)>,
+    base: Replay,
+}
+
+impl Incremental {
+    /// Replay `events` as the baseline, saving a state checkpoint every
+    /// `checkpoint_stride` events (clamped to ≥ 1).
+    pub fn new(events: &[Event], checkpoint_stride: usize) -> Result<Incremental> {
+        let (skel, base_sizes) = Skeleton::extract(events)?;
+        let mut state = SingleState::fresh(skel.num_rows());
+        let mut checkpoints = Vec::new();
+        run_single(
+            &skel,
+            &base_sizes,
+            0,
+            &mut state,
+            Some((checkpoint_stride.max(1), &mut checkpoints)),
+        );
+        let base = state.finish();
+        Ok(Incremental { skel, base_sizes, checkpoints, base })
+    }
+
+    /// The baseline's replay result.
+    pub fn base(&self) -> &Replay {
+        &self.base
+    }
+
+    /// Replay a probe trace against the cached baseline. Returns the
+    /// probe's replay (bitwise identical to a from-scratch scalar
+    /// replay) and the divergence point — the index of the first event
+    /// whose size differs from the baseline (`None`: the traces are
+    /// identical and the cached result is returned without replaying
+    /// anything). Fails if the probe's structure differs from the
+    /// baseline's (different skeletons cannot share lanes).
+    pub fn replay(&self, events: &[Event]) -> Result<(Replay, Option<usize>)> {
+        let (skel, sizes) = Skeleton::extract(events)?;
+        if !self.skel.same_shape(&skel) {
+            bail!(
+                "probe trace structure diverges from the baseline skeleton \
+                 ({} events vs {})",
+                skel.num_events(),
+                self.skel.num_events()
+            );
+        }
+        let Some(div) = divergence_event(&self.skel, &self.base_sizes, &sizes) else {
+            return Ok((self.base.clone(), None));
+        };
+        // Latest checkpoint at or before the divergence event. Events
+        // before `div` have identical sizes, so the baseline state at
+        // any point ≤ div is exactly the probe's state there.
+        let ck = self
+            .checkpoints
+            .iter()
+            .rev()
+            .find(|(ei, _)| *ei <= div)
+            .expect("checkpoint 0 always exists");
+        let mut state = ck.1.clone();
+        run_single(&self.skel, &sizes, ck.0, &mut state, None);
+        Ok((state.finish(), Some(div)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::engine;
+
+    fn ev_alloc(id: u64, bytes: u64, tag: Tag) -> Event {
+        Event::Alloc { id, bytes, tag }
+    }
+
+    /// A small trace shape with startup / forward / free traffic.
+    fn shape(sizes: &[u64; 4]) -> Vec<Event> {
+        vec![
+            Event::Phase { name: "startup" },
+            ev_alloc(0, sizes[0], Tag::Param),
+            Event::Phase { name: "forward" },
+            ev_alloc(1, sizes[1], Tag::Act),
+            ev_alloc(2, sizes[2], Tag::Ephemeral),
+            Event::Free { id: 2 },
+            Event::Free { id: 1 },
+            ev_alloc(3, sizes[3], Tag::Act),
+            Event::Free { id: 3 },
+        ]
+    }
+
+    #[test]
+    fn skeleton_extract_roundtrips_structure() {
+        let evs = shape(&[4 << 20, 8 << 20, 900, 5 << 20]);
+        let (skel, sizes) = Skeleton::extract(&evs).unwrap();
+        assert_eq!(skel.num_events(), evs.len());
+        assert_eq!(skel.num_rows(), 4);
+        assert_eq!(sizes, vec![4 << 20, 8 << 20, 900, 5 << 20]);
+        let (skel2, _) = Skeleton::extract(&shape(&[1, 2, 3, 4])).unwrap();
+        assert!(skel.same_shape(&skel2));
+    }
+
+    #[test]
+    fn skeleton_rejects_invalid_traces() {
+        assert!(Skeleton::extract(&[Event::Free { id: 9 }]).is_err());
+        assert!(
+            Skeleton::extract(&[ev_alloc(0, 512, Tag::Act), ev_alloc(0, 512, Tag::Act)]).is_err()
+        );
+        assert!(Skeleton::extract(&[ev_alloc(7, 512, Tag::Act)]).is_err());
+    }
+
+    #[test]
+    fn lanes_match_scalar_engine_bitwise() {
+        let variants: Vec<[u64; 4]> = vec![
+            [4 << 20, 8 << 20, 900, 5 << 20],
+            [4 << 20, 16 << 20, 900, 10 << 20], // diverges at forward
+            [2 << 20, 8 << 20, 900, 5 << 20],   // diverges at startup
+            [4 << 20, 8 << 20, 900, 5 << 20],   // identical to lane 0
+        ];
+        let traces: Vec<Vec<Event>> = variants.iter().map(shape).collect();
+        let (skel, _) = Skeleton::extract(&traces[0]).unwrap();
+        let columns: Vec<Vec<u64>> = traces
+            .iter()
+            .map(|t| Skeleton::extract(t).unwrap().1)
+            .collect();
+        let table = interleave(&columns);
+        let group = replay_lanes(&skel, &table, variants.len());
+        for (lane, trace) in traces.iter().enumerate() {
+            let want = engine::replay(trace).unwrap();
+            assert_eq!(group.replays[lane], want, "lane {lane}");
+        }
+        // lanes 0 and 3 are identical -> they stay in one class
+        assert!(group.stats.final_classes < variants.len());
+        assert!(group.stats.engine_ops < group.stats.scalar_ops);
+    }
+
+    #[test]
+    fn single_lane_group_matches_scalar() {
+        let evs = shape(&[3 << 20, 6 << 20, 700, 9 << 20]);
+        let (skel, sizes) = Skeleton::extract(&evs).unwrap();
+        let group = replay_lanes(&skel, &sizes, 1);
+        assert_eq!(group.replays[0], engine::replay(&evs).unwrap());
+        assert_eq!(group.stats.final_classes, 1);
+        assert_eq!(group.stats.forks, 0);
+    }
+
+    #[test]
+    fn divergence_event_finds_first_differing_row() {
+        let a = shape(&[1 << 20, 2 << 20, 900, 3 << 20]);
+        let b = shape(&[1 << 20, 2 << 20, 900, 4 << 20]);
+        let (skel, sa) = Skeleton::extract(&a).unwrap();
+        let (_, sb) = Skeleton::extract(&b).unwrap();
+        // row 3 is event index 7 in the shape
+        assert_eq!(divergence_event(&skel, &sa, &sb), Some(7));
+        assert_eq!(divergence_event(&skel, &sa, &sa), None);
+    }
+
+    #[test]
+    fn incremental_matches_from_scratch() {
+        let base = shape(&[4 << 20, 8 << 20, 900, 5 << 20]);
+        let inc = Incremental::new(&base, 3).unwrap();
+        assert_eq!(*inc.base(), engine::replay(&base).unwrap());
+
+        let probe = shape(&[4 << 20, 8 << 20, 900, 12 << 20]);
+        let (replay, div) = inc.replay(&probe).unwrap();
+        assert_eq!(replay, engine::replay(&probe).unwrap());
+        assert_eq!(div, Some(7));
+
+        // identical probe returns the cached result with no divergence
+        let (replay, div) = inc.replay(&base).unwrap();
+        assert_eq!(replay, *inc.base());
+        assert_eq!(div, None);
+
+        // structural mismatch is an error, not a wrong answer
+        let mut other = base.clone();
+        other.push(ev_alloc(9, 512, Tag::Act));
+        assert!(inc.replay(&other).is_err());
+    }
+
+    #[test]
+    fn lane_allocator_tracks_scalar_allocator_on_random_traffic() {
+        use crate::simulator::allocator::CachingAllocator;
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(0xC01A);
+        let mut fast = LaneAllocator::default();
+        let mut oracle = CachingAllocator::new();
+        let mut live: Vec<(LaneHandle, crate::simulator::allocator::Handle)> = Vec::new();
+        for _ in 0..400 {
+            if live.is_empty() || rng.chance(0.6) {
+                let bytes = match rng.below(3) {
+                    0 => rng.below(4096) + 1,          // small pool
+                    1 => (rng.below(64) + 1) << 20,    // large pool
+                    _ => (rng.below(8) + 1) * 1000000, // odd sizes -> slivers
+                };
+                live.push((fast.alloc(bytes), oracle.alloc(bytes)));
+            } else {
+                let i = rng.range(0, live.len() - 1);
+                let (fh, oh) = live.swap_remove(i);
+                fast.free(fh);
+                oracle.free(oh);
+            }
+            assert_eq!(fast.stats(), oracle.stats());
+        }
+        oracle.check_invariants();
+    }
+}

@@ -43,7 +43,7 @@ impl Breakdown {
         &self.entries
     }
 
-    fn from_live(live: &[u64; TAG_COUNT]) -> Self {
+    pub(crate) fn from_live(live: &[u64; TAG_COUNT]) -> Self {
         Breakdown {
             entries: ALL_TAGS.iter().map(|&t| (t, live[t.index()])).collect(),
         }

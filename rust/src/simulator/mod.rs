@@ -14,6 +14,7 @@
 //! factor predictor against.
 
 pub mod allocator;
+pub mod columnar;
 pub mod engine;
 pub mod trace;
 pub mod zero;
@@ -110,7 +111,7 @@ impl SimContext {
 const MIB: f64 = 1024.0 * 1024.0;
 
 /// Simulated measurement of one training iteration on one GPU.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Measurement {
     /// The headline "measured" number the paper's MAPE uses: device
     /// memory at peak = CUDA context + allocator-reserved peak.
@@ -141,7 +142,7 @@ impl Measurement {
         self.peak_mib / 1024.0
     }
 
-    fn from_replay(replay: Replay, cfg: &TrainConfig) -> Measurement {
+    pub(crate) fn from_replay(replay: Replay, cfg: &TrainConfig) -> Measurement {
         let s = replay.stats;
         let ctx = cfg.overheads.cuda_ctx_mib as f64;
         Measurement {

@@ -1,0 +1,309 @@
+//! Columnar grid simulation: batch grid points into lane groups.
+//!
+//! [`simulate_grid`] is the drop-in columnar counterpart of the scalar
+//! per-point sweep: it validates and parses exactly like
+//! [`super::Sweep::run`] (parse-once per geometry key, per-config
+//! validation, lowest-index error wins), then — instead of replaying
+//! each config's trace independently — generates every trace once,
+//! strips it to its [`Skeleton`], and groups lanes whose skeletons are
+//! structurally identical. Each group replays through
+//! [`crate::simulator::columnar::replay_lanes`], so configs that differ
+//! only in per-event sizes (dp/ZeRO shard factors, mbs/seq activation
+//! scale) share trace traversal, live-byte updates, and — until their
+//! first divergent event — allocator state.
+//!
+//! Pipeline configs contribute one lane per stage (the same stage views
+//! the scalar path simulates); the per-stage results are folded to the
+//! binding stage with the scalar engine's exact rule (earliest strict
+//! maximum of `peak_mib`), so the returned [`Measurement`]s are
+//! identical to `Sweep::run` + `simulate_parsed` field for field.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::parser::{self, ParsedModel};
+use crate::simulator::columnar::{interleave, replay_lanes, GroupReplay, Skeleton};
+use crate::simulator::{trace, Event, Measurement, Replay};
+
+/// Aggregated sharing telemetry for one columnar grid simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ColumnarStats {
+    /// Grid points simulated.
+    pub configs: usize,
+    /// Lane units replayed (one per config, or one per pipeline stage).
+    pub lanes: usize,
+    /// Skeleton groups the lanes collapsed into.
+    pub groups: usize,
+    /// Lane classes alive at the end, summed over groups (lanes that
+    /// never diverged stay merged; `final_classes < lanes` = dedupe).
+    pub final_classes: usize,
+    /// Class forks performed (divergence points hit).
+    pub forks: usize,
+    /// Allocator operations the columnar engine executed.
+    pub engine_ops: u64,
+    /// Allocator operations independent scalar replays would execute.
+    pub scalar_ops: u64,
+}
+
+/// One skeleton group: lanes (size columns) awaiting a shared replay.
+struct Group {
+    skel: Skeleton,
+    columns: Vec<Vec<u64>>,
+    /// `(config index, pipeline stage)` per lane, in lane order.
+    units: Vec<(usize, usize)>,
+}
+
+fn push_lane(groups: &mut Vec<Group>, events: &[Event], cfg_idx: usize, stage: usize) -> Result<()> {
+    let (skel, sizes) = Skeleton::extract(events)?;
+    for g in groups.iter_mut() {
+        // The hash is a pre-filter only; membership requires structural
+        // equality, so a hash collision costs time, never correctness.
+        if g.skel.hash() == skel.hash() && g.skel.same_shape(&skel) {
+            g.columns.push(sizes);
+            g.units.push((cfg_idx, stage));
+            return Ok(());
+        }
+    }
+    groups.push(Group { skel, columns: vec![sizes], units: vec![(cfg_idx, stage)] });
+    Ok(())
+}
+
+/// Simulate every config of the grid through the columnar engine.
+/// Results are in input order and bitwise-identical to the scalar
+/// sweep's.
+pub fn simulate_grid(cfgs: &[TrainConfig], threads: usize) -> Result<Vec<Measurement>> {
+    Ok(simulate_grid_with_stats(cfgs, threads)?.0)
+}
+
+/// [`simulate_grid`] plus sharing telemetry (bench/diagnostics).
+pub fn simulate_grid_with_stats(
+    cfgs: &[TrainConfig],
+    threads: usize,
+) -> Result<(Vec<Measurement>, ColumnarStats)> {
+    let threads = threads.max(1);
+    if cfgs.is_empty() {
+        return Ok((Vec::new(), ColumnarStats::default()));
+    }
+
+    // Parse each distinct geometry once, validating every config —
+    // the same sequencing as the scalar sweep, so the same (first)
+    // error surfaces for invalid grids.
+    let mut keys: Vec<String> = Vec::new();
+    let mut parsed: Vec<ParsedModel> = Vec::new();
+    let mut key_of: Vec<usize> = Vec::with_capacity(cfgs.len());
+    for cfg in cfgs {
+        cfg.validate()?;
+        let k = cfg.geometry_key();
+        let idx = match keys.iter().position(|s| *s == k) {
+            Some(i) => i,
+            None => {
+                keys.push(k);
+                parsed.push(parser::parse(cfg)?);
+                parsed.len() - 1
+            }
+        };
+        key_of.push(idx);
+    }
+
+    // Generate every lane's trace and group by skeleton. pp > 1 configs
+    // contribute one lane per stage view, exactly the traces the scalar
+    // path would replay.
+    let mut groups: Vec<Group> = Vec::new();
+    let mut n_stages: Vec<usize> = vec![1; cfgs.len()];
+    let mut events: Vec<Event> = Vec::new();
+    for (ci, cfg) in cfgs.iter().enumerate() {
+        let pm = &parsed[key_of[ci]];
+        if cfg.pp <= 1 {
+            trace::generate_into(pm, cfg, &mut events);
+            push_lane(&mut groups, &events, ci, 0)?;
+        } else {
+            let bounds = parser::pipeline::stage_bounds(pm, cfg.pp)?;
+            n_stages[ci] = bounds.len();
+            for (s, &b) in bounds.iter().enumerate() {
+                let view =
+                    parser::pipeline::stage_view(pm, b, parser::pipeline::in_flight(cfg.pp, s));
+                trace::generate_into(&view, cfg, &mut events);
+                push_lane(&mut groups, &events, ci, s)?;
+            }
+        }
+    }
+
+    // Work items: one per group. Grids usually collapse into a handful
+    // of groups (mbs/seq change the skeleton, dp/zero don't), so when
+    // more workers than groups are available, split the widest groups
+    // into lane ranges. Chunking trades some cross-lane sharing for
+    // parallelism; with one thread (the lane-speedup configuration)
+    // groups stay whole.
+    let mut items: Vec<(usize, usize, usize)> = groups
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| (gi, 0, g.columns.len()))
+        .collect();
+    if threads > 1 {
+        while items.len() < threads {
+            let widest = items
+                .iter()
+                .enumerate()
+                .filter(|(_, it)| it.2 - it.1 > 1)
+                .max_by_key(|(_, it)| it.2 - it.1)
+                .map(|(i, _)| i);
+            let Some(i) = widest else { break };
+            let (gi, lo, hi) = items[i];
+            let mid = lo + (hi - lo) / 2;
+            items[i] = (gi, lo, mid);
+            items.push((gi, mid, hi));
+        }
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<GroupReplay>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let workers = threads.min(items.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let (gi, lo, hi) = items[i];
+                let g = &groups[gi];
+                let table = interleave(&g.columns[lo..hi]);
+                *slots[i].lock().unwrap() = Some(replay_lanes(&g.skel, &table, hi - lo));
+            });
+        }
+    });
+
+    // Scatter lane replays back to (config, stage) and aggregate stats.
+    let mut stats = ColumnarStats {
+        configs: cfgs.len(),
+        groups: groups.len(),
+        ..ColumnarStats::default()
+    };
+    let mut per_cfg: Vec<Vec<Option<Replay>>> =
+        n_stages.iter().map(|&n| vec![None; n]).collect();
+    for (item, slot) in items.iter().zip(slots) {
+        let gr = slot.into_inner().unwrap().expect("worker pool visited every item");
+        let (gi, lo, _) = *item;
+        stats.lanes += gr.stats.n_lanes;
+        stats.final_classes += gr.stats.final_classes;
+        stats.forks += gr.stats.forks;
+        stats.engine_ops += gr.stats.engine_ops;
+        stats.scalar_ops += gr.stats.scalar_ops;
+        for (lane, replay) in gr.replays.into_iter().enumerate() {
+            let (ci, stage) = groups[gi].units[lo + lane];
+            per_cfg[ci][stage] = Some(replay);
+        }
+    }
+
+    // Fold per-stage replays to the binding-stage measurement with the
+    // scalar engine's exact rule: earliest strict maximum of peak_mib.
+    let out = cfgs
+        .iter()
+        .zip(per_cfg)
+        .map(|(cfg, stages)| {
+            let mut ms: Vec<Measurement> = stages
+                .into_iter()
+                .enumerate()
+                .map(|(s, r)| {
+                    let mut m =
+                        Measurement::from_replay(r.expect("every lane was replayed"), cfg);
+                    m.pp_stage = s;
+                    m
+                })
+                .collect();
+            let mut binding = 0;
+            for i in 1..ms.len() {
+                if ms[i].peak_mib > ms[binding].peak_mib {
+                    binding = i;
+                }
+            }
+            ms.swap_remove(binding)
+        })
+        .collect();
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ZeroStage;
+    use crate::sweep::Sweep;
+
+    fn grid() -> Vec<TrainConfig> {
+        let mut out = Vec::new();
+        for dp in [1u64, 2, 4, 8] {
+            for zero in [ZeroStage::Zero0, ZeroStage::Zero2] {
+                let mut cfg = TrainConfig {
+                    model: "llava-tiny".into(),
+                    mbs: 2,
+                    seq_len: 64,
+                    dp,
+                    ..TrainConfig::llava_finetune_default()
+                };
+                cfg.zero = zero;
+                out.push(cfg);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn columnar_matches_scalar_sweep_exactly() {
+        let cfgs = grid();
+        let scalar = Sweep::new(1).with_columnar(false).simulate_grid(&cfgs).unwrap();
+        for threads in [1usize, 4] {
+            let (cols, stats) = simulate_grid_with_stats(&cfgs, threads).unwrap();
+            assert_eq!(cols.len(), scalar.len());
+            for (i, (c, s)) in cols.iter().zip(&scalar).enumerate() {
+                assert_eq!(c, s, "point {i} diverged at {threads} threads");
+            }
+            assert!(stats.engine_ops <= stats.scalar_ops);
+            assert_eq!(stats.lanes, cfgs.len());
+        }
+    }
+
+    #[test]
+    fn shared_geometry_collapses_to_one_group() {
+        let (_, stats) = simulate_grid_with_stats(&grid(), 1).unwrap();
+        // dp/zero variants share mbs/seq but differ in startup structure
+        // (ZeRO buffers), so a few groups remain — far fewer than lanes.
+        assert!(stats.groups < stats.lanes, "{stats:?}");
+        // zero0 lanes are dp-invariant: dedupe must keep final classes
+        // strictly below the lane count.
+        assert!(stats.final_classes < stats.lanes, "{stats:?}");
+    }
+
+    #[test]
+    fn pp_grid_matches_scalar_binding_stage() {
+        let mut cfgs = grid();
+        for (i, cfg) in cfgs.iter_mut().enumerate() {
+            cfg.pp = if i % 2 == 0 { 2 } else { 1 };
+        }
+        let scalar = Sweep::new(2).with_columnar(false).simulate_grid(&cfgs).unwrap();
+        let cols = simulate_grid(&cfgs, 2).unwrap();
+        assert_eq!(cols.len(), scalar.len());
+        for (i, (c, s)) in cols.iter().zip(&scalar).enumerate() {
+            assert_eq!(c, s, "pp point {i} diverged");
+        }
+    }
+
+    #[test]
+    fn invalid_config_fails_like_scalar() {
+        let mut cfgs = grid();
+        cfgs[3].dp = 0;
+        assert!(simulate_grid(&cfgs, 2).is_err());
+        cfgs[3].dp = 1;
+        cfgs[0].model = "not-a-model".into();
+        assert!(simulate_grid(&cfgs, 2).is_err());
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let (ms, stats) = simulate_grid_with_stats(&[], 4).unwrap();
+        assert!(ms.is_empty());
+        assert_eq!(stats.groups, 0);
+    }
+}

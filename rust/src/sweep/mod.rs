@@ -15,6 +15,8 @@
 //! assert_eq!(measured.len(), 8);
 //! ```
 
+pub mod columnar;
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -29,9 +31,16 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Columnar engine default: on unless `REPRO_NO_COLUMNAR` is set (the
+/// env-level kill-switch; the CLI exposes `--no-columnar`).
+pub fn default_columnar() -> bool {
+    std::env::var_os("REPRO_NO_COLUMNAR").is_none()
+}
+
 /// A worker pool configured with a thread count.
 pub struct Sweep {
     threads: usize,
+    columnar: bool,
 }
 
 impl Default for Sweep {
@@ -42,11 +51,22 @@ impl Default for Sweep {
 
 impl Sweep {
     pub fn new(threads: usize) -> Self {
-        Sweep { threads: threads.max(1) }
+        Sweep { threads: threads.max(1), columnar: default_columnar() }
+    }
+
+    /// Enable/disable the columnar grid engine (A/B kill-switch; the
+    /// scalar per-point path is the ground-truth oracle).
+    pub fn with_columnar(mut self, columnar: bool) -> Self {
+        self.columnar = columnar;
+        self
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn columnar(&self) -> bool {
+        self.columnar
     }
 
     /// Run `f` over every point of the grid. `f` receives the worker's
@@ -136,9 +156,16 @@ impl Sweep {
     }
 
     /// Simulate every config of the grid (the "measured" side of the
-    /// paper's sweeps) in parallel.
+    /// paper's sweeps) in parallel. Routes through the columnar lane
+    /// engine ([`columnar::simulate_grid`]) unless disabled, in which
+    /// case each point replays independently through the scalar core;
+    /// both paths return identical measurements in input order.
     pub fn simulate_grid(&self, cfgs: &[TrainConfig]) -> Result<Vec<Measurement>> {
-        self.run(cfgs, |ctx, pm, cfg| ctx.simulate_parsed(pm, cfg))
+        if self.columnar {
+            columnar::simulate_grid(cfgs, self.threads)
+        } else {
+            self.run(cfgs, |ctx, pm, cfg| ctx.simulate_parsed(pm, cfg))
+        }
     }
 }
 

@@ -1,0 +1,358 @@
+//! Differential test battery for the columnar multi-variant replay
+//! engine: every lane of a columnar group replay must be
+//! bitwise-identical to the scalar `replay_with` oracle *and* to the
+//! naive `engine::reference` implementation — across fuzzed traces,
+//! every zoo preset, every checked-in `examples/archs/*.toml` spec,
+//! tp/pp per-rank stage views, and ZeRO stages 0-3. The incremental
+//! baseline-vs-probe replayer and the planner's columnar/scalar A/B
+//! (`--no-columnar` kill-switch) are proven equivalent the same way.
+
+use mmpredict::config::{TrainConfig, ZeroStage};
+use mmpredict::model::zoo;
+use mmpredict::parser;
+use mmpredict::planner::{self, Axes, Plan, PlanRequest};
+use mmpredict::simulator::columnar::{
+    divergence_event, interleave, replay_lanes, Incremental, Skeleton,
+};
+use mmpredict::simulator::{engine, trace, Event};
+use mmpredict::sweep::{columnar, Sweep};
+use mmpredict::util::Prng;
+
+/// Group the given traces by skeleton, replay each group through the
+/// columnar engine, and assert every lane matches both oracles exactly.
+/// Returns (groups, lanes) for sharing sanity checks.
+fn battery(traces: &[Vec<Event>], label: &str) -> (usize, usize) {
+    let mut groups: Vec<(Skeleton, Vec<Vec<u64>>, Vec<usize>)> = Vec::new();
+    for (i, t) in traces.iter().enumerate() {
+        let (skel, sizes) = Skeleton::extract(t).unwrap();
+        match groups.iter().position(|(s, _, _)| s.same_shape(&skel)) {
+            Some(gi) => {
+                groups[gi].1.push(sizes);
+                groups[gi].2.push(i);
+            }
+            None => groups.push((skel, vec![sizes], vec![i])),
+        }
+    }
+    for (skel, cols, idxs) in &groups {
+        let table = interleave(cols);
+        let group = replay_lanes(skel, &table, cols.len());
+        assert!(group.stats.engine_ops <= group.stats.scalar_ops, "{label}");
+        for (lane, &ti) in idxs.iter().enumerate() {
+            let scalar = engine::replay(&traces[ti]).unwrap();
+            let naive = engine::reference::replay(&traces[ti]).unwrap();
+            assert_eq!(scalar, naive, "{label}: trace {ti}: scalar vs reference");
+            assert_eq!(
+                group.replays[lane], scalar,
+                "{label}: trace {ti}: columnar lane vs scalar oracle"
+            );
+            for &t in &trace::ALL_TAGS {
+                assert_eq!(
+                    group.replays[lane].at_peak.get(t),
+                    scalar.at_peak.get(t),
+                    "{label}: trace {ti} tag {t:?}"
+                );
+            }
+        }
+    }
+    (groups.len(), traces.len())
+}
+
+/// Random trace *family*: one structure, `n_lanes` size columns. Some
+/// alloc sizes are shared by every lane (prefix sharing), some vary per
+/// lane (divergence points), and the last lane duplicates lane 0
+/// (dedupe).
+fn arb_lane_traces(r: &mut Prng, n_lanes: usize) -> Vec<Vec<Event>> {
+    const PHASES: [&str; 4] = ["startup", "forward", "backward", "step"];
+    fn draw_size(r: &mut Prng) -> u64 {
+        match r.range(0, 2) {
+            0 => r.range(0, 4096) as u64, // includes 0-byte allocs
+            1 => r.range(4096, 1 << 20) as u64,
+            _ => r.range(1 << 20, 48 << 20) as u64,
+        }
+    }
+    let n_ops = r.range(40, 300);
+    let mut traces = vec![Vec::new(); n_lanes - 1];
+    let mut live: Vec<u64> = Vec::new();
+    let mut next_id = 0u64;
+    for _ in 0..n_ops {
+        let roll = r.f64();
+        if roll < 0.08 {
+            let name = *r.pick(&PHASES);
+            for t in &mut traces {
+                t.push(Event::Phase { name });
+            }
+        } else if roll < 0.60 || live.is_empty() {
+            let tag = *r.pick(&trace::ALL_TAGS);
+            // shared size (class stays merged) or per-lane divergence
+            let shared = r.chance(0.55).then(|| draw_size(r));
+            for t in &mut traces {
+                let bytes = shared.unwrap_or_else(|| draw_size(r));
+                t.push(Event::Alloc { id: next_id, bytes, tag });
+            }
+            live.push(next_id);
+            next_id += 1;
+        } else {
+            let idx = r.range(0, live.len() - 1);
+            let id = live.swap_remove(idx);
+            for t in &mut traces {
+                t.push(Event::Free { id });
+            }
+        }
+    }
+    while !live.is_empty() && r.chance(0.7) {
+        let idx = r.range(0, live.len() - 1);
+        let id = live.swap_remove(idx);
+        for t in &mut traces {
+            t.push(Event::Free { id });
+        }
+    }
+    traces.push(traces[0].clone());
+    traces
+}
+
+fn tiny(model: &str) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        mbs: 2,
+        seq_len: 64,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+#[test]
+fn fuzzed_lane_groups_match_both_oracles() {
+    let mut r = Prng::new(0xC01_5EED);
+    for case in 0..25 {
+        let n_lanes = r.range(2, 9);
+        let traces = arb_lane_traces(&mut r, n_lanes);
+        let (groups, lanes) = battery(&traces, &format!("fuzz case {case}"));
+        // every lane shares the structure: exactly one group
+        assert_eq!(groups, 1, "fuzz case {case}");
+        assert_eq!(lanes, n_lanes, "fuzz case {case}");
+    }
+}
+
+#[test]
+fn zoo_presets_zero0_to_3_match_both_oracles() {
+    for name in zoo::names() {
+        let mut traces = Vec::new();
+        let base = TrainConfig { mbs: 1, seq_len: 256, ..tiny(name) };
+        let pm = parser::parse(&base).unwrap();
+        for dp in [1u64, 4] {
+            for zero in [ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+                let cfg = TrainConfig { dp, zero, ..base.clone() };
+                traces.push(trace::generate(&pm, &cfg));
+            }
+        }
+        let (groups, lanes) = battery(&traces, name);
+        // dp/zero only change sizes within a fixed structure family, so
+        // the 8 variants collapse into a handful of skeleton groups
+        assert!(groups < lanes, "{name}: {groups} groups for {lanes} lanes");
+    }
+}
+
+#[test]
+fn arch_toml_specs_match_both_oracles() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/archs");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .expect("examples/archs directory")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 3, "expected >=3 checked-in specs");
+    for path in paths {
+        let base = TrainConfig {
+            seq_len: 4096,
+            mbs: 2,
+            ..tiny(path.to_str().unwrap())
+        };
+        let pm = parser::parse(&base).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let mut traces = Vec::new();
+        for dp in [1u64, 8] {
+            for zero in [ZeroStage::Zero0, ZeroStage::Zero2, ZeroStage::Zero3] {
+                let cfg = TrainConfig { dp, zero, ..base.clone() };
+                traces.push(trace::generate(&pm, &cfg));
+            }
+        }
+        battery(&traces, path.to_str().unwrap());
+    }
+}
+
+#[test]
+fn tp_pp_stage_view_lanes_match_both_oracles() {
+    // per-rank stage views: each pipeline stage's trace is its own lane
+    let mut traces = Vec::new();
+    for tp in [1u64, 2] {
+        for pp in [1u64, 2, 4] {
+            let cfg = TrainConfig { tp, pp, ..tiny("llava-tiny") };
+            let pm = parser::parse(&cfg).unwrap();
+            if pp <= 1 {
+                traces.push(trace::generate(&pm, &cfg));
+                continue;
+            }
+            for (s, &b) in parser::pipeline::stage_bounds(&pm, pp).unwrap().iter().enumerate() {
+                let view = parser::pipeline::stage_view(&pm, b, parser::pipeline::in_flight(pp, s));
+                traces.push(trace::generate(&view, &cfg));
+            }
+        }
+    }
+    battery(&traces, "tp/pp stage views");
+}
+
+#[test]
+fn columnar_sweep_matches_scalar_sweep_on_parallelism_grid() {
+    // Measurement-level equivalence across tp/pp/zero, including the
+    // binding-stage fold for pp > 1.
+    let mut cfgs = Vec::new();
+    for tp in [1u64, 2] {
+        for pp in [1u64, 2] {
+            for zero in [ZeroStage::Zero0, ZeroStage::Zero2] {
+                cfgs.push(TrainConfig { tp, pp, zero, dp: 2, ..tiny("llava-tiny") });
+            }
+        }
+    }
+    let scalar = Sweep::new(2).with_columnar(false).simulate_grid(&cfgs).unwrap();
+    for threads in [1usize, 4] {
+        let cols = columnar::simulate_grid(&cfgs, threads).unwrap();
+        for (i, (c, s)) in cols.iter().zip(&scalar).enumerate() {
+            assert_eq!(c, s, "grid point {i} at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn incremental_random_config_pairs_match_from_scratch() {
+    let mut r = Prng::new(0xD1FF);
+    let base_pool: [(u64, ZeroStage); 4] = [
+        (2, ZeroStage::Zero2),
+        (8, ZeroStage::Zero2),
+        (4, ZeroStage::Zero3),
+        (2, ZeroStage::Zero0),
+    ];
+    for case in 0..30 {
+        let (dp_a, zero_a) = *r.pick(&base_pool);
+        let (dp_b, zero_b) = *r.pick(&base_pool);
+        let mut a = tiny(*r.pick(&["llava-tiny", "llama-tiny"]));
+        a.mbs = r.range(1, 8) as u64;
+        a.dp = dp_a;
+        a.zero = zero_a;
+        let mut b = a.clone();
+        b.dp = dp_b;
+        b.zero = zero_b;
+        if r.chance(0.4) {
+            b.mbs = r.range(1, 8) as u64;
+        }
+        let ta = trace::generate(&parser::parse(&a).unwrap(), &a);
+        let tb = trace::generate(&parser::parse(&b).unwrap(), &b);
+        let inc = Incremental::new(&ta, r.range(5, 64)).unwrap();
+        assert_eq!(*inc.base(), engine::replay(&ta).unwrap(), "case {case}: baseline");
+
+        let (skel_a, _) = Skeleton::extract(&ta).unwrap();
+        let (skel_b, _) = Skeleton::extract(&tb).unwrap();
+        if !skel_a.same_shape(&skel_b) {
+            // structural divergence must be an error, not a wrong answer
+            assert!(inc.replay(&tb).is_err(), "case {case}");
+            continue;
+        }
+        let (replay, div) = inc.replay(&tb).unwrap();
+        assert_eq!(replay, engine::replay(&tb).unwrap(), "case {case}: probe replay");
+        // divergence point == first differing event, by brute force
+        let want = ta.iter().zip(&tb).position(|(x, y)| x != y);
+        assert_eq!(div, want, "case {case}: divergence index");
+    }
+}
+
+#[test]
+fn incremental_degenerate_cases() {
+    let cfg = tiny("llava-tiny");
+    let t = trace::generate(&parser::parse(&cfg).unwrap(), &cfg);
+    let inc = Incremental::new(&t, 16).unwrap();
+
+    // identical probe: cached result, no divergence
+    let (replay, div) = inc.replay(&t).unwrap();
+    assert_eq!(div, None);
+    assert_eq!(replay, *inc.base());
+
+    // everything differs: divergence at the very first alloc event
+    let scaled: Vec<Event> = t
+        .iter()
+        .map(|ev| match *ev {
+            Event::Alloc { id, bytes, tag } => Event::Alloc { id, bytes: bytes * 2 + 512, tag },
+            other => other,
+        })
+        .collect();
+    let (replay, div) = inc.replay(&scaled).unwrap();
+    assert_eq!(replay, engine::replay(&scaled).unwrap());
+    let first_alloc = t.iter().position(|e| matches!(e, Event::Alloc { .. }));
+    assert_eq!(div, first_alloc);
+    let (skel, sa) = Skeleton::extract(&t).unwrap();
+    let (_, sb) = Skeleton::extract(&scaled).unwrap();
+    assert_eq!(divergence_event(&skel, &sa, &sb), first_alloc);
+}
+
+fn frontier_fingerprint(plan: &Plan) -> Vec<(String, u64, f64, f64, f64, bool, bool, usize)> {
+    plan.candidates
+        .iter()
+        .map(|c| {
+            (
+                c.cfg.cache_key(),
+                c.cfg.mbs,
+                c.predicted_mib,
+                c.simulated_mib,
+                c.headroom_mib,
+                c.frontier_open,
+                c.dominated,
+                c.binding_stage,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn planner_frontier_identical_columnar_on_vs_off() {
+    let base = TrainConfig { model: "llava-1.5-7b".into(), ..TrainConfig::llava_finetune_default() };
+    let req = PlanRequest {
+        base: base.clone(),
+        budget_mib: 80.0 * 1024.0,
+        axes: Axes {
+            mbs: vec![1, 2, 4, 8],
+            seq_len: vec![2048],
+            dp: vec![4, 8],
+            zero: vec![ZeroStage::Zero2, ZeroStage::Zero3],
+            ..Axes::fixed(&base)
+        },
+    };
+    let on = planner::plan_with(&req, &Sweep::new(2).with_columnar(true)).unwrap();
+    let off = planner::plan_with(&req, &Sweep::new(2).with_columnar(false)).unwrap();
+    assert!(!on.candidates.is_empty(), "7b grid should have a frontier under 80 GiB");
+    assert_eq!(
+        frontier_fingerprint(&on),
+        frontier_fingerprint(&off),
+        "frontier must be config-for-config identical with columnar on vs off"
+    );
+    // identical measurements -> identical bisection path and escalations
+    assert_eq!(on.stats.sim_points, off.stats.sim_points);
+    assert_eq!(on.stats.branches, off.stats.branches);
+    for (a, b) in on.candidates.iter().zip(&off.candidates) {
+        match (&a.escalation, &b.escalation) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.mbs, y.mbs);
+                assert_eq!(x.simulated_mib, y.simulated_mib);
+            }
+            _ => panic!("escalation mismatch for {}", a.cfg.cache_key()),
+        }
+    }
+}
+
+#[test]
+fn env_kill_switch_controls_default_engine() {
+    // Sweep::new derives its default from REPRO_NO_COLUMNAR; the
+    // builder always wins. (No env mutation here — tests run threaded.)
+    let engine = Sweep::new(1);
+    assert_eq!(engine.columnar(), mmpredict::sweep::default_columnar());
+    assert!(!Sweep::new(1).with_columnar(false).columnar());
+    assert!(Sweep::new(1).with_columnar(true).columnar());
+}
