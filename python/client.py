@@ -21,6 +21,11 @@ Demo (predict + plan round-trip against a running server):
     repro serve --port 7411 &
     python3 python/client.py --port 7411 --demo
 
+Open-loop load generation (requests sent on a fixed arrival schedule,
+queueing delay charged to latency; per-method p50/p95/p99 at the end):
+
+    python3 python/client.py --port 7411 --rate 200 --duration 5
+
 Only the standard library is used.
 """
 
@@ -31,6 +36,7 @@ import itertools
 import json
 import socket
 import sys
+import threading
 import time
 
 WIRE_VERSION = 1
@@ -203,12 +209,139 @@ def _demo(host: str, port: int) -> int:
     return 0
 
 
+def _percentile(sorted_vals: list[float], p: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = round((len(sorted_vals) - 1) * p)
+    return sorted_vals[min(idx, len(sorted_vals) - 1)]
+
+
+def _load_mix(i: int) -> tuple[str, dict | None]:
+    """The pinned mixed-method cycle: predict-heavy, with the cheap
+    snapshots and two slow-tier probes riding along (mirrors the Rust
+    `serve_load` bench so numbers are comparable)."""
+    pool = [
+        {"model": "llava-tiny", "mbs": 1, "seq_len": 32},
+        {"model": "llava-tiny", "mbs": 2, "seq_len": 32},
+        {"model": "llava-tiny", "mbs": 1, "seq_len": 64},
+        {"model": "llava-tiny", "mbs": 2, "seq_len": 64},
+    ]
+    cfg = pool[i % len(pool)]
+    slot = i % 16
+    if slot == 10:
+        return "models", None
+    if slot == 11:
+        return "metrics", None
+    if slot in (12, 13):
+        return "health", None
+    if slot == 14:
+        return "simulate", {"config": cfg}
+    if slot == 15:
+        return "modality", {"config": cfg}
+    return "predict", {"config": cfg}
+
+
+def _loadgen(host: str, port: int, rate: float, duration: float) -> int:
+    """Open-loop generator over one pipelined connection.
+
+    Requests go out on the fixed `rate` schedule whether or not earlier
+    responses have arrived — like an overloaded caller — so queueing
+    delay shows up in the reported latency. The server answers each
+    connection in request order, so the reader matches responses to
+    requests positionally.
+    """
+    n = max(1, int(rate * duration))
+    sock = socket.create_connection((host, port), timeout=60.0)
+    rfile = sock.makefile("r", encoding="utf-8", newline="\n")
+    wfile = sock.makefile("w", encoding="utf-8", newline="\n")
+
+    recv_times: list[float] = []
+    errors: list[str] = []
+
+    def reader() -> None:
+        for _ in range(n):
+            line = rfile.readline()
+            if not line:
+                raise ProtocolError("server closed the connection mid-run")
+            resp = json.loads(line)
+            recv_times.append(time.monotonic())
+            if "error" in resp:
+                errors.append(resp["error"].get("code", "internal"))
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+
+    methods: list[str] = []
+    arrivals: list[float] = []
+    period = 1.0 / rate
+    t0 = time.monotonic()
+    for i in range(n):
+        due = t0 + i * period
+        now = time.monotonic()
+        if now < due:
+            time.sleep(due - now)
+        method, params = _load_mix(i)
+        req: dict = {"v": WIRE_VERSION, "id": f"load-{i}", "method": method}
+        if params is not None:
+            req["params"] = params
+        wfile.write(json.dumps(req) + "\n")
+        wfile.flush()
+        methods.append(method)
+        arrivals.append(due)  # open loop: latency counts from the schedule
+    t.join(timeout=60.0)
+    if t.is_alive():
+        print("FAIL: reader did not drain all responses within 60s", file=sys.stderr)
+        return 1
+    if len(recv_times) < n:
+        print(
+            f"FAIL: connection lost after {len(recv_times)}/{n} responses",
+            file=sys.stderr,
+        )
+        return 1
+
+    wall = max(recv_times[-1] - t0, 1e-9)
+    per_method: dict[str, list[float]] = {}
+    for method, sent, recv in zip(methods, arrivals, recv_times):
+        per_method.setdefault(method, []).append(max(recv - sent, 0.0) * 1e3)
+    print(
+        f"open-loop: offered {rate:.0f} rps for {duration:.1f}s -> "
+        f"{n} requests, achieved {n / wall:.1f} rps, {len(errors)} errors"
+    )
+    print(f"{'method':<10} {'count':>6} {'p50 ms':>9} {'p95 ms':>9} {'p99 ms':>9}")
+    for method in sorted(per_method):
+        lats = sorted(per_method[method])
+        print(
+            f"{method:<10} {len(lats):>6} "
+            f"{_percentile(lats, 0.50):>9.2f} "
+            f"{_percentile(lats, 0.95):>9.2f} "
+            f"{_percentile(lats, 0.99):>9.2f}"
+        )
+    if errors:
+        counts: dict[str, int] = {}
+        for code in errors:
+            counts[code] = counts.get(code, 0) + 1
+        print(f"errors: {counts}")
+    sock.close()
+    return 1 if errors else 0
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=7411)
     ap.add_argument("--demo", action="store_true", help="run the predict+plan round-trip demo")
+    ap.add_argument("--rate", type=float, help="open-loop load: offered arrival rate (req/s)")
+    ap.add_argument(
+        "--duration",
+        type=float,
+        default=5.0,
+        help="open-loop load: seconds of traffic to offer (default 5)",
+    )
     args = ap.parse_args()
     if args.demo:
         sys.exit(_demo(args.host, args.port))
+    if args.rate:
+        if args.rate <= 0 or args.duration <= 0:
+            ap.error("--rate and --duration must be positive")
+        sys.exit(_loadgen(args.host, args.port, args.rate, args.duration))
     ap.print_help()

@@ -267,6 +267,21 @@ fn columnar_bench(base: &TrainConfig) {
         stats.scalar_ops
     );
 
+    // Op throughput (PR 8): allocator operations retired per wall
+    // second. `engine_ops_per_sec` is what the columnar engine actually
+    // executes; `effective_ops_per_sec` credits it with the scalar ops
+    // lane sharing made redundant — the figure the chunked live-byte
+    // update loops move.
+    let scalar_ops_per_sec = stats.scalar_ops as f64 / scalar.mean.as_secs_f64().max(1e-12);
+    let engine_ops_per_sec = stats.engine_ops as f64 / col.mean.as_secs_f64().max(1e-12);
+    let effective_ops_per_sec = stats.scalar_ops as f64 / col.mean.as_secs_f64().max(1e-12);
+    println!(
+        "throughput: scalar {:.2}M ops/s; columnar {:.2}M engine ops/s ({:.2}M effective ops/s)",
+        scalar_ops_per_sec / 1e6,
+        engine_ops_per_sec / 1e6,
+        effective_ops_per_sec / 1e6
+    );
+
     // Planner A/B: the frontier must be engine-independent.
     let req = PlanRequest {
         base: base.clone(),
@@ -314,6 +329,9 @@ fn columnar_bench(base: &TrainConfig) {
         ),
         ("scalar_sec", Json::Num(scalar.mean.as_secs_f64())),
         ("columnar_sec", Json::Num(col.mean.as_secs_f64())),
+        ("scalar_ops_per_sec", Json::Num(scalar_ops_per_sec)),
+        ("engine_ops_per_sec", Json::Num(engine_ops_per_sec)),
+        ("effective_ops_per_sec", Json::Num(effective_ops_per_sec)),
         ("lane_speedup", Json::Num(lane_speedup)),
         ("speedup_floor", Json::Num(3.0)),
         ("frontier_size", Json::Num(on.candidates.len() as f64)),

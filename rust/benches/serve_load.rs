@@ -1,0 +1,358 @@
+//! Serving load harness (PR 8): open-loop mixed-method streams over
+//! loopback TCP against the full `repro serve` stack — NDJSON framing,
+//! two-tier admission, geometry-keyed response cache, batched worker.
+//!
+//! Three measurements, one artifact (`BENCH_serve.json`):
+//!
+//! 1. **Cache speedup** — repeat-geometry predicts (warm, payload-cache
+//!    hits) vs distinct-geometry predicts (cold, full
+//!    parse+encode+factor) through the in-process service client. CI
+//!    gates the `>= 5x` floor.
+//! 2. **Open-loop latency** — a pinned single-connection mixed-method
+//!    stream (predict-heavy, with models/metrics/health snapshots and
+//!    simulate/modality probes) at stepped arrival rates. Requests are
+//!    sent on a fixed schedule regardless of responses, so queueing
+//!    delay is charged to latency like a real overloaded client would
+//!    see it. Per-method p50/p95/p99 come from the highest sustained
+//!    step.
+//! 3. **Max sustained RPS** — the highest stepped rate the server
+//!    absorbs with zero errors while achieving >= 90% of the offered
+//!    rate. CI gates the floor (conservative: shared runners).
+//!
+//! The artifact is written and printed BEFORE any floor asserts so a
+//! CI failure still uploads the numbers for post-mortem.
+//!
+//! Run: `cargo bench --bench serve_load`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use mmpredict::api::serve::{self, ServeOptions};
+use mmpredict::api::{
+    ApiRequest, ApiResponse, Method, ModalityParams, PredictParams, SimulateParams, METHOD_NAMES,
+};
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::batcher::BatchPolicy;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::util::json_mini::{obj, Json};
+
+/// CI floors (gated at the end, after the artifact exists).
+const RPS_FLOOR: f64 = 500.0;
+const SPEEDUP_FLOOR: f64 = 5.0;
+
+/// Offered arrival rates for the open-loop steps (requests/second).
+const RATES: [f64; 4] = [250.0, 500.0, 1000.0, 2000.0];
+
+/// A step sustains its rate when it achieves this fraction of it.
+const SUSTAIN_FRACTION: f64 = 0.90;
+
+fn tiny(mbs: u64, seq_len: u64) -> TrainConfig {
+    TrainConfig {
+        model: "llava-tiny".into(),
+        mbs,
+        seq_len,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+fn predict_req(id: String, cfg: TrainConfig) -> ApiRequest {
+    ApiRequest::new(
+        id,
+        Method::Predict(PredictParams { cfg, capacity_mib: None, detail: false }),
+    )
+}
+
+/// The pinned mixed-method cycle: predict-heavy (the hot path), with
+/// the fast snapshots and two slow-tier probes riding along. Configs
+/// draw from a small pool so repeats exercise the payload cache the
+/// way a scheduler polling a few geometries does.
+fn mixed_line(i: usize, pool: &[TrainConfig]) -> (usize, String) {
+    let id = format!("q{i}");
+    let cfg = pool[i % pool.len()].clone();
+    let req = match i % 16 {
+        10 => ApiRequest::new(id, Method::Models),
+        11 => ApiRequest::new(id, Method::Metrics),
+        12 | 13 => ApiRequest::new(id, Method::Health),
+        14 => ApiRequest::new(id, Method::Simulate(SimulateParams { cfg })),
+        15 => ApiRequest::new(id, Method::Modality(ModalityParams { cfg })),
+        _ => predict_req(id, cfg),
+    };
+    (req.method.index(), req.to_json().to_string())
+}
+
+/// One open-loop step's outcome.
+struct StepResult {
+    achieved_rps: f64,
+    errors: usize,
+    /// (method index, intended-arrival → response latency)
+    latencies: Vec<(usize, Duration)>,
+}
+
+/// Drive `lines` at `rate` over one connection. The writer follows the
+/// arrival schedule; a reader thread timestamps each in-order response.
+/// Latency is measured from the *intended* arrival, so schedule slip
+/// and queueing both count against the server.
+fn run_open_loop(addr: std::net::SocketAddr, lines: &[(usize, String)], rate: f64) -> StepResult {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let n = lines.len();
+    let read_half = stream.try_clone().unwrap();
+    let reader = std::thread::spawn(move || {
+        let mut r = BufReader::new(read_half);
+        let mut out: Vec<(Instant, bool)> = Vec::with_capacity(n);
+        let mut buf = String::new();
+        for _ in 0..n {
+            buf.clear();
+            match r.read_line(&mut buf) {
+                Ok(k) if k > 0 && buf.ends_with('\n') => {
+                    let resp =
+                        ApiResponse::parse_line(buf.trim()).expect("well-formed v1 response");
+                    out.push((Instant::now(), resp.result.is_ok()));
+                }
+                other => panic!("connection failed mid-step: {other:?}"),
+            }
+        }
+        out
+    });
+
+    let mut w = stream;
+    let period = Duration::from_secs_f64(1.0 / rate);
+    let t0 = Instant::now();
+    let mut arrivals: Vec<Instant> = Vec::with_capacity(n);
+    for (i, (_, line)) in lines.iter().enumerate() {
+        let due = t0 + period * i as u32;
+        while Instant::now() < due {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        arrivals.push(due); // open loop: charge from the schedule
+        writeln!(w, "{line}").expect("write request");
+    }
+    w.flush().expect("flush");
+
+    let responses = reader.join().expect("reader thread");
+    let done = responses.last().map(|(t, _)| *t).unwrap_or(t0);
+    let errors = responses.iter().filter(|(_, ok)| !ok).count();
+    let latencies = lines
+        .iter()
+        .zip(arrivals.iter().zip(&responses))
+        .map(|((mi, _), (sent, (recv, _)))| (*mi, recv.saturating_duration_since(*sent)))
+        .collect();
+    StepResult {
+        achieved_rps: n as f64 / done.saturating_duration_since(t0).as_secs_f64().max(1e-9),
+        errors,
+        latencies,
+    }
+}
+
+fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let svc = PredictionService::start_analytical(ServiceConfig {
+        policy: BatchPolicy { max_batch: 16, batch_timeout: Duration::ZERO },
+        ..Default::default()
+    });
+    let in_proc = svc.client();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = serve::serve(
+        listener,
+        svc,
+        &ServeOptions { conn_threads: 2, ..Default::default() },
+    )
+    .expect("serve");
+    let addr = server.addr();
+    println!("serving on {addr} (analytical backend, batch_timeout 0)\n");
+
+    // --- 1. cache speedup: cold (distinct geometry) vs warm (repeats) ---
+    // In-process round-trips so the ratio isolates the serving hot path
+    // (queue + dispatch + predict-or-hit) from socket noise. 13B keeps
+    // the cold side honest: a real parse+encode+factor per request.
+    let cold_base = TrainConfig::llava_finetune_default();
+    let iters = 64usize;
+    let t = Instant::now();
+    for i in 0..iters {
+        let cfg = TrainConfig {
+            model: "llava-1.5-13b".into(),
+            seq_len: 512 + 8 * i as u64, // new geometry every probe
+            ..cold_base.clone()
+        };
+        in_proc
+            .submit(predict_req(format!("c{i}"), cfg))
+            .result
+            .expect("cold predict");
+    }
+    let cold_us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let warm_cfg = TrainConfig { model: "llava-1.5-13b".into(), ..cold_base.clone() };
+    in_proc
+        .submit(predict_req("w-prime".into(), warm_cfg.clone()))
+        .result
+        .expect("warm prime");
+    let t = Instant::now();
+    for i in 0..iters {
+        in_proc
+            .submit(predict_req(format!("w{i}"), warm_cfg.clone()))
+            .result
+            .expect("warm predict");
+    }
+    let warm_us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let cache_speedup = cold_us / warm_us.max(1e-9);
+    println!(
+        "predict latency: cold {cold_us:.1}us (distinct geometry), warm {warm_us:.1}us (cache hit) -> {cache_speedup:.1}x"
+    );
+    drop(in_proc);
+
+    // --- 2 + 3. stepped open-loop mixed streams over TCP ---
+    let pool = vec![tiny(1, 32), tiny(2, 32), tiny(1, 64), tiny(2, 64)];
+    // Warm every (method, config) the mix will issue so the steps
+    // measure steady state, not first-touch parses.
+    {
+        let warmup: Vec<(usize, String)> = (0..32).map(|i| mixed_line(i, &pool)).collect();
+        run_open_loop(addr, &warmup, 1000.0);
+    }
+
+    let mut steps: Vec<StepResult> = Vec::new();
+    let mut best: Option<usize> = None;
+    for &rate in &RATES {
+        // ~1 second of traffic per step, at least one full mix cycle.
+        let n = (rate as usize).max(64);
+        let lines: Vec<(usize, String)> = (0..n).map(|i| mixed_line(i, &pool)).collect();
+        let step = run_open_loop(addr, &lines, rate);
+        let sustained = step.errors == 0 && step.achieved_rps >= SUSTAIN_FRACTION * rate;
+        println!(
+            "rate {:>6.0} rps: achieved {:>7.1} rps, {} errors{}",
+            rate,
+            step.achieved_rps,
+            step.errors,
+            if sustained { "" } else { "  (not sustained)" }
+        );
+        if sustained {
+            best = Some(steps.len());
+        }
+        steps.push(step);
+    }
+    let best = best.expect("no step sustained its offered rate");
+    let max_sustained_rps = steps[best].achieved_rps;
+
+    // Per-method latency table from the highest sustained step.
+    let mut per_method: Vec<Vec<u64>> = vec![Vec::new(); METHOD_NAMES.len()];
+    for (mi, lat) in &steps[best].latencies {
+        per_method[*mi].push(lat.as_micros() as u64);
+    }
+    let mut method_rows: Vec<(&str, Json)> = Vec::new();
+    println!("\nper-method latency at {max_sustained_rps:.0} rps (open-loop, us):");
+    for (mi, lats) in per_method.iter_mut().enumerate() {
+        if lats.is_empty() {
+            continue;
+        }
+        lats.sort_unstable();
+        let (p50, p95, p99) = (
+            percentile_us(lats, 0.50),
+            percentile_us(lats, 0.95),
+            percentile_us(lats, 0.99),
+        );
+        println!(
+            "  {:<10} n={:<5} p50={:<7} p95={:<7} p99={}",
+            METHOD_NAMES[mi],
+            lats.len(),
+            p50,
+            p95,
+            p99
+        );
+        method_rows.push((
+            METHOD_NAMES[mi],
+            obj(vec![
+                ("count", Json::Num(lats.len() as f64)),
+                ("p50_us", Json::Num(p50 as f64)),
+                ("p95_us", Json::Num(p95 as f64)),
+                ("p99_us", Json::Num(p99 as f64)),
+            ]),
+        ));
+    }
+
+    // Cache hit rates straight off the wire metrics method.
+    let (response_hits, response_misses) = {
+        let mut c = BufReader::new(TcpStream::connect(addr).expect("connect"));
+        writeln!(
+            c.get_mut(),
+            "{}",
+            ApiRequest::new("m", Method::Metrics).to_json()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        c.read_line(&mut buf).expect("metrics response");
+        let payload = ApiResponse::parse_line(buf.trim())
+            .expect("well-formed response")
+            .result
+            .expect("metrics ok");
+        let cache = payload.get("cache").expect("cache block in metrics");
+        let num = |k: &str| match cache.get(k) {
+            Some(Json::Num(n)) => *n,
+            other => panic!("metrics cache.{k} missing: {other:?}"),
+        };
+        (num("response_hits"), num("response_misses"))
+    };
+    let hit_rate = response_hits / (response_hits + response_misses).max(1.0);
+    println!(
+        "\nresponse cache: {response_hits:.0} hits / {response_misses:.0} misses ({:.1}% hit rate)",
+        hit_rate * 100.0
+    );
+
+    let json = obj(vec![
+        (
+            "workload",
+            Json::Str(
+                "open-loop mixed-method NDJSON over loopback TCP, 1 connection, analytical backend"
+                    .to_string(),
+            ),
+        ),
+        (
+            "rates_offered",
+            Json::Arr(RATES.iter().map(|r| Json::Num(*r)).collect()),
+        ),
+        (
+            "rates_achieved",
+            Json::Arr(steps.iter().map(|s| Json::Num(s.achieved_rps)).collect()),
+        ),
+        ("max_sustained_rps", Json::Num(max_sustained_rps)),
+        ("rps_floor", Json::Num(RPS_FLOOR)),
+        ("methods", obj(method_rows)),
+        (
+            "cache",
+            obj(vec![
+                ("response_hits", Json::Num(response_hits)),
+                ("response_misses", Json::Num(response_misses)),
+                ("hit_rate", Json::Num(hit_rate)),
+            ]),
+        ),
+        ("cold_predict_us", Json::Num(cold_us)),
+        ("warm_predict_us", Json::Num(warm_us)),
+        ("cache_speedup", Json::Num(cache_speedup)),
+        ("speedup_floor", Json::Num(SPEEDUP_FLOOR)),
+    ]);
+    // cargo bench runs with cwd = package root (rust/); anchor the
+    // artifact at the workspace root like the other benches
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_serve.json");
+    println!("wrote {out}");
+
+    server.shutdown();
+
+    // Floors last, after the artifact exists for post-mortems.
+    assert!(
+        max_sustained_rps >= RPS_FLOOR,
+        "max sustained rate {max_sustained_rps:.0} rps fell below the {RPS_FLOOR:.0} rps floor"
+    );
+    assert!(
+        cache_speedup >= SPEEDUP_FLOOR,
+        "warm/cold predict speedup {cache_speedup:.2}x fell below the {SPEEDUP_FLOOR:.1}x floor"
+    );
+}

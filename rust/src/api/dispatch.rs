@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::coordinator::Metrics;
+use crate::coordinator::memo::SIM_CHECKPOINT_STRIDE;
+use crate::coordinator::{Metrics, ResponseCache};
 use crate::model::layer::AttnImpl;
 use crate::model::zoo;
 use crate::parser::{self, features::EncodedRequest, ParsedModel};
@@ -293,6 +294,7 @@ pub(crate) fn predict_payload(
     p: &Prediction,
     rank: Option<&RankPrediction>,
     params: &PredictParams,
+    cache: Option<&ResponseCache>,
 ) -> Result<Json, ApiError> {
     let mut entries = vec![("prediction", codec::prediction_to_json(p))];
     let cfg = &params.cfg;
@@ -323,7 +325,7 @@ pub(crate) fn predict_payload(
         entries.push(("fits", Json::Bool(p.fits(cap as f32))));
     }
     if params.detail {
-        let pm = parser::parse(&params.cfg).map_err(classify)?;
+        let pm = parsed_via(cache, &params.cfg)?;
         entries.push(("model", model_summary_json(&pm)));
         entries.push((
             "modality",
@@ -331,6 +333,26 @@ pub(crate) fn predict_payload(
         ));
     }
     Ok(obj(entries))
+}
+
+/// The request-level knobs outside the config that change a `predict`
+/// payload — the response-cache `variant` component for predict keys.
+pub(crate) fn predict_variant(p: &PredictParams) -> String {
+    format!("cap={:?};detail={}", p.capacity_mib, p.detail)
+}
+
+/// Parse through the shared geometry-keyed parse cache when one is
+/// attached (the serving path), or directly (the CLI / in-process
+/// path). Both return the same `ParsedModel` — the cache is keyed by
+/// [`TrainConfig::geometry_key`], of which a parse is a pure function.
+fn parsed_via(
+    cache: Option<&ResponseCache>,
+    cfg: &TrainConfig,
+) -> Result<Arc<ParsedModel>, ApiError> {
+    match cache {
+        Some(c) => c.parsed(cfg).map_err(classify),
+        None => Ok(Arc::new(parser::parse(cfg).map_err(classify)?)),
+    }
 }
 
 /// Stamp a payload as degraded (additive v1 response fields; decode
@@ -471,6 +493,51 @@ pub(crate) fn simulate_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
     Ok(obj(vec![("measurement", codec::measurement_to_json(&m))]))
 }
 
+/// `simulate` through the per-geometry [`Incremental`] engine: the
+/// first probe of a geometry builds a checkpointed baseline replay;
+/// later probes sharing the geometry (what-if variations of dp / ZeRO /
+/// bucket / overheads — everything `geometry_key` excludes) re-replay
+/// only from their first divergent event. The `Replay` an `Incremental`
+/// produces is bitwise-identical to the scalar engine's (PR 7's
+/// differential battery proves it), so this path emits exactly
+/// [`simulate_payload`]'s document. Callers gate on `pp == 1` (pipeline
+/// simulate composes per-stage views, one trace per stage) and on the
+/// columnar kill-switch — `--no-columnar` falls back to the scalar
+/// oracle.
+///
+/// [`Incremental`]: crate::simulator::columnar::Incremental
+pub(crate) fn simulate_payload_incremental(
+    cfg: &TrainConfig,
+    cache: &ResponseCache,
+) -> Result<Json, ApiError> {
+    let pm = cache.parsed(cfg).map_err(classify)?;
+    let events = simulator::trace::generate(&pm, cfg);
+    let key = cfg.geometry_key();
+    let replayed = cache
+        .incremental(&key)
+        .and_then(|inc| inc.replay(&events).ok());
+    let replay = match replayed {
+        Some((replay, _divergence)) => replay,
+        // Miss, or the probe's structure diverged from the cached
+        // baseline (possible when dp/ZeRO toggles add or drop trace
+        // events): rebuild the baseline for this geometry. Build errors
+        // fall back to the scalar oracle rather than failing the
+        // request.
+        None => {
+            match simulator::columnar::Incremental::new(&events, SIM_CHECKPOINT_STRIDE) {
+                Ok(inc) => {
+                    let replay = inc.base().clone();
+                    cache.insert_incremental(&key, Arc::new(inc));
+                    replay
+                }
+                Err(_) => return simulate_payload(cfg),
+            }
+        }
+    };
+    let m = simulator::Measurement::from_replay(replay, cfg);
+    Ok(obj(vec![("measurement", codec::measurement_to_json(&m))]))
+}
+
 pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
     if cfg.tp > 1 || cfg.pp > 1 {
         // The prior-work baselines are single-device formulations (dp/
@@ -505,8 +572,11 @@ pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
     ]))
 }
 
-pub(crate) fn modality_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
-    let pm = parser::parse(cfg).map_err(classify)?;
+pub(crate) fn modality_payload(
+    cfg: &TrainConfig,
+    cache: Option<&ResponseCache>,
+) -> Result<Json, ApiError> {
+    let pm = parsed_via(cache, cfg)?;
     Ok(obj(vec![
         ("model", model_summary_json(&pm)),
         ("shares", codec::shares_to_json(&report::modality_split(&pm))),
@@ -532,7 +602,7 @@ pub(crate) fn metrics_payload(m: &Metrics) -> Json {
         .iter()
         .enumerate()
         .map(|(i, name)| {
-            let (p50, p95, max) = m.method_latency_us(i);
+            let (p50, p95, p99, max) = m.method_latency_us(i);
             (
                 name.to_string(),
                 obj(vec![
@@ -540,11 +610,15 @@ pub(crate) fn metrics_payload(m: &Metrics) -> Json {
                     ("errors", num(m.method_errors(i) as f64)),
                     ("p50_us", num(p50 as f64)),
                     ("p95_us", num(p95 as f64)),
+                    ("p99_us", num(p99 as f64)),
                     ("max_us", num(max as f64)),
                 ]),
             )
         })
         .collect();
+    let (resp_hits, resp_misses) = m.response_cache();
+    let (parse_hits, parse_misses) = m.parse_cache();
+    let (sim_hits, sim_misses) = m.sim_cache();
     obj(vec![
         ("requests", num(m.requests() as f64)),
         ("responses", num(m.responses() as f64)),
@@ -553,6 +627,19 @@ pub(crate) fn metrics_payload(m: &Metrics) -> Json {
         ("mean_batch", num(m.mean_batch_size())),
         ("plans", num(m.plans() as f64)),
         ("per_method", Json::Obj(per_method)),
+        // Additive (PR 8): hot-path cache accounting. Clients that
+        // predate the caches ignore the unknown key.
+        (
+            "cache",
+            obj(vec![
+                ("response_hits", num(resp_hits as f64)),
+                ("response_misses", num(resp_misses as f64)),
+                ("parse_hits", num(parse_hits as f64)),
+                ("parse_misses", num(parse_misses as f64)),
+                ("sim_hits", num(sim_hits as f64)),
+                ("sim_misses", num(sim_misses as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -600,6 +687,9 @@ pub struct Dispatcher {
     /// Service queue capacity, surfaced by `health` (0 = no queue: the
     /// CLI / in-process path).
     queue_capacity: usize,
+    /// Shared serving cache (payloads / parses / incremental replays).
+    /// `None` on the CLI / in-process path — every request runs cold.
+    cache: Option<Arc<ResponseCache>>,
 }
 
 impl Dispatcher {
@@ -623,12 +713,23 @@ impl Dispatcher {
             metrics,
             faults: FaultState::inert_arc(),
             queue_capacity: 0,
+            cache: None,
         }
     }
 
     /// Attach a fault-injection state (builder style).
     pub fn with_faults(mut self, faults: Arc<FaultState>) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Attach the shared serving cache (builder style). Only `ok`
+    /// payloads of the pure methods (`simulate`, `baselines`,
+    /// `modality`) are served from it here; the service worker handles
+    /// `predict` payload caching itself (predictions route through the
+    /// batcher, not this dispatcher).
+    pub fn with_response_cache(mut self, cache: Arc<ResponseCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 
@@ -711,7 +812,7 @@ impl Dispatcher {
                     // express; the analytical mirror (bit-identical to
                     // the tensorized path per stage) answers directly.
                     let rp = predictor::predict_per_rank(&p.cfg).map_err(classify)?;
-                    return predict_payload(rp.binding(), Some(&rp), p);
+                    return predict_payload(rp.binding(), Some(&rp), p, self.cache.as_deref());
                 }
                 let est = self.backend.estimate(&p.cfg).map_err(classify)?;
                 let pred = est.prediction.ok_or_else(|| {
@@ -720,7 +821,7 @@ impl Dispatcher {
                         self.backend.id()
                     ))
                 })?;
-                predict_payload(&pred, None, p)
+                predict_payload(&pred, None, p, self.cache.as_deref())
             }
             Method::Plan(p) => match ctx.degrade_reason() {
                 Some(reason) => {
@@ -738,9 +839,53 @@ impl Dispatcher {
                 }
                 None => sweep_payload(p, &self.engine),
             },
-            Method::Simulate(p) => simulate_payload(&p.cfg),
-            Method::Baselines(p) => baselines_payload(&p.cfg),
-            Method::Modality(p) => modality_payload(&p.cfg),
+            // The pure config->payload methods consult the shared
+            // response cache when one is attached. The lookup runs
+            // *after* the fault rolls and deadline check above, so a
+            // hit and a cold execution consume identical fault-roll
+            // sequences (chaos schedules stay deterministic) and an
+            // expired deadline is never answered from cache. Only `ok`
+            // payloads are inserted; errors always re-execute.
+            Method::Simulate(p) => match self.cache.as_deref() {
+                Some(cache) => {
+                    let key = ResponseCache::response_key("simulate", &p.cfg, "");
+                    if let Some(hit) = cache.response(&key) {
+                        return Ok((*hit).clone());
+                    }
+                    let payload = if p.cfg.pp <= 1 && self.engine.columnar() {
+                        simulate_payload_incremental(&p.cfg, cache)?
+                    } else {
+                        simulate_payload(&p.cfg)?
+                    };
+                    cache.insert_response(&key, Arc::new(payload.clone()));
+                    Ok(payload)
+                }
+                None => simulate_payload(&p.cfg),
+            },
+            Method::Baselines(p) => match self.cache.as_deref() {
+                Some(cache) => {
+                    let key = ResponseCache::response_key("baselines", &p.cfg, "");
+                    if let Some(hit) = cache.response(&key) {
+                        return Ok((*hit).clone());
+                    }
+                    let payload = baselines_payload(&p.cfg)?;
+                    cache.insert_response(&key, Arc::new(payload.clone()));
+                    Ok(payload)
+                }
+                None => baselines_payload(&p.cfg),
+            },
+            Method::Modality(p) => match self.cache.as_deref() {
+                Some(cache) => {
+                    let key = ResponseCache::response_key("modality", &p.cfg, "");
+                    if let Some(hit) = cache.response(&key) {
+                        return Ok((*hit).clone());
+                    }
+                    let payload = modality_payload(&p.cfg, Some(cache))?;
+                    cache.insert_response(&key, Arc::new(payload.clone()));
+                    Ok(payload)
+                }
+                None => modality_payload(&p.cfg, None),
+            },
             Method::Models => models_payload(),
             Method::Metrics => Ok(metrics_payload(&self.metrics)),
             Method::Health => Ok(health_payload(

@@ -15,11 +15,11 @@
 //!   are busy the accept loop blocks, leaving further connections in
 //!   the OS backlog.
 //! * **Backpressure** — requests enter the prediction service through
-//!   [`crate::coordinator::Client::try_submit`]: a full service queue
-//!   answers `over_capacity` instead of stalling the connection, and
-//!   batching follows the service's
-//!   [`crate::coordinator::batcher::BatchPolicy`] as for in-process
-//!   clients.
+//!   [`crate::coordinator::Client::try_submit`]: a full admission tier
+//!   (fast and slow methods queue separately) answers `over_capacity`
+//!   instead of stalling the connection, and batching follows the
+//!   service's [`crate::coordinator::batcher::BatchPolicy`] as for
+//!   in-process clients.
 //! * **Graceful shutdown** — [`Server::shutdown`] stops accepting,
 //!   lets in-flight lines finish (connection threads poll a stop flag
 //!   on a short read timeout), then drains the service queue so every

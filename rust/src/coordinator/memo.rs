@@ -1,17 +1,37 @@
-//! Bounded FIFO memo used by the service worker for pp>1 per-rank
-//! predictions. Extracted from an inline `HashMap` + `VecDeque` pair so
-//! the bound and eviction semantics are testable in isolation — the
-//! worker keys entries by the full [`crate::config::TrainConfig`]
-//! cache key, so a config change produces a different key and can never
-//! observe a stale value.
+//! Bounded FIFO memos for the serving hot path.
 //!
-//! Internally a `Mutex` (one coarse lock): the worker is the only
-//! writer on the hot path, and the structure is `Sync` so chaos tests
-//! can hammer it from many threads and assert the bound holds under
-//! concurrent eviction.
+//! [`BoundedMemo`] is the primitive: a size-bounded insertion-order map
+//! of `Arc`-shared values, extracted from an inline `HashMap` +
+//! `VecDeque` pair so the bound and eviction semantics are testable in
+//! isolation. Callers key entries by the full
+//! [`crate::config::TrainConfig`] cache key (or geometry key), so a
+//! config change produces a different key and can never observe a
+//! stale value.
+//!
+//! [`ResponseCache`] (PR 8) generalizes the pp>1 per-rank memo into the
+//! shared serving cache: finished wire payloads keyed by
+//! `(method, cache_key, variant)`, one `ParsedModel` per geometry so
+//! repeated same-geometry requests never re-parse, and one
+//! [`Incremental`] replay engine per geometry so repeated `simulate`
+//! probes pay only their divergent suffix. All three memos report
+//! hits/misses through [`Metrics`], and `clear()` drops everything at
+//! once — the worker calls it on panic respawn so a poisoned backend
+//! can never leave partial state behind.
+//!
+//! Internally a `Mutex` per memo (one coarse lock): the worker is the
+//! only writer on the hot path, and the structures are `Sync` so chaos
+//! tests can hammer them from many threads and assert the bound holds
+//! under concurrent eviction.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
+
+use crate::config::TrainConfig;
+use crate::parser::{self, ParsedModel};
+use crate::simulator::columnar::Incremental;
+use crate::util::json_mini::Json;
+
+use super::metrics::Metrics;
 
 /// A bounded insertion-order (FIFO) memo: at most `cap` entries; the
 /// oldest insertion is evicted first. Values are shared via `Arc` so a
@@ -75,6 +95,118 @@ impl<V> BoundedMemo<V> {
         let mut inner = self.inner.lock().unwrap();
         inner.map.clear();
         inner.order.clear();
+    }
+}
+
+/// The checkpoint stride used for serve-path [`Incremental`] engines:
+/// dense enough that a divergent probe replays a short suffix, sparse
+/// enough that per-geometry memory stays modest.
+pub const SIM_CHECKPOINT_STRIDE: usize = 64;
+
+/// The shared serving cache: completed wire payloads, parsed models,
+/// and incremental replay engines, each in its own [`BoundedMemo`].
+///
+/// Only successful (`ok`) payloads are ever inserted; errors always
+/// re-execute. A `cap` of 0 disables every layer (lookups miss without
+/// touching the hit/miss counters, so a disabled cache reports a 0/0
+/// rate rather than a fake 0% one). Values are complete immutable
+/// `Arc`s inserted under the memo's lock, so a reader can never observe
+/// a torn entry — it sees either nothing or the whole payload.
+pub struct ResponseCache {
+    cap: usize,
+    responses: BoundedMemo<Json>,
+    parses: BoundedMemo<ParsedModel>,
+    sims: BoundedMemo<Incremental>,
+    metrics: Arc<Metrics>,
+}
+
+impl ResponseCache {
+    /// `cap` bounds the response and parse memos directly; the
+    /// incremental-engine memo is bounded by `cap.min(64)` because each
+    /// entry holds checkpointed allocator states (heavier than a
+    /// payload).
+    pub fn new(cap: usize, metrics: Arc<Metrics>) -> Self {
+        ResponseCache {
+            cap,
+            responses: BoundedMemo::new(cap),
+            parses: BoundedMemo::new(cap),
+            sims: BoundedMemo::new(cap.min(64)),
+            metrics,
+        }
+    }
+
+    /// Compose the response-memo key. `variant` captures any request
+    /// knobs outside the config that change the payload (e.g. predict's
+    /// `capacity_mib`/`detail` params); the `\x1f` unit separator
+    /// cannot appear in a method name or cache key, so distinct
+    /// `(method, config, variant)` triples can never collide.
+    pub fn response_key(method: &str, cfg: &TrainConfig, variant: &str) -> String {
+        format!("{method}\x1f{}\x1f{variant}", cfg.cache_key())
+    }
+
+    /// Look up a finished payload; records a hit or miss.
+    pub fn response(&self, key: &str) -> Option<Arc<Json>> {
+        if self.cap == 0 {
+            return None;
+        }
+        let got = self.responses.get(key);
+        self.metrics.on_response_cache(got.is_some());
+        got
+    }
+
+    /// Insert a finished `ok` payload. Callers must never insert error
+    /// payloads — errors are retried, not replayed.
+    pub fn insert_response(&self, key: &str, value: Arc<Json>) {
+        self.responses.insert(key, value);
+    }
+
+    /// Get-or-parse the [`ParsedModel`] for `cfg`, keyed by
+    /// [`TrainConfig::geometry_key`] — a `ParsedModel` is a pure
+    /// function of the geometry (the sweep engine's parse-once sharing
+    /// relies on the same invariant), so dp/pp/zero variations of one
+    /// model reuse a single parse.
+    pub fn parsed(&self, cfg: &TrainConfig) -> anyhow::Result<Arc<ParsedModel>> {
+        if self.cap == 0 {
+            return Ok(Arc::new(parser::parse(cfg)?));
+        }
+        let key = cfg.geometry_key();
+        if let Some(pm) = self.parses.get(&key) {
+            self.metrics.on_parse_cache(true);
+            return Ok(pm);
+        }
+        self.metrics.on_parse_cache(false);
+        let pm = Arc::new(parser::parse(cfg)?);
+        self.parses.insert(&key, Arc::clone(&pm));
+        Ok(pm)
+    }
+
+    /// Look up the per-geometry [`Incremental`] engine; records a
+    /// sim-cache hit or miss.
+    pub fn incremental(&self, geometry_key: &str) -> Option<Arc<Incremental>> {
+        if self.cap == 0 {
+            return None;
+        }
+        let got = self.sims.get(geometry_key);
+        self.metrics.on_sim_cache(got.is_some());
+        got
+    }
+
+    pub fn insert_incremental(&self, geometry_key: &str, inc: Arc<Incremental>) {
+        self.sims.insert(geometry_key, inc);
+    }
+
+    /// Drop every cached payload, parse, and incremental engine. The
+    /// worker calls this on backend swap / panic respawn so nothing
+    /// computed by a poisoned backend survives it.
+    pub fn clear(&self) {
+        self.responses.clear();
+        self.parses.clear();
+        self.sims.clear();
+    }
+
+    /// Number of cached response payloads (test/diagnostic hook).
+    pub fn response_entries(&self) -> usize {
+        self.responses.len()
     }
 }
 
@@ -156,5 +288,81 @@ mod tests {
         assert!(memo.len() <= 16);
         memo.clear();
         assert!(memo.is_empty());
+    }
+
+    fn tiny() -> TrainConfig {
+        TrainConfig {
+            model: "llava-tiny".into(),
+            mbs: 1,
+            seq_len: 32,
+            ..TrainConfig::llava_finetune_default()
+        }
+    }
+
+    #[test]
+    fn response_cache_records_hits_misses_and_variants_do_not_collide() {
+        let m = Arc::new(Metrics::new());
+        let cache = ResponseCache::new(8, Arc::clone(&m));
+        let cfg = tiny();
+        let k1 = ResponseCache::response_key("predict", &cfg, "detail=false");
+        let k2 = ResponseCache::response_key("predict", &cfg, "detail=true");
+        assert_ne!(k1, k2, "variants must key distinct entries");
+        assert!(cache.response(&k1).is_none());
+        cache.insert_response(&k1, Arc::new(Json::Bool(true)));
+        assert!(cache.response(&k1).is_some());
+        assert!(cache.response(&k2).is_none(), "variant isolation");
+        assert_eq!(m.response_cache(), (1, 2));
+    }
+
+    #[test]
+    fn parse_cache_shares_one_parsed_model_across_geometry_twins() {
+        let m = Arc::new(Metrics::new());
+        let cache = ResponseCache::new(8, Arc::clone(&m));
+        let a = tiny();
+        let b = TrainConfig { dp: 4, ..tiny() }; // same geometry, different layout
+        let pa = cache.parsed(&a).unwrap();
+        let pb = cache.parsed(&b).unwrap();
+        assert!(Arc::ptr_eq(&pa, &pb), "one parse per geometry");
+        assert_eq!(m.parse_cache(), (1, 1));
+        // a geometry change is a different key -> fresh parse
+        let c = TrainConfig { seq_len: 64, ..tiny() };
+        let pc = cache.parsed(&c).unwrap();
+        assert!(!Arc::ptr_eq(&pa, &pc));
+        assert_eq!(m.parse_cache(), (1, 2));
+    }
+
+    #[test]
+    fn zero_cap_disables_every_layer_without_polluting_counters() {
+        let m = Arc::new(Metrics::new());
+        let cache = ResponseCache::new(0, Arc::clone(&m));
+        let cfg = tiny();
+        let key = ResponseCache::response_key("modality", &cfg, "");
+        cache.insert_response(&key, Arc::new(Json::Null));
+        assert!(cache.response(&key).is_none());
+        assert!(cache.incremental(&cfg.geometry_key()).is_none());
+        // parsing still works, it just isn't shared
+        let pa = cache.parsed(&cfg).unwrap();
+        let pb = cache.parsed(&cfg).unwrap();
+        assert!(!Arc::ptr_eq(&pa, &pb));
+        assert_eq!(m.response_cache(), (0, 0));
+        assert_eq!(m.parse_cache(), (0, 0));
+        assert_eq!(m.sim_cache(), (0, 0));
+    }
+
+    #[test]
+    fn clear_drops_responses_parses_and_sims_together() {
+        let m = Arc::new(Metrics::new());
+        let cache = ResponseCache::new(8, Arc::clone(&m));
+        let cfg = tiny();
+        let key = ResponseCache::response_key("baselines", &cfg, "");
+        cache.insert_response(&key, Arc::new(Json::Bool(true)));
+        cache.parsed(&cfg).unwrap();
+        assert_eq!(cache.response_entries(), 1);
+        cache.clear();
+        assert_eq!(cache.response_entries(), 0);
+        assert!(cache.response(&key).is_none());
+        // post-clear parse is a miss again (entry really gone)
+        cache.parsed(&cfg).unwrap();
+        assert_eq!(m.parse_cache(), (0, 2));
     }
 }

@@ -82,6 +82,15 @@ pub struct Metrics {
     worker_restarts: AtomicU64,
     degraded: AtomicU64,
     deadlines_exceeded: AtomicU64,
+    // Hot-path cache accounting (PR 8): the geometry-keyed response
+    // cache, the ParsedModel parse cache, and the Incremental simulate
+    // cache each report hits/misses through the `metrics` wire method.
+    response_cache_hits: AtomicU64,
+    response_cache_misses: AtomicU64,
+    parse_cache_hits: AtomicU64,
+    parse_cache_misses: AtomicU64,
+    sim_cache_hits: AtomicU64,
+    sim_cache_misses: AtomicU64,
 }
 
 impl Metrics {
@@ -126,15 +135,72 @@ impl Metrics {
         self.methods[idx].errors.load(Ordering::Relaxed)
     }
 
-    /// `(p50, p95, max)` latency in microseconds for one method.
+    /// `(p50, p95, p99, max)` latency in microseconds for one method.
     /// Percentiles are log2-bucket approximations (upper bucket edge,
     /// capped at the observed max).
-    pub fn method_latency_us(&self, idx: usize) -> (u64, u64, u64) {
+    pub fn method_latency_us(&self, idx: usize) -> (u64, u64, u64, u64) {
         let m = &self.methods[idx];
         (
             m.percentile_us(0.50),
             m.percentile_us(0.95),
+            m.percentile_us(0.99),
             m.max_us.load(Ordering::Relaxed),
+        )
+    }
+
+    /// A lookup in the geometry-keyed response cache resolved (`hit`)
+    /// or fell through to the cold path.
+    pub fn on_response_cache(&self, hit: bool) {
+        let c = if hit {
+            &self.response_cache_hits
+        } else {
+            &self.response_cache_misses
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(hits, misses)` of the geometry-keyed response cache.
+    pub fn response_cache(&self) -> (u64, u64) {
+        (
+            self.response_cache_hits.load(Ordering::Relaxed),
+            self.response_cache_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// A `ParsedModel` lookup in the parse cache resolved or re-parsed.
+    pub fn on_parse_cache(&self, hit: bool) {
+        let c = if hit {
+            &self.parse_cache_hits
+        } else {
+            &self.parse_cache_misses
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(hits, misses)` of the geometry-keyed parse cache.
+    pub fn parse_cache(&self) -> (u64, u64) {
+        (
+            self.parse_cache_hits.load(Ordering::Relaxed),
+            self.parse_cache_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// An `Incremental` simulate replay reused cached checkpoints
+    /// (`hit`) or rebuilt the engine from scratch.
+    pub fn on_sim_cache(&self, hit: bool) {
+        let c = if hit {
+            &self.sim_cache_hits
+        } else {
+            &self.sim_cache_misses
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(hits, misses)` of the Incremental simulate cache.
+    pub fn sim_cache(&self) -> (u64, u64) {
+        (
+            self.sim_cache_hits.load(Ordering::Relaxed),
+            self.sim_cache_misses.load(Ordering::Relaxed),
         )
     }
 
@@ -305,22 +371,35 @@ mod tests {
         m.on_method(idx, Duration::from_micros(10), false);
         assert_eq!(m.method_requests(idx), 6);
         assert_eq!(m.method_errors(idx), 1);
-        let (p50, p95, max) = m.method_latency_us(idx);
+        let (p50, p95, p99, max) = m.method_latency_us(idx);
         assert_eq!(max, 50_000);
         // p50 falls in the 128..256 or 256..512 bucket; far below p95
         assert!(p50 >= 128 && p50 <= 512, "p50={p50}");
         assert!(p95 > p50 && p95 <= 65_536, "p95={p95}");
+        assert!(p99 >= p95 && p99 <= 65_536, "p99={p99} p95={p95}");
         // untouched methods stay zero
         assert_eq!(m.method_requests(3), 0);
-        assert_eq!(m.method_latency_us(3), (0, 0, 0));
+        assert_eq!(m.method_latency_us(3), (0, 0, 0, 0));
     }
 
     #[test]
     fn method_percentiles_cap_at_observed_max() {
         let m = Metrics::new();
         m.on_method(1, Duration::from_micros(5), true);
-        let (p50, p95, max) = m.method_latency_us(1);
-        assert_eq!((p50, p95, max), (5, 5, 5));
+        assert_eq!(m.method_latency_us(1), (5, 5, 5, 5));
+    }
+
+    #[test]
+    fn cache_counters_accumulate_independently() {
+        let m = Metrics::new();
+        m.on_response_cache(true);
+        m.on_response_cache(true);
+        m.on_response_cache(false);
+        m.on_parse_cache(false);
+        m.on_sim_cache(true);
+        assert_eq!(m.response_cache(), (2, 1));
+        assert_eq!(m.parse_cache(), (0, 1));
+        assert_eq!(m.sim_cache(), (1, 0));
     }
 
     #[test]

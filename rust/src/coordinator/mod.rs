@@ -29,6 +29,6 @@ pub mod memo;
 pub mod metrics;
 pub mod server;
 
-pub use memo::BoundedMemo;
+pub use memo::{BoundedMemo, ResponseCache};
 pub use metrics::Metrics;
 pub use server::{Client, PredictionService, ServiceConfig};

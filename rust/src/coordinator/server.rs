@@ -25,6 +25,23 @@
 //! * **Backpressure** — a full queue (or an injected `queue_reject`
 //!   burst) answers `over_capacity` carrying a `retry_after_ms` hint.
 //!
+//! Hot-path serving layer (PR 8):
+//!
+//! * **Two-tier admission** — cheap methods (`predict`, `models`,
+//!   `metrics`, `health`) and heavy ones (`plan`, `sweep`, `simulate`,
+//!   `baselines`, `modality`) queue on separate bounded channels, each
+//!   `queue_depth` deep. The worker drains the fast tier into batches
+//!   and pops **at most one** slow job per cycle, so a plan/sweep storm
+//!   can never starve interactive traffic, and `over_capacity` fires
+//!   only when the *matching* tier is full.
+//! * **Geometry-keyed caching** — a shared
+//!   [`ResponseCache`](super::ResponseCache) memoizes finished `ok`
+//!   payloads by `(method, cache_key, variant)`, shares one
+//!   `ParsedModel` per geometry, and keeps a per-geometry
+//!   checkpointed `Incremental` replay for `simulate`. It is cleared
+//!   whenever the worker respawns a backend, so nothing computed by a
+//!   poisoned backend survives it.
+//!
 //! Two backends:
 //!
 //! * **tensorized** ([`PredictionService::start`]) — the AOT-compiled
@@ -35,7 +52,9 @@
 //!   property-tested to agree).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -55,16 +74,17 @@ use crate::planner::{Plan, PlanRequest};
 use crate::predictor::{tensorized::TensorizedPredictor, Prediction, RankPrediction};
 use crate::sweep::Sweep;
 
-use super::batcher::{next_batch, BatchPolicy};
-use super::memo::BoundedMemo;
+use super::batcher::BatchPolicy;
+use super::memo::{BoundedMemo, ResponseCache};
 use super::metrics::Metrics;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub policy: BatchPolicy,
-    /// Bound of the request queue; a full queue is the service's
-    /// backpressure signal ([`PredictionService::try_submit`] answers
+    /// Bound of each admission tier's queue (fast and slow tier are
+    /// each this deep); a full tier is the service's backpressure
+    /// signal ([`PredictionService::try_submit`] answers
     /// `over_capacity` instead of blocking).
     pub queue_depth: usize,
     /// Deadline applied to every request that does not carry its own
@@ -73,6 +93,10 @@ pub struct ServiceConfig {
     /// Fault-injection schedule. The default is inert (every rate
     /// zero), which by construction cannot change any output.
     pub faults: Arc<FaultState>,
+    /// Capacity of the shared [`ResponseCache`] (payloads / parses /
+    /// incremental replays). 0 disables caching entirely — every
+    /// request runs the cold path.
+    pub cache_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +106,37 @@ impl Default for ServiceConfig {
             queue_depth: 1024,
             default_deadline: None,
             faults: FaultState::inert_arc(),
+            cache_cap: 256,
+        }
+    }
+}
+
+/// Which admission tier a method queues on. Fast-tier methods answer
+/// in microseconds-to-milliseconds (predict is batched; models/
+/// metrics/health are constant-time snapshots); everything else can
+/// run whole searches or simulations and must never be able to starve
+/// them.
+fn is_fast(m: &Method) -> bool {
+    matches!(
+        m,
+        Method::Predict(_) | Method::Models | Method::Metrics | Method::Health
+    )
+}
+
+/// The per-tier submission sides. Both channels close together when
+/// the last holder drops.
+#[derive(Clone)]
+struct Senders {
+    fast: SyncSender<Job>,
+    slow: SyncSender<Job>,
+}
+
+impl Senders {
+    fn for_method(&self, m: &Method) -> &SyncSender<Job> {
+        if is_fast(m) {
+            &self.fast
+        } else {
+            &self.slow
         }
     }
 }
@@ -107,10 +162,10 @@ struct Job {
 /// Handle to a running prediction service. Cloneable clients submit
 /// blocking requests; dropping the last handle shuts the worker down.
 pub struct PredictionService {
-    /// `None` once shutdown has begun — the sender must actually be
-    /// dropped to close the queue (not swapped for a dummy channel,
+    /// `None` once shutdown has begun — the senders must actually be
+    /// dropped to close the queues (not swapped for dummy channels,
     /// which would strand any job a racing client had already queued).
-    tx: Option<SyncSender<Job>>,
+    tx: Option<Senders>,
     shared: Arc<Shared>,
     worker: Option<JoinHandle<()>>,
 }
@@ -140,7 +195,9 @@ impl PredictionService {
         make_backend: impl Fn() -> Result<Box<dyn Estimator>> + Send + 'static,
     ) -> Result<Self> {
         let queue_depth = cfg.queue_depth.max(1);
-        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let (fast_tx, fast_rx) = sync_channel::<Job>(queue_depth);
+        let (slow_tx, slow_rx) = sync_channel::<Job>(queue_depth);
+        let tx = Senders { fast: fast_tx, slow: slow_tx };
         let metrics = Arc::new(Metrics::new());
         let shared = Arc::new(Shared {
             metrics: metrics.clone(),
@@ -148,6 +205,7 @@ impl PredictionService {
             default_deadline: cfg.default_deadline,
             faults: cfg.faults.clone(),
         });
+        let rcache = Arc::new(ResponseCache::new(cfg.cache_cap, metrics.clone()));
         let m = metrics;
         let faults = cfg.faults;
         let policy = cfg.policy;
@@ -165,7 +223,19 @@ impl PredictionService {
                         return;
                     }
                 };
-                worker_loop(backend, &make_backend, rx, policy, m, faults, queue_depth)
+                worker_loop(
+                    backend,
+                    &make_backend,
+                    fast_rx,
+                    slow_rx,
+                    WorkerCtx {
+                        policy,
+                        metrics: m,
+                        faults,
+                        capacity: queue_depth,
+                        rcache,
+                    },
+                )
             })
             .expect("spawning service worker");
         match ready_rx.recv() {
@@ -265,7 +335,7 @@ impl Drop for PredictionService {
 /// Cloneable request submitter.
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Job>,
+    tx: Senders,
     shared: Arc<Shared>,
 }
 
@@ -338,7 +408,7 @@ fn retry_hint_ms(queue_depth: usize) -> u64 {
     ((queue_depth as u64) * 2).clamp(50, 2000)
 }
 
-fn submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiResponse {
+fn submit_on(tx: &Senders, shared: &Shared, req: ApiRequest) -> ApiResponse {
     shared.metrics.on_request();
     if shared.faults.roll(Site::QueueReject) {
         shared.metrics.on_error(1);
@@ -354,7 +424,8 @@ fn submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiRespo
     let id = req.id.clone();
     let deadline = arm_deadline(shared, &req);
     let (reply_tx, reply_rx) = sync_channel(1);
-    if let Err(e) = tx.send(Job { req, deadline, reply: reply_tx }) {
+    let tier = tx.for_method(&req.method);
+    if let Err(e) = tier.send(Job { req, deadline, reply: reply_tx }) {
         return shut_down_response(e.0.req);
     }
     shared.metrics.on_enqueue();
@@ -367,7 +438,7 @@ fn submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiRespo
     }
 }
 
-fn try_submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiResponse {
+fn try_submit_on(tx: &Senders, shared: &Shared, req: ApiRequest) -> ApiResponse {
     shared.metrics.on_request();
     if shared.faults.roll(Site::QueueReject) {
         shared.metrics.on_error(1);
@@ -383,17 +454,24 @@ fn try_submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiR
     let id = req.id.clone();
     let deadline = arm_deadline(shared, &req);
     let (reply_tx, reply_rx) = sync_channel(1);
-    match tx.try_send(Job { req, deadline, reply: reply_tx }) {
+    let fast = is_fast(&req.method);
+    let tier = tx.for_method(&req.method);
+    match tier.try_send(Job { req, deadline, reply: reply_tx }) {
         Ok(()) => shared.metrics.on_enqueue(),
         Err(TrySendError::Full(job)) => {
+            // Only the *matching* tier being full rejects: a plan storm
+            // saturating the slow tier leaves predict/models/metrics/
+            // health admission untouched, and vice versa.
             shared.metrics.on_error(1);
             let queue_depth = shared.queue_depth;
+            let tier_name = if fast { "fast" } else { "slow" };
             return ApiResponse::err(
                 job.req.id,
                 ApiError::new(
                     ErrorCode::OverCapacity,
                     format!(
-                        "service queue is full ({queue_depth} requests in flight); retry later"
+                        "service queue is full ({tier_name} tier: {queue_depth} requests \
+                         in flight); retry later"
                     ),
                 )
                 .with_retry_after(retry_hint_ms(queue_depth)),
@@ -412,27 +490,133 @@ fn try_submit_on(tx: &SyncSender<Job>, shared: &Shared, req: ApiRequest) -> ApiR
 
 const PREDICT_IDX: usize = 0; // Method::Predict(...).index()
 
+/// How long the worker blocks on the fast tier before probing the slow
+/// tier (std mpsc has no `select`). A slow-only workload pays at most
+/// this much extra latency per job — noise against a plan or simulate.
+const SLOW_POLL: Duration = Duration::from_millis(1);
+
 /// The serial dispatcher the worker routes non-predict methods through;
 /// rebuilt from scratch after a panic so no partial state survives.
-fn new_serial(metrics: &Arc<Metrics>, faults: &Arc<FaultState>, capacity: usize) -> Dispatcher {
+/// The shared response cache is attached so `simulate`/`baselines`/
+/// `modality` payloads memoize (and `simulate` rides the per-geometry
+/// `Incremental` engine).
+fn new_serial(
+    metrics: &Arc<Metrics>,
+    faults: &Arc<FaultState>,
+    capacity: usize,
+    rcache: &Arc<ResponseCache>,
+) -> Dispatcher {
     Dispatcher::with_metrics(Box::new(AnalyticalEstimator), Sweep::default(), metrics.clone())
         .with_faults(faults.clone())
         .with_queue_capacity(capacity)
+        .with_response_cache(rcache.clone())
 }
 
 fn expired(deadline: Option<Instant>) -> bool {
     deadline.is_some_and(|d| Instant::now() >= d)
 }
 
-fn worker_loop(
-    mut backend: Box<dyn Estimator>,
-    make_backend: &(dyn Fn() -> Result<Box<dyn Estimator>>),
-    rx: Receiver<Job>,
+/// One worker cycle's intake: a fast-tier batch (drained per the batch
+/// policy) and **at most one** slow-tier job — the priority pop. Fast
+/// arrivals therefore wait behind at most one slow execution, while
+/// slow traffic still progresses every cycle under a sustained fast
+/// storm. Returns `None` only when both tiers are disconnected *and*
+/// drained, preserving shutdown's drain guarantee.
+fn next_cycle(
+    fast_rx: &Receiver<Job>,
+    slow_rx: &Receiver<Job>,
+    policy: &BatchPolicy,
+    fast_open: &mut bool,
+    slow_open: &mut bool,
+) -> Option<(Vec<Job>, Option<Job>)> {
+    let mut fast = Vec::new();
+    let mut slow = None;
+    // Acquire a first job, multiplexing both tiers: block on the fast
+    // tier in short slices, probing the slow tier between slices.
+    loop {
+        match (*fast_open, *slow_open) {
+            (false, false) => return None,
+            (true, _) => match fast_rx.recv_timeout(SLOW_POLL) {
+                Ok(job) => {
+                    fast.push(job);
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if *slow_open {
+                        match slow_rx.try_recv() {
+                            Ok(job) => {
+                                slow = Some(job);
+                                break;
+                            }
+                            Err(TryRecvError::Empty) => {}
+                            Err(TryRecvError::Disconnected) => *slow_open = false,
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => *fast_open = false,
+            },
+            (false, true) => match slow_rx.recv() {
+                Ok(job) => {
+                    slow = Some(job);
+                    break;
+                }
+                Err(_) => *slow_open = false,
+            },
+        }
+    }
+    if slow.is_some() {
+        // Slow-first cycle: execute it now; any fast job that raced in
+        // is picked up next cycle (it waits at most this one slow
+        // execution).
+        return Some((fast, slow));
+    }
+    // Fast-first cycle: drain the fast tier into a batch, exactly the
+    // single-queue batcher's policy (full batch, timeout, or
+    // disconnect — a zero timeout yields batches of 1).
+    let deadline = Instant::now() + policy.batch_timeout;
+    while fast.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match fast_rx.recv_timeout(deadline - now) {
+            Ok(job) => fast.push(job),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => {
+                *fast_open = false;
+                break;
+            }
+        }
+    }
+    // The priority pop: one slow job rides along with the fast batch.
+    if *slow_open {
+        match slow_rx.try_recv() {
+            Ok(job) => slow = Some(job),
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Disconnected) => *slow_open = false,
+        }
+    }
+    Some((fast, slow))
+}
+
+/// Everything the worker loop needs besides its backend and queues
+/// (bundled so the respawn path and the spawn site stay in sync).
+struct WorkerCtx {
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     faults: Arc<FaultState>,
     capacity: usize,
+    rcache: Arc<ResponseCache>,
+}
+
+fn worker_loop(
+    mut backend: Box<dyn Estimator>,
+    make_backend: &(dyn Fn() -> Result<Box<dyn Estimator>>),
+    fast_rx: Receiver<Job>,
+    slow_rx: Receiver<Job>,
+    ctx: WorkerCtx,
 ) {
+    let WorkerCtx { policy, metrics, faults, capacity, rcache } = ctx;
     // Parse+encode is ~45% of a request's CPU cost (see EXPERIMENTS.md
     // §Perf); schedulers re-submit near-identical configs, so memoize.
     let mut cache = features::EncodeCache::new(256);
@@ -444,17 +628,21 @@ fn worker_loop(
     // Dispatcher wired to this service's metrics. Its own predict
     // backend is never exercised here — predictions take the batched
     // path below.
-    let mut serial = new_serial(&metrics, &faults, capacity);
-    while let Some(batch) = next_batch(&rx, &policy) {
+    let mut serial = new_serial(&metrics, &faults, capacity, &rcache);
+    let (mut fast_open, mut slow_open) = (true, true);
+    while let Some((fast_jobs, slow_job)) =
+        next_cycle(&fast_rx, &slow_rx, &policy, &mut fast_open, &mut slow_open)
+    {
         let t0 = Instant::now();
 
-        // Split the drained batch: predictions execute as one padded
-        // PJRT/analytical call, every other method runs serially
+        // Split this cycle's intake: predictions execute as one padded
+        // PJRT/analytical call, everything else runs serially
         // afterwards (a plan or sweep is a whole search, not a
-        // batchable row).
+        // batchable row). Chaining puts the fast-tier serials
+        // (models/metrics/health) ahead of the popped slow job.
         let mut predicts = Vec::new();
         let mut serial_jobs = Vec::new();
-        for Job { req, deadline, reply } in batch {
+        for Job { req, deadline, reply } in fast_jobs.into_iter().chain(slow_job) {
             metrics.on_dequeue();
             match req.method {
                 Method::Predict(p) => predicts.push((p, req.id, deadline, reply)),
@@ -480,6 +668,24 @@ fn worker_loop(
                     metrics.on_error(1);
                     metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
                     let _ = reply.send(ApiResponse::err(id, dispatch::deadline_exceeded()));
+                    continue;
+                }
+                // Geometry-keyed payload cache: a repeat of an already-
+                // answered (config, capacity, detail) triple replies
+                // with the cached document — bitwise identical to the
+                // cold path, proven by tests/service.rs. Checked after
+                // the deadline (an expired job is never answered from
+                // cache) and after the batch's latency stall, so fault
+                // rolls are identical for hits and misses.
+                let rkey = ResponseCache::response_key(
+                    "predict",
+                    &params.cfg,
+                    &dispatch::predict_variant(&params),
+                );
+                if let Some(hit) = rcache.response(&rkey) {
+                    metrics.on_serial();
+                    metrics.on_method(PREDICT_IDX, t0.elapsed(), true);
+                    let _ = reply.send(ApiResponse::ok(id, (*hit).clone()));
                     continue;
                 }
                 if params.cfg.pp > 1 {
@@ -508,10 +714,17 @@ fn worker_loop(
                     };
                     let resp = match rp {
                         Ok(rp) => {
-                            let payload =
-                                dispatch::predict_payload(rp.binding(), Some(rp.as_ref()), &params);
+                            let payload = dispatch::predict_payload(
+                                rp.binding(),
+                                Some(rp.as_ref()),
+                                &params,
+                                Some(&rcache),
+                            );
                             match payload {
-                                Ok(payload) => ApiResponse::ok(id, payload),
+                                Ok(payload) => {
+                                    rcache.insert_response(&rkey, Arc::new(payload.clone()));
+                                    ApiResponse::ok(id, payload)
+                                }
                                 Err(e) => {
                                     metrics.on_error(1);
                                     ApiResponse::err(id, e)
@@ -530,7 +743,7 @@ fn worker_loop(
                 match cache.get_or_encode(&params.cfg) {
                     Ok(enc) => {
                         encoded.push(enc);
-                        meta.push((params, id, deadline, reply));
+                        meta.push((params, id, deadline, reply, rkey));
                     }
                     Err(e) => {
                         metrics.on_error(1);
@@ -555,9 +768,19 @@ fn worker_loop(
                 match outcome {
                     Ok(Ok(preds)) => {
                         metrics.on_batch(meta.len(), t0.elapsed());
-                        for ((params, id, _deadline, reply), p) in meta.into_iter().zip(preds) {
-                            let resp = match dispatch::predict_payload(&p, None, &params) {
-                                Ok(payload) => ApiResponse::ok(id, payload),
+                        for ((params, id, _deadline, reply, rkey), p) in
+                            meta.into_iter().zip(preds)
+                        {
+                            let resp = match dispatch::predict_payload(
+                                &p,
+                                None,
+                                &params,
+                                Some(&rcache),
+                            ) {
+                                Ok(payload) => {
+                                    rcache.insert_response(&rkey, Arc::new(payload.clone()));
+                                    ApiResponse::ok(id, payload)
+                                }
                                 Err(e) => {
                                     metrics.on_error(1);
                                     ApiResponse::err(id, e)
@@ -570,7 +793,7 @@ fn worker_loop(
                     Ok(Err(e)) => {
                         metrics.on_error(meta.len());
                         let msg = format!("batch execution failed: {e:#}");
-                        for (_, id, _, reply) in meta {
+                        for (_, id, _, reply, _) in meta {
                             metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
                             let _ = reply
                                 .send(ApiResponse::err(id, ApiError::internal(msg.clone())));
@@ -578,7 +801,7 @@ fn worker_loop(
                     }
                     Err(_) => {
                         metrics.on_error(meta.len());
-                        for (_, id, _, reply) in meta {
+                        for (_, id, _, reply, _) in meta {
                             metrics.on_method(PREDICT_IDX, t0.elapsed(), false);
                             let _ = reply.send(ApiResponse::err(
                                 id,
@@ -590,6 +813,10 @@ fn worker_loop(
                         metrics.on_worker_restart();
                         cache = features::EncodeCache::new(256);
                         rank_cache.clear();
+                        // Invalidate every cached payload/parse/replay:
+                        // the respawned backend must never answer from
+                        // state the poisoned one computed.
+                        rcache.clear();
                         match make_backend() {
                             Ok(b) => backend = b,
                             Err(e) => {
@@ -618,7 +845,10 @@ fn worker_loop(
                 Err(_) => {
                     metrics.on_worker_restart();
                     metrics.on_error(1);
-                    serial = new_serial(&metrics, &faults, capacity);
+                    serial = new_serial(&metrics, &faults, capacity, &rcache);
+                    // Same invalidation contract as the batch path: a
+                    // panicking serial job clears the shared cache.
+                    rcache.clear();
                     ApiResponse::err(
                         req.id.clone(),
                         ApiError::internal(

@@ -152,6 +152,8 @@ fn print_help() {
          \x20 --stdio                   NDJSON over stdin/stdout instead of TCP\n\
          \x20 --conn-threads N          concurrent connections (default 4)\n\
          \x20 --max-batch N --batch-timeout-ms M --queue-depth Q\n\
+         \x20 --cache-cap N             response/parse cache entries per kind\n\
+         \x20                           (default 256; 0 disables caching)\n\
          \x20 --deadline-ms M           default per-request deadline (requests\n\
          \x20                           may override via the deadline_ms field)\n\
          \x20 --fault-plan <file.toml>  seeded chaos schedule (see docs; also\n\
@@ -679,6 +681,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get_parse::<u64>("deadline-ms")?
             .map(std::time::Duration::from_millis),
         faults,
+        cache_cap: args.get_parse::<usize>("cache-cap")?.unwrap_or(256),
     };
     let max_batch = svc_cfg.policy.max_batch;
     let queue_depth = svc_cfg.queue_depth;

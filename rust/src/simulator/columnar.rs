@@ -419,6 +419,49 @@ pub struct GroupReplay {
     pub stats: GroupStats,
 }
 
+/// Width of the fixed-stride chunks the live-byte update loops are
+/// unrolled to. Eight u64 lanes fill one or two SIMD registers on every
+/// target the autovectorizer cares about (AVX2: 2×256b, AVX-512/SVE:
+/// 1×512b); the scalar remainder handles `len % 8` tail lanes.
+const LANE_CHUNK: usize = 8;
+
+/// `live[i] += sizes[i]` over one tag's lane run, in fixed-stride
+/// chunks so the backend emits packed adds instead of a scalar loop
+/// carried by the zip iterator.
+#[inline]
+fn add_lanes(live: &mut [u64], sizes: &[u64]) {
+    debug_assert_eq!(live.len(), sizes.len());
+    let mut lc = live.chunks_exact_mut(LANE_CHUNK);
+    let mut sc = sizes.chunks_exact(LANE_CHUNK);
+    for (l8, s8) in lc.by_ref().zip(sc.by_ref()) {
+        for i in 0..LANE_CHUNK {
+            l8[i] = l8[i].wrapping_add(s8[i]);
+        }
+    }
+    for (lv, sz) in lc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *lv = lv.wrapping_add(*sz);
+    }
+}
+
+/// `live[i] -= sizes[i]` over one tag's lane run; chunked like
+/// [`add_lanes`]. Wrapping keeps the chunk body branch-free — a
+/// genuine underflow would be a skeleton bug (free before alloc) that
+/// the handle table catches first.
+#[inline]
+fn sub_lanes(live: &mut [u64], sizes: &[u64]) {
+    debug_assert_eq!(live.len(), sizes.len());
+    let mut lc = live.chunks_exact_mut(LANE_CHUNK);
+    let mut sc = sizes.chunks_exact(LANE_CHUNK);
+    for (l8, s8) in lc.by_ref().zip(sc.by_ref()) {
+        for i in 0..LANE_CHUNK {
+            l8[i] = l8[i].wrapping_sub(s8[i]);
+        }
+    }
+    for (lv, sz) in lc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *lv = lv.wrapping_sub(*sz);
+    }
+}
+
 /// Replay one skeleton for `n_lanes` variants. `sizes` is the row-major
 /// lane table (`sizes[row * n_lanes + lane]`). Every lane's result is
 /// bitwise identical to replaying that lane's trace through the scalar
@@ -454,9 +497,7 @@ pub fn replay_lanes(skel: &Skeleton, sizes: &[u64], n_lanes: usize) -> GroupRepl
                 let base = row as usize * n;
                 let row_sizes = &sizes[base..base + n];
                 let tbase = skel.row_tag[row as usize].index() * n;
-                for (lv, sz) in live[tbase..tbase + n].iter_mut().zip(row_sizes) {
-                    *lv += *sz;
-                }
+                add_lanes(&mut live[tbase..tbase + n], row_sizes);
                 // Fork every class whose members disagree on this row's
                 // size — the incremental-re-replay divergence point.
                 // New classes are appended and then processed by the
@@ -484,9 +525,7 @@ pub fn replay_lanes(skel: &Skeleton, sizes: &[u64], n_lanes: usize) -> GroupRepl
             Op::Free { row } => {
                 let base = row as usize * n;
                 let tbase = skel.row_tag[row as usize].index() * n;
-                for (lv, sz) in live[tbase..tbase + n].iter_mut().zip(&sizes[base..base + n]) {
-                    *lv -= *sz;
-                }
+                sub_lanes(&mut live[tbase..tbase + n], &sizes[base..base + n]);
                 for class in &mut classes {
                     class.alloc.free(class.handles[row as usize]);
                     stats.engine_ops += 1;
@@ -780,6 +819,27 @@ mod tests {
         assert_eq!(group.replays[0], engine::replay(&evs).unwrap());
         assert_eq!(group.stats.final_classes, 1);
         assert_eq!(group.stats.forks, 0);
+    }
+
+    #[test]
+    fn chunked_lane_updates_match_scalar_loop() {
+        // Exercise every remainder length around the chunk width,
+        // including zero-length and sub-chunk slices.
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31] {
+            let sizes: Vec<u64> = (0..len as u64).map(|i| i * 977 + 13).collect();
+            let mut live: Vec<u64> = (0..len as u64).map(|i| i * 31 + 5).collect();
+            let mut want = live.clone();
+            add_lanes(&mut live, &sizes);
+            for (lv, sz) in want.iter_mut().zip(&sizes) {
+                *lv += *sz;
+            }
+            assert_eq!(live, want, "add len {len}");
+            sub_lanes(&mut live, &sizes);
+            for (lv, sz) in want.iter_mut().zip(&sizes) {
+                *lv -= *sz;
+            }
+            assert_eq!(live, want, "sub len {len}");
+        }
     }
 
     #[test]

@@ -309,8 +309,11 @@ fn wire_predictions_match_library_exactly() {
     server.shutdown();
 }
 
-/// Backpressure: with a depth-1 queue and the worker busy on plans,
-/// `try_submit` answers `over_capacity` instead of blocking.
+/// Backpressure is per admission tier: with a depth-1 queue and the
+/// worker busy on plans, `try_submit` of another *plan* answers
+/// `over_capacity` (the slow tier is full) while a `predict` — the
+/// fast tier — is still admitted and answered. A plan storm cannot
+/// starve interactive traffic.
 #[test]
 fn full_queue_answers_over_capacity() {
     let svc = PredictionService::start_analytical(ServiceConfig {
@@ -334,29 +337,52 @@ fn full_queue_answers_over_capacity() {
 
     let mut saw_over_capacity = false;
     for _ in 0..2000 {
+        let base = tiny();
         let resp = svc.try_submit(ApiRequest::new(
-            "bp",
-            Method::Predict(PredictParams {
-                cfg: tiny(),
-                capacity_mib: None,
-                detail: false,
+            "bp-slow",
+            Method::Plan(PlanParams {
+                req: PlanRequest {
+                    axes: Axes::fixed(&base),
+                    base,
+                    budget_mib: 1e9,
+                },
             }),
         ));
         match resp.result {
             Err(e) if e.code == ErrorCode::OverCapacity => {
                 assert!(e.message.contains("retry"), "{}", e.message);
+                assert!(
+                    e.message.contains("slow tier"),
+                    "rejection should name the saturated tier: {}",
+                    e.message
+                );
                 saw_over_capacity = true;
                 break;
             }
             _ => {}
         }
     }
+    // The fast tier stays open while the slow tier is saturated: a
+    // non-blocking predict is admitted (it waits behind at most one
+    // slow execution thanks to the worker's priority pop) and answers.
+    let resp = svc.try_submit(ApiRequest::new(
+        "bp-fast",
+        Method::Predict(PredictParams {
+            cfg: tiny(),
+            capacity_mib: None,
+            detail: false,
+        }),
+    ));
+    match &resp.result {
+        Ok(payload) => assert!(payload.get("prediction").is_some()),
+        Err(e) => panic!("fast tier was rejected during a plan storm: {:?}", e),
+    }
     for h in planners {
         h.join().unwrap().expect("plan");
     }
     assert!(
         saw_over_capacity,
-        "depth-1 queue under 8 queued plans never reported over_capacity"
+        "depth-1 slow tier under 8 queued plans never reported over_capacity"
     );
     svc.shutdown();
 }
@@ -380,8 +406,11 @@ fn per_method_metrics_advance_and_are_served() {
     assert_eq!(m.method_requests(0), 2, "predict counter");
     assert_eq!(m.method_requests(1), 1, "plan counter");
     assert_eq!(m.method_errors(0), 0);
-    let (p50, p95, max) = m.method_latency_us(1);
-    assert!(p50 > 0 && p95 >= p50 && max >= 1, "plan latency: {p50}/{p95}/{max}");
+    let (p50, p95, p99, max) = m.method_latency_us(1);
+    assert!(
+        p50 > 0 && p95 >= p50 && p99 >= p95 && max >= 1,
+        "plan latency: {p50}/{p95}/{p99}/{max}"
+    );
 
     let resp = svc.submit(ApiRequest::new("m", Method::Metrics));
     let payload = resp.result.unwrap();

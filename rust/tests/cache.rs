@@ -1,0 +1,189 @@
+//! Cache-correctness acceptance (PR 8): a geometry-keyed cache hit is
+//! only legal if it is **bitwise identical** to the cold answer it
+//! replaced. Every cached method (predict / simulate / baselines /
+//! modality) is exercised twice per config — across tp/pp parallel
+//! geometries and file-based architecture specs — and the repeated
+//! payload must serialize to the very same bytes, with the service
+//! metrics proving the second answer really was a hit. A zero-cap
+//! service must behave identically while never consulting the cache.
+
+use std::time::Duration;
+
+use mmpredict::api::{
+    self, ApiRequest, ApiResponse, BaselinesParams, Method, ModalityParams, PredictParams,
+    SimulateParams,
+};
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::batcher::BatchPolicy;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+
+fn tiny() -> TrainConfig {
+    TrainConfig {
+        model: "llava-tiny".into(),
+        mbs: 1,
+        seq_len: 32,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+fn arch_cfg(name: &str) -> TrainConfig {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/archs")
+        .join(name);
+    TrainConfig {
+        model: path.to_str().unwrap().to_string(),
+        seq_len: 4096,
+        mbs: 2,
+        dp: 2,
+        ..TrainConfig::llava_finetune_default()
+    }
+}
+
+fn start(cache_cap: usize) -> PredictionService {
+    PredictionService::start_analytical(ServiceConfig {
+        policy: BatchPolicy { max_batch: 8, batch_timeout: Duration::ZERO },
+        cache_cap,
+        ..Default::default()
+    })
+}
+
+/// One request per cached method for `cfg`.
+fn cached_method_requests(cfg: &TrainConfig, tag: &str) -> Vec<ApiRequest> {
+    vec![
+        ApiRequest::new(
+            format!("{tag}-predict"),
+            Method::Predict(PredictParams {
+                cfg: cfg.clone(),
+                capacity_mib: None,
+                detail: false,
+            }),
+        ),
+        ApiRequest::new(
+            format!("{tag}-simulate"),
+            Method::Simulate(SimulateParams { cfg: cfg.clone() }),
+        ),
+        ApiRequest::new(
+            format!("{tag}-baselines"),
+            Method::Baselines(BaselinesParams { cfg: cfg.clone() }),
+        ),
+        ApiRequest::new(
+            format!("{tag}-modality"),
+            Method::Modality(ModalityParams { cfg: cfg.clone() }),
+        ),
+    ]
+}
+
+fn ok_bytes(resp: ApiResponse, what: &str) -> String {
+    resp.result
+        .unwrap_or_else(|e| panic!("{what}: {e}"))
+        .to_string()
+}
+
+/// The acceptance matrix: every cached method, over single-GPU,
+/// tensor-parallel, pipeline-parallel and file-spec geometries. The
+/// repeat of each request must come back byte-identical, and the
+/// metrics must show one hit per repeat.
+#[test]
+fn cache_hits_are_bitwise_identical_across_methods_and_geometries() {
+    let svc = start(256);
+    let configs: Vec<(&str, TrainConfig)> = vec![
+        ("tiny", tiny()),
+        ("tp2", TrainConfig { tp: 2, ..tiny() }),
+        ("pp2", TrainConfig { pp: 2, ..tiny() }),
+        ("arch", arch_cfg("llava-interleave.toml")),
+    ];
+    let mut pairs = 0u64;
+    for (tag, cfg) in &configs {
+        for req in cached_method_requests(cfg, tag) {
+            let what = format!("{tag}/{}", req.method.name());
+            let cold = ok_bytes(svc.submit(req.clone()), &what);
+            let hit = ok_bytes(svc.submit(req.clone()), &what);
+            assert_eq!(cold, hit, "{what}: cached repeat diverged from the cold answer");
+            // a third probe: hits must be stable, not one-shot
+            let again = ok_bytes(svc.submit(req), &what);
+            assert_eq!(cold, again, "{what}: third answer diverged");
+            pairs += 1;
+        }
+    }
+    let (hits, misses) = svc.metrics().response_cache();
+    assert_eq!(misses, pairs, "exactly one cold miss per (config, method)");
+    assert_eq!(hits, 2 * pairs, "both repeats of every pair must hit");
+    svc.shutdown();
+}
+
+/// `--cache-cap 0` disables caching without changing a single byte of
+/// any answer: the repeated responses still agree (the pipeline is
+/// deterministic), but the metrics show the cache was never consulted.
+#[test]
+fn zero_cap_disables_caching_but_not_determinism() {
+    let svc = start(0);
+    for req in cached_method_requests(&tiny(), "z") {
+        let what = format!("zero-cap/{}", req.method.name());
+        let first = ok_bytes(svc.submit(req.clone()), &what);
+        let second = ok_bytes(svc.submit(req), &what);
+        assert_eq!(first, second, "{what}: cold path must stay deterministic");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.response_cache(), (0, 0), "cap 0 never consults the payload cache");
+    assert_eq!(m.parse_cache(), (0, 0), "cap 0 never consults the parse cache");
+    assert_eq!(m.sim_cache(), (0, 0), "cap 0 never consults the replay cache");
+    svc.shutdown();
+}
+
+/// Cached answers agree with a fresh, cache-free service: the cache can
+/// only ever replay what the cold pipeline would have produced.
+#[test]
+fn cached_service_agrees_with_uncached_service() {
+    let cached = start(256);
+    let uncached = start(0);
+    for (tag, cfg) in [
+        ("a", tiny()),
+        ("b", TrainConfig { seq_len: 64, ..tiny() }),
+        ("arch", arch_cfg("audio-lang.toml")),
+    ] {
+        for req in cached_method_requests(&cfg, tag) {
+            let what = format!("{tag}/{}", req.method.name());
+            // warm the cached service, then compare its *hit* against
+            // the uncached service's cold answer
+            let _ = ok_bytes(cached.submit(req.clone()), &what);
+            let hit = ok_bytes(cached.submit(req.clone()), &what);
+            let cold = ok_bytes(uncached.submit(req), &what);
+            assert_eq!(hit, cold, "{what}: hit diverged from a cache-free service");
+        }
+    }
+    let (hits, _) = cached.metrics().response_cache();
+    assert!(hits > 0, "the cached service must actually have served hits");
+    assert_eq!(uncached.metrics().response_cache(), (0, 0));
+    cached.shutdown();
+    uncached.shutdown();
+}
+
+/// Simulate answers flow through the incremental columnar replay on
+/// repeat geometries (dp/zero variations share one skeleton); the wire
+/// answer must not depend on whether the checkpointed replay or the
+/// scalar oracle produced it. api::SweepParams-style dp fans share the
+/// geometry, so the second config exercises the divergent-suffix path.
+#[test]
+fn incremental_simulate_matches_scalar_across_shard_variants() {
+    let svc = start(256);
+    let base = tiny();
+    let scalar = start(0);
+    for dp in [1u64, 2, 4] {
+        for zero in [
+            mmpredict::config::ZeroStage::Zero0,
+            mmpredict::config::ZeroStage::Zero2,
+        ] {
+            let cfg = TrainConfig { dp, zero, ..base.clone() };
+            let req = ApiRequest::new(
+                format!("s-dp{dp}-{zero:?}"),
+                Method::Simulate(api::SimulateParams { cfg }),
+            );
+            let what = format!("simulate dp{dp}/{zero:?}");
+            let inc = ok_bytes(svc.submit(req.clone()), &what);
+            let cold = ok_bytes(scalar.submit(req), &what);
+            assert_eq!(inc, cold, "{what}: incremental replay diverged from scalar");
+        }
+    }
+    svc.shutdown();
+    scalar.shutdown();
+}

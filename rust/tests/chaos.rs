@@ -23,7 +23,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use mmpredict::api::fault::{FaultPlan, FaultState};
+use mmpredict::api::fault::{FaultPlan, FaultState, Site};
 use mmpredict::api::serve::ServeOptions;
 use mmpredict::api::{self, ApiRequest, ApiResponse, ErrorCode, Method, PredictParams};
 use mmpredict::config::TrainConfig;
@@ -195,6 +195,7 @@ fn seeded_fault_storm_never_hangs_and_always_answers_or_disconnects() {
             std::thread::spawn(move || {
                 let mut client = RawClient::connect(addr);
                 let mut disconnects = 0usize;
+                let mut predict_payloads: Vec<String> = Vec::new();
                 for i in 0..REQS {
                     let id = format!("t{t}-r{i}");
                     let line = match i % 3 {
@@ -215,16 +216,27 @@ fn seeded_fault_storm_never_hangs_and_always_answers_or_disconnects() {
                                 );
                                 // errors are fine (injected), but they
                                 // must be structured ones
-                                if let Err(e) = &resp.result {
-                                    assert!(
-                                        matches!(
-                                            e.code,
-                                            ErrorCode::Internal
-                                                | ErrorCode::BackendUnavailable
-                                                | ErrorCode::OverCapacity
-                                        ),
-                                        "unexpected error under chaos: {e}"
-                                    );
+                                match &resp.result {
+                                    Err(e) => {
+                                        assert!(
+                                            matches!(
+                                                e.code,
+                                                ErrorCode::Internal
+                                                    | ErrorCode::BackendUnavailable
+                                                    | ErrorCode::OverCapacity
+                                            ),
+                                            "unexpected error under chaos: {e}"
+                                        );
+                                    }
+                                    // cache-consistency under chaos: the
+                                    // predict config is pinned, so every
+                                    // successful payload — cold, cached,
+                                    // or recomputed after a mid-storm
+                                    // respawn — must be byte-identical
+                                    Ok(payload) if i % 3 == 0 => {
+                                        predict_payloads.push(payload.to_string());
+                                    }
+                                    Ok(_) => {}
                                 }
                                 break;
                             }
@@ -240,11 +252,17 @@ fn seeded_fault_storm_never_hangs_and_always_answers_or_disconnects() {
                         }
                     }
                 }
-                disconnects
+                (disconnects, predict_payloads)
             })
         })
         .collect();
-    let disconnects: usize = handles.into_iter().map(|h| h.join().expect("client")).sum();
+    let mut disconnects = 0usize;
+    let mut payloads: Vec<String> = Vec::new();
+    for h in handles {
+        let (d, p) = h.join().expect("client");
+        disconnects += d;
+        payloads.extend(p);
+    }
     eprintln!(
         "storm: {} responses, {} clean disconnects, {} faults injected",
         CLIENTS * REQS,
@@ -252,6 +270,14 @@ fn seeded_fault_storm_never_hangs_and_always_answers_or_disconnects() {
         faults.injected()
     );
     assert!(faults.injected() > 0, "storm plan injected nothing");
+    assert!(!payloads.is_empty(), "the storm produced no successful predicts");
+    payloads.sort();
+    payloads.dedup();
+    assert_eq!(
+        payloads.len(),
+        1,
+        "a cached predict served stale or torn bytes under the storm"
+    );
     server.shutdown(); // must return (drain bounded)
 }
 
@@ -299,6 +325,59 @@ fn worker_panics_are_isolated_and_respawned() {
     }
     assert_eq!(ok + panicked, 32, "every request answered");
     assert!(ok > 0 && panicked > 0, "rate 0.5 should mix ({ok} ok, {panicked} panics)");
+    svc.shutdown();
+}
+
+/// A worker respawn must invalidate the response cache — nothing a
+/// poisoned backend computed may be served afterwards. The panic is
+/// injected *deterministically*: `FaultState::roll` is a pure function
+/// of (seed, site, per-site arrival number), so a twin probe state
+/// scans for a seed whose WorkerPanic sequence is exactly
+/// [ok, ok, panic, ok], and the service under test replays it.
+#[test]
+fn worker_respawn_invalidates_response_cache() {
+    let plan_for = |seed| FaultPlan { seed, worker_panic: 0.5, ..FaultPlan::default() };
+    // Only worker_panic has a nonzero rate, and zero-rate sites never
+    // consume arrivals — so job N draws WorkerPanic roll N, on the
+    // probe and on the service alike.
+    let seed = (0..10_000u64)
+        .find(|&s| {
+            let probe = FaultState::new(plan_for(s));
+            (0..4).map(|_| probe.roll(Site::WorkerPanic)).collect::<Vec<_>>()
+                == [false, false, true, false]
+        })
+        .expect("some seed yields the [ok, ok, panic, ok] sequence");
+    eprintln!("respawn-invalidation seed: {seed}");
+    let (svc, _faults) = service_with(plan_for(seed));
+    let modality = |id: &str| {
+        ApiRequest::new(id, Method::Modality(api::ModalityParams { cfg: tiny() }))
+    };
+
+    // roll 1 (ok): cold modality — computed and cached
+    let first = svc.submit(modality("m1")).result.expect("cold modality").to_string();
+    // roll 2 (ok): served from the cache, byte-identical
+    let second = svc.submit(modality("m2")).result.expect("cached modality").to_string();
+    assert_eq!(first, second, "cache hit diverged from the cold answer");
+    assert_eq!(svc.metrics().response_cache(), (1, 1), "second modality was a hit");
+
+    // roll 3 (panic): the predict batch panics -> respawn + cache clear.
+    // (The predict's own cache consult records one more miss first.)
+    let boom = svc.submit(ApiRequest::new(
+        "p1",
+        Method::Predict(PredictParams { cfg: tiny(), capacity_mib: None, detail: false }),
+    ));
+    assert_eq!(boom.result.unwrap_err().code, ErrorCode::Internal);
+    assert_eq!(svc.metrics().worker_restarts(), 1, "backend respawned exactly once");
+
+    // roll 4 (ok): the cleared cache recomputes — a miss again, and the
+    // recomputed payload must match the pre-panic bytes exactly.
+    let third = svc.submit(modality("m3")).result.expect("recomputed modality").to_string();
+    assert_eq!(first, third, "post-respawn recompute diverged");
+    assert_eq!(
+        svc.metrics().response_cache(),
+        (1, 3),
+        "respawn cleared the cache: m3 was a miss, not a stale hit"
+    );
     svc.shutdown();
 }
 

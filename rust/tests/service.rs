@@ -78,8 +78,17 @@ fn analytical_service_batches_envelopes_and_counts_methods() {
     assert_eq!(m.errors(), 0);
     assert_eq!(m.method_requests(0), 16, "predict method counter");
     assert!(m.batches() < 16, "batching should have happened: {}", m.summary());
-    let (p50, p95, max) = m.method_latency_us(0);
-    assert!(p50 > 0 && p95 >= p50 && max >= p95 / 2, "{p50}/{p95}/{max}");
+    let (p50, p95, p99, max) = m.method_latency_us(0);
+    assert!(
+        p50 > 0 && p95 >= p50 && p99 >= p95 && max >= p99 / 2,
+        "{p50}/{p95}/{p99}/{max}"
+    );
+    // 16 identical configs: the first is a cold miss, repeats may hit
+    // the geometry-keyed payload cache — but hits + cold answers must
+    // account for every request with no error either way.
+    let (hits, misses) = m.response_cache();
+    assert_eq!(hits + misses, 16, "every predict consults the cache");
+    assert!(misses >= 1, "first arrival can never hit");
     svc.shutdown();
 }
 
