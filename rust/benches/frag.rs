@@ -1,0 +1,92 @@
+//! Smoke bench for the placement subsystem: lifetime extraction and
+//! interval packing on a real LLaVA-1.5-7B training trace, plus the
+//! full `frag` analysis end to end (replay + packing + alternate
+//! allocator policies), with the headroom the analysis reports.
+//!
+//! Emits machine-readable `BENCH_frag.json` (written *before* any
+//! floor assertions so CI uploads numbers even on a failing floor).
+//!
+//! Run: `cargo bench --bench frag`
+
+use mmpredict::config::TrainConfig;
+use mmpredict::parser;
+use mmpredict::placement::{self, solver};
+use mmpredict::simulator::trace;
+use mmpredict::util::bench::{bench, report};
+use mmpredict::util::json_mini::{obj, Json};
+
+fn main() {
+    let cfg = TrainConfig::fig2b(8);
+    let pm = parser::parse(&cfg).expect("parse fig2b");
+    let events = trace::generate(&pm, &cfg);
+    let js = solver::extract(&events).expect("extract");
+    println!(
+        "workload: fig2b dp8 (LLaVA-1.5-7B), {} trace events, {} lifetimes\n",
+        events.len(),
+        js.jobs.len()
+    );
+
+    // -- solver stages ---------------------------------------------------
+    let extract = bench("lifetime extraction (trace -> jobset)", 2, 40, || {
+        let _ = solver::extract(&events).unwrap();
+    });
+    report(&extract);
+    let pack = bench("interval packing (ffd + boxed + birth-order)", 2, 20, || {
+        let _ = solver::pack(&js);
+    });
+    report(&pack);
+
+    // -- full analysis (replay + packing + 2 policy replays) -------------
+    let analyze = bench("full frag analysis (analyze_parsed)", 2, 12, || {
+        let _ = placement::analyze_parsed(&pm, &cfg, 5).unwrap();
+    });
+    report(&analyze);
+
+    let r = placement::analyze_parsed(&pm, &cfg, 5).expect("analysis");
+    println!(
+        "\nheadroom: {:.1} MiB ({:.1}% of reserved) via {}; recommended policy: {}",
+        r.headroom_mib,
+        r.headroom_frac * 100.0,
+        r.strategy,
+        r.recommended_policy
+    );
+
+    let json = obj(vec![
+        ("workload", Json::Str("fig2b dp8 (LLaVA-1.5-7B)".to_string())),
+        ("trace_events", Json::Num(events.len() as f64)),
+        ("lifetimes", Json::Num(js.jobs.len() as f64)),
+        ("extract_per_sec", Json::Num(extract.throughput_per_sec())),
+        ("pack_per_sec", Json::Num(pack.throughput_per_sec())),
+        ("analyze_per_sec", Json::Num(analyze.throughput_per_sec())),
+        (
+            "analysis",
+            obj(vec![
+                ("caching_peak_mib", Json::Num(r.caching_peak_mib)),
+                ("max_live_mib", Json::Num(r.max_live_mib)),
+                ("optimal_peak_mib", Json::Num(r.optimal_peak_mib)),
+                ("headroom_mib", Json::Num(r.headroom_mib)),
+                ("headroom_frac", Json::Num(r.headroom_frac)),
+                ("frag_frac", Json::Num(r.frag_frac)),
+                ("strategy", Json::Str(r.strategy.to_string())),
+                ("recommended_policy", Json::Str(r.recommended_policy.to_string())),
+            ]),
+        ),
+    ]);
+    // cargo bench runs with cwd = package root (rust/); anchor the
+    // output to the workspace root regardless of invocation cwd
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_frag.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_frag.json");
+    println!("wrote {out}");
+
+    // floors AFTER the artifact is on disk: the sandwich must hold on
+    // the bench workload, and the analysis must stay interactive
+    assert!(r.max_live_mib <= r.optimal_peak_mib + 1e-9, "sandwich lower bound");
+    assert!(
+        r.optimal_peak_mib <= r.caching_peak_reserved_mib + 1e-9,
+        "sandwich upper bound"
+    );
+    assert!(
+        analyze.mean.as_secs_f64() < 5.0,
+        "frag analysis exceeded the 5 s interactive floor"
+    );
+}

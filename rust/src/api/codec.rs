@@ -23,9 +23,11 @@ use crate::report::ModalityShare;
 use crate::simulator::Measurement;
 use crate::util::json_mini::{obj, Json};
 
+use crate::placement::FragReport;
+
 use super::{
-    ApiError, BaselinesParams, ErrorCode, Method, ModalityParams, PlanParams, PredictParams,
-    SimulateParams, SweepParams, METHOD_NAMES,
+    ApiError, BaselinesParams, ErrorCode, FragParams, Method, ModalityParams, PlanParams,
+    PredictParams, SimulateParams, SweepParams, METHOD_NAMES,
 };
 
 // ---------------------------------------------------------------- helpers
@@ -508,6 +510,20 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
                 cfg: require_config(m, "modality")?,
             }))
         }
+        "frag" => {
+            strict_keys(m, &["config", "parallelism", "top_k"], "frag params")?;
+            let top_k = get_u64(m, "top_k", "params")?
+                .unwrap_or(crate::placement::DEFAULT_TOP_K as u64);
+            if top_k > 100 {
+                return Err(ApiError::bad_request(format!(
+                    "params.top_k must be <= 100, got {top_k}"
+                )));
+            }
+            Ok(Method::Frag(FragParams {
+                cfg: require_config(m, "frag")?,
+                top_k,
+            }))
+        }
         "models" => {
             strict_keys(m, &[], "models params")?;
             Ok(Method::Models)
@@ -582,6 +598,18 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
         Method::Simulate(p) => Some(config_params(&p.cfg)),
         Method::Baselines(p) => Some(config_params(&p.cfg)),
         Method::Modality(p) => Some(config_params(&p.cfg)),
+        Method::Frag(p) => {
+            let mut e = vec![("config", config_to_json(&p.cfg))];
+            if let Some(par) = parallelism_to_json(&p.cfg) {
+                e.push(("parallelism", par));
+            }
+            // Additive: emitted only when off the default, so default
+            // frag requests stay minimal.
+            if p.top_k != crate::placement::DEFAULT_TOP_K as u64 {
+                e.push(("top_k", num(p.top_k as f64)));
+            }
+            Some(obj(e))
+        }
         Method::Models | Method::Metrics | Method::Health => None,
     }
 }
@@ -714,32 +742,96 @@ pub fn prediction_from_json(v: &Json) -> Result<Prediction, ApiError> {
     })
 }
 
+fn breakdown_to_json(b: &crate::simulator::Breakdown) -> Json {
+    Json::Obj(
+        b.entries()
+            .iter()
+            .filter(|(_, bytes)| *bytes > 0)
+            .map(|(tag, bytes)| (tag.as_str().to_string(), num(*bytes as f64)))
+            .collect(),
+    )
+}
+
 pub fn measurement_to_json(m: &Measurement) -> Json {
-    let breakdown = |b: &crate::simulator::Breakdown| {
-        Json::Obj(
-            b.entries()
-                .iter()
-                .filter(|(_, bytes)| *bytes > 0)
-                .map(|(tag, bytes)| (tag.as_str().to_string(), num(*bytes as f64)))
-                .collect(),
-        )
-    };
     let mut entries = vec![
         ("peak_mib", num(m.peak_mib)),
         ("peak_allocated_mib", num(m.peak_allocated_mib)),
         ("peak_reserved_mib", num(m.peak_reserved_mib)),
         ("cuda_ctx_mib", num(m.cuda_ctx_mib)),
         ("frag_frac", num(m.frag_frac)),
+        // Additive alias under the paper's name for the ratio; clients
+        // reading the documented `fragmentation` key and clients that
+        // predate it (reading `frag_frac`) see the same number.
+        ("fragmentation", num(m.frag_frac)),
         ("peak_phase", s(m.peak_phase)),
         ("alloc_count", num(m.alloc_count as f64)),
-        ("at_peak_bytes", breakdown(&m.at_peak)),
-        ("persistent_bytes", breakdown(&m.persistent)),
+        ("at_peak_bytes", breakdown_to_json(&m.at_peak)),
+        ("persistent_bytes", breakdown_to_json(&m.persistent)),
     ];
     // Additive: which pipeline stage this per-rank measurement
     // describes. Emitted only when non-zero (absent = stage 0 /
     // single device), keeping pre-parallelism payloads byte-identical.
     if m.pp_stage > 0 {
         entries.push(("pp_stage", num(m.pp_stage as f64)));
+    }
+    obj(entries)
+}
+
+/// Serialize a [`FragReport`] as the `frag` response payload. Key names
+/// match the measurement payload where the quantities coincide
+/// (`frag_frac`, `peak_phase`, `at_peak_bytes`); `pp_stage` is additive
+/// exactly as in [`measurement_to_json`].
+pub fn frag_report_to_json(r: &FragReport) -> Json {
+    let mut entries = vec![
+        ("caching_peak_mib", num(r.caching_peak_mib)),
+        ("caching_peak_reserved_mib", num(r.caching_peak_reserved_mib)),
+        ("caching_peak_allocated_mib", num(r.caching_peak_allocated_mib)),
+        ("max_live_mib", num(r.max_live_mib)),
+        ("optimal_peak_mib", num(r.optimal_peak_mib)),
+        ("rescued_peak_mib", num(r.rescued_peak_mib)),
+        ("headroom_mib", num(r.headroom_mib)),
+        ("headroom_frac", num(r.headroom_frac)),
+        ("frag_frac", num(r.frag_frac)),
+        ("strategy", s(r.strategy)),
+        ("lifetimes", num(r.lifetimes as f64)),
+        ("events", num(r.events as f64)),
+        ("peak_phase", s(r.peak_phase)),
+        ("at_peak_bytes", breakdown_to_json(&r.at_peak)),
+        (
+            "top",
+            Json::Arr(
+                r.top
+                    .iter()
+                    .map(|t| {
+                        obj(vec![
+                            ("tag", s(t.tag)),
+                            ("size_mib", num(t.size_mib)),
+                            ("birth_phase", s(t.birth_phase)),
+                            ("span_events", num(t.span_events as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "policies",
+            Json::Arr(
+                r.policies
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("name", s(p.name)),
+                            ("peak_reserved_mib", num(p.peak_reserved_mib)),
+                            ("frag_frac", num(p.frag_frac)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("recommended_policy", s(r.recommended_policy)),
+    ];
+    if r.pp_stage > 0 {
+        entries.push(("pp_stage", num(r.pp_stage as f64)));
     }
     obj(entries)
 }
@@ -907,6 +999,10 @@ fn candidate_from_json(v: &Json, base: &TrainConfig) -> Result<PlanCandidate, Ap
         escalation,
         dominated: get_bool(m, "dominated", "plan candidate")?.unwrap_or(false),
         binding_stage: get_u64(m, "binding_stage", "plan candidate")?.unwrap_or(0) as usize,
+        // Additive fragmentation annotations (absent on pre-frag and
+        // degraded analytical-only plans).
+        frag_headroom_mib: get_f64(m, "frag_headroom_mib", "plan candidate")?,
+        frag_rescuable: get_bool(m, "frag_rescuable", "plan candidate")?.unwrap_or(false),
         cfg,
     })
 }

@@ -538,6 +538,13 @@ pub(crate) fn simulate_payload_incremental(
     Ok(obj(vec![("measurement", codec::measurement_to_json(&m))]))
 }
 
+/// The `frag` ok-payload: the placement-analysis report as a flat
+/// document (see [`codec::frag_report_to_json`] for the key set).
+pub(crate) fn frag_payload(cfg: &TrainConfig, top_k: usize) -> Result<Json, ApiError> {
+    let r = crate::placement::analyze(cfg, top_k).map_err(classify)?;
+    Ok(codec::frag_report_to_json(&r))
+}
+
 pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
     if cfg.tp > 1 || cfg.pp > 1 {
         // The prior-work baselines are single-device formulations (dp/
@@ -725,7 +732,7 @@ impl Dispatcher {
 
     /// Attach the shared serving cache (builder style). Only `ok`
     /// payloads of the pure methods (`simulate`, `baselines`,
-    /// `modality`) are served from it here; the service worker handles
+    /// `modality`, `frag`) are served from it here; the service worker handles
     /// `predict` payload caching itself (predictions route through the
     /// batcher, not this dispatcher).
     pub fn with_response_cache(mut self, cache: Arc<ResponseCache>) -> Self {
@@ -886,6 +893,20 @@ impl Dispatcher {
                 }
                 None => modality_payload(&p.cfg, None),
             },
+            Method::Frag(p) => match self.cache.as_deref() {
+                Some(cache) => {
+                    // top_k changes the payload, so it is part of the key
+                    let variant = format!("top{}", p.top_k);
+                    let key = ResponseCache::response_key("frag", &p.cfg, &variant);
+                    if let Some(hit) = cache.response(&key) {
+                        return Ok((*hit).clone());
+                    }
+                    let payload = frag_payload(&p.cfg, p.top_k as usize)?;
+                    cache.insert_response(&key, Arc::new(payload.clone()));
+                    Ok(payload)
+                }
+                None => frag_payload(&p.cfg, p.top_k as usize),
+            },
             Method::Models => models_payload(),
             Method::Metrics => Ok(metrics_payload(&self.metrics)),
             Method::Health => Ok(health_payload(
@@ -959,6 +980,7 @@ mod tests {
             Method::Models,
             Method::Metrics,
             Method::Health,
+            Method::Frag(crate::api::FragParams { cfg: cfg.clone(), top_k: 3 }),
         ];
         for (i, method) in reqs.into_iter().enumerate() {
             let req = ApiRequest::new(format!("t{i}"), method);
@@ -972,6 +994,30 @@ mod tests {
         assert_eq!(d.metrics().method_requests(3), 1); // simulate
         assert_eq!(d.metrics().method_requests(7), 1); // metrics
         assert_eq!(d.metrics().method_requests(8), 1); // health
+        assert_eq!(d.metrics().method_requests(9), 1); // frag
+    }
+
+    #[test]
+    fn frag_payload_cached_per_top_k() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(ResponseCache::new(8, Arc::clone(&metrics)));
+        let mut d = Dispatcher::analytical().with_response_cache(Arc::clone(&cache));
+        let cfg = tiny();
+        let frag = |k| {
+            ApiRequest::new(format!("f{k}"), Method::Frag(crate::api::FragParams {
+                cfg: cfg.clone(),
+                top_k: k,
+            }))
+        };
+        let first = d.handle(&frag(3)).result.unwrap();
+        let again = d.handle(&frag(3)).result.unwrap();
+        assert_eq!(first, again);
+        let (hits, misses) = metrics.response_cache();
+        assert_eq!((hits, misses), (1, 1), "second identical request must hit");
+        // a different top_k is a different document, so a different key
+        let other = d.handle(&frag(1)).result.unwrap();
+        assert_ne!(first, other);
+        assert_eq!(metrics.response_cache(), (1, 2));
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! The paper's deployment story is a *screening service* — schedulers
 //! ask "will this configuration fit?" before cluster time is spent —
 //! and every capability of this crate (predict / plan / sweep /
-//! simulate / baselines / modality / models / metrics) is reachable
-//! through the same envelope:
+//! simulate / baselines / modality / models / metrics / frag) is
+//! reachable through the same envelope:
 //!
 //! ```text
 //! request:   {"v":1, "id":"r1", "method":"predict", "params":{...}}
@@ -55,7 +55,7 @@ use crate::util::json_mini::{obj, Json};
 pub const VERSION: u64 = 1;
 
 /// Number of API methods (sizes the per-method metrics arrays).
-pub const NUM_METHODS: usize = 9;
+pub const NUM_METHODS: usize = 10;
 
 /// Canonical method names, in [`Method::index`] order.
 pub const METHOD_NAMES: [&str; NUM_METHODS] = [
@@ -68,6 +68,7 @@ pub const METHOD_NAMES: [&str; NUM_METHODS] = [
     "models",
     "metrics",
     "health",
+    "frag",
 ];
 
 /// Structured error codes (the `error.code` wire field).
@@ -231,6 +232,15 @@ pub struct ModalityParams {
     pub cfg: TrainConfig,
 }
 
+/// `frag` parameters: fragmentation & placement analysis of one
+/// configuration (see [`crate::placement`]).
+#[derive(Clone, Debug)]
+pub struct FragParams {
+    pub cfg: TrainConfig,
+    /// Number of top fragmenting lifetimes to report.
+    pub top_k: u64,
+}
+
 /// The typed method enum — every capability of the crate, one request
 /// shape each. Wire names are [`METHOD_NAMES`].
 #[derive(Clone, Debug)]
@@ -249,6 +259,9 @@ pub enum Method {
     /// Liveness/pressure snapshot: queue depth, worker restarts,
     /// degradation counters, fault-injection status.
     Health,
+    /// Fragmentation & placement analysis: caching vs offline-optimal
+    /// peak, headroom, allocator-policy recommendations.
+    Frag(FragParams),
 }
 
 impl Method {
@@ -270,6 +283,7 @@ impl Method {
             Method::Models => 6,
             Method::Metrics => 7,
             Method::Health => 8,
+            Method::Frag(_) => 9,
         }
     }
 }
@@ -601,6 +615,10 @@ mod tests {
             Method::Models,
             Method::Metrics,
             Method::Health,
+            Method::Frag(FragParams {
+                cfg: TrainConfig::llava_finetune_default(),
+                top_k: 5,
+            }),
         ];
         assert_eq!(methods.len(), NUM_METHODS);
         for (i, m) in methods.iter().enumerate() {

@@ -171,6 +171,115 @@ pub fn sweep_table(payload: &Json, with_verdict: bool) -> Result<report::Table, 
     Ok(t)
 }
 
+/// Render a `frag` payload as the `repro frag` report text: the
+/// sandwich numbers, the largest lifetimes live at the peak, and the
+/// alternate allocator-policy outcomes.
+pub fn frag_text(payload: &Json) -> Result<String, ApiError> {
+    use std::fmt::Write as _;
+    let f = |key: &str| -> Result<f64, ApiError> {
+        payload
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ApiError::bad_request(format!("frag payload missing {key:?}")))
+    };
+    let st = |key: &str| -> Result<&str, ApiError> {
+        payload
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request(format!("frag payload missing {key:?}")))
+    };
+
+    let mut out = String::new();
+    // additive field: absent means pp == 1
+    let stage = match payload.get("pp_stage").and_then(Json::as_u64) {
+        Some(s) => format!(" of binding pipeline stage {s}"),
+        None => String::new(),
+    };
+    let _ = writeln!(
+        out,
+        "fragmentation analysis{stage} (peak in {}):",
+        st("peak_phase")?
+    );
+    let _ = writeln!(
+        out,
+        "  caching peak    {} (reserved {}, allocated {})",
+        human_mib(f("caching_peak_mib")?),
+        human_mib(f("caching_peak_reserved_mib")?),
+        human_mib(f("caching_peak_allocated_mib")?),
+    );
+    let _ = writeln!(out, "  max live        {}", human_mib(f("max_live_mib")?));
+    let _ = writeln!(
+        out,
+        "  optimal packing {} (via {})",
+        human_mib(f("optimal_peak_mib")?),
+        st("strategy")?
+    );
+    let _ = writeln!(out, "  rescued peak    {}", human_mib(f("rescued_peak_mib")?));
+    let _ = writeln!(
+        out,
+        "  headroom        {} ({:.1}% of reserved)",
+        human_mib(f("headroom_mib")?),
+        f("headroom_frac")? * 100.0
+    );
+    let _ = writeln!(out, "  fragmentation   {:.2}%", f("frag_frac")? * 100.0);
+    let _ = writeln!(
+        out,
+        "lifetimes: {} over {} trace events",
+        f("lifetimes")? as u64,
+        f("events")? as u64
+    );
+    if let Some(top) = payload.get("top").and_then(Json::as_arr) {
+        if !top.is_empty() {
+            let mut t = report::Table::new(vec!["tag", "size", "born in", "span (events)"]);
+            for j in top {
+                let g = |key: &str| -> Result<f64, ApiError> {
+                    j.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                        ApiError::bad_request(format!("frag top entry missing {key:?}"))
+                    })
+                };
+                let tag = j
+                    .get("tag")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ApiError::bad_request("frag top entry missing \"tag\""))?;
+                let phase = j.get("birth_phase").and_then(Json::as_str).unwrap_or("-");
+                t.row(vec![
+                    tag.to_string(),
+                    human_mib(g("size_mib")?),
+                    phase.to_string(),
+                    (g("span_events")? as u64).to_string(),
+                ]);
+            }
+            let _ = writeln!(out, "largest lifetimes live at peak:");
+            let _ = writeln!(out, "{}", t.render());
+        }
+    }
+    let policies = payload
+        .get("policies")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("frag payload missing \"policies\" array"))?;
+    let mut t = report::Table::new(vec!["allocator policy", "peak reserved", "frag %"]);
+    for p in policies {
+        let name = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("frag policy missing \"name\""))?;
+        let g = |key: &str| -> Result<f64, ApiError> {
+            p.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::bad_request(format!("frag policy missing {key:?}")))
+        };
+        t.row(vec![
+            name.to_string(),
+            human_mib(g("peak_reserved_mib")?),
+            format!("{:.2}", g("frag_frac")? * 100.0),
+        ]);
+    }
+    let _ = writeln!(out, "allocator policies:");
+    let _ = writeln!(out, "{}", t.render());
+    let _ = writeln!(out, "recommended policy: {}", st("recommended_policy")?);
+    Ok(out)
+}
+
 /// Number of points in a `sweep` payload (for the CLI's summary line).
 pub fn sweep_points(payload: &Json) -> usize {
     payload

@@ -29,7 +29,7 @@
 //!
 //! * **Two-tier admission** — cheap methods (`predict`, `models`,
 //!   `metrics`, `health`) and heavy ones (`plan`, `sweep`, `simulate`,
-//!   `baselines`, `modality`) queue on separate bounded channels, each
+//!   `baselines`, `modality`, `frag`) queue on separate bounded channels, each
 //!   `queue_depth` deep. The worker drains the fast tier into batches
 //!   and pops **at most one** slow job per cycle, so a plan/sweep storm
 //!   can never starve interactive traffic, and `over_capacity` fires

@@ -13,7 +13,9 @@
 //!   prior-work baselines ([`baselines`]), a batched prediction service
 //!   ([`coordinator`]), a parallel config-grid sweep engine ([`sweep`]),
 //!   an OOM-safe capacity planner that searches the safe-configuration
-//!   frontier under a memory budget ([`planner`]), and the evaluation
+//!   frontier under a memory budget ([`planner`]), a fragmentation &
+//!   placement analyzer that bounds how much of a peak is allocator
+//!   waste ([`placement`]), and the evaluation
 //!   harness regenerating every figure of the paper ([`eval`],
 //!   [`report`]).
 //! Every capability is also reachable over a versioned wire protocol
@@ -79,6 +81,7 @@ pub mod eval;
 pub mod inference;
 pub mod model;
 pub mod parser;
+pub mod placement;
 pub mod planner;
 pub mod predictor;
 pub mod report;

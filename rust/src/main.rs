@@ -12,6 +12,9 @@
 //! * `plan`      — search the OOM-safe configuration frontier under a
 //!   per-GPU memory budget and rank it by throughput (the capacity
 //!   planner).
+//! * `frag`      — fragmentation & placement analysis: how much of the
+//!   simulated peak an offline-optimal packing of the same allocation
+//!   lifetimes would reclaim, plus allocator-policy recommendations.
 //! * `eval`      — regenerate the paper's Fig. 2a/2b sweeps (+ CSV).
 //! * `sweep`     — fan a config grid (DP × MBS × SeqLen × ZeRO) across
 //!   cores through the parallel sweep engine; predicted vs measured per
@@ -29,7 +32,7 @@ use anyhow::{bail, Context, Result};
 
 use mmpredict::api::dispatch::{AnalyticalEstimator, Dispatcher, TensorizedEstimator};
 use mmpredict::api::{
-    self, ApiRequest, Method, PlanParams, PredictParams, SweepParams,
+    self, ApiRequest, FragParams, Method, PlanParams, PredictParams, SweepParams,
 };
 use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
 use mmpredict::coordinator::batcher::BatchPolicy;
@@ -50,6 +53,7 @@ const SUBCOMMANDS: &[(&str, &str, fn(&Args) -> Result<()>)] = &[
     ("plan", "search the OOM-safe config frontier under a memory budget", cmd_plan),
     ("eval", "regenerate the paper's Fig. 2a/2b sweeps (+ CSV)", cmd_eval),
     ("sweep", "fan a config grid across cores; predicted vs measured per point", cmd_sweep),
+    ("frag", "fragmentation analysis: offline-optimal packing vs the caching allocator", cmd_frag),
     ("ablations", "factor/stage/ZeRO/LoRA/attention ablation tables", cmd_ablations),
     ("baselines", "compare against Fujii/LLMem/profiling baselines", cmd_baselines),
     ("infer", "inference/KV-cache memory prediction", cmd_infer),
@@ -134,6 +138,9 @@ fn print_help() {
          \x20 --no-columnar             per-point scalar replay instead of the\n\
          \x20                           columnar lane engine (A/B oracle; also\n\
          \x20                           REPRO_NO_COLUMNAR=1)\n\
+         frag options:\n\
+         \x20 --top N                   largest lifetimes to list (default 5)\n\
+         \x20 --json                    emit the raw frag payload as JSON\n\
          eval options:\n\
          \x20 --figure <2a|2b|all>      which sweep (default all)\n\
          \x20 --out <dir>               write CSVs (default results/)\n\
@@ -525,6 +532,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_frag(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let top_k = args.get_parse::<u64>("top")?.unwrap_or(5);
+    // The CLI is a wire client of itself: the same envelope `repro
+    // serve` executes, rendered by api::render::frag_text.
+    let mut d = Dispatcher::analytical();
+    let req = ApiRequest {
+        id: None,
+        method: Method::Frag(FragParams { cfg, top_k }),
+        deadline_ms: None,
+    };
+    let payload = d.handle(&req).into_result()?;
+    if args.flag("json") {
+        println!("{payload}");
+        return Ok(());
+    }
+    print!("{}", api::render::frag_text(&payload)?);
     Ok(())
 }
 

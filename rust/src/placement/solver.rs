@@ -1,0 +1,347 @@
+//! Lifetime extraction and offline placement packing.
+//!
+//! Lowers an event trace into a jobset of allocation lifetimes
+//! (`(size, birth_event, death_event, tag)` intervals) and computes a
+//! near-optimal address-space high-water mark by packing those
+//! intervals with first-fit under several deterministic orders
+//! (idealloc-style: first-fit-decreasing over the interval graph, plus
+//! a boxing/coalescing refinement that groups small short-lived jobs
+//! into segment-sized boxes before packing).
+//!
+//! Guarantees (`placement` module docs spell out the sandwich bound):
+//!
+//! * every packing variant is a *feasible* placement — temporally
+//!   overlapping jobs get disjoint address ranges — so its high-water
+//!   mark is an achievable reservation, and therefore an upper bound
+//!   on the true optimum and a lower bound witness against the caching
+//!   allocator's `peak_reserved`;
+//! * `max_live` (the peak sum of concurrently live rounded sizes) is a
+//!   lower bound on *any* placement, including the optimum;
+//! * everything here is single-threaded and order-deterministic: the
+//!   same trace always produces the same packing, regardless of sweep
+//!   thread counts.
+
+use anyhow::{bail, Result};
+
+use crate::simulator::allocator::{ROUND, SMALL_LIMIT, SMALL_SEGMENT};
+use crate::simulator::trace::{Event, Tag};
+
+/// One allocation lifetime: a half-open event interval
+/// `[birth, death)` during which `bytes` (rounded to the allocator's
+/// 512 B granularity) must occupy a dedicated address range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lifetime {
+    /// Request size rounded up to [`ROUND`] — the same rounding the
+    /// caching allocator applies, so jobset byte totals are comparable
+    /// to allocator stats.
+    pub bytes: u64,
+    /// Index of the `Alloc` event.
+    pub birth: usize,
+    /// Index of the `Free` event (exclusive); `events.len()` for
+    /// allocations that survive the iteration (persistent state).
+    pub death: usize,
+    pub tag: Tag,
+    /// Phase active when the allocation was made.
+    pub birth_phase: &'static str,
+}
+
+impl Lifetime {
+    /// Whether two lifetimes are ever live at the same event.
+    #[inline]
+    pub fn overlaps(&self, other: &Lifetime) -> bool {
+        self.birth < other.death && other.birth < self.death
+    }
+
+    /// Events this lifetime spans.
+    pub fn span_events(&self) -> usize {
+        self.death - self.birth
+    }
+}
+
+/// A trace lowered to lifetimes.
+#[derive(Clone, Debug)]
+pub struct Jobset {
+    pub jobs: Vec<Lifetime>,
+    /// Length of the source trace (the event-index space).
+    pub events: usize,
+    /// Peak of the sum of concurrently live rounded sizes — the
+    /// placement-independent lower bound.
+    pub max_live: u64,
+    /// Event index at which `max_live` is first reached.
+    pub peak_event: usize,
+}
+
+impl Jobset {
+    /// Lifetimes live at `event`, i.e. candidates for "what holds the
+    /// memory at the peak".
+    pub fn live_at(&self, event: usize) -> impl Iterator<Item = &Lifetime> {
+        self.jobs.iter().filter(move |j| j.birth <= event && event < j.death)
+    }
+}
+
+/// Lower a trace into its jobset. Enforces the same dense-id trace
+/// invariants as the replay engine (ids `< events.len()`, no reuse, no
+/// unknown frees), so a trace that replays also extracts.
+pub fn extract(events: &[Event]) -> Result<Jobset> {
+    let mut jobs: Vec<Lifetime> = Vec::new();
+    let mut slots: Vec<Option<usize>> = vec![None; events.len()];
+    let mut live = 0u64;
+    let mut max_live = 0u64;
+    let mut peak_event = 0usize;
+    let mut phase = "startup";
+    for (i, ev) in events.iter().enumerate() {
+        match *ev {
+            Event::Phase { name } => phase = name,
+            Event::Alloc { id, bytes, tag } => {
+                let Some(slot) = usize::try_from(id).ok().filter(|&s| s < events.len()) else {
+                    bail!("trace id {id} outside dense range 0..{}", events.len());
+                };
+                if slots[slot].is_some() {
+                    bail!("trace reused id {id}");
+                }
+                let size = bytes.max(1).div_ceil(ROUND) * ROUND;
+                slots[slot] = Some(jobs.len());
+                jobs.push(Lifetime {
+                    bytes: size,
+                    birth: i,
+                    death: events.len(),
+                    tag,
+                    birth_phase: phase,
+                });
+                live += size;
+                if live > max_live {
+                    max_live = live;
+                    peak_event = i;
+                }
+            }
+            Event::Free { id } => {
+                let job = usize::try_from(id)
+                    .ok()
+                    .and_then(|s| slots.get_mut(s))
+                    .and_then(Option::take);
+                let Some(j) = job else {
+                    bail!("trace freed unknown id {id}");
+                };
+                jobs[j].death = i;
+                live -= jobs[j].bytes;
+            }
+        }
+    }
+    Ok(Jobset { jobs, events: events.len(), max_live, peak_event })
+}
+
+/// Result of packing a jobset: the smallest high-water mark among the
+/// packing variants, and which variant achieved it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Packing {
+    /// Address-space high-water mark of the winning feasible placement.
+    pub high_water: u64,
+    /// Winning variant: `"ffd"`, `"boxed-ffd"` or `"birth-order"`.
+    pub strategy: &'static str,
+}
+
+/// A placement job stripped to what the packer needs (boxes are
+/// synthetic spans with no single tag).
+#[derive(Clone, Copy)]
+struct Span {
+    bytes: u64,
+    birth: usize,
+    death: usize,
+}
+
+/// Place `order`'s jobs first-fit at the lowest address gap that is
+/// free for the job's whole lifetime, and return the high-water mark.
+///
+/// For each job, the address intervals of already-placed temporally
+/// overlapping jobs are collected and scanned in address order; the
+/// cursor settles in the first gap wide enough. Intervals may overlap
+/// each other (two placed jobs that both overlap the new job need not
+/// overlap one another), which the `max` scan handles.
+fn first_fit(spans: &[Span], order: &[usize]) -> u64 {
+    let mut offsets: Vec<u64> = vec![0; spans.len()];
+    let mut placed: Vec<usize> = Vec::with_capacity(spans.len());
+    let mut intervals: Vec<(u64, u64)> = Vec::new();
+    let mut high = 0u64;
+    for &ji in order {
+        let j = spans[ji];
+        intervals.clear();
+        for &pi in &placed {
+            let p = spans[pi];
+            if p.birth < j.death && j.birth < p.death {
+                intervals.push((offsets[pi], offsets[pi] + p.bytes));
+            }
+        }
+        intervals.sort_unstable();
+        let mut cursor = 0u64;
+        for &(start, end) in &intervals {
+            if start >= cursor + j.bytes {
+                break;
+            }
+            cursor = cursor.max(end);
+        }
+        offsets[ji] = cursor;
+        placed.push(ji);
+        high = high.max(cursor + j.bytes);
+    }
+    high
+}
+
+/// First-fit-decreasing order: biggest jobs claim low addresses first,
+/// ties broken by birth then index — fully deterministic.
+fn ffd_order(spans: &[Span]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(spans[i].bytes), spans[i].birth, i));
+    order
+}
+
+/// Boxing refinement: small jobs (< [`SMALL_LIMIT`]) are greedily
+/// grouped, in birth order, into the first box with room under a
+/// [`SMALL_SEGMENT`] capacity; each box member gets a static
+/// sub-offset (cumulative fill) valid for the member's whole life, so
+/// a box is itself a feasible placement of its members. The boxes and
+/// the untouched large jobs are then packed FFD. This mirrors the
+/// allocator's small-pool segments and stops thousands of short tiny
+/// lifetimes from shredding the interval graph.
+fn boxed_ffd(spans: &[Span]) -> u64 {
+    let mut boxes: Vec<Span> = Vec::new();
+    let mut merged: Vec<Span> = Vec::new();
+    for &s in spans {
+        if s.bytes >= SMALL_LIMIT {
+            merged.push(s);
+            continue;
+        }
+        match boxes.iter_mut().find(|b| b.bytes + s.bytes <= SMALL_SEGMENT) {
+            Some(b) => {
+                b.bytes += s.bytes;
+                b.birth = b.birth.min(s.birth);
+                b.death = b.death.max(s.death);
+            }
+            None => boxes.push(s),
+        }
+    }
+    merged.extend(boxes);
+    let order = ffd_order(&merged);
+    first_fit(&merged, &order)
+}
+
+/// Pack a jobset with every variant and keep the best. Deterministic:
+/// fixed variant order, ties go to the earlier variant.
+pub fn pack(js: &Jobset) -> Packing {
+    let spans: Vec<Span> = js
+        .jobs
+        .iter()
+        .map(|j| Span { bytes: j.bytes, birth: j.birth, death: j.death })
+        .collect();
+    let birth_order: Vec<usize> = (0..spans.len()).collect();
+    let candidates = [
+        ("ffd", first_fit(&spans, &ffd_order(&spans))),
+        ("boxed-ffd", boxed_ffd(&spans)),
+        ("birth-order", first_fit(&spans, &birth_order)),
+    ];
+    let mut best = candidates[0];
+    for &c in &candidates[1..] {
+        if c.1 < best.1 {
+            best = c;
+        }
+    }
+    debug_assert!(best.1 >= js.max_live, "packing below the live-bytes lower bound");
+    Packing { high_water: best.1, strategy: best.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_alloc(id: u64, bytes: u64) -> Event {
+        Event::Alloc { id, bytes, tag: Tag::Act }
+    }
+
+    #[test]
+    fn extract_rounds_and_tracks_lifetimes() {
+        let evs = vec![
+            Event::Phase { name: "startup" },
+            ev_alloc(0, 1), // rounds to 512
+            Event::Phase { name: "forward" },
+            ev_alloc(1, 1024),
+            Event::Free { id: 1 },
+            ev_alloc(2, 2048),
+        ];
+        let js = extract(&evs).unwrap();
+        assert_eq!(js.jobs.len(), 3);
+        assert_eq!(js.jobs[0].bytes, 512);
+        assert_eq!(js.jobs[0].birth_phase, "startup");
+        assert_eq!(js.jobs[0].death, evs.len(), "persistent");
+        assert_eq!(js.jobs[1].birth_phase, "forward");
+        assert_eq!(js.jobs[1].death, 4);
+        assert_eq!(js.max_live, 512 + 1024);
+        assert_eq!(js.peak_event, 3);
+        assert!(js.jobs[0].overlaps(&js.jobs[1]));
+        assert!(!js.jobs[1].overlaps(&js.jobs[2]));
+        assert_eq!(js.live_at(js.peak_event).count(), 2);
+    }
+
+    #[test]
+    fn extract_enforces_trace_invariants() {
+        assert!(extract(&[Event::Free { id: 3 }]).is_err());
+        assert!(extract(&[ev_alloc(0, 512), ev_alloc(0, 512)]).is_err());
+        assert!(extract(&[ev_alloc(9, 512)]).is_err());
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_addresses() {
+        // two 8 MiB jobs that never overlap pack into 8 MiB, not 16
+        let evs = vec![
+            ev_alloc(0, 8 << 20),
+            Event::Free { id: 0 },
+            ev_alloc(2, 8 << 20),
+            Event::Free { id: 2 },
+        ];
+        let js = extract(&evs).unwrap();
+        let p = pack(&js);
+        assert_eq!(p.high_water, 8 << 20);
+        assert_eq!(p.high_water, js.max_live);
+    }
+
+    #[test]
+    fn overlapping_lifetimes_stack() {
+        let evs = vec![ev_alloc(0, 4 << 20), ev_alloc(1, 4 << 20)];
+        let js = extract(&evs).unwrap();
+        assert_eq!(pack(&js).high_water, 8 << 20);
+    }
+
+    #[test]
+    fn packing_never_beats_max_live() {
+        // staircase: overlapping ramps force fragmentation-prone
+        // interleavings; the bound must still hold
+        let mut evs = Vec::new();
+        let mut next = 0u64;
+        let mut open = Vec::new();
+        for step in 1..20u64 {
+            evs.push(ev_alloc(next, step * 300_000));
+            open.push(next);
+            next += 1;
+            if step % 3 == 0 && open.len() > 2 {
+                let victim = open.remove(0);
+                evs.push(Event::Free { id: victim });
+            }
+        }
+        let js = extract(&evs).unwrap();
+        let p = pack(&js);
+        assert!(p.high_water >= js.max_live);
+    }
+
+    #[test]
+    fn pack_is_deterministic() {
+        let evs: Vec<Event> = (0..64)
+            .flat_map(|i| {
+                let sz = ((i * 37) % 11 + 1) * 150_000;
+                vec![ev_alloc(i, sz)]
+            })
+            .collect();
+        let js = extract(&evs).unwrap();
+        let first = pack(&js);
+        for _ in 0..3 {
+            assert_eq!(pack(&js), first);
+        }
+    }
+}

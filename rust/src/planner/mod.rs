@@ -202,6 +202,17 @@ pub struct PlanCandidate {
     /// The pipeline stage whose rank binds this candidate's simulated
     /// peak (0 when `pp == 1`).
     pub binding_stage: usize,
+    /// Fragmentation headroom from placement analysis: how much of the
+    /// simulated peak an offline-optimal packing of the same allocation
+    /// lifetimes would reclaim (MiB). `None` on the degraded
+    /// analytical-only tier, which cannot afford trace replay.
+    pub frag_headroom_mib: Option<f64>,
+    /// True when the failing mbs escalation is blocked by allocator
+    /// fragmentation alone: its caching peak exceeds the budget but its
+    /// rescued (offline-optimal) peak fits. Such a frontier could move
+    /// up one rung with a better allocator configuration rather than
+    /// more memory. Always false when `frontier_open` or degraded.
+    pub frag_rescuable: bool,
 }
 
 /// Search-cost accounting for one plan.
@@ -441,6 +452,47 @@ fn rank_candidates(candidates: &mut Vec<PlanCandidate>) {
     });
 }
 
+/// Annotate frontier candidates with placement analysis: each
+/// candidate's fragmentation headroom, and — when a failing escalation
+/// exists — whether that escalation is `frag_rescuable` (its caching
+/// peak busts the budget but its offline-optimal peak fits, so the
+/// frontier wall is allocator waste rather than live bytes). One
+/// analysis per candidate plus one per escalation, batched through the
+/// sweep engine so configs sharing a geometry share a parse.
+fn annotate_frag(
+    candidates: &mut [PlanCandidate],
+    budget_mib: f64,
+    engine: &Sweep,
+) -> Result<()> {
+    if candidates.is_empty() {
+        return Ok(());
+    }
+    let mut cfgs: Vec<TrainConfig> = candidates.iter().map(|c| c.cfg.clone()).collect();
+    // escalation probes appended after the candidates, indexed per row
+    let esc_at: Vec<Option<usize>> = candidates
+        .iter()
+        .map(|c| {
+            c.escalation.as_ref().map(|e| {
+                let mut up = c.cfg.clone();
+                up.mbs = e.mbs;
+                cfgs.push(up);
+                cfgs.len() - 1
+            })
+        })
+        .collect();
+    let reports = engine.run(&cfgs, |_ctx, pm, cfg| {
+        crate::placement::analyze_parsed(pm, cfg, 0)
+    })?;
+    for (i, c) in candidates.iter_mut().enumerate() {
+        c.frag_headroom_mib = Some(reports[i].headroom_mib);
+        c.frag_rescuable = esc_at[i].is_some_and(|j| {
+            reports[j].caching_peak_mib > budget_mib
+                && reports[j].rescued_peak_mib <= budget_mib
+        });
+    }
+    Ok(())
+}
+
 /// Plan through a caller-configured sweep engine (thread count).
 pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
     let cp = coarse_pass(req, engine)?;
@@ -478,10 +530,13 @@ pub fn plan_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
             escalation,
             dominated: false,
             binding_stage,
+            frag_headroom_mib: None,
+            frag_rescuable: false,
             cfg,
         });
     }
 
+    annotate_frag(&mut candidates, req.budget_mib, engine)?;
     rank_candidates(&mut candidates);
 
     Ok(Plan {
@@ -544,6 +599,10 @@ pub fn plan_analytical_with(req: &PlanRequest, engine: &Sweep) -> Result<Plan> {
             escalation,
             dominated: false,
             binding_stage: 0,
+            // the degraded tier never replays traces, so no placement
+            // analysis — clients see the annotations as absent
+            frag_headroom_mib: None,
+            frag_rescuable: false,
             cfg,
         });
     }
@@ -792,6 +851,61 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("splittable pipeline units"), "{err}");
+    }
+
+    #[test]
+    fn plan_candidates_carry_frag_annotations() {
+        let base = tiny_base();
+        let req = PlanRequest {
+            base: base.clone(),
+            budget_mib: 1e9,
+            axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&base) },
+        };
+        let engine = Sweep::new(2);
+        let p = plan_with(&req, &engine).unwrap();
+        assert!(!p.candidates.is_empty());
+        for c in &p.candidates {
+            let h = c.frag_headroom_mib.expect("validated plans are annotated");
+            assert!(h >= 0.0);
+            assert!(h <= c.simulated_mib);
+            // an unbounded budget busts nothing, so nothing is rescuable
+            assert!(!c.frag_rescuable);
+        }
+        // the degraded tier cannot afford trace replay: no annotations
+        let p2 = plan_analytical_with(&req, &engine).unwrap();
+        assert!(p2
+            .candidates
+            .iter()
+            .all(|c| c.frag_headroom_mib.is_none() && !c.frag_rescuable));
+    }
+
+    #[test]
+    fn frag_rescuable_flags_budget_walls_made_of_fragmentation() {
+        // Pick a budget strictly between the mbs-2 rung's rescued
+        // (offline-optimal) peak and its caching peak: the simulator
+        // rejects mbs 2, pinning the frontier at mbs 1, but the failure
+        // is pure fragmentation — the candidate must say so.
+        let base = tiny_base();
+        let up = TrainConfig { mbs: 2, ..base.clone() };
+        let r = crate::placement::analyze(&up, 0).unwrap();
+        if r.rescued_peak_mib >= r.caching_peak_mib {
+            return; // no fragmentation at this size: nothing to flag
+        }
+        let budget = (r.rescued_peak_mib + r.caching_peak_mib) / 2.0;
+        if crate::simulator::simulate(&base).unwrap().peak_mib > budget {
+            return; // mbs 1 itself would not fit — branch infeasible
+        }
+        let req = PlanRequest {
+            base: base.clone(),
+            budget_mib: budget,
+            axes: Axes { mbs: vec![1, 2], ..Axes::fixed(&base) },
+        };
+        let p = plan_with(&req, &Sweep::new(2)).unwrap();
+        assert_eq!(p.candidates.len(), 1);
+        let c = &p.candidates[0];
+        assert_eq!(c.cfg.mbs, 1);
+        assert!(!c.frontier_open);
+        assert!(c.frag_rescuable);
     }
 
     #[test]

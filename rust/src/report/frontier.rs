@@ -18,7 +18,15 @@ pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table
     if parallel {
         headers.extend(["tp", "pp", "bind"]);
     }
-    headers.extend(["seq", "mbs", "pred GiB", "sim GiB", "headroom GiB", "tok/step", "frontier"]);
+    // Simulator-validated plans carry placement analysis; the degraded
+    // analytical tier does not, and then the column stays hidden so
+    // degraded tables render exactly as before.
+    let frag = plan.candidates.iter().any(|c| c.frag_headroom_mib.is_some());
+    headers.extend(["seq", "mbs", "pred GiB", "sim GiB", "headroom GiB", "tok/step"]);
+    if frag {
+        headers.push("frag GiB");
+    }
+    headers.push("frontier");
     let mut t = Table::new(headers);
     let rows = plan
         .candidates
@@ -30,8 +38,11 @@ pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table
             "open (grid end)".to_string()
         } else {
             let esc = c.escalation.expect("closed frontier carries its escalation probe");
+            // a rescuable wall is allocator waste, not live bytes — the
+            // escalation would fit under an offline-optimal packing
+            let rescue = if c.frag_rescuable { ", frag-rescuable" } else { "" };
             format!(
-                "mbs {} OOMs (+{:.1} GiB)",
+                "mbs {} OOMs (+{:.1} GiB{rescue})",
                 esc.mbs,
                 (esc.simulated_mib - plan.budget_mib) / 1024.0
             )
@@ -56,8 +67,14 @@ pub fn frontier_table(plan: &Plan, top: usize, include_dominated: bool) -> Table
             format!("{:.2}", c.simulated_mib / 1024.0),
             format!("{:.2}", c.headroom_mib / 1024.0),
             format!("{:.0}", c.tokens_per_step),
-            frontier,
         ]);
+        if frag {
+            row.push(match c.frag_headroom_mib {
+                Some(h) => format!("{:.2}", h / 1024.0),
+                None => "-".to_string(),
+            });
+        }
+        row.push(frontier);
         t.row(row);
     }
     t
@@ -106,6 +123,13 @@ fn candidate_json(c: &PlanCandidate) -> Json {
         ("dominated", Json::Bool(c.dominated)),
         ("escalation", escalation),
     ]);
+    // Additive v1 fields (PR 9): placement-analysis annotations. Absent
+    // on degraded analytical-only plans, so those documents render
+    // byte-identically to pre-frag releases.
+    if let Some(h) = c.frag_headroom_mib {
+        entries.push(("frag_headroom_mib", Json::Num(h)));
+        entries.push(("frag_rescuable", Json::Bool(c.frag_rescuable)));
+    }
     obj(entries)
 }
 
@@ -167,6 +191,30 @@ mod tests {
         assert_eq!(shown.render().lines().count() - 2, p.recommended().count());
         assert_eq!(all.render().lines().count() - 2, p.candidates.len());
         assert!(all.to_csv().contains("dominated"));
+    }
+
+    #[test]
+    fn frag_annotations_render_additively() {
+        let p = tiny_plan();
+        // simulator-validated plans always carry the annotation
+        assert!(p.candidates.iter().all(|c| c.frag_headroom_mib.is_some()));
+        let t = frontier_table(&p, 100, true);
+        assert!(t.render().contains("frag GiB"));
+        let c0 = &plan_json(&p).get("candidates").unwrap().as_arr().unwrap()[0];
+        assert!(c0.get("frag_headroom_mib").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(c0.get("frag_rescuable").is_some());
+
+        // a stripped plan (what the degraded tier produces) hides both
+        // the column and the JSON keys
+        let mut bare = p.clone();
+        for c in &mut bare.candidates {
+            c.frag_headroom_mib = None;
+            c.frag_rescuable = false;
+        }
+        assert!(!frontier_table(&bare, 100, true).render().contains("frag GiB"));
+        let c0 = &plan_json(&bare).get("candidates").unwrap().as_arr().unwrap()[0];
+        assert!(c0.get("frag_headroom_mib").is_none());
+        assert!(c0.get("frag_rescuable").is_none());
     }
 
     #[test]

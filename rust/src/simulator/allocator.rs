@@ -67,6 +67,32 @@ impl Stats {
     }
 }
 
+/// Tunable allocator behaviour — the model's analogue of PyTorch's
+/// `PYTORCH_CUDA_ALLOC_CONF` knobs. [`AllocPolicy::default`] reproduces
+/// the stock caching allocator bit-for-bit; the placement layer replays
+/// traces under alternate policies to recommend settings that shrink
+/// `peak_reserved` (see `placement`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocPolicy {
+    /// Free blocks larger than this are never split (`max_split_size_mb`
+    /// analogue): an oversize best-fit candidate whose remainder would
+    /// be a usable fragment is passed over in favour of a fresh
+    /// segment, keeping big cached blocks intact for big requests.
+    pub max_split_bytes: u64,
+    /// Grow one designated large segment in place on a large-pool miss
+    /// instead of reserving a disjoint new segment
+    /// (`expandable_segments:True` analogue) — freed space inside the
+    /// expandable segment coalesces across what would otherwise be
+    /// segment boundaries.
+    pub expandable_segments: bool,
+}
+
+impl Default for AllocPolicy {
+    fn default() -> Self {
+        Self { max_split_bytes: u64::MAX, expandable_segments: false }
+    }
+}
+
 /// The caching allocator.
 ///
 /// Best-fit lookup goes through `free_index` — a size-ordered set of
@@ -84,11 +110,26 @@ pub struct CachingAllocator {
     /// cycles, so steady-state replays stop allocating (EXPERIMENTS.md
     /// §Perf, replay core).
     recycled_blocks: Vec<Vec<Block>>,
+    policy: AllocPolicy,
+    /// The segment designated to grow in place when
+    /// `policy.expandable_segments` is set; `None` until the first
+    /// large-pool miss under that policy.
+    expandable: Option<u32>,
 }
 
 impl CachingAllocator {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An allocator with non-default knobs. `with_policy(AllocPolicy::
+    /// default())` is observationally identical to [`CachingAllocator::new`].
+    pub fn with_policy(policy: AllocPolicy) -> Self {
+        Self { policy, ..Self::default() }
+    }
+
+    pub fn policy(&self) -> AllocPolicy {
+        self.policy
     }
 
     pub fn stats(&self) -> Stats {
@@ -112,6 +153,7 @@ impl CachingAllocator {
         self.free_small.clear();
         self.free_large.clear();
         self.stats = Stats::default();
+        self.expandable = None;
     }
 
     fn free_index(&mut self, small: bool) -> &mut std::collections::BTreeSet<(u64, u32, u64)> {
@@ -127,12 +169,18 @@ impl CachingAllocator {
         let size = bytes.max(1).div_ceil(ROUND) * ROUND;
         let small = size < SMALL_LIMIT;
 
-        // Best fit: smallest free block with block.size >= size.
-        let found = self
-            .free_index(small)
-            .range((size, 0, 0)..)
-            .next()
-            .copied();
+        // Best fit: smallest free block with block.size >= size. An
+        // oversize candidate under `max_split_bytes` counts as a miss:
+        // every larger free block is oversize too (with an even larger
+        // remainder), so there is no further candidate to scan.
+        let found = match self.free_index(small).range((size, 0, 0)..).next().copied() {
+            Some((bsize, _, _))
+                if bsize > self.policy.max_split_bytes && bsize - size >= ROUND =>
+            {
+                None
+            }
+            f => f,
+        };
 
         let (si, bi) = match found {
             Some(entry @ (_, seg, offset)) => {
@@ -143,6 +191,9 @@ impl CachingAllocator {
                     .binary_search_by_key(&offset, |b| b.offset)
                     .expect("free index out of sync");
                 (si, bi)
+            }
+            None if !small && self.policy.expandable_segments && self.expandable.is_some() => {
+                self.grow_expandable(size)
             }
             None => {
                 // Reserve a new segment (reusing a recycled block vector
@@ -158,6 +209,9 @@ impl CachingAllocator {
                 self.stats.reserved += seg_size;
                 self.stats.segment_count += 1;
                 self.stats.peak_reserved = self.stats.peak_reserved.max(self.stats.reserved);
+                if !small && self.policy.expandable_segments {
+                    self.expandable = Some((self.segments.len() - 1) as u32);
+                }
                 (self.segments.len() - 1, 0)
             }
         };
@@ -183,6 +237,41 @@ impl CachingAllocator {
         self.stats.alloc_count += 1;
         self.stats.peak_allocated = self.stats.peak_allocated.max(self.stats.allocated);
         Handle { segment: seg_id, offset: seg.blocks[bi].offset }
+    }
+
+    /// Extend the designated expandable segment so its tail free block
+    /// can serve a `size`-byte request, and return `(segment, block)`
+    /// of that tail block — removed from the free index, exactly like
+    /// a best-fit hit, so the caller's split logic applies unchanged.
+    fn grow_expandable(&mut self, size: u64) -> (usize, usize) {
+        let ei = self.expandable.expect("grow_expandable without a designated segment");
+        let si = ei as usize;
+        let tail = match self.segments[si].blocks.last() {
+            Some(b) if b.free => Some((b.size, b.offset)),
+            _ => None,
+        };
+        let tail_size = tail.map_or(0, |(s, _)| s);
+        // `saturating_sub`: under `max_split_bytes` the miss may occur
+        // even though the tail already fits (oversize candidate); then
+        // the growth is zero and the tail is used as-is.
+        let grow = size.saturating_sub(tail_size).div_ceil(LARGE_GRAN) * LARGE_GRAN;
+        if let Some((bsize, boffset)) = tail {
+            self.free_large.remove(&(bsize, ei, boffset));
+        }
+        if grow > 0 {
+            let seg = &mut self.segments[si];
+            match seg.blocks.last_mut() {
+                Some(b) if b.free => b.size += grow,
+                _ => {
+                    let offset = seg.size;
+                    seg.blocks.push(Block { offset, size: grow, free: true });
+                }
+            }
+            seg.size += grow;
+            self.stats.reserved += grow;
+            self.stats.peak_reserved = self.stats.peak_reserved.max(self.stats.reserved);
+        }
+        (si, self.segments[si].blocks.len() - 1)
     }
 
     /// Free a handle; panics on double-free or bogus handles (a bug in
@@ -360,6 +449,97 @@ mod tests {
             let ha = a.alloc(bytes);
             let hf = fresh.alloc(bytes);
             assert_eq!(ha, hf, "divergence after reset at {bytes}");
+        }
+        assert_eq!(a.stats(), fresh.stats());
+        a.check_invariants();
+    }
+
+    #[test]
+    fn default_policy_is_bit_identical_to_new() {
+        let mut a = CachingAllocator::new();
+        let mut b = CachingAllocator::with_policy(AllocPolicy::default());
+        let mut ha = Vec::new();
+        let mut hb = Vec::new();
+        for bytes in [1000u64, 3 << 20, 512, 10 << 20, 900 << 10, 7 << 20] {
+            ha.push(a.alloc(bytes));
+            hb.push(b.alloc(bytes));
+        }
+        assert_eq!(ha, hb);
+        for i in [1usize, 3, 0] {
+            a.free(ha[i]);
+            b.free(hb[i]);
+        }
+        assert_eq!(a.alloc(4 << 20), b.alloc(4 << 20));
+        assert_eq!(a.stats(), b.stats());
+        a.check_invariants();
+        b.check_invariants();
+    }
+
+    #[test]
+    fn max_split_keeps_big_blocks_intact() {
+        // Default: a freed 64 MiB block is split to serve a 2 MiB
+        // request, so no new segment is reserved.
+        let mut def = CachingAllocator::new();
+        let h = def.alloc(64 << 20);
+        def.free(h);
+        let before = def.stats().reserved;
+        def.alloc(2 << 20);
+        assert_eq!(def.stats().reserved, before);
+
+        // With a 32 MiB split threshold the 64 MiB block is passed
+        // over and a fresh segment is reserved instead.
+        let pol = AllocPolicy { max_split_bytes: 32 << 20, ..AllocPolicy::default() };
+        let mut a = CachingAllocator::with_policy(pol);
+        let h = a.alloc(64 << 20);
+        a.free(h);
+        let before = a.stats().reserved;
+        a.alloc(2 << 20);
+        assert_eq!(a.stats().reserved, before + (2 << 20));
+        // ...but a request needing (almost) the whole block still uses it.
+        let h2 = a.alloc(64 << 20);
+        assert_eq!(a.stats().reserved, before + (2 << 20));
+        a.free(h2);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn expandable_segments_grow_in_place() {
+        let pol = AllocPolicy { expandable_segments: true, ..AllocPolicy::default() };
+        let mut a = CachingAllocator::with_policy(pol);
+        let h1 = a.alloc(3 << 20);
+        let h2 = a.alloc(5 << 20);
+        // Both large allocs live in the single expandable segment: the
+        // 4 MiB initial reservation grows by 4 MiB (the second request
+        // reuses the 1 MiB free tail, needing 4 more MiB after
+        // LARGE_GRAN rounding) — vs 4 + 6 MiB as disjoint segments.
+        assert_eq!(a.stats().segment_count, 1);
+        assert_eq!(a.stats().reserved, 8 << 20);
+        a.check_invariants();
+        // Freeing both coalesces across what would otherwise be a
+        // segment boundary, so an 8 MiB request fits with no growth
+        // (the default policy's 4 MiB + 6 MiB segments could not).
+        a.free(h1);
+        a.free(h2);
+        let before = a.stats().reserved;
+        a.alloc(8 << 20);
+        assert_eq!(a.stats().reserved, before);
+        // Small pool is unaffected by the policy.
+        a.alloc(1000);
+        assert_eq!(a.stats().segment_count, 2);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn expandable_reset_designates_fresh_segment() {
+        let pol = AllocPolicy { expandable_segments: true, ..AllocPolicy::default() };
+        let mut a = CachingAllocator::with_policy(pol);
+        a.alloc(3 << 20);
+        a.alloc(5 << 20);
+        a.reset();
+        assert_eq!(a.stats(), Stats::default());
+        let mut fresh = CachingAllocator::with_policy(pol);
+        for bytes in [3u64 << 20, 5 << 20, 1000, 11 << 20] {
+            assert_eq!(a.alloc(bytes), fresh.alloc(bytes));
         }
         assert_eq!(a.stats(), fresh.stats());
         a.check_invariants();

@@ -104,6 +104,7 @@ fn request_for(method_name: &str, id: &str) -> ApiRequest {
         "simulate" => Method::Simulate(api::SimulateParams { cfg }),
         "baselines" => Method::Baselines(api::BaselinesParams { cfg }),
         "modality" => Method::Modality(api::ModalityParams { cfg }),
+        "frag" => Method::Frag(api::FragParams { cfg, top_k: 3 }),
         "models" => Method::Models,
         "metrics" => Method::Metrics,
         "health" => Method::Health,
@@ -137,6 +138,11 @@ fn check_payload(method_name: &str, payload: &Json) {
             let m = payload.get("measurement").unwrap();
             assert!(m.get("peak_mib").unwrap().as_f64().unwrap() > 0.0);
             assert!(m.get("at_peak_bytes").is_some());
+            // additive alias of frag_frac under its documented name
+            assert_eq!(
+                m.get("fragmentation").unwrap().as_f64(),
+                m.get("frag_frac").unwrap().as_f64()
+            );
         }
         "baselines" => {
             let rows = payload.get("rows").unwrap().as_arr().unwrap();
@@ -146,6 +152,16 @@ fn check_payload(method_name: &str, payload: &Json) {
         "modality" => {
             let shares = codec::shares_from_json(payload.get("shares").unwrap()).unwrap();
             assert!(!shares.is_empty());
+        }
+        "frag" => {
+            let f = |key: &str| payload.get(key).unwrap().as_f64().unwrap();
+            // the sandwich invariant must hold on every served report
+            assert!(f("max_live_mib") <= f("optimal_peak_mib") + 1e-9);
+            assert!(f("optimal_peak_mib") <= f("caching_peak_reserved_mib") + 1e-9);
+            assert!(f("headroom_mib") >= 0.0);
+            let top = payload.get("top").unwrap().as_arr().unwrap();
+            assert!(!top.is_empty() && top.len() <= 3, "top_k=3 caps the list");
+            assert_eq!(payload.get("policies").unwrap().as_arr().unwrap().len(), 3);
         }
         "models" => {
             let models = payload.get("models").unwrap().as_arr().unwrap();
@@ -162,7 +178,7 @@ fn check_payload(method_name: &str, payload: &Json) {
     }
 }
 
-/// Acceptance: ≥8 concurrent clients mixing all eight methods against
+/// Acceptance: ≥8 concurrent clients mixing all ten methods against
 /// the loopback server; every response correlates by id and is
 /// schema-valid.
 #[test]
@@ -674,7 +690,7 @@ fn parallelism_sub_fields_are_strict() {
     let server = start_server();
     let mut client = WireClient::connect(server.addr());
 
-    for method in ["predict", "plan", "sweep", "simulate", "baselines", "modality"] {
+    for method in ["predict", "plan", "sweep", "simulate", "baselines", "modality", "frag"] {
         let extra = match method {
             "plan" => r#""budget_mib":1e9,"#,
             _ => "",
@@ -796,6 +812,80 @@ fn parallel_plan_round_trips_with_binding_stage() {
         report::frontier_table(&decoded, 100, true).render(),
         report::frontier_table(&direct, 100, true).render()
     );
+}
+
+// ---------------------------------------------------------------- frag (v1+)
+
+/// `frag` over the wire: strict request decoding (unknown fields and
+/// oversized `top_k` rejected; the version gate precedes strictness),
+/// `pp > 1` analyzing exactly the binding stage `simulate` reports, and
+/// the payload pinned to the library's own report serialization.
+#[test]
+fn frag_method_is_strict_and_matches_library() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+
+    // golden: the wire payload IS the serialized placement report
+    let cfg = tiny();
+    let want = codec::frag_report_to_json(&mmpredict::placement::analyze(&cfg, 3).unwrap());
+    let resp = client.call(&ApiRequest::new(
+        "f",
+        Method::Frag(api::FragParams { cfg: cfg.clone(), top_k: 3 }),
+    ));
+    let payload = resp.result.expect("frag");
+    assert_eq!(payload.to_string(), want.to_string());
+
+    // the default top_k is omitted from request documents (additive)
+    let req = ApiRequest::new("d", Method::Frag(api::FragParams { cfg, top_k: 5 }));
+    assert!(!req.to_json().to_string().contains("top_k"));
+
+    // unknown params fields are strict bad_requests
+    let err = client
+        .call_raw(
+            r#"{"v":1,"id":"uf","method":"frag","params":{"config":{"model":"llava-tiny"},"topk":3}}"#,
+        )
+        .result
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("topk"), "{}", err.message);
+
+    // an oversized top_k is rejected, not answered with a huge document
+    let err = client
+        .call_raw(
+            r#"{"v":1,"id":"tk","method":"frag","params":{"config":{"model":"llava-tiny"},"top_k":101}}"#,
+        )
+        .result
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("top_k"), "{}", err.message);
+
+    // the version gate precedes params strictness
+    let err = client
+        .call_raw(
+            r#"{"v":2,"id":"v2","method":"frag","params":{"config":{"model":"llava-tiny"},"surprise":1}}"#,
+        )
+        .result
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+
+    // pp > 1: the analyzed rank is the binding stage simulate reports
+    let mut pcfg = tiny();
+    pcfg.seq_len = 64;
+    pcfg.pp = 2;
+    let m = mmpredict::simulator::simulate(&pcfg).unwrap();
+    let resp = client.call(&ApiRequest::new(
+        "pp",
+        Method::Frag(api::FragParams { cfg: pcfg, top_k: 0 }),
+    ));
+    let payload = resp.result.expect("pp frag");
+    let stage = payload.get("pp_stage").and_then(Json::as_u64).unwrap_or(0) as usize;
+    assert_eq!(stage, m.pp_stage, "frag must analyze the binding stage");
+    assert_eq!(
+        payload.get("caching_peak_mib").unwrap().as_f64().unwrap(),
+        m.peak_mib,
+        "frag's caching peak must equal simulate's device peak"
+    );
+    server.shutdown();
 }
 
 /// Spec-path configs travel the wire like any other model reference.

@@ -1,7 +1,7 @@
 //! Cache-correctness acceptance (PR 8): a geometry-keyed cache hit is
 //! only legal if it is **bitwise identical** to the cold answer it
 //! replaced. Every cached method (predict / simulate / baselines /
-//! modality) is exercised twice per config — across tp/pp parallel
+//! modality / frag) is exercised twice per config — across tp/pp parallel
 //! geometries and file-based architecture specs — and the repeated
 //! payload must serialize to the very same bytes, with the service
 //! metrics proving the second answer really was a hit. A zero-cap
@@ -10,8 +10,8 @@
 use std::time::Duration;
 
 use mmpredict::api::{
-    self, ApiRequest, ApiResponse, BaselinesParams, Method, ModalityParams, PredictParams,
-    SimulateParams,
+    self, ApiRequest, ApiResponse, BaselinesParams, FragParams, Method, ModalityParams,
+    PredictParams, SimulateParams,
 };
 use mmpredict::config::TrainConfig;
 use mmpredict::coordinator::batcher::BatchPolicy;
@@ -69,6 +69,10 @@ fn cached_method_requests(cfg: &TrainConfig, tag: &str) -> Vec<ApiRequest> {
         ApiRequest::new(
             format!("{tag}-modality"),
             Method::Modality(ModalityParams { cfg: cfg.clone() }),
+        ),
+        ApiRequest::new(
+            format!("{tag}-frag"),
+            Method::Frag(FragParams { cfg: cfg.clone(), top_k: 3 }),
         ),
     ]
 }
