@@ -1,0 +1,107 @@
+//! Smoke bench for the fleet what-if oracle: analytical pack
+//! throughput on a 32-job mixed queue over a heterogeneous pool, and
+//! the simulator-validated pack end to end.
+//!
+//! Emits machine-readable `BENCH_fleet.json` (written *before* any
+//! floor assertions so CI uploads numbers even on a failing floor).
+//!
+//! Run: `cargo bench --bench fleet`
+
+use mmpredict::config::TrainConfig;
+use mmpredict::fleet::{self, FleetAction};
+use mmpredict::sweep::Sweep;
+use mmpredict::util::bench::{bench, report};
+use mmpredict::util::json_mini::{obj, Json};
+
+/// The demo queue cycled out to 32 jobs with varied micro-batches —
+/// mixed multimodal/unimodal models, dp/tp/pp/ZeRO variety.
+fn mixed_jobs(n: usize) -> Vec<(String, TrainConfig)> {
+    let demo = fleet::demo_jobs();
+    (0..n)
+        .map(|i| {
+            let (name, cfg) = &demo[i % demo.len()];
+            let mut cfg = cfg.clone();
+            // vary the geometry per cycle so configs stay distinct
+            cfg.mbs = (cfg.mbs << (i / demo.len())).min(64);
+            (format!("{name}-{i}"), cfg)
+        })
+        .collect()
+}
+
+fn main() {
+    let devices = fleet::demo_devices();
+    let jobs = mixed_jobs(32);
+    let engine = Sweep::new(mmpredict::sweep::default_threads());
+    let ranks: u64 = jobs.iter().map(|(_, c)| c.world_size()).sum();
+    println!(
+        "workload: {} jobs / {ranks} ranks on the demo pool ({} devices)\n",
+        jobs.len(),
+        fleet::expand_devices(&devices).expect("demo pool").len()
+    );
+
+    // -- analytical pack (prediction + FFD + frontier fallback) ----------
+    let pack = bench("analytical pack (32-job mixed fleet)", 1, 8, || {
+        let _ = fleet::what_if(&devices, &jobs, &FleetAction::Pack, &engine, false).unwrap();
+    });
+    report(&pack);
+
+    // -- simulator-validated pack (adds the columnar ground-truth pass) --
+    let validated = bench("validated pack (32-job mixed fleet)", 1, 3, || {
+        let _ = fleet::what_if(&devices, &jobs, &FleetAction::Pack, &engine, true).unwrap();
+    });
+    report(&validated);
+
+    let r = fleet::what_if(&devices, &jobs, &FleetAction::Pack, &engine, true).expect("pack");
+    println!(
+        "\npacked {} / rejected {} ({} replanned); stranded {:.0} MiB of {:.0} MiB",
+        r.placements.len(),
+        r.rejected.len(),
+        r.placements.iter().filter(|p| p.replanned).count(),
+        r.total_stranded_mib(),
+        r.total_capacity_mib()
+    );
+
+    let json = obj(vec![
+        ("workload", Json::Str("32-job mixed queue on the demo pool".to_string())),
+        ("jobs", Json::Num(jobs.len() as f64)),
+        ("ranks", Json::Num(ranks as f64)),
+        ("pack_per_sec", Json::Num(pack.throughput_per_sec())),
+        ("validated_pack_per_sec", Json::Num(validated.throughput_per_sec())),
+        ("placed", Json::Num(r.placements.len() as f64)),
+        ("rejected", Json::Num(r.rejected.len() as f64)),
+        (
+            "replanned",
+            Json::Num(r.placements.iter().filter(|p| p.replanned).count() as f64),
+        ),
+        ("capacity_mib", Json::Num(r.total_capacity_mib())),
+        ("used_mib", Json::Num(r.total_used_mib())),
+        ("stranded_mib", Json::Num(r.total_stranded_mib())),
+    ]);
+    // cargo bench runs with cwd = package root (rust/); anchor the
+    // output to the workspace root regardless of invocation cwd
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    std::fs::write(out, json.to_string()).expect("writing BENCH_fleet.json");
+    println!("wrote {out}");
+
+    // floors AFTER the artifact is on disk: every placement must
+    // respect device capacity, accounting must be exact, and the
+    // analytical pack must stay interactive
+    for d in &r.devices {
+        assert!(
+            d.used_mib <= d.device.capacity_mib,
+            "{} packed above capacity",
+            d.device.id
+        );
+        assert_eq!(
+            d.used_mib + d.stranded_mib,
+            d.device.capacity_mib,
+            "inexact accounting on {}",
+            d.device.id
+        );
+    }
+    assert_eq!(r.placements.len() + r.rejected.len(), jobs.len());
+    assert!(
+        pack.mean.as_secs_f64() < 10.0,
+        "analytical pack exceeded the 10 s interactive floor"
+    );
+}

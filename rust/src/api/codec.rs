@@ -23,11 +23,12 @@ use crate::report::ModalityShare;
 use crate::simulator::Measurement;
 use crate::util::json_mini::{obj, Json};
 
+use crate::fleet::{FleetAction, FleetReport};
 use crate::placement::FragReport;
 
 use super::{
-    ApiError, BaselinesParams, ErrorCode, FragParams, Method, ModalityParams, PlanParams,
-    PredictParams, SimulateParams, SweepParams, METHOD_NAMES,
+    ApiError, BaselinesParams, ErrorCode, FleetParams, FragParams, Method, ModalityParams,
+    PlanParams, PredictParams, SimulateParams, SweepParams, METHOD_NAMES,
 };
 
 // ---------------------------------------------------------------- helpers
@@ -524,6 +525,40 @@ pub fn method_from_json(name: &str, params: Option<&Json>) -> Result<Method, Api
                 top_k,
             }))
         }
+        "fleet" => {
+            strict_keys(m, &["devices", "jobs", "action", "job"], "fleet params")?;
+            let devices = fleet_devices_from_json(
+                m.get("devices")
+                    .ok_or_else(|| ApiError::bad_request("fleet requires a \"devices\" array"))?,
+            )?;
+            let jobs = fleet_jobs_from_json(
+                m.get("jobs")
+                    .ok_or_else(|| ApiError::bad_request("fleet requires a \"jobs\" array"))?,
+            )?;
+            let action_name = get_str(m, "action", "params")?.unwrap_or("pack");
+            let target = get_str(m, "job", "params")?;
+            let action = match (action_name, target) {
+                ("pack", None) => FleetAction::Pack,
+                ("pack", Some(_)) => {
+                    return Err(ApiError::bad_request(
+                        "params.job is only valid with action \"admit\" or \"replan\"",
+                    ))
+                }
+                ("admit", Some(j)) => FleetAction::Admit(j.to_string()),
+                ("replan", Some(j)) => FleetAction::Replan(j.to_string()),
+                ("admit" | "replan", None) => {
+                    return Err(ApiError::bad_request(format!(
+                        "action {action_name:?} requires params.job naming the target"
+                    )))
+                }
+                (other, _) => {
+                    return Err(ApiError::bad_request(format!(
+                        "params.action must be pack|admit|replan, got {other:?}"
+                    )))
+                }
+            };
+            Ok(Method::Fleet(FleetParams { devices, jobs, action }))
+        }
         "models" => {
             strict_keys(m, &[], "models params")?;
             Ok(Method::Models)
@@ -610,6 +645,36 @@ pub fn params_to_json(method: &Method) -> Option<Json> {
             }
             Some(obj(e))
         }
+        Method::Fleet(p) => {
+            let devices = p
+                .devices
+                .iter()
+                .map(|(kind, count)| {
+                    obj(vec![("kind", s(kind.clone())), ("count", num(*count as f64))])
+                })
+                .collect();
+            let jobs = p
+                .jobs
+                .iter()
+                .map(|(name, cfg)| {
+                    let mut e = vec![("name", s(name.clone())), ("config", config_to_json(cfg))];
+                    if let Some(par) = parallelism_to_json(cfg) {
+                        e.push(("parallelism", par));
+                    }
+                    obj(e)
+                })
+                .collect();
+            let mut e = vec![("devices", Json::Arr(devices)), ("jobs", Json::Arr(jobs))];
+            // Additive: the default action stays implicit, so plain
+            // pack requests remain minimal.
+            if p.action != FleetAction::Pack {
+                e.push(("action", s(p.action.name())));
+                if let Some(job) = p.action.target() {
+                    e.push(("job", s(job.to_string())));
+                }
+            }
+            Some(obj(e))
+        }
         Method::Models | Method::Metrics | Method::Health => None,
     }
 }
@@ -622,6 +687,51 @@ fn config_params(cfg: &TrainConfig) -> Json {
         e.push(("parallelism", par));
     }
     obj(e)
+}
+
+/// Strict decode of the fleet `devices` array: `[{kind, count}]`.
+fn fleet_devices_from_json(v: &Json) -> Result<Vec<(String, u64)>, ApiError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request("params.devices must be an array"))?;
+    if arr.is_empty() {
+        return Err(ApiError::bad_request("params.devices must not be empty"));
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, d) in arr.iter().enumerate() {
+        let what = format!("params.devices[{i}]");
+        let m = as_obj(d, &what)?;
+        strict_keys(m, &["kind", "count"], &what)?;
+        let kind = get_str(m, "kind", &what)?
+            .ok_or_else(|| ApiError::bad_request(format!("{what} requires \"kind\"")))?
+            .to_string();
+        let count = get_u64(m, "count", &what)?.unwrap_or(1);
+        out.push((kind, count));
+    }
+    Ok(out)
+}
+
+/// Strict decode of the fleet `jobs` array:
+/// `[{name, config, parallelism?}]` — each entry's config/parallelism
+/// validate exactly like a single-config method's params.
+fn fleet_jobs_from_json(v: &Json) -> Result<Vec<(String, TrainConfig)>, ApiError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request("params.jobs must be an array"))?;
+    if arr.is_empty() {
+        return Err(ApiError::bad_request("params.jobs must not be empty"));
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, j) in arr.iter().enumerate() {
+        let what = format!("params.jobs[{i}]");
+        let m = as_obj(j, &what)?;
+        strict_keys(m, &["name", "config", "parallelism"], &what)?;
+        let name = get_str(m, "name", &what)?
+            .ok_or_else(|| ApiError::bad_request(format!("{what} requires \"name\"")))?
+            .to_string();
+        out.push((name, require_config(m, &what)?));
+    }
+    Ok(out)
 }
 
 // ------------------------------------------------------------------- axes
@@ -832,6 +942,105 @@ pub fn frag_report_to_json(r: &FragReport) -> Json {
     ];
     if r.pp_stage > 0 {
         entries.push(("pp_stage", num(r.pp_stage as f64)));
+    }
+    obj(entries)
+}
+
+/// Serialize a [`FleetReport`] as the `fleet` response payload. Every
+/// config is emitted in full (plus `parallelism` when non-trivial) so
+/// a placement round-trips into a runnable job description;
+/// `simulated_peak_mib` is present only on the validated tier, and
+/// `admitted` only for admit/replan queries — both additive.
+pub fn fleet_report_to_json(r: &FleetReport) -> Json {
+    let devices = r
+        .devices
+        .iter()
+        .map(|d| {
+            obj(vec![
+                ("id", s(d.device.id.clone())),
+                ("kind", s(d.device.kind.clone())),
+                ("capacity_mib", num(d.device.capacity_mib)),
+                ("used_mib", num(d.used_mib)),
+                ("stranded_mib", num(d.stranded_mib)),
+                ("ranks", num(d.ranks as f64)),
+            ])
+        })
+        .collect();
+    let placements = r
+        .placements
+        .iter()
+        .map(|p| {
+            let assignments = p
+                .assignments
+                .iter()
+                .map(|a| {
+                    obj(vec![
+                        ("device", s(a.device.clone())),
+                        ("ranks", num(a.ranks as f64)),
+                        ("mib", num(a.mib)),
+                    ])
+                })
+                .collect();
+            let mut e = vec![
+                ("job", s(p.job.clone())),
+                ("config", config_to_json(&p.cfg)),
+                ("per_rank_peak_mib", num(p.per_rank_peak_mib)),
+                ("replanned", Json::Bool(p.replanned)),
+                ("assignments", Json::Arr(assignments)),
+            ];
+            if let Some(par) = parallelism_to_json(&p.cfg) {
+                e.push(("parallelism", par));
+            }
+            if let Some(sim) = p.simulated_peak_mib {
+                e.push(("simulated_peak_mib", num(sim)));
+            }
+            obj(e)
+        })
+        .collect();
+    let rejected = r
+        .rejected
+        .iter()
+        .map(|rj| {
+            let alternatives = rj
+                .alternatives
+                .iter()
+                .map(|a| {
+                    let mut e = vec![
+                        ("config", config_to_json(&a.cfg)),
+                        ("predicted_mib", num(a.predicted_mib)),
+                        ("simulated_mib", num(a.simulated_mib)),
+                        ("tokens_per_step", num(a.tokens_per_step)),
+                    ];
+                    if let Some(par) = parallelism_to_json(&a.cfg) {
+                        e.push(("parallelism", par));
+                    }
+                    obj(e)
+                })
+                .collect();
+            obj(vec![
+                ("job", s(rj.job.clone())),
+                ("reason", s(rj.reason.clone())),
+                ("alternatives", Json::Arr(alternatives)),
+            ])
+        })
+        .collect();
+    let mut entries = vec![
+        ("action", s(r.action.name())),
+        ("validated", Json::Bool(r.validated)),
+        ("devices", Json::Arr(devices)),
+        ("placements", Json::Arr(placements)),
+        ("rejected", Json::Arr(rejected)),
+        (
+            "totals",
+            obj(vec![
+                ("capacity_mib", num(r.total_capacity_mib())),
+                ("used_mib", num(r.total_used_mib())),
+                ("stranded_mib", num(r.total_stranded_mib())),
+            ]),
+        ),
+    ];
+    if let Some(admitted) = r.admitted {
+        entries.push(("admitted", Json::Bool(admitted)));
     }
     obj(entries)
 }

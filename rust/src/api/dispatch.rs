@@ -545,6 +545,20 @@ pub(crate) fn frag_payload(cfg: &TrainConfig, top_k: usize) -> Result<Json, ApiE
     Ok(codec::frag_report_to_json(&r))
 }
 
+/// The `fleet` ok-payload: the what-if oracle's full answer (see
+/// [`codec::fleet_report_to_json`] for the key set). `validate`
+/// selects simulator ground truth on every placement; the degraded
+/// tier passes `false` and the placements carry predicted peaks only.
+pub(crate) fn fleet_payload(
+    p: &crate::api::FleetParams,
+    engine: &Sweep,
+    validate: bool,
+) -> Result<Json, ApiError> {
+    let r = crate::fleet::what_if(&p.devices, &p.jobs, &p.action, engine, validate)
+        .map_err(classify)?;
+    Ok(codec::fleet_report_to_json(&r))
+}
+
 pub(crate) fn baselines_payload(cfg: &TrainConfig) -> Result<Json, ApiError> {
     if cfg.tp > 1 || cfg.pp > 1 {
         // The prior-work baselines are single-device formulations (dp/
@@ -659,7 +673,9 @@ pub(crate) fn health_payload(
     queue_capacity: usize,
 ) -> Json {
     let depth = m.queue_depth();
-    let pressured = queue_capacity > 0 && depth as usize * 4 > queue_capacity * 3;
+    // The same clamped helper the worker's degradation gate uses, so
+    // `health` and actual plan/sweep behavior can never disagree.
+    let pressured = m.queue_pressured(queue_capacity);
     obj(vec![
         ("status", s(if pressured { "degraded" } else { "ok" })),
         ("queue_depth", num(depth as f64)),
@@ -907,6 +923,17 @@ impl Dispatcher {
                 }
                 None => frag_payload(&p.cfg, p.top_k as usize),
             },
+            // Fleet queries span many configs, so they bypass the
+            // (single-config-keyed) response cache; like plan/sweep
+            // they degrade to analytical-only packing under queue
+            // pressure or a tight deadline.
+            Method::Fleet(p) => match ctx.degrade_reason() {
+                Some(reason) => {
+                    self.metrics.on_degraded();
+                    fleet_payload(p, &self.engine, false).map(|j| mark_degraded(j, reason))
+                }
+                None => fleet_payload(p, &self.engine, true),
+            },
             Method::Models => models_payload(),
             Method::Metrics => Ok(metrics_payload(&self.metrics)),
             Method::Health => Ok(health_payload(
@@ -981,6 +1008,11 @@ mod tests {
             Method::Metrics,
             Method::Health,
             Method::Frag(crate::api::FragParams { cfg: cfg.clone(), top_k: 3 }),
+            Method::Fleet(crate::api::FleetParams {
+                devices: vec![("a100-40g".to_string(), 1)],
+                jobs: vec![("t".to_string(), cfg.clone())],
+                action: crate::fleet::FleetAction::Pack,
+            }),
         ];
         for (i, method) in reqs.into_iter().enumerate() {
             let req = ApiRequest::new(format!("t{i}"), method);
@@ -995,6 +1027,7 @@ mod tests {
         assert_eq!(d.metrics().method_requests(7), 1); // metrics
         assert_eq!(d.metrics().method_requests(8), 1); // health
         assert_eq!(d.metrics().method_requests(9), 1); // frag
+        assert_eq!(d.metrics().method_requests(10), 1); // fleet
     }
 
     #[test]

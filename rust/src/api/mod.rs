@@ -4,8 +4,8 @@
 //! The paper's deployment story is a *screening service* — schedulers
 //! ask "will this configuration fit?" before cluster time is spent —
 //! and every capability of this crate (predict / plan / sweep /
-//! simulate / baselines / modality / models / metrics / frag) is
-//! reachable through the same envelope:
+//! simulate / baselines / modality / models / metrics / frag / fleet)
+//! is reachable through the same envelope:
 //!
 //! ```text
 //! request:   {"v":1, "id":"r1", "method":"predict", "params":{...}}
@@ -55,7 +55,7 @@ use crate::util::json_mini::{obj, Json};
 pub const VERSION: u64 = 1;
 
 /// Number of API methods (sizes the per-method metrics arrays).
-pub const NUM_METHODS: usize = 10;
+pub const NUM_METHODS: usize = 11;
 
 /// Canonical method names, in [`Method::index`] order.
 pub const METHOD_NAMES: [&str; NUM_METHODS] = [
@@ -69,6 +69,7 @@ pub const METHOD_NAMES: [&str; NUM_METHODS] = [
     "metrics",
     "health",
     "frag",
+    "fleet",
 ];
 
 /// Structured error codes (the `error.code` wire field).
@@ -241,6 +242,21 @@ pub struct FragParams {
     pub top_k: u64,
 }
 
+/// `fleet` parameters: the cluster what-if oracle — a pool of
+/// heterogeneous devices and a queue of jobs, bin-packed by predicted
+/// per-rank peak (see [`crate::fleet`]).
+#[derive(Clone, Debug)]
+pub struct FleetParams {
+    /// Device pool: `(preset kind, count)` — kinds are
+    /// [`crate::zoo::device_names`] entries.
+    pub devices: Vec<(String, u64)>,
+    /// Queued jobs: `(job name, config)`. Names must be unique; the
+    /// admit/replan actions target a job by name.
+    pub jobs: Vec<(String, TrainConfig)>,
+    /// The what-if question being asked (pack / admit / replan).
+    pub action: crate::fleet::FleetAction,
+}
+
 /// The typed method enum — every capability of the crate, one request
 /// shape each. Wire names are [`METHOD_NAMES`].
 #[derive(Clone, Debug)]
@@ -262,6 +278,9 @@ pub enum Method {
     /// Fragmentation & placement analysis: caching vs offline-optimal
     /// peak, headroom, allocator-policy recommendations.
     Frag(FragParams),
+    /// Cluster what-if oracle: pack / admit / replan a fleet of jobs
+    /// onto heterogeneous devices by predicted per-rank peak.
+    Fleet(FleetParams),
 }
 
 impl Method {
@@ -284,6 +303,7 @@ impl Method {
             Method::Metrics => 7,
             Method::Health => 8,
             Method::Frag(_) => 9,
+            Method::Fleet(_) => 10,
         }
     }
 }
@@ -618,6 +638,11 @@ mod tests {
             Method::Frag(FragParams {
                 cfg: TrainConfig::llava_finetune_default(),
                 top_k: 5,
+            }),
+            Method::Fleet(FleetParams {
+                devices: vec![("a100-80g".to_string(), 2)],
+                jobs: vec![("j0".to_string(), TrainConfig::llava_finetune_default())],
+                action: crate::fleet::FleetAction::Pack,
             }),
         ];
         assert_eq!(methods.len(), NUM_METHODS);

@@ -280,6 +280,175 @@ pub fn frag_text(payload: &Json) -> Result<String, ApiError> {
     Ok(out)
 }
 
+/// Render a `fleet` payload as the `repro fleet` report text: the
+/// placement table, the per-device stranded-memory report, and the
+/// rejected jobs with their frontier alternatives.
+pub fn fleet_text(payload: &Json) -> Result<String, ApiError> {
+    use std::fmt::Write as _;
+    let arr = |key: &str| -> Result<&[Json], ApiError> {
+        payload
+            .get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ApiError::bad_request(format!("fleet payload missing {key:?} array")))
+    };
+    let action = payload
+        .get("action")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("fleet payload missing \"action\""))?;
+    let validated = matches!(payload.get("validated"), Some(Json::Bool(true)));
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "fleet what-if ({action}{}):",
+        if validated { ", simulator-validated" } else { ", analytical-only" }
+    );
+    if let Some(Json::Bool(admitted)) = payload.get("admitted") {
+        let _ = writeln!(out, "verdict: {}", if *admitted { "ADMIT" } else { "REJECT" });
+    }
+
+    let placements = arr("placements")?;
+    if !placements.is_empty() {
+        let mut t = report::Table::new(vec![
+            "job",
+            "model",
+            "geometry",
+            "per-rank peak",
+            "simulated",
+            "devices",
+            "via",
+        ]);
+        for p in placements {
+            let g = |key: &str| -> Result<f64, ApiError> {
+                p.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                    ApiError::bad_request(format!("fleet placement missing {key:?}"))
+                })
+            };
+            let job = p
+                .get("job")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ApiError::bad_request("fleet placement missing \"job\""))?;
+            let cfg = p
+                .get("config")
+                .ok_or_else(|| ApiError::bad_request("fleet placement missing \"config\""))?;
+            let c = |key: &str| cfg.get(key).and_then(Json::as_f64).unwrap_or(1.0) as u64;
+            // tp/pp ride in the additive parallelism block, not the config
+            let par = |key: &str| {
+                p.get("parallelism")
+                    .and_then(|b| b.get(key))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0) as u64
+            };
+            let model = cfg.get("model").and_then(Json::as_str).unwrap_or("-");
+            let devices: Vec<String> = p
+                .get("assignments")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| {
+                            let d = x.get("device")?.as_str()?;
+                            let r = x.get("ranks")?.as_f64()? as u64;
+                            Some(format!("{d}x{r}"))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let sim = p
+                .get("simulated_peak_mib")
+                .and_then(Json::as_f64)
+                .map(human_mib)
+                .unwrap_or_else(|| "-".to_string());
+            let replanned = matches!(p.get("replanned"), Some(Json::Bool(true)));
+            t.row(vec![
+                job.to_string(),
+                model.to_string(),
+                format!(
+                    "mbs{} seq{} dp{} tp{} pp{} z{}",
+                    c("mbs"),
+                    c("seq_len"),
+                    c("dp"),
+                    par("tp"),
+                    par("pp"),
+                    c("zero")
+                ),
+                human_mib(g("per_rank_peak_mib")?),
+                sim,
+                devices.join(" "),
+                if replanned { "frontier" } else { "as-specified" }.to_string(),
+            ]);
+        }
+        let _ = writeln!(out, "placements:");
+        let _ = writeln!(out, "{}", t.render());
+    }
+
+    let mut t = report::Table::new(vec!["device", "capacity", "used", "stranded", "ranks"]);
+    for d in arr("devices")? {
+        let g = |key: &str| -> Result<f64, ApiError> {
+            d.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::bad_request(format!("fleet device missing {key:?}")))
+        };
+        let id = d
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("fleet device missing \"id\""))?;
+        t.row(vec![
+            id.to_string(),
+            human_mib(g("capacity_mib")?),
+            human_mib(g("used_mib")?),
+            human_mib(g("stranded_mib")?),
+            (g("ranks")? as u64).to_string(),
+        ]);
+    }
+    let _ = writeln!(out, "devices:");
+    let _ = writeln!(out, "{}", t.render());
+
+    for r in arr("rejected")? {
+        let job = r
+            .get("job")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("fleet rejection missing \"job\""))?;
+        let reason = r.get("reason").and_then(Json::as_str).unwrap_or("-");
+        let _ = writeln!(out, "REJECTED {job}: {reason}");
+        if let Some(alts) = r.get("alternatives").and_then(Json::as_arr) {
+            for a in alts {
+                let cfg = a.get("config");
+                let c = |key: &str| {
+                    cfg.and_then(|c| c.get(key)).and_then(Json::as_f64).unwrap_or(1.0) as u64
+                };
+                let peak = a.get("simulated_mib").and_then(Json::as_f64).unwrap_or(0.0);
+                let _ = writeln!(
+                    out,
+                    "  alternative: mbs{} z{} -> per-rank {}",
+                    c("mbs"),
+                    c("zero"),
+                    human_mib(peak)
+                );
+            }
+        }
+    }
+
+    if let Some(totals) = payload.get("totals") {
+        let g = |key: &str| -> Result<f64, ApiError> {
+            totals
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ApiError::bad_request(format!("fleet totals missing {key:?}")))
+        };
+        let cap = g("capacity_mib")?;
+        let stranded = g("stranded_mib")?;
+        let _ = writeln!(
+            out,
+            "totals: capacity {}, used {}, stranded {} ({:.1}%)",
+            human_mib(cap),
+            human_mib(g("used_mib")?),
+            human_mib(stranded),
+            if cap > 0.0 { stranded / cap * 100.0 } else { 0.0 }
+        );
+    }
+    Ok(out)
+}
+
 /// Number of points in a `sweep` payload (for the CLI's summary line).
 pub fn sweep_points(payload: &Json) -> usize {
     payload

@@ -26,6 +26,44 @@ pub struct MethodStats {
     max_us: AtomicU64,
 }
 
+/// One coherent read of a method's latency histogram. All percentile
+/// queries against the same snapshot share the same counts, total and
+/// max, which makes p50 ≤ p95 ≤ p99 ≤ max hold *by construction*: a
+/// larger `q` yields a rank at least as large, hence a bucket index at
+/// least as large, hence an upper edge at least as large — and capping
+/// every result at the same `max_us` preserves that ordering. (Reading
+/// the atomics afresh per percentile, as the old code did, let a
+/// concurrent `record()` land between the p50 and p95 reads and invert
+/// them.)
+struct LatencySnapshot {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+    max_us: u64,
+}
+
+impl LatencySnapshot {
+    /// Approximate percentile (bucket upper edge, capped at the
+    /// snapshot's max) for `q` in 0..=1. Zero when nothing was
+    /// recorded. The cap matters inside a single bucket: one 5 µs
+    /// sample lands in bucket [4, 8), whose upper edge is 8, but the
+    /// honest answer for every percentile is the observed max, 5.
+    fn percentile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper = 1u64 << (i + 1).min(63);
+                return upper.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
 impl MethodStats {
     fn record(&self, latency: Duration, ok: bool) {
         self.requests.fetch_add(1, Ordering::Relaxed);
@@ -38,28 +76,16 @@ impl MethodStats {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
-    /// Approximate percentile (bucket upper edge, capped at the true
-    /// max) for `q` in 0..=1. Zero when nothing was recorded.
-    fn percentile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self
-            .latency_hist
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
+    /// Read the histogram once; every percentile derived from the
+    /// result is mutually consistent.
+    fn snapshot(&self) -> LatencySnapshot {
+        let counts: [u64; LATENCY_BUCKETS] =
+            std::array::from_fn(|i| self.latency_hist[i].load(Ordering::Relaxed));
+        LatencySnapshot {
+            counts,
+            total: counts.iter().sum(),
+            max_us: self.max_us.load(Ordering::Relaxed),
         }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= rank {
-                let upper = 1u64 << (i + 1).min(63);
-                return upper.min(self.max_us.load(Ordering::Relaxed));
-            }
-        }
-        self.max_us.load(Ordering::Relaxed)
     }
 }
 
@@ -137,14 +163,16 @@ impl Metrics {
 
     /// `(p50, p95, p99, max)` latency in microseconds for one method.
     /// Percentiles are log2-bucket approximations (upper bucket edge,
-    /// capped at the observed max).
+    /// capped at the observed max). All four values come from a single
+    /// histogram snapshot, so p50 ≤ p95 ≤ p99 ≤ max holds even while
+    /// other threads are recording.
     pub fn method_latency_us(&self, idx: usize) -> (u64, u64, u64, u64) {
-        let m = &self.methods[idx];
+        let snap = self.methods[idx].snapshot();
         (
-            m.percentile_us(0.50),
-            m.percentile_us(0.95),
-            m.percentile_us(0.99),
-            m.max_us.load(Ordering::Relaxed),
+            snap.percentile_us(0.50),
+            snap.percentile_us(0.95),
+            snap.percentile_us(0.99),
+            snap.max_us,
         )
     }
 
@@ -210,6 +238,15 @@ impl Metrics {
         self.enqueued.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Roll back one [`Self::on_enqueue`] whose job never actually
+    /// entered the queue (the channel send failed). Must pair with a
+    /// preceding `on_enqueue` by the same caller — submit paths bump
+    /// the gauge *before* the send so the worker's `on_dequeue` can
+    /// never race ahead of it, then undo on a failed send.
+    pub fn on_enqueue_undo(&self) {
+        self.enqueued.fetch_sub(1, Ordering::Relaxed);
+    }
+
     /// The worker pulled a job off the queue.
     pub fn on_dequeue(&self) {
         self.dequeued.fetch_add(1, Ordering::Relaxed);
@@ -220,6 +257,24 @@ impl Metrics {
         self.enqueued
             .load(Ordering::Relaxed)
             .saturating_sub(self.dequeued.load(Ordering::Relaxed))
+    }
+
+    /// Queue-pressure heuristic shared by the worker's degradation
+    /// gate and the `health` payload: depth > 3/4 of one tier's
+    /// capacity. The raw gauge is clamped to the structural bound (two
+    /// admission tiers, each `capacity` deep) before comparing, and the
+    /// arithmetic saturates, so a transiently wrapped or racing gauge
+    /// can momentarily over-report depth but can never lock the service
+    /// into analytical degradation via a bogus astronomically-large
+    /// reading, and a huge configured capacity cannot overflow the
+    /// comparison.
+    pub fn queue_pressured(&self, capacity: usize) -> bool {
+        if capacity == 0 {
+            return false;
+        }
+        let cap = capacity as u64;
+        let depth = self.queue_depth().min(cap.saturating_mul(2));
+        depth.saturating_mul(4) > cap.saturating_mul(3)
     }
 
     /// The worker isolated a panic and rebuilt its backend.
@@ -390,6 +445,73 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_monotone_within_single_bucket_max_below_edge() {
+        // All samples land in the [64, 128) bucket and the max (100)
+        // sits below the bucket's upper edge (128): every percentile
+        // must report the observed max, never the raw edge.
+        let m = Metrics::new();
+        for us in [70u64, 90, 100] {
+            m.on_method(2, Duration::from_micros(us), true);
+        }
+        let (p50, p95, p99, max) = m.method_latency_us(2);
+        assert_eq!((p50, p95, p99, max), (100, 100, 100, 100));
+    }
+
+    #[test]
+    fn percentiles_monotone_across_buckets() {
+        let m = Metrics::new();
+        // 90 samples at ~10us, 9 at ~1ms, 1 at ~100ms: p50 well below
+        // p95 well below p99.
+        for _ in 0..90 {
+            m.on_method(4, Duration::from_micros(10), true);
+        }
+        for _ in 0..9 {
+            m.on_method(4, Duration::from_micros(1_000), true);
+        }
+        m.on_method(4, Duration::from_micros(100_000), true);
+        let (p50, p95, p99, max) = m.method_latency_us(4);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= max, "{p50} {p95} {p99} {max}");
+        assert_eq!(max, 100_000);
+    }
+
+    #[test]
+    fn percentiles_monotone_under_concurrent_recording() {
+        // A reader polling method_latency_us while writers hammer
+        // record() must never observe p50 > p95, p95 > p99 or
+        // p99 > max — the single-snapshot read makes the quadruple
+        // self-consistent.
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..3)
+            .map(|w| {
+                let m = Arc::clone(&m);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut us = 1u64 + w as u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        m.on_method(0, Duration::from_micros(us), true);
+                        // wander across buckets deterministically
+                        us = (us.wrapping_mul(31).wrapping_add(7)) % 500_000 + 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..2_000 {
+            let (p50, p95, p99, max) = m.method_latency_us(0);
+            assert!(
+                p50 <= p95 && p95 <= p99 && p99 <= max,
+                "non-monotone percentiles under concurrency: {p50} {p95} {p99} {max}"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
     fn cache_counters_accumulate_independently() {
         let m = Metrics::new();
         m.on_response_cache(true);
@@ -423,6 +545,52 @@ mod tests {
             (m.worker_restarts(), m.degraded(), m.deadlines_exceeded()),
             (1, 1, 1)
         );
+    }
+
+    #[test]
+    fn enqueue_undo_rolls_back_the_gauge() {
+        let m = Metrics::new();
+        m.on_enqueue();
+        m.on_enqueue_undo();
+        assert_eq!(m.queue_depth(), 0);
+        // the failed-send rollback leaves later accounting exact
+        m.on_enqueue();
+        assert_eq!(m.queue_depth(), 1);
+        m.on_dequeue();
+        assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn queue_pressure_boundary_is_three_quarters() {
+        let m = Metrics::new();
+        // capacity 4: pressured strictly above depth 3
+        for _ in 0..3 {
+            m.on_enqueue();
+        }
+        assert!(!m.queue_pressured(4), "depth 3 of 4 is the boundary, not over it");
+        m.on_enqueue();
+        assert!(m.queue_pressured(4), "depth 4 of 4 is pressured");
+    }
+
+    #[test]
+    fn queue_pressure_zero_capacity_and_overflow_safe() {
+        let m = Metrics::new();
+        m.on_enqueue();
+        assert!(!m.queue_pressured(0), "capacity 0 never reports pressure");
+        // a huge capacity must not overflow the 4x/3x comparison
+        assert!(!m.queue_pressured(usize::MAX));
+        // a wrapped/racing gauge reading is clamped to the structural
+        // bound (2x capacity) — huge but bounded, so pressure clears as
+        // soon as the gauge recovers rather than sticking forever
+        let m2 = Metrics::new();
+        for _ in 0..1_000 {
+            m2.on_enqueue();
+        }
+        assert!(m2.queue_pressured(4));
+        for _ in 0..1_000 {
+            m2.on_dequeue();
+        }
+        assert!(!m2.queue_pressured(4), "pressure clears when the gauge drains");
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //! [`super::batcher::BatchPolicy`] and executed as one encoded call
 //! ([`Estimator::estimate_encoded`](crate::api::dispatch::Estimator::estimate_encoded));
 //! every other method (plan, sweep, simulate, baselines, modality,
-//! models, metrics, health) runs serially on the worker through the
-//! shared [`Dispatcher`](crate::api::dispatch::Dispatcher).
+//! frag, fleet, models, metrics, health) runs serially on the worker
+//! through the shared [`Dispatcher`](crate::api::dispatch::Dispatcher).
 //!
 //! Robustness surface (see `api/fault.rs` for the failpoint catalog):
 //!
@@ -29,7 +29,7 @@
 //!
 //! * **Two-tier admission** — cheap methods (`predict`, `models`,
 //!   `metrics`, `health`) and heavy ones (`plan`, `sweep`, `simulate`,
-//!   `baselines`, `modality`, `frag`) queue on separate bounded channels, each
+//!   `baselines`, `modality`, `frag`, `fleet`) queue on separate bounded channels, each
 //!   `queue_depth` deep. The worker drains the fast tier into batches
 //!   and pops **at most one** slow job per cycle, so a plan/sweep storm
 //!   can never starve interactive traffic, and `over_capacity` fires
@@ -425,10 +425,15 @@ fn submit_on(tx: &Senders, shared: &Shared, req: ApiRequest) -> ApiResponse {
     let deadline = arm_deadline(shared, &req);
     let (reply_tx, reply_rx) = sync_channel(1);
     let tier = tx.for_method(&req.method);
+    // Gauge before send: the worker's on_dequeue can fire the instant
+    // the job lands in the channel, and enqueue-after-send would let
+    // dequeued overtake enqueued (a transiently "negative" gauge). The
+    // failed-send path compensates with on_enqueue_undo.
+    shared.metrics.on_enqueue();
     if let Err(e) = tier.send(Job { req, deadline, reply: reply_tx }) {
+        shared.metrics.on_enqueue_undo();
         return shut_down_response(e.0.req);
     }
-    shared.metrics.on_enqueue();
     match reply_rx.recv() {
         Ok(resp) => resp,
         Err(_) => ApiResponse::err(
@@ -456,9 +461,13 @@ fn try_submit_on(tx: &Senders, shared: &Shared, req: ApiRequest) -> ApiResponse 
     let (reply_tx, reply_rx) = sync_channel(1);
     let fast = is_fast(&req.method);
     let tier = tx.for_method(&req.method);
+    // Same ordering discipline as `submit_on`: enqueue before the send
+    // so on_dequeue can never race ahead, undo on either failure arm.
+    shared.metrics.on_enqueue();
     match tier.try_send(Job { req, deadline, reply: reply_tx }) {
-        Ok(()) => shared.metrics.on_enqueue(),
+        Ok(()) => {}
         Err(TrySendError::Full(job)) => {
+            shared.metrics.on_enqueue_undo();
             // Only the *matching* tier being full rejects: a plan storm
             // saturating the slow tier leaves predict/models/metrics/
             // health admission untouched, and vice versa.
@@ -477,7 +486,10 @@ fn try_submit_on(tx: &Senders, shared: &Shared, req: ApiRequest) -> ApiResponse 
                 .with_retry_after(retry_hint_ms(queue_depth)),
             );
         }
-        Err(TrySendError::Disconnected(job)) => return shut_down_response(job.req),
+        Err(TrySendError::Disconnected(job)) => {
+            shared.metrics.on_enqueue_undo();
+            return shut_down_response(job.req);
+        }
     }
     match reply_rx.recv() {
         Ok(resp) => resp,
@@ -651,8 +663,10 @@ fn worker_loop(
         }
         // Queue pressure observed *after* this drain: more than 3/4 of
         // the bound still waiting means the service is falling behind,
-        // so plan/sweep in this batch degrade to analytical-only.
-        let pressure = capacity > 0 && metrics.queue_depth() as usize * 4 > capacity * 3;
+        // so plan/sweep in this batch degrade to analytical-only. The
+        // shared clamped helper guarantees a racing/wrapped gauge can
+        // never pin this true permanently.
+        let pressure = metrics.queue_pressured(capacity);
 
         if !predicts.is_empty() {
             // One injected-latency roll covers the whole batch (it

@@ -1,0 +1,680 @@
+//! Fleet what-if oracle: from one job on one device to a cluster
+//! (ROADMAP item 3).
+//!
+//! The paper predicts peak memory for a single training run, but the
+//! OOMs it guards against happen on clusters: a scheduler holds N
+//! heterogeneous devices and M queued jobs and must decide *where*
+//! each job's ranks go before cluster time is spent. This module turns
+//! the predictor into that scheduler's oracle:
+//!
+//! * a **device pool** expanded from capacity presets
+//!   ([`crate::zoo::DEVICES`] — A100-40G/80G, H100-80G, MI300-192G);
+//! * **per-rank demand** from [`crate::predictor::predict_per_rank`]:
+//!   each pipeline stage contributes `dp*tp` ranks at that stage's
+//!   predicted peak (predictions for all jobs run as one parse-once
+//!   parallel batch through [`Sweep::run`]);
+//! * **deterministic first-fit-decreasing packing**: jobs sorted by
+//!   per-rank peak descending (ties by name), each job's ranks sorted
+//!   descending, each rank placed on the first device with enough
+//!   residual capacity — all ranks place or the job's placement rolls
+//!   back whole;
+//! * **planner-frontier fallback**: a job that does not fit
+//!   as-specified is re-searched with [`crate::planner`] (mbs ladder
+//!   downward, ZeRO stage upward) against the largest residual hole,
+//!   and the first frontier alternative whose ranks all place is
+//!   admitted with a `replanned` flag;
+//! * **simulator validation**: every placed config's ground-truth peak
+//!   is replayed through [`Sweep::simulate_grid`] (columnar lane
+//!   batching), unless the caller is degraded to analytical-only;
+//! * **stranded-memory accounting** that sums exactly:
+//!   `used + stranded == capacity` per device, and the totals are the
+//!   per-device sums.
+//!
+//! Three what-if questions ([`FleetAction`]): `pack` the whole queue,
+//! `admit` one named job against the already-packed fleet, and
+//! `replan` after an OOM signal — the named job's as-specified
+//! placement is evicted and only its frontier alternatives are tried.
+//! Surfaced as `repro fleet` and the additive v1 wire method `fleet`
+//! (heavy admission tier); see `ARCHITECTURE.md` §Fleet.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{TrainConfig, ZeroStage};
+use crate::planner::{self, Axes, PlanRequest};
+use crate::predictor::{self, RankPrediction};
+use crate::sweep::Sweep;
+use crate::util::text::did_you_mean;
+use crate::zoo;
+
+/// Upper bound on expanded devices per query (a what-if request is an
+/// interactive question, not a datacenter inventory dump).
+pub const MAX_DEVICES: usize = 1024;
+/// Upper bound on total ranks across all queued jobs per query.
+pub const MAX_RANKS: u64 = 16_384;
+/// Frontier alternatives reported per unplaceable job.
+pub const MAX_ALTERNATIVES: usize = 3;
+
+/// The what-if question a fleet query asks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetAction {
+    /// Pack every queued job onto the pool.
+    Pack,
+    /// Pack the rest of the queue first, then ask whether the named
+    /// job fits in what remains (the scheduler's admission question).
+    Admit(String),
+    /// The named job hit an OOM signal: its as-specified placement is
+    /// presumed wrong, so it is re-packed from its planner-frontier
+    /// alternatives only, after the rest of the queue placed.
+    Replan(String),
+}
+
+impl FleetAction {
+    /// Wire name of the action.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetAction::Pack => "pack",
+            FleetAction::Admit(_) => "admit",
+            FleetAction::Replan(_) => "replan",
+        }
+    }
+
+    /// The targeted job name (admit/replan).
+    pub fn target(&self) -> Option<&str> {
+        match self {
+            FleetAction::Pack => None,
+            FleetAction::Admit(j) | FleetAction::Replan(j) => Some(j),
+        }
+    }
+}
+
+/// One physical device of the expanded pool.
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Stable id: `kind/ordinal` (e.g. `a100-80g/0`).
+    pub id: String,
+    pub kind: String,
+    pub capacity_mib: f64,
+}
+
+/// A contiguous rank-group assignment: `ranks` ranks of one job on one
+/// device, pinning `mib` MiB of its capacity.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub device: String,
+    pub ranks: u64,
+    pub mib: f64,
+}
+
+/// One job's accepted placement.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub job: String,
+    /// The config actually placed (the frontier alternative when
+    /// `replanned`).
+    pub cfg: TrainConfig,
+    /// Predicted binding per-rank peak of the placed config (MiB).
+    pub per_rank_peak_mib: f64,
+    /// Ground-truth simulated binding per-rank peak (MiB); `None` on
+    /// the degraded analytical-only tier.
+    pub simulated_peak_mib: Option<f64>,
+    /// Per-device rank groups, in device-pool order.
+    pub assignments: Vec<Assignment>,
+    /// True when the job landed via a planner-frontier alternative
+    /// rather than as-specified.
+    pub replanned: bool,
+}
+
+/// A frontier alternative offered for a job that did not fit.
+#[derive(Clone, Debug)]
+pub struct Alternative {
+    pub cfg: TrainConfig,
+    /// Analytical per-rank peak (MiB).
+    pub predicted_mib: f64,
+    /// Simulated per-rank peak (MiB; equals the analytical peak on the
+    /// degraded tier).
+    pub simulated_mib: f64,
+    /// Planner throughput-proxy score (ordering only).
+    pub tokens_per_step: f64,
+}
+
+/// A job the oracle could not place, with what it suggests instead.
+#[derive(Clone, Debug)]
+pub struct RejectedJob {
+    pub job: String,
+    pub reason: String,
+    /// Frontier alternatives, best throughput first (may be empty when
+    /// even the planner finds no fitting config).
+    pub alternatives: Vec<Alternative>,
+}
+
+/// Post-packing view of one device.
+#[derive(Clone, Debug)]
+pub struct DeviceReport {
+    pub device: Device,
+    /// Ranks resident on the device.
+    pub ranks: u64,
+    /// Predicted memory pinned by those ranks (MiB).
+    pub used_mib: f64,
+    /// Capacity minus used (MiB) — memory no queued rank could use.
+    pub stranded_mib: f64,
+}
+
+/// The oracle's full answer to one what-if query.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub action: FleetAction,
+    /// Devices in pool order (spec order, expanded by count).
+    pub devices: Vec<DeviceReport>,
+    /// Accepted placements, in queue order.
+    pub placements: Vec<Placement>,
+    /// Unplaceable jobs, in queue order.
+    pub rejected: Vec<RejectedJob>,
+    /// Admit/replan verdict for the targeted job (`None` for `pack`).
+    pub admitted: Option<bool>,
+    /// True when placements carry simulator ground truth.
+    pub validated: bool,
+}
+
+impl FleetReport {
+    pub fn total_capacity_mib(&self) -> f64 {
+        self.devices.iter().map(|d| d.device.capacity_mib).sum()
+    }
+
+    pub fn total_used_mib(&self) -> f64 {
+        self.devices.iter().map(|d| d.used_mib).sum()
+    }
+
+    pub fn total_stranded_mib(&self) -> f64 {
+        self.devices.iter().map(|d| d.stranded_mib).sum()
+    }
+
+    /// The named job's placement, if it was accepted.
+    pub fn placement(&self, job: &str) -> Option<&Placement> {
+        self.placements.iter().find(|p| p.job == job)
+    }
+}
+
+/// Expand `(kind, count)` specs into the device pool, validating kinds
+/// against the preset registry (case-insensitive, did-you-mean on
+/// unknown kinds). Ordinals are global per kind so ids stay stable
+/// when a kind appears in multiple specs.
+pub fn expand_devices(specs: &[(String, u64)]) -> Result<Vec<Device>> {
+    if specs.is_empty() {
+        bail!("fleet needs at least one device spec");
+    }
+    let mut pool = Vec::new();
+    let mut per_kind: Vec<(String, u64)> = Vec::new();
+    for (kind, count) in specs {
+        let Some(capacity_mib) = zoo::device_capacity_mib(kind) else {
+            let hint = did_you_mean(kind, zoo::device_names());
+            bail!(
+                "unknown device kind {kind:?}{hint} (available: {})",
+                zoo::device_names().join(", ")
+            );
+        };
+        if *count == 0 {
+            bail!("device count for {kind:?} must be >= 1");
+        }
+        let canon = kind.trim().to_ascii_lowercase();
+        let start = match per_kind.iter_mut().find(|(k, _)| *k == canon) {
+            Some((_, n)) => {
+                let s = *n;
+                *n += count;
+                s
+            }
+            None => {
+                per_kind.push((canon.clone(), *count));
+                0
+            }
+        };
+        for i in 0..*count {
+            pool.push(Device {
+                id: format!("{}/{}", canon, start + i),
+                kind: canon.clone(),
+                capacity_mib,
+            });
+        }
+        if pool.len() > MAX_DEVICES {
+            bail!("fleet exceeds {MAX_DEVICES} devices");
+        }
+    }
+    Ok(pool)
+}
+
+/// The per-rank memory demand of one job, descending: `dp*tp` ranks
+/// per pipeline stage at that stage's predicted peak. Demands are
+/// quantized to whole MiB (ceiling — conservative): with integer-MiB
+/// demands and integer-MiB preset capacities, every residual/used/
+/// stranded quantity is an integer exactly representable in f64, so
+/// the stranded-memory accounting sums *exactly*, not approximately.
+fn rank_needs(cfg: &TrainConfig, pred: &RankPrediction) -> Vec<f64> {
+    let per_stage_ranks = cfg.dp * cfg.tp;
+    let mut needs = Vec::with_capacity(cfg.world_size() as usize);
+    for stage in &pred.per_stage {
+        for _ in 0..per_stage_ranks {
+            needs.push((stage.peak_mib as f64).ceil());
+        }
+    }
+    needs.sort_by(|a, b| b.total_cmp(a));
+    needs
+}
+
+/// Mutable packing state over the pool.
+struct Pool {
+    devices: Vec<Device>,
+    residual: Vec<f64>,
+    ranks: Vec<u64>,
+}
+
+impl Pool {
+    fn new(devices: Vec<Device>) -> Self {
+        let residual = devices.iter().map(|d| d.capacity_mib).collect();
+        let ranks = vec![0; devices.len()];
+        Pool { devices, residual, ranks }
+    }
+
+    /// All-or-nothing first-fit of one job's rank demands (descending):
+    /// every rank lands on the first device with enough residual, or
+    /// nothing is committed. Returns per-device `(ranks, mib)` groups.
+    fn place_job(&mut self, needs: &[f64]) -> Option<Vec<Assignment>> {
+        let mut residual = self.residual.clone();
+        let mut group_ranks = vec![0u64; self.devices.len()];
+        let mut group_mib = vec![0.0f64; self.devices.len()];
+        for &need in needs {
+            let slot = residual.iter().position(|&r| r >= need)?;
+            residual[slot] -= need;
+            group_ranks[slot] += 1;
+            group_mib[slot] += need;
+        }
+        self.residual = residual;
+        let mut out = Vec::new();
+        for (i, &r) in group_ranks.iter().enumerate() {
+            if r > 0 {
+                self.ranks[i] += r;
+                out.push(Assignment {
+                    device: self.devices[i].id.clone(),
+                    ranks: r,
+                    mib: group_mib[i],
+                });
+            }
+        }
+        Some(out)
+    }
+
+    /// The largest single-device hole — the budget a frontier
+    /// alternative's binding rank must fit.
+    fn max_residual(&self) -> f64 {
+        self.residual.iter().copied().fold(0.0, f64::max)
+    }
+
+    fn into_reports(self) -> Vec<DeviceReport> {
+        self.devices
+            .into_iter()
+            .zip(self.residual)
+            .zip(self.ranks)
+            .map(|((device, residual), ranks)| {
+                let used_mib = device.capacity_mib - residual;
+                DeviceReport { device, ranks, used_mib, stranded_mib: residual }
+            })
+            .collect()
+    }
+}
+
+/// The downward-escalation axes for a job that did not fit: mbs rungs
+/// at and below the job's own (powers of two), ZeRO stages at and
+/// above its own; everything else pinned. The planner searches that
+/// ladder against the budget and returns the safe frontier.
+fn fallback_axes(cfg: &TrainConfig) -> Axes {
+    let mut mbs: Vec<u64> = (0..)
+        .map(|i| 1u64 << i)
+        .take_while(|&m| m < cfg.mbs)
+        .collect();
+    mbs.push(cfg.mbs);
+    let zero: Vec<ZeroStage> = [ZeroStage::Zero0, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3]
+        .into_iter()
+        .filter(|z| *z >= cfg.zero)
+        .collect();
+    Axes { mbs, zero, ..Axes::fixed(cfg) }
+}
+
+/// Frontier alternatives for a job against `budget_mib` (the largest
+/// current hole), best throughput first. `validate` selects the
+/// simulator-validated planner; degraded callers use the analytical
+/// pass. Alternatives identical to the as-specified config are
+/// dropped (for `replan`, "try the same thing again" is not advice).
+fn frontier_alternatives(
+    cfg: &TrainConfig,
+    budget_mib: f64,
+    engine: &Sweep,
+    validate: bool,
+) -> Result<Vec<Alternative>> {
+    if budget_mib <= 0.0 {
+        return Ok(Vec::new());
+    }
+    let req = PlanRequest { base: cfg.clone(), budget_mib, axes: fallback_axes(cfg) };
+    let plan = if validate {
+        planner::plan_with(&req, engine)?
+    } else {
+        planner::plan_analytical_with(&req, engine)?
+    };
+    let own_key = cfg.cache_key();
+    Ok(plan
+        .recommended()
+        .filter(|c| c.cfg.cache_key() != own_key)
+        .take(MAX_ALTERNATIVES)
+        .map(|c| Alternative {
+            cfg: c.cfg.clone(),
+            predicted_mib: c.predicted_mib,
+            simulated_mib: c.simulated_mib,
+            tokens_per_step: c.tokens_per_step,
+        })
+        .collect())
+}
+
+/// Answer one what-if query: expand the pool, predict per-rank peaks
+/// for the whole queue in one parse-once batch, pack deterministically
+/// (first-fit decreasing), fall back to the planner frontier for jobs
+/// that do not fit, and (unless degraded) attach simulator ground
+/// truth to every placement.
+pub fn what_if(
+    devices: &[(String, u64)],
+    jobs: &[(String, TrainConfig)],
+    action: &FleetAction,
+    engine: &Sweep,
+    validate: bool,
+) -> Result<FleetReport> {
+    if jobs.is_empty() {
+        bail!("fleet needs at least one job");
+    }
+    for (i, (name, _)) in jobs.iter().enumerate() {
+        if name.is_empty() {
+            bail!("job {i} has an empty name");
+        }
+        if jobs[..i].iter().any(|(n, _)| n == name) {
+            bail!("duplicate job name {name:?}");
+        }
+    }
+    let target = match action.target() {
+        Some(t) => {
+            let Some(idx) = jobs.iter().position(|(n, _)| n == t) else {
+                bail!("{} targets unknown job {t:?}", action.name());
+            };
+            Some(idx)
+        }
+        None => None,
+    };
+    let total_ranks: u64 = jobs.iter().map(|(_, c)| c.world_size()).sum();
+    if total_ranks > MAX_RANKS {
+        bail!("fleet exceeds {MAX_RANKS} total ranks ({total_ranks})");
+    }
+    let mut pool = Pool::new(expand_devices(devices)?);
+
+    // Per-rank predictions for the whole queue: one parse per distinct
+    // geometry, points in parallel, results in queue order.
+    let cfgs: Vec<TrainConfig> = jobs.iter().map(|(_, c)| c.clone()).collect();
+    let preds: Vec<RankPrediction> = engine
+        .run(&cfgs, |_ctx, pm, cfg| predictor::predict_per_rank_parsed(pm, cfg))
+        .context("predicting per-rank peaks for the fleet queue")?;
+
+    // Deterministic FFD order: per-rank peak descending, name
+    // ascending on ties. The admit/replan target always packs last —
+    // the question is "does it fit in what the rest leaves", not "does
+    // it fit if it gets first pick".
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| {
+        (preds[b].peak_mib() as f64)
+            .total_cmp(&(preds[a].peak_mib() as f64))
+            .then_with(|| jobs[a].0.cmp(&jobs[b].0))
+    });
+    if let Some(t) = target {
+        order.retain(|&i| i != t);
+        order.push(t);
+    }
+
+    let mut placements: Vec<(usize, Placement)> = Vec::new();
+    let mut rejected: Vec<(usize, RejectedJob)> = Vec::new();
+    for &i in &order {
+        let (name, cfg) = &jobs[i];
+        let is_replan_target = matches!(action, FleetAction::Replan(_)) && target == Some(i);
+        // As-specified attempt (skipped for the replan target: its OOM
+        // signal means the as-specified prediction under-called).
+        if !is_replan_target {
+            if let Some(assignments) = pool.place_job(&rank_needs(cfg, &preds[i])) {
+                placements.push((
+                    i,
+                    Placement {
+                        job: name.clone(),
+                        cfg: cfg.clone(),
+                        per_rank_peak_mib: preds[i].peak_mib() as f64,
+                        simulated_peak_mib: None,
+                        assignments,
+                        replanned: false,
+                    },
+                ));
+                continue;
+            }
+        }
+        // Planner-frontier fallback against the largest remaining hole.
+        let budget = pool.max_residual();
+        let alternatives = match frontier_alternatives(cfg, budget, engine, validate) {
+            Ok(alts) => alts,
+            Err(e) => {
+                rejected.push((
+                    i,
+                    RejectedJob {
+                        job: name.clone(),
+                        reason: format!(
+                            "does not fit as-specified and frontier search failed: {e:#}"
+                        ),
+                        alternatives: Vec::new(),
+                    },
+                ));
+                continue;
+            }
+        };
+        let mut placed = false;
+        for alt in &alternatives {
+            let pred = predictor::predict_per_rank(&alt.cfg)?;
+            if let Some(assignments) = pool.place_job(&rank_needs(&alt.cfg, &pred)) {
+                placements.push((
+                    i,
+                    Placement {
+                        job: name.clone(),
+                        cfg: alt.cfg.clone(),
+                        per_rank_peak_mib: pred.peak_mib() as f64,
+                        simulated_peak_mib: None,
+                        assignments,
+                        replanned: true,
+                    },
+                ));
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            let reason = if is_replan_target {
+                format!(
+                    "OOM-signalled job has no frontier alternative fitting the \
+                     {budget:.0} MiB hole"
+                )
+            } else {
+                format!(
+                    "per-rank peak {:.0} MiB does not fit the {budget:.0} MiB hole \
+                     and no frontier alternative places",
+                    preds[i].peak_mib()
+                )
+            };
+            rejected.push((i, RejectedJob { job: name.clone(), reason, alternatives }));
+        }
+    }
+
+    // Simulator ground truth for every placed config, batched through
+    // the columnar sweep engine. Skipped when degraded.
+    if validate && !placements.is_empty() {
+        let placed_cfgs: Vec<TrainConfig> =
+            placements.iter().map(|(_, p)| p.cfg.clone()).collect();
+        let measured = engine
+            .simulate_grid(&placed_cfgs)
+            .context("simulator-validating fleet placements")?;
+        for ((_, p), m) in placements.iter_mut().zip(&measured) {
+            p.simulated_peak_mib = Some(m.peak_mib);
+        }
+    }
+
+    // Report in queue order regardless of packing order.
+    placements.sort_by_key(|(i, _)| *i);
+    rejected.sort_by_key(|(i, _)| *i);
+    let admitted = target.map(|t| {
+        let name = &jobs[t].0;
+        placements.iter().any(|(_, p)| &p.job == name)
+    });
+    Ok(FleetReport {
+        action: action.clone(),
+        devices: pool.into_reports(),
+        placements: placements.into_iter().map(|(_, p)| p).collect(),
+        rejected: rejected.into_iter().map(|(_, r)| r).collect(),
+        admitted,
+        validated: validate,
+    })
+}
+
+/// The default demo pool: two generations of NVIDIA parts plus one
+/// big-HBM MI300 — heterogeneous enough that packing decisions are
+/// non-trivial.
+pub fn demo_devices() -> Vec<(String, u64)> {
+    vec![
+        ("a100-80g".to_string(), 4),
+        ("a100-40g".to_string(), 2),
+        ("h100-80g".to_string(), 2),
+        ("mi300-192g".to_string(), 1),
+    ]
+}
+
+/// A 12-job mixed queue over the zoo presets (multimodal + unimodal,
+/// dp/tp/pp/ZeRO variety) — the `repro fleet` default and the test/
+/// bench workload.
+pub fn demo_jobs() -> Vec<(String, TrainConfig)> {
+    let base = TrainConfig::llava_finetune_default;
+    let job = |model: &str, mbs: u64, seq_len: u64, dp: u64, zero: ZeroStage| TrainConfig {
+        model: model.to_string(),
+        mbs,
+        seq_len,
+        dp,
+        zero,
+        ..base()
+    };
+    vec![
+        ("llava7b-a".to_string(), job("llava-1.5-7b", 4, 2048, 2, ZeroStage::Zero2)),
+        ("llava7b-b".to_string(), job("llava-1.5-7b", 8, 2048, 4, ZeroStage::Zero3)),
+        ("llava13b-a".to_string(), job("llava-1.5-13b", 2, 2048, 2, ZeroStage::Zero3)),
+        ("llava13b-b".to_string(), job("llava-1.5-13b", 4, 4096, 2, ZeroStage::Zero3)),
+        ("vicuna7b-a".to_string(), job("vicuna-7b", 4, 2048, 2, ZeroStage::Zero2)),
+        ("vicuna13b-a".to_string(), job("vicuna-13b", 2, 2048, 2, ZeroStage::Zero3)),
+        ("tiny-a".to_string(), job("llava-tiny", 16, 512, 1, ZeroStage::Zero0)),
+        ("tiny-b".to_string(), job("llava-tiny", 32, 1024, 2, ZeroStage::Zero0)),
+        ("llama-tiny-a".to_string(), job("llama-tiny", 32, 1024, 1, ZeroStage::Zero0)),
+        (
+            "vicuna7b-tp2".to_string(),
+            TrainConfig { tp: 2, ..job("vicuna-7b", 2, 4096, 1, ZeroStage::Zero1) },
+        ),
+        (
+            "vicuna7b-pp2".to_string(),
+            TrainConfig { pp: 2, ..job("vicuna-7b", 2, 2048, 1, ZeroStage::Zero1) },
+        ),
+        ("llava7b-c".to_string(), job("llava-1.5-7b", 2, 1024, 2, ZeroStage::Zero2)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_job(name: &str, mbs: u64) -> (String, TrainConfig) {
+        (
+            name.to_string(),
+            TrainConfig {
+                model: "llava-tiny".to_string(),
+                mbs,
+                seq_len: 128,
+                dp: 1,
+                ..TrainConfig::llava_finetune_default()
+            },
+        )
+    }
+
+    #[test]
+    fn expand_devices_validates_and_numbers_globally() {
+        let pool = expand_devices(&[
+            ("a100-80g".to_string(), 2),
+            ("A100-80G".to_string(), 1),
+            ("mi300-192g".to_string(), 1),
+        ])
+        .unwrap();
+        let ids: Vec<&str> = pool.iter().map(|d| d.id.as_str()).collect();
+        assert_eq!(ids, ["a100-80g/0", "a100-80g/1", "a100-80g/2", "mi300-192g/0"]);
+        assert_eq!(pool[3].capacity_mib, 196608.0);
+        let err = expand_devices(&[("h200".to_string(), 1)]).unwrap_err().to_string();
+        assert!(err.contains("unknown device kind"), "{err}");
+        assert!(expand_devices(&[]).is_err());
+        assert!(expand_devices(&[("a100-80g".to_string(), 0)]).is_err());
+    }
+
+    #[test]
+    fn pack_accounting_sums_exactly() {
+        let engine = Sweep::new(2);
+        let jobs = vec![tiny_job("a", 1), tiny_job("b", 2), tiny_job("c", 4)];
+        let r = what_if(
+            &[("a100-40g".to_string(), 2)],
+            &jobs,
+            &FleetAction::Pack,
+            &engine,
+            false,
+        )
+        .unwrap();
+        assert_eq!(r.placements.len(), 3);
+        assert!(r.rejected.is_empty());
+        for d in &r.devices {
+            assert_eq!(d.used_mib + d.stranded_mib, d.device.capacity_mib, "{}", d.device.id);
+            assert!(d.used_mib <= d.device.capacity_mib);
+        }
+        let placed: f64 = r
+            .placements
+            .iter()
+            .flat_map(|p| p.assignments.iter().map(|a| a.mib))
+            .sum();
+        assert!((placed - r.total_used_mib()).abs() < 1e-6);
+        assert_eq!(
+            r.total_used_mib() + r.total_stranded_mib(),
+            r.total_capacity_mib()
+        );
+    }
+
+    #[test]
+    fn duplicate_names_and_unknown_targets_are_rejected() {
+        let engine = Sweep::new(1);
+        let dev = [("a100-40g".to_string(), 1)];
+        let jobs = vec![tiny_job("a", 1), tiny_job("a", 2)];
+        assert!(what_if(&dev, &jobs, &FleetAction::Pack, &engine, false).is_err());
+        let jobs = vec![tiny_job("a", 1)];
+        let err = what_if(&dev, &jobs, &FleetAction::Admit("ghost".into()), &engine, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown job"), "{err}");
+    }
+
+    #[test]
+    fn fallback_axes_escalate_downward() {
+        let cfg = TrainConfig {
+            mbs: 8,
+            zero: ZeroStage::Zero1,
+            ..TrainConfig::llava_finetune_default()
+        };
+        let axes = fallback_axes(&cfg);
+        assert_eq!(axes.mbs, vec![1, 2, 4, 8]);
+        assert_eq!(
+            axes.zero,
+            vec![ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3]
+        );
+        assert_eq!(axes.seq_len, vec![cfg.seq_len]);
+    }
+}

@@ -15,7 +15,9 @@
 //!   an OOM-safe capacity planner that searches the safe-configuration
 //!   frontier under a memory budget ([`planner`]), a fragmentation &
 //!   placement analyzer that bounds how much of a peak is allocator
-//!   waste ([`placement`]), and the evaluation
+//!   waste ([`placement`]), a fleet what-if oracle that bin-packs
+//!   queued jobs onto heterogeneous devices by predicted per-rank peak
+//!   ([`fleet`]), and the evaluation
 //!   harness regenerating every figure of the paper ([`eval`],
 //!   [`report`]).
 //! Every capability is also reachable over a versioned wire protocol
@@ -78,6 +80,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod fleet;
 pub mod inference;
 pub mod model;
 pub mod parser;

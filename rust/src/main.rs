@@ -15,6 +15,9 @@
 //! * `frag`      — fragmentation & placement analysis: how much of the
 //!   simulated peak an offline-optimal packing of the same allocation
 //!   lifetimes would reclaim, plus allocator-policy recommendations.
+//! * `fleet`     — the fleet what-if oracle: bin-pack a queue of jobs
+//!   onto heterogeneous devices by predicted per-rank peak, with
+//!   planner-frontier fallback for jobs that do not fit as-specified.
 //! * `eval`      — regenerate the paper's Fig. 2a/2b sweeps (+ CSV).
 //! * `sweep`     — fan a config grid (DP × MBS × SeqLen × ZeRO) across
 //!   cores through the parallel sweep engine; predicted vs measured per
@@ -32,7 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use mmpredict::api::dispatch::{AnalyticalEstimator, Dispatcher, TensorizedEstimator};
 use mmpredict::api::{
-    self, ApiRequest, FragParams, Method, PlanParams, PredictParams, SweepParams,
+    self, ApiRequest, FleetParams, FragParams, Method, PlanParams, PredictParams, SweepParams,
 };
 use mmpredict::config::{OptimizerKind, Precision, Stage, TrainConfig, ZeroStage};
 use mmpredict::coordinator::batcher::BatchPolicy;
@@ -54,6 +57,7 @@ const SUBCOMMANDS: &[(&str, &str, fn(&Args) -> Result<()>)] = &[
     ("eval", "regenerate the paper's Fig. 2a/2b sweeps (+ CSV)", cmd_eval),
     ("sweep", "fan a config grid across cores; predicted vs measured per point", cmd_sweep),
     ("frag", "fragmentation analysis: offline-optimal packing vs the caching allocator", cmd_frag),
+    ("fleet", "what-if oracle: bin-pack queued jobs onto heterogeneous devices", cmd_fleet),
     ("ablations", "factor/stage/ZeRO/LoRA/attention ablation tables", cmd_ablations),
     ("baselines", "compare against Fujii/LLMem/profiling baselines", cmd_baselines),
     ("infer", "inference/KV-cache memory prediction", cmd_infer),
@@ -141,6 +145,14 @@ fn print_help() {
          frag options:\n\
          \x20 --top N                   largest lifetimes to list (default 5)\n\
          \x20 --json                    emit the raw frag payload as JSON\n\
+         fleet options:\n\
+         \x20 --devices kind=N,...      device pool, e.g. a100-80g=4,h100-80g=2\n\
+         \x20                           (default: a demo fleet of 9 devices)\n\
+         \x20 --jobs name=model:mbs:seq[:dp[:tp[:pp[:zero]]]],...\n\
+         \x20                           job queue (default: a 12-job demo queue)\n\
+         \x20 --action pack|admit|replan  what-if mode (default pack)\n\
+         \x20 --job <name>              target job for admit/replan\n\
+         \x20 --threads N --no-columnar --json\n\
          eval options:\n\
          \x20 --figure <2a|2b|all>      which sweep (default all)\n\
          \x20 --out <dir>               write CSVs (default results/)\n\
@@ -552,6 +564,109 @@ fn cmd_frag(args: &Args) -> Result<()> {
         return Ok(());
     }
     print!("{}", api::render::frag_text(&payload)?);
+    Ok(())
+}
+
+/// Parse `--devices kind=count,...` into (kind, count) specs.
+fn fleet_devices_from_args(s: &str) -> Result<Vec<(String, u64)>> {
+    let mut out = Vec::new();
+    for spec in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (kind, count) = match spec.split_once('=') {
+            Some((k, c)) => (
+                k.trim(),
+                c.trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("invalid device count in {spec:?}"))?,
+            ),
+            None => (spec, 1),
+        };
+        out.push((kind.to_string(), count));
+    }
+    if out.is_empty() {
+        bail!("--devices must list at least one kind=count entry");
+    }
+    Ok(out)
+}
+
+/// Parse one `name=model:mbs:seq[:dp[:tp[:pp[:zero]]]]` job spec.
+fn fleet_job_from_spec(spec: &str) -> Result<(String, TrainConfig)> {
+    let (name, rest) = spec.split_once('=').with_context(|| {
+        format!("job spec {spec:?} is not name=model:mbs:seq[:dp[:tp[:pp[:zero]]]]")
+    })?;
+    let parts: Vec<&str> = rest.split(':').map(str::trim).collect();
+    if parts.len() < 3 || parts.len() > 7 {
+        bail!("job spec {spec:?}: expected model:mbs:seq[:dp[:tp[:pp[:zero]]]]");
+    }
+    let num = |i: usize, what: &str| -> Result<u64> {
+        parts[i]
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("job spec {spec:?}: invalid {what} {:?}", parts[i]))
+    };
+    let mut cfg = TrainConfig::llava_finetune_default();
+    cfg.model = parts[0].to_string();
+    cfg.mbs = num(1, "mbs")?;
+    cfg.seq_len = num(2, "seq_len")?;
+    if parts.len() > 3 {
+        cfg.dp = num(3, "dp")?;
+    }
+    if parts.len() > 4 {
+        cfg.tp = num(4, "tp")?;
+    }
+    if parts.len() > 5 {
+        cfg.pp = num(5, "pp")?;
+    }
+    if parts.len() > 6 {
+        cfg.zero = ZeroStage::parse(num(6, "zero")?)?;
+    }
+    cfg.validate()?;
+    Ok((name.trim().to_string(), cfg))
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use mmpredict::fleet::{self, FleetAction};
+    let devices = match args.get("devices") {
+        Some(s) => fleet_devices_from_args(s)?,
+        None => fleet::demo_devices(),
+    };
+    let jobs = match args.get("jobs") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(fleet_job_from_spec)
+            .collect::<Result<Vec<_>>>()?,
+        None => fleet::demo_jobs(),
+    };
+    let action = match (args.get_or("action", "pack"), args.get("job")) {
+        ("pack", None) => FleetAction::Pack,
+        ("pack", Some(_)) => bail!("--job is only valid with --action admit or replan"),
+        ("admit", Some(j)) => FleetAction::Admit(j.to_string()),
+        ("replan", Some(j)) => FleetAction::Replan(j.to_string()),
+        ("admit" | "replan", None) => bail!("--action admit/replan requires --job <name>"),
+        (other, _) => bail!("unknown --action {other:?} (pack|admit|replan)"),
+    };
+
+    let threads = args
+        .get_parse::<usize>("threads")?
+        .unwrap_or_else(sweep::default_threads);
+    // The CLI is a wire client of itself: the same `fleet` envelope
+    // `repro serve` executes, rendered by api::render::fleet_text.
+    let engine = Sweep::new(threads).with_columnar(!args.flag("no-columnar"));
+    let mut d = Dispatcher::new(Box::new(AnalyticalEstimator), engine);
+    let req = ApiRequest {
+        id: None,
+        method: Method::Fleet(FleetParams { devices, jobs, action }),
+        deadline_ms: None,
+    };
+    let t0 = std::time::Instant::now();
+    let payload = d.handle(&req).into_result()?;
+    let dt = t0.elapsed();
+    if args.flag("json") {
+        println!("{payload}");
+        return Ok(());
+    }
+    print!("{}", api::render::fleet_text(&payload)?);
+    println!("packed in {dt:.3?} on {} worker threads", d.threads());
     Ok(())
 }
 

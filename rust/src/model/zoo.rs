@@ -85,6 +85,32 @@ pub fn build(name: &str, seq_len: u64, attn: AttnImpl) -> Result<ZooEntry> {
     }
 }
 
+/// Device capacity presets for the fleet oracle: `(kind, usable
+/// memory in MiB)`. Capacities are the full device HBM (40/80/192 GiB
+/// binary); reserving driver/runtime slack is the caller's budget
+/// decision, exactly as with `--capacity-mib` elsewhere.
+pub const DEVICES: &[(&str, f64)] = &[
+    ("a100-40g", 40960.0),
+    ("a100-80g", 81920.0),
+    ("h100-80g", 81920.0),
+    ("mi300-192g", 196608.0),
+];
+
+/// All device preset kinds, in registry order.
+pub fn device_names() -> Vec<&'static str> {
+    DEVICES.iter().map(|(n, _)| *n).collect()
+}
+
+/// Usable memory (MiB) of a device preset, if the kind is registered
+/// (case-insensitive).
+pub fn device_capacity_mib(kind: &str) -> Option<f64> {
+    let kind = kind.trim();
+    DEVICES
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(kind))
+        .map(|&(_, mib)| mib)
+}
+
 /// LLaVA-style composition: ViT tower -> MLP projector -> decoder.
 fn llava(name: &str, vit: VitConfig, lm: LlamaConfig, inherit_lm_attn: bool) -> ArchSpec {
     ArchSpec {
@@ -172,6 +198,18 @@ mod tests {
             assert!(e.spec.param_elems() > 0, "{n}");
             assert!(arch_spec(n).is_some(), "{n}");
         }
+    }
+
+    #[test]
+    fn device_registry_is_consistent() {
+        let ns = device_names();
+        assert_eq!(ns.len(), DEVICES.len());
+        for n in ns {
+            let mib = device_capacity_mib(n).unwrap();
+            assert!(mib > 0.0, "{n}");
+        }
+        assert_eq!(device_capacity_mib("A100-80G"), Some(81920.0));
+        assert_eq!(device_capacity_mib("tpu-v9"), None);
     }
 
     #[test]

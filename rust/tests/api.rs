@@ -105,6 +105,11 @@ fn request_for(method_name: &str, id: &str) -> ApiRequest {
         "baselines" => Method::Baselines(api::BaselinesParams { cfg }),
         "modality" => Method::Modality(api::ModalityParams { cfg }),
         "frag" => Method::Frag(api::FragParams { cfg, top_k: 3 }),
+        "fleet" => Method::Fleet(api::FleetParams {
+            devices: vec![("a100-40g".into(), 2)],
+            jobs: vec![("j0".into(), cfg)],
+            action: mmpredict::fleet::FleetAction::Pack,
+        }),
         "models" => Method::Models,
         "metrics" => Method::Metrics,
         "health" => Method::Health,
@@ -163,6 +168,13 @@ fn check_payload(method_name: &str, payload: &Json) {
             assert!(!top.is_empty() && top.len() <= 3, "top_k=3 caps the list");
             assert_eq!(payload.get("policies").unwrap().as_arr().unwrap().len(), 3);
         }
+        "fleet" => {
+            let placements = payload.get("placements").unwrap().as_arr().unwrap();
+            assert_eq!(placements.len(), 1, "the tiny job fits an a100-40g");
+            assert!(matches!(payload.get("validated"), Some(Json::Bool(_))));
+            let totals = payload.get("totals").unwrap();
+            assert!(totals.get("used_mib").unwrap().as_f64().unwrap() > 0.0);
+        }
         "models" => {
             let models = payload.get("models").unwrap().as_arr().unwrap();
             assert_eq!(models.len(), mmpredict::zoo::names().len());
@@ -178,7 +190,7 @@ fn check_payload(method_name: &str, payload: &Json) {
     }
 }
 
-/// Acceptance: ≥8 concurrent clients mixing all ten methods against
+/// Acceptance: ≥8 concurrent clients mixing all eleven methods against
 /// the loopback server; every response correlates by id and is
 /// schema-valid.
 #[test]

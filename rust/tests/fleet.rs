@@ -1,0 +1,336 @@
+//! Fleet what-if oracle: packing invariants (no device above its
+//! predicted capacity, exact stranded-memory accounting), placement
+//! determinism across worker-thread counts, the admit/replan wire
+//! round-trips with strict unknown-field rejection, and the
+//! heterogeneous demo fleet end-to-end with simulator-validated
+//! placements. Runs entirely on the analytical backend.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use mmpredict::api::{self, codec, ApiRequest, ApiResponse, ErrorCode, FleetParams, Method};
+use mmpredict::config::TrainConfig;
+use mmpredict::coordinator::{PredictionService, ServiceConfig};
+use mmpredict::fleet::{self, FleetAction};
+use mmpredict::sweep::Sweep;
+use mmpredict::util::json_mini::Json;
+
+fn tiny_job(name: &str, mbs: u64) -> (String, TrainConfig) {
+    (
+        name.to_string(),
+        TrainConfig {
+            model: "llava-tiny".to_string(),
+            mbs,
+            seq_len: 128,
+            dp: 1,
+            ..TrainConfig::llava_finetune_default()
+        },
+    )
+}
+
+fn start_server() -> api::serve::Server {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let svc = PredictionService::start_analytical(ServiceConfig::default());
+    api::serve::serve(
+        listener,
+        svc,
+        &api::serve::ServeOptions { conn_threads: 4, ..Default::default() },
+    )
+    .expect("server start")
+}
+
+struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WireClient {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+            .unwrap();
+        WireClient {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call_raw(&mut self, line: &str) -> ApiResponse {
+        writeln!(self.writer, "{line}").expect("write");
+        self.writer.flush().expect("flush");
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).expect("read");
+        assert!(n > 0, "server closed the connection");
+        ApiResponse::parse_line(resp.trim()).expect("well-formed v1 response")
+    }
+
+    fn call(&mut self, req: &ApiRequest) -> ApiResponse {
+        self.call_raw(&req.to_json().to_string())
+    }
+}
+
+/// Per-device packing invariant plus exact stranded accounting: with
+/// integer-MiB rank demands and integer-MiB capacities, `used +
+/// stranded == capacity` holds with `==`, not a tolerance, on every
+/// device and in the totals.
+#[test]
+fn no_device_packs_above_capacity_and_accounting_is_exact() {
+    let engine = Sweep::new(2);
+    let jobs: Vec<_> = (0..6).map(|i| tiny_job(&format!("j{i}"), 1 + i % 3)).collect();
+    let r = fleet::what_if(
+        &[("a100-40g".to_string(), 2), ("a100-80g".to_string(), 1)],
+        &jobs,
+        &FleetAction::Pack,
+        &engine,
+        true,
+    )
+    .unwrap();
+    assert_eq!(r.placements.len() + r.rejected.len(), jobs.len());
+    for d in &r.devices {
+        assert!(d.used_mib <= d.device.capacity_mib, "{} over capacity", d.device.id);
+        assert!(d.used_mib >= 0.0 && d.stranded_mib >= 0.0);
+        assert_eq!(d.used_mib + d.stranded_mib, d.device.capacity_mib, "{}", d.device.id);
+        assert_eq!(d.used_mib, d.used_mib.trunc(), "quantized to whole MiB");
+    }
+    assert_eq!(r.total_used_mib() + r.total_stranded_mib(), r.total_capacity_mib());
+    // every assignment's MiB sums back to the device ledger
+    let placed: f64 = r
+        .placements
+        .iter()
+        .flat_map(|p| p.assignments.iter().map(|a| a.mib))
+        .sum();
+    assert_eq!(placed, r.total_used_mib());
+}
+
+/// The oracle is deterministic: the full JSON report is byte-identical
+/// whether predictions/simulations ran on 1 or 8 worker threads.
+#[test]
+fn placement_is_deterministic_across_thread_counts() {
+    let jobs: Vec<_> = (0..8).map(|i| tiny_job(&format!("j{i}"), 1 + i % 4)).collect();
+    let devices = [("a100-40g".to_string(), 2), ("h100-80g".to_string(), 1)];
+    let run = |threads: usize| {
+        let engine = Sweep::new(threads);
+        let r = fleet::what_if(&devices, &jobs, &FleetAction::Pack, &engine, true).unwrap();
+        codec::fleet_report_to_json(&r).to_string()
+    };
+    let one = run(1);
+    assert_eq!(one, run(8), "thread count changed the fleet report");
+    assert_eq!(one, run(3));
+}
+
+/// The heterogeneous 12-job demo fleet end-to-end: every accepted
+/// placement carries simulator ground truth, the queue partitions into
+/// placements + rejections, and the sub-GiB tiny jobs always place.
+#[test]
+fn demo_fleet_places_with_simulator_validation() {
+    let engine = Sweep::new(mmpredict::sweep::default_threads());
+    let jobs = fleet::demo_jobs();
+    assert!(jobs.len() >= 10, "demo queue is the >=10-job acceptance fleet");
+    let r = fleet::what_if(&fleet::demo_devices(), &jobs, &FleetAction::Pack, &engine, true)
+        .unwrap();
+    assert!(r.validated);
+    assert_eq!(r.placements.len() + r.rejected.len(), jobs.len());
+    assert!(!r.placements.is_empty());
+    for p in &r.placements {
+        let sim = p.simulated_peak_mib.expect("validated placements carry ground truth");
+        assert!(sim > 0.0, "{}", p.job);
+        assert!(p.per_rank_peak_mib > 0.0);
+        assert!(!p.assignments.is_empty());
+    }
+    for name in ["tiny-a", "tiny-b", "llama-tiny-a"] {
+        assert!(r.placement(name).is_some(), "tiny job {name} must always fit");
+    }
+    // rejected jobs explain themselves
+    for rej in &r.rejected {
+        assert!(!rej.reason.is_empty(), "{}", rej.job);
+    }
+}
+
+/// `admit` over the wire: the envelope round-trips through the slow
+/// admission tier, answers the verdict, and the response is additive
+/// (action/admitted/validated/totals all present).
+#[test]
+fn admit_round_trips_over_the_wire() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+
+    let req = ApiRequest::new(
+        "adm",
+        Method::Fleet(FleetParams {
+            devices: vec![("a100-40g".into(), 2)],
+            jobs: vec![tiny_job("a", 1), tiny_job("b", 2), tiny_job("cand", 1)],
+            action: FleetAction::Admit("cand".into()),
+        }),
+    );
+    let resp = client.call(&req);
+    assert_eq!(resp.id.as_deref(), Some("adm"));
+    let payload = resp.result.expect("admit");
+    assert_eq!(payload.get("action").unwrap().as_str(), Some("admit"));
+    assert_eq!(payload.get("admitted"), Some(&Json::Bool(true)));
+    assert!(matches!(payload.get("validated"), Some(Json::Bool(true))));
+    let placements = payload.get("placements").unwrap().as_arr().unwrap();
+    assert_eq!(placements.len(), 3);
+    let cand = placements
+        .iter()
+        .find(|p| p.get("job").unwrap().as_str() == Some("cand"))
+        .expect("candidate placed");
+    assert_eq!(cand.get("replanned"), Some(&Json::Bool(false)));
+    assert!(cand.get("simulated_peak_mib").unwrap().as_f64().unwrap() > 0.0);
+
+    // the wire answer equals the library answer, field for field
+    let engine = Sweep::new(1);
+    let lib = fleet::what_if(
+        &[("a100-40g".to_string(), 2)],
+        &[tiny_job("a", 1), tiny_job("b", 2), tiny_job("cand", 1)],
+        &FleetAction::Admit("cand".into()),
+        &engine,
+        true,
+    )
+    .unwrap();
+    assert_eq!(codec::fleet_report_to_json(&lib).to_string(), payload.to_string());
+    server.shutdown();
+}
+
+/// `replan` over the wire: the OOM-signalled job's as-specified config
+/// is never re-placed verbatim — it either lands via a different
+/// frontier config (`replanned: true`) or is rejected with
+/// alternatives.
+#[test]
+fn replan_evicts_the_as_specified_config() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+    let jobs = vec![tiny_job("a", 1), tiny_job("oomed", 2)];
+    let original = jobs[1].1.clone();
+    let req = ApiRequest::new(
+        "rp",
+        Method::Fleet(FleetParams {
+            devices: vec![("a100-40g".into(), 1)],
+            jobs,
+            action: FleetAction::Replan("oomed".into()),
+        }),
+    );
+    let payload = client.call(&req).result.expect("replan");
+    assert_eq!(payload.get("action").unwrap().as_str(), Some("replan"));
+    let admitted = match payload.get("admitted") {
+        Some(Json::Bool(b)) => *b,
+        other => panic!("admitted must be a bool, got {other:?}"),
+    };
+    let placements = payload.get("placements").unwrap().as_arr().unwrap();
+    let target = placements
+        .iter()
+        .find(|p| p.get("job").unwrap().as_str() == Some("oomed"));
+    if admitted {
+        let p = target.expect("admitted implies placed");
+        assert_eq!(p.get("replanned"), Some(&Json::Bool(true)));
+        // the placed config differs from the OOM-signalled one
+        let placed = codec::config_from_json(p.get("config").unwrap()).unwrap();
+        assert_ne!(placed.cache_key(), original.cache_key());
+    } else {
+        assert!(target.is_none());
+        let rejected = payload.get("rejected").unwrap().as_arr().unwrap();
+        assert!(rejected
+            .iter()
+            .any(|r| r.get("job").unwrap().as_str() == Some("oomed")));
+    }
+    server.shutdown();
+}
+
+/// Strict request decoding: unknown params/device/job fields, unknown
+/// actions, a `job` with `pack`, and unknown device kinds are all
+/// structured bad_requests that never kill the connection.
+#[test]
+fn fleet_requests_are_strict() {
+    let server = start_server();
+    let mut client = WireClient::connect(server.addr());
+    let cfg = r#"{"model":"llava-tiny","mbs":1,"seq_len":128}"#;
+    let cases: Vec<(String, &str)> = vec![
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobz":[{{"name":"a","config":{cfg}}}]}}}}"#
+            ),
+            "jobz",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g","slots":2}}],"jobs":[{{"name":"a","config":{cfg}}}]}}}}"#
+            ),
+            "slots",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobs":[{{"name":"a","config":{cfg},"priority":9}}]}}}}"#
+            ),
+            "priority",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobs":[{{"name":"a","config":{cfg}}}],"action":"defrag"}}}}"#
+            ),
+            "defrag",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobs":[{{"name":"a","config":{cfg}}}],"job":"a"}}}}"#
+            ),
+            "job",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobs":[{{"name":"a","config":{cfg}}}],"action":"admit"}}}}"#
+            ),
+            "admit",
+        ),
+    ];
+    for (line, needle) in &cases {
+        let err = client.call_raw(line).result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest, "{needle}: {}", err.message);
+        assert!(err.message.contains(needle), "{needle} not named: {}", err.message);
+    }
+    // unknown device kind is a structured error too (did-you-mean)
+    let line = format!(
+        r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-90g"}}],"jobs":[{{"name":"a","config":{cfg}}}]}}}}"#
+    );
+    let err = client.call_raw(&line).result.unwrap_err();
+    assert!(err.message.contains("unknown device kind"), "{}", err.message);
+    // and the connection still serves after every rejection
+    let ok = client.call_raw(&format!(
+        r#"{{"v":1,"id":"ok","method":"fleet","params":{{"devices":[{{"kind":"a100-40g"}}],"jobs":[{{"name":"a","config":{cfg}}}]}}}}"#
+    ));
+    assert!(ok.result.is_ok());
+    server.shutdown();
+}
+
+/// Concurrent fleet queries from several connections answer
+/// byte-identically — the oracle has no hidden shared state.
+#[test]
+fn concurrent_fleet_queries_agree() {
+    let server = start_server();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr);
+                let mut outs = Vec::new();
+                for round in 0..3 {
+                    let req = ApiRequest::new(
+                        format!("c{i}-{round}"),
+                        Method::Fleet(FleetParams {
+                            devices: vec![("a100-40g".into(), 2), ("mi300-192g".into(), 1)],
+                            jobs: vec![tiny_job("a", 1), tiny_job("b", 2), tiny_job("c", 4)],
+                            action: FleetAction::Pack,
+                        }),
+                    );
+                    outs.push(client.call(&req).result.expect("fleet").to_string());
+                }
+                outs
+            })
+        })
+        .collect();
+    let all: Vec<String> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread"))
+        .collect();
+    assert!(all.windows(2).all(|w| w[0] == w[1]), "fleet answers diverged");
+    server.shutdown();
+}
