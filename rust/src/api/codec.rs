@@ -23,7 +23,7 @@ use crate::report::ModalityShare;
 use crate::simulator::Measurement;
 use crate::util::json_mini::{obj, Json};
 
-use crate::fleet::{FleetAction, FleetReport};
+use crate::fleet::{self, FleetAction, FleetReport};
 use crate::placement::FragReport;
 
 use super::{
@@ -697,6 +697,14 @@ fn fleet_devices_from_json(v: &Json) -> Result<Vec<(String, u64)>, ApiError> {
     if arr.is_empty() {
         return Err(ApiError::bad_request("params.devices must not be empty"));
     }
+    // Every spec contributes >= 1 device, so more specs than the fleet
+    // cap can never expand; reject before decoding entries.
+    if arr.len() > fleet::MAX_DEVICES {
+        return Err(ApiError::bad_request(format!(
+            "params.devices exceeds {} entries",
+            fleet::MAX_DEVICES
+        )));
+    }
     let mut out = Vec::with_capacity(arr.len());
     for (i, d) in arr.iter().enumerate() {
         let what = format!("params.devices[{i}]");
@@ -706,6 +714,12 @@ fn fleet_devices_from_json(v: &Json) -> Result<Vec<(String, u64)>, ApiError> {
             .ok_or_else(|| ApiError::bad_request(format!("{what} requires \"kind\"")))?
             .to_string();
         let count = get_u64(m, "count", &what)?.unwrap_or(1);
+        if count == 0 || count > fleet::MAX_DEVICES as u64 {
+            return Err(ApiError::bad_request(format!(
+                "{what}.count must be between 1 and {}",
+                fleet::MAX_DEVICES
+            )));
+        }
         out.push((kind, count));
     }
     Ok(out)

@@ -215,6 +215,13 @@ pub fn expand_devices(specs: &[(String, u64)]) -> Result<Vec<Device>> {
         if *count == 0 {
             bail!("device count for {kind:?} must be >= 1");
         }
+        // Bound the request BEFORE expanding: the wire decoder accepts
+        // arbitrary u64 counts, so checking after the push loop would
+        // let one hostile spec allocate unboundedly first. The first
+        // clause both enforces the cap and makes the usize cast exact.
+        if *count > MAX_DEVICES as u64 || pool.len() + *count as usize > MAX_DEVICES {
+            bail!("fleet exceeds {MAX_DEVICES} devices");
+        }
         let canon = kind.trim().to_ascii_lowercase();
         let start = match per_kind.iter_mut().find(|(k, _)| *k == canon) {
             Some((_, n)) => {
@@ -233,9 +240,6 @@ pub fn expand_devices(specs: &[(String, u64)]) -> Result<Vec<Device>> {
                 kind: canon.clone(),
                 capacity_mib,
             });
-        }
-        if pool.len() > MAX_DEVICES {
-            bail!("fleet exceeds {MAX_DEVICES} devices");
         }
     }
     Ok(pool)
@@ -474,7 +478,12 @@ pub fn what_if(
         };
         let mut placed = false;
         for alt in &alternatives {
-            let pred = predictor::predict_per_rank(&alt.cfg)?;
+            // An alternative whose prediction fails is unusable — skip
+            // it rather than aborting the whole what-if query, matching
+            // the per-job handling of frontier_alternatives errors.
+            let Ok(pred) = predictor::predict_per_rank(&alt.cfg) else {
+                continue;
+            };
             if let Some(assignments) = pool.place_job(&rank_needs(&alt.cfg, &pred)) {
                 placements.push((
                     i,
@@ -617,6 +626,36 @@ mod tests {
         assert!(err.contains("unknown device kind"), "{err}");
         assert!(expand_devices(&[]).is_err());
         assert!(expand_devices(&[("a100-80g".to_string(), 0)]).is_err());
+    }
+
+    /// The device cap is enforced BEFORE expansion: a hostile count
+    /// (up to u64::MAX — the wire decoder accepts it) must bail
+    /// without allocating, and the cap applies cumulatively across
+    /// specs. u64::MAX finishing at all is the regression check: the
+    /// pre-fix code expanded first and checked after.
+    #[test]
+    fn expand_devices_caps_before_expanding() {
+        for count in [u64::MAX, 1_000_000_000_000_000, MAX_DEVICES as u64 + 1] {
+            let err = expand_devices(&[("a100-80g".to_string(), count)])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("exceeds"), "{err}");
+        }
+        // cumulative across specs, even when each spec is under the cap
+        let err = expand_devices(&[
+            ("a100-80g".to_string(), 600),
+            ("h100-80g".to_string(), 600),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // exactly at the cap is fine
+        let pool = expand_devices(&[
+            ("a100-80g".to_string(), 1000),
+            ("h100-80g".to_string(), 24),
+        ])
+        .unwrap();
+        assert_eq!(pool.len(), MAX_DEVICES);
     }
 
     #[test]

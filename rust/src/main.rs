@@ -580,6 +580,12 @@ fn fleet_devices_from_args(s: &str) -> Result<Vec<(String, u64)>> {
             ),
             None => (spec, 1),
         };
+        if count == 0 || count > mmpredict::fleet::MAX_DEVICES as u64 {
+            bail!(
+                "device count in {spec:?} must be between 1 and {}",
+                mmpredict::fleet::MAX_DEVICES
+            );
+        }
         out.push((kind.to_string(), count));
     }
     if out.is_empty() {

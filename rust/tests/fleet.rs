@@ -281,6 +281,21 @@ fn fleet_requests_are_strict() {
             ),
             "admit",
         ),
+        // out-of-range counts are rejected at decode time, before any
+        // expansion work — a huge count must be a structured error,
+        // never an allocation storm on the worker
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g","count":0}}],"jobs":[{{"name":"a","config":{cfg}}}]}}}}"#
+            ),
+            "count",
+        ),
+        (
+            format!(
+                r#"{{"v":1,"id":"x","method":"fleet","params":{{"devices":[{{"kind":"a100-40g","count":999999999999999}}],"jobs":[{{"name":"a","config":{cfg}}}]}}}}"#
+            ),
+            "between 1 and 1024",
+        ),
     ];
     for (line, needle) in &cases {
         let err = client.call_raw(line).result.unwrap_err();
